@@ -1,0 +1,24 @@
+//! Figs. 3–4: the 2-D diagnostics behind the paper's mechanism —
+//! basis misalignment makes Adam oscillate, oscillation makes delayed
+//! gradients stale, rotation fixes both.
+//!
+//!     cargo run --release --example landscape2d
+
+use abrot::landscape::*;
+
+fn main() {
+    println!("== Fig 3: quadratic (lambda = [100, 1], delay = 2) ==");
+    println!("{:<10} {:>8} {:>6} {:>12}", "optimizer", "aligned", "delay", "tail_loss");
+    for r in fig3_grid(2) {
+        println!("{:<10} {:>8} {:>6} {:>12.4}", r.opt, r.aligned, r.delay, r.tail_loss);
+    }
+
+    println!("\n== Fig 4: spiral-loss slowdown under delay 1 ==");
+    let samples = spiral_slowdowns(30, 7);
+    let mean: f64 = samples.iter().map(|s| s.slowdown).sum::<f64>() / samples.len() as f64;
+    for s in &samples {
+        let bar = "#".repeat((s.slowdown * 4.0) as usize);
+        println!("angle {:>7.1}deg  slowdown {:>5.2}x {bar}", s.angle_deg, s.slowdown);
+    }
+    println!("mean slowdown {mean:.2}x over {} samples", samples.len());
+}

@@ -1,0 +1,22 @@
+//! Fig. 21: basis rotation generalizes to Mixture-of-Experts blocks —
+//! rotation applies per expert (expert axis folded into the batched
+//! optimizer executables), the pipeline schedule is unchanged.
+//!
+//!     cargo run --release --example moe_training
+
+use abrot::config::{Method, TrainCfg};
+use abrot::coordinator::{Coordinator, Experiment};
+
+fn main() -> anyhow::Result<()> {
+    let mut coord = Coordinator::new("artifacts");
+    let base = TrainCfg { stages: 4, steps: 100, lr: 1e-2, seed: 3, ..Default::default() };
+    for method in [Method::PipeDream, Method::PipeDreamLr, Method::br_default()] {
+        let r = coord.run(&Experiment {
+            model: "moe_pico".into(),
+            train: TrainCfg { method, ..base.clone() },
+        })?;
+        println!("{:<16} loss {:.3} -> {:.3}  ({:.1}s)",
+                 r.method, r.losses[0], r.final_loss(), r.wall_secs);
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: train a small transformer under asynchronous pipeline
+//! parallelism (P=4), first with vanilla async Adam (PipeDream), then
+//! with the paper's basis rotation — and watch staleness stop hurting.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use abrot::config::{Method, TrainCfg};
+use abrot::coordinator::{Coordinator, Experiment};
+
+fn main() -> anyhow::Result<()> {
+    let mut coord = Coordinator::new("artifacts");
+    let base = TrainCfg {
+        stages: 4,
+        steps: 120,
+        lr: 1e-2,
+        seed: 7,
+        ..Default::default()
+    };
+
+    println!("== PipeDream (async Adam, delayed gradients) ==");
+    let pd = coord.run(&Experiment {
+        model: "pico8".into(),
+        train: TrainCfg { method: Method::PipeDream, ..base.clone() },
+    })?;
+    println!("loss {:.3} -> {:.3}", pd.losses[0], pd.final_loss());
+
+    println!("== Basis rotation (S=2nd, bilateral, freq 10) ==");
+    let br = coord.run(&Experiment {
+        model: "pico8".into(),
+        train: TrainCfg { method: Method::br_default(), ..base },
+    })?;
+    println!("loss {:.3} -> {:.3}", br.losses[0], br.final_loss());
+
+    println!("\nstep  pipedream  basis_rotation");
+    for i in (9..pd.losses.len()).step_by(10) {
+        println!("{:>4}  {:>9.4}  {:>14.4}", i + 1, pd.losses[i], br.losses[i]);
+    }
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Appendix A / Table 1: how deep must the pipeline be?  The analytic
+//! memory model behind the paper's motivation — staleness grows with P,
+//! and P grows fast with model size on commodity GPUs.
+//!
+//!     cargo run --release --example stage_calculator [seq] [batch]
+
+use abrot::analysis::{block_bytes, gpus, llama_models, required_stages, table2_rows};
+use abrot::config::{Geometry, Source};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let s: u64 = args.get(1).and_then(|x| x.parse().ok()).unwrap_or(4096);
+    let b: u64 = args.get(2).and_then(|x| x.parse().ok()).unwrap_or(1);
+
+    println!("Table 1: minimum pipeline stages (seq={s}, batch={b})");
+    print!("{:<16}", "model");
+    for g in gpus() {
+        print!(" {:>10}", g.name.split(' ').next().unwrap());
+    }
+    println!();
+    for m in llama_models() {
+        print!("{:<16}", m.name);
+        for g in gpus() {
+            let (p, lb) = required_stages(&m, &g, s, b);
+            print!(" {:>10}", if lb { format!(">={p}*") } else { p.to_string() });
+        }
+        println!("   ({:.1} GB/block)", block_bytes(m.w, s, b, m.h, m.a) as f64 / 1e9);
+    }
+    println!("* = a single block does not fit (paper reports >= 2L)");
+
+    println!("\nTable 2: basis-rotation memory overhead on Llama-3-8B (GB per matrix)");
+    for r in table2_rows() {
+        let sname = match r.source { Source::Second => "2nd", Source::First => "1st" };
+        let gname = match r.geometry { Geometry::Bilateral => "bilateral", Geometry::Unilateral => "unilateral" };
+        println!("  S={sname:<4} G={gname:<10} attn {:>5.2}  mlp {:>5.2}", r.attn_gb, r.mlp_gb);
+    }
+}

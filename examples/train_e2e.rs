@@ -1,0 +1,93 @@
+//! End-to-end driver (deliverable (e2e) of DESIGN.md): train the
+//! deepest config on the synthetic corpus for a few hundred steps under
+//! real asynchronous pipeline parallelism and log the loss curve,
+//! proving all three layers compose:
+//!
+//!   L3 threaded 1F1B engine (per-block HLO executables, weight
+//!      stashing, immediate updates)  → throughput & bubble metrics
+//!   L3 delay-accurate simulator + HLO-backed basis rotation
+//!      (L2 graphs embedding the L1 kernels) → loss-curve comparison
+//!
+//! Default scale targets the single-core CPU testbed (see DESIGN.md §5
+//! for the substitution from the paper's 95M-3B GPU models):
+//!
+//!     cargo run --release --example train_e2e -- [steps] [model] [P]
+//!     cargo run --release --example train_e2e -- 300 tiny32 32   # full
+//!     cargo run --release --example train_e2e                    # quick
+
+use abrot::config::{Method, TrainCfg};
+use abrot::coordinator::{Coordinator, Experiment};
+use abrot::metrics::{iter_reduction_vs, write_losses};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u32 = args.get(1).and_then(|x| x.parse().ok()).unwrap_or(200);
+    let model = args.get(2).cloned().unwrap_or_else(|| "pico32".to_string());
+    let stages: usize = args.get(3).and_then(|x| x.parse().ok()).unwrap_or(32);
+
+    let mut coord = Coordinator::new("artifacts");
+    let base = TrainCfg {
+        stages,
+        steps,
+        lr: 1e-2,
+        seed: 1234,
+        eval_every: (steps / 6).max(1),
+        ..Default::default()
+    };
+
+    println!("=== e2e: {model}, P={stages}, {steps} steps/microbatches ===\n");
+
+    // 1. Real pipelined engine (async PipeDream execution model).
+    println!("[1/3] threaded 1F1B engine (PipeDream)...");
+    let eng = coord.run_engine(&Experiment {
+        model: model.clone(),
+        train: TrainCfg {
+            method: Method::PipeDream,
+            eval_every: 0,
+            steps: steps.min(60),
+            ..base.clone()
+        },
+    })?;
+    println!(
+        "  engine: {} microbatches, loss {:.3} -> {:.3}, {:.0} tokens/s, bubble {:.1}%\n",
+        eng.losses.len(), eng.losses[0], eng.final_loss(),
+        eng.tokens_per_sec, eng.bubble_frac * 100.0
+    );
+
+    // 2. Full-length async baseline (simulator, same semantics).
+    println!("[2/3] async baseline (PipeDream, {steps} steps)...");
+    let pd = coord.run(&Experiment {
+        model: model.clone(),
+        train: TrainCfg { method: Method::PipeDream, ..base.clone() },
+    })?;
+    println!("  pipedream: loss {:.3} -> {:.3} in {:.0}s\n",
+             pd.losses[0], pd.final_loss(), pd.wall_secs);
+
+    // 3. Basis rotation (the paper's fix) — same budget.
+    println!("[3/3] basis rotation (S=2nd/bilateral, freq 10)...");
+    let br = coord.run(&Experiment {
+        model: model.clone(),
+        train: TrainCfg { method: Method::br_default(), ..base },
+    })?;
+    println!("  basis rotation: loss {:.3} -> {:.3} in {:.0}s\n",
+             br.losses[0], br.final_loss(), br.wall_secs);
+
+    println!("loss curve (every {} steps):", (steps / 20).max(1));
+    println!("{:>6} {:>11} {:>11}", "step", "pipedream", "basis_rot");
+    for i in (0..pd.losses.len()).step_by(((steps / 20).max(1)) as usize) {
+        println!("{:>6} {:>11.4} {:>11.4}", i + 1, pd.losses[i], br.losses[i]);
+    }
+    if let Some(red) = iter_reduction_vs(&br, &pd) {
+        println!(
+            "\nbasis rotation reaches pipedream's final loss with {:.1}% fewer iterations",
+            red * 100.0
+        );
+    }
+    for (t, v) in &br.val_losses {
+        println!("val@{t}: {v:.4}");
+    }
+    std::fs::create_dir_all("results").ok();
+    write_losses("results/e2e_losses.csv", &[&pd, &br])?;
+    println!("\nloss curves -> results/e2e_losses.csv");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: L2 JAX graphs + L1 Pallas kernels."""

@@ -1,0 +1,274 @@
+"""AOT export: lower every L2 graph for a config to HLO **text** + manifest.
+
+This is the only python entry point of the whole system; after
+``make artifacts`` the Rust binary is self-contained.
+
+Interchange format is HLO *text*, not serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --config tiny32 --out ../artifacts/tiny32
+    python -m compile.aot --all --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, moe, optim_graphs as og
+from .configs import ModelConfig, all_configs, get_config
+
+F32 = "f32"
+S32 = "s32"
+_DTYPES = {F32: jnp.float32, S32: jnp.int32}
+
+# Max block count for which the (memory-hungry, jvp-over-grad) HVP graph
+# is exported — Fig. 11 runs on a mid-size config.
+HVP_MAX_BLOCKS = 8
+
+
+def spec(shape, dtype=F32):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _sds(s):
+    return jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]])
+
+
+def lower_to_hlo_text(fn, in_specs):
+    # keep_unused: unilateral rotation graphs and the split-weight
+    # backward legitimately ignore some inputs; the manifest promises
+    # the full signature, so DCE of parameters must be disabled.
+    lowered = jax.jit(fn, keep_unused=True).lower(*[_sds(s) for s in in_specs])
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def out_specs_of(fn, in_specs):
+    outs = jax.eval_shape(fn, *[_sds(s) for s in in_specs])
+    res = []
+    for o in jax.tree_util.tree_leaves(outs):
+        dt = F32 if o.dtype == jnp.float32 else S32
+        res.append(spec(o.shape, dt))
+    return res
+
+
+class Exporter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.manifest = {
+            "config": {
+                "name": cfg.name,
+                "vocab": cfg.vocab,
+                "seq": cfg.seq,
+                "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads,
+                "n_blocks": cfg.n_blocks,
+                "d_ff": cfg.d_ff,
+                "batch": cfg.batch,
+                "moe": None if cfg.moe is None else {
+                    "n_experts": cfg.moe.n_experts,
+                    "top_k": cfg.moe.top_k,
+                },
+            },
+            "params": [
+                {"name": n, "shape": list(s), "kind": k, "block": b,
+                 "rotated": r}
+                for (n, s, k, b, r) in cfg.param_schema()
+            ],
+            "shape_classes": [
+                {"name": n, "count": c, "m": m, "n": nn}
+                for (n, c, m, nn) in cfg.shape_classes()
+            ],
+            "executables": {},
+        }
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name, fn, in_specs, input_names=None):
+        print(f"  [{self.cfg.name}] lowering {name} "
+              f"({len(in_specs)} inputs)...", flush=True)
+        text = lower_to_hlo_text(fn, in_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.manifest["executables"][name] = {
+            "file": fname,
+            "inputs": in_specs,
+            "input_names": input_names or [],
+            "outputs": out_specs_of(fn, in_specs),
+        }
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  [{self.cfg.name}] manifest with "
+              f"{len(self.manifest['executables'])} executables")
+
+
+def param_specs(cfg):
+    return [spec(s) for (_n, s, _k, _b, _r) in cfg.param_schema()]
+
+
+def export_config(cfg: ModelConfig, out_dir: str, pallas_attn: bool = False):
+    ex = Exporter(cfg, out_dir)
+    ps = param_specs(cfg)
+    names = [n for (n, *_rest) in cfg.param_schema()]
+    tok = spec((cfg.batch, cfg.seq), S32)
+    B, S, D, V = cfg.batch, cfg.seq, cfg.d_model, cfg.vocab
+
+    if cfg.moe is None:
+        # The Pallas attention kernel has no registered VJP, so it is used
+        # on the inference path (eval_loss) when requested; fwdbwd always
+        # differentiates the jnp attention (numerically identical — the
+        # kernel is pytest-verified against the same reference).
+        ex.export(
+            "fwdbwd",
+            lambda *a: model.fwdbwd(cfg, list(a[:-2]), a[-2], a[-1]),
+            ps + [tok, tok],
+            names + ["tokens", "targets"],
+        )
+        ex.export(
+            "eval_loss",
+            lambda *a: (model.loss_fn(cfg, list(a[:-2]), a[-2], a[-1],
+                                      pallas_attn),),
+            ps + [tok, tok],
+        )
+        ex.export(
+            "fwdbwd_split",
+            lambda *a: model.split_fwdbwd(
+                cfg, list(a[: len(ps)]), list(a[len(ps): 2 * len(ps)]),
+                a[-2], a[-1]),
+            ps + ps + [tok, tok],
+        )
+        if cfg.n_blocks <= HVP_MAX_BLOCKS:
+            ex.export(
+                "hvp",
+                lambda *a: model.hvp(
+                    cfg, list(a[: len(ps)]), list(a[len(ps): 2 * len(ps)]),
+                    a[-2], a[-1]),
+                ps + ps + [tok, tok],
+            )
+        # ---- per-block engine graphs ----
+        x = spec((B, S, D))
+        blk = [spec(s) for (_n, s, _k, b, _r) in cfg.param_schema() if b == 0]
+        ex.export("embed_fwd",
+                  lambda te, pe, t: model.embed_fwd(cfg, te, pe, t),
+                  [spec((V, D)), spec((S, D)), tok])
+        ex.export("embed_bwd",
+                  lambda t, dx: model.embed_bwd(cfg, t, dx),
+                  [tok, x])
+        ex.export("block_fwd",
+                  lambda *a: model.block_fwd(cfg, *a),
+                  blk + [x])
+        ex.export("block_bwd",
+                  lambda *a: model.block_bwd(cfg, *a),
+                  blk + [x, x])
+        ex.export("head_fwdbwd",
+                  lambda gf, hd, xx, tg: model.head_fwdbwd(cfg, gf, hd, xx,
+                                                           tg),
+                  [spec((D,)), spec((D, V)), x, tok])
+    else:
+        ex.export(
+            "fwdbwd",
+            lambda *a: moe.moe_fwdbwd(cfg, list(a[:-2]), a[-2], a[-1]),
+            ps + [tok, tok],
+            names + ["tokens", "targets"],
+        )
+        ex.export(
+            "eval_loss",
+            lambda *a: moe.moe_eval_loss(cfg, list(a[:-2]), a[-2], a[-1]),
+            ps + [tok, tok],
+        )
+
+    # ---- batched optimizer graphs per rotated shape class ----
+    # CPU production artifacts use the jnp lowering of the optimizer
+    # graphs (same math as the L1 Pallas kernels; interpret-mode Pallas
+    # is orders of magnitude slower under CPU PJRT — see optim_graphs).
+    og.set_impl("jnp")
+    for (cname, count, m, n) in cfg.shape_classes():
+        nb = count
+        mat = spec((nb, m, n))
+        uu = spec((nb, m, m))
+        vv = spec((nb, n, n))
+        ll = spec((nb, m, m))
+        rr = spec((nb, n, n))
+        sc = spec((nb, 8))
+        for uni, tag in ((False, "bi"), (True, "uni")):
+            ex.export(
+                f"rot_adam_{tag}_{cname}",
+                lambda w, g, mm, vt, u, v, s, _u=uni: og.rot_adam_batched(
+                    w, g, mm, vt, u, v, s, unilateral=_u),
+                [mat, mat, mat, mat, uu, vv, sc],
+            )
+            ex.export(
+                f"soap_{tag}_{cname}",
+                lambda w, g, mm, vt, u, v, s, _u=uni: og.soap_batched(
+                    w, g, mm, vt, u, v, s, unilateral=_u),
+                [mat, mat, mat, mat, uu, vv, sc],
+            )
+            ex.export(
+                f"eigen2nd_{tag}_{cname}",
+                lambda l, r, g, u, v, s, _u=uni: og.eigen2nd_batched(
+                    l, r, g, u, v, s, unilateral=_u),
+                [ll, rr, mat, uu, vv, sc],
+            )
+            ex.export(
+                f"eigen1st_{tag}_{cname}",
+                lambda mm, u, v, s, _u=uni: og.eigen1st_batched(
+                    mm, u, v, s, unilateral=_u),
+                [mat, uu, vv, sc],
+            )
+        ex.export(
+            f"muon_{cname}",
+            lambda mom, g, s: og.muon_batched(mom, g, s),
+            [mat, mat, sc],
+        )
+    # The micro config additionally carries the Pallas lowering of one
+    # rotated-update class so the Rust integration tests can pin the
+    # jnp-vs-Pallas numerical equivalence on the PJRT execution path.
+    if cfg.name == "micro":
+        og.set_impl("pallas")
+        (cname, count, m, n) = cfg.shape_classes()[0]
+        mat = spec((count, m, n))
+        uu = spec((count, m, m))
+        vv = spec((count, n, n))
+        sc = spec((count, 8))
+        ex.export(
+            f"rot_adam_bi_{cname}_pallas",
+            lambda w, g, mm, vt, u, v, s: og.rot_adam_batched(
+                w, g, mm, vt, u, v, s, unilateral=False),
+            [mat, mat, mat, mat, uu, vv, sc],
+        )
+    og.set_impl("pallas")
+    ex.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--pallas-attn", action="store_true",
+                    help="use the Pallas attention kernel in fwdbwd")
+    args = ap.parse_args()
+    if args.all:
+        for name, cfg in sorted(all_configs().items()):
+            export_config(cfg, os.path.join(args.out, name))
+    else:
+        cfg = get_config(args.config)
+        export_config(cfg, args.out, pallas_attn=args.pallas_attn)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Model configurations shared between the compile path and the Rust
+coordinator (mirrored in ``rust/src/config``).
+
+The *param schema* defined here is the single source of truth for the
+flattening order of parameters in every exported executable. The Rust
+side reads it from ``manifest.json`` — never hard-code offsets twice.
+
+Dense block layout (per block):  ``g1, wqkv, wo, g2, w1, w2``
+MoE   block layout (per block):  ``g1, wqkv, wo, g2, router, w1e, w2e``
+Global layout: ``tok_emb, pos_emb, <blocks...>, gf, head``
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int = 8
+    top_k: int = 2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    n_heads: int
+    n_blocks: int
+    d_ff: int
+    batch: int
+    moe: Optional[MoeConfig] = None
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_schema(self):
+        """[(name, shape, kind, block_idx, rotated)] in flatten order.
+
+        ``rotated`` marks 2-D matrices eligible for basis rotation
+        (attention + MLP projections; embeddings / head / gains are
+        excluded, following the paper, Appendix D.2).
+        """
+        V, S, D, F = self.vocab, self.seq, self.d_model, self.d_ff
+        out = [
+            ("tok_emb", (V, D), "embed", -1, False),
+            ("pos_emb", (S, D), "embed", -1, False),
+        ]
+        for b in range(self.n_blocks):
+            out.append((f"b{b}.g1", (D,), "gain", b, False))
+            out.append((f"b{b}.wqkv", (D, 3 * D), "matrix", b, True))
+            out.append((f"b{b}.wo", (D, D), "matrix", b, True))
+            out.append((f"b{b}.g2", (D,), "gain", b, False))
+            if self.moe is None:
+                out.append((f"b{b}.w1", (D, F), "matrix", b, True))
+                out.append((f"b{b}.w2", (F, D), "matrix", b, True))
+            else:
+                E = self.moe.n_experts
+                out.append((f"b{b}.router", (D, E), "matrix", b, False))
+                out.append((f"b{b}.w1e", (E, D, F), "expert", b, True))
+                out.append((f"b{b}.w2e", (E, F, D), "expert", b, True))
+        out.append(("gf", (D,), "gain", -1, False))
+        out.append(("head", (D, V), "matrix", -1, False))
+        return out
+
+    def shape_classes(self):
+        """Rotated-matrix shape classes batched across blocks.
+
+        Returns [(class_name, count, m, n)] — each class gets one set of
+        batched optimizer executables (rot_adam / eigen / muon / soap).
+        MoE experts fold the expert axis into the batch axis.
+        """
+        D, F, L = self.d_model, self.d_ff, self.n_blocks
+        if self.moe is None:
+            return [
+                ("wqkv", L, D, 3 * D),
+                ("wo", L, D, D),
+                ("w1", L, D, F),
+                ("w2", L, F, D),
+            ]
+        E = self.moe.n_experts
+        return [
+            ("wqkv", L, D, 3 * D),
+            ("wo", L, D, D),
+            ("w1e", L * E, D, F),
+            ("w2e", L * E, F, D),
+        ]
+
+
+_CFGS = {}
+
+
+def _reg(c: ModelConfig) -> ModelConfig:
+    _CFGS[c.name] = c
+    return c
+
+
+# Unit/integration-test scale. ~40k params.
+MICRO = _reg(ModelConfig("micro", vocab=64, seq=16, d_model=16, n_heads=2,
+                         n_blocks=2, d_ff=64, batch=2))
+# Workhorse for the P in {1,4,8,16,32} staleness experiments: depth 32
+# mirrors the paper's 32-block 95M model with width shrunk for the
+# single-core CPU testbed. ~1.0M params.
+TINY32 = _reg(ModelConfig("tiny32", vocab=256, seq=48, d_model=48, n_heads=4,
+                          n_blocks=32, d_ff=192, batch=4))
+# Depth-scaling family (Fig 6): same width, depth = P.
+TINY4 = _reg(ModelConfig("tiny4", vocab=256, seq=48, d_model=48, n_heads=4,
+                         n_blocks=4, d_ff=192, batch=4))
+TINY8 = _reg(ModelConfig("tiny8", vocab=256, seq=48, d_model=48, n_heads=4,
+                         n_blocks=8, d_ff=192, batch=4))
+TINY16 = _reg(ModelConfig("tiny16", vocab=256, seq=48, d_model=48, n_heads=4,
+                          n_blocks=16, d_ff=192, batch=4))
+# Width-scaling pair (Fig 7 "0.1B vs 1B" analog) at P=8.
+SMALL = _reg(ModelConfig("small", vocab=512, seq=64, d_model=128, n_heads=4,
+                         n_blocks=8, d_ff=512, batch=4))
+WIDE = _reg(ModelConfig("wide", vocab=512, seq=64, d_model=256, n_heads=8,
+                        n_blocks=8, d_ff=1024, batch=4))
+# End-to-end driver: largest trainable-on-one-core config (~13M params).
+E2E = _reg(ModelConfig("e2e", vocab=2048, seq=128, d_model=256, n_heads=8,
+                       n_blocks=16, d_ff=1024, batch=4))
+# Pico family: the figure-harness workhorses on the single-core CPU
+# testbed — depth mirrors the paper's 32-block model, width shrunk so a
+# full method x P sweep finishes in minutes (DESIGN.md S5).
+PICO4 = _reg(ModelConfig("pico4", vocab=128, seq=32, d_model=32, n_heads=4,
+                         n_blocks=4, d_ff=128, batch=2))
+PICO8 = _reg(ModelConfig("pico8", vocab=128, seq=32, d_model=32, n_heads=4,
+                         n_blocks=8, d_ff=128, batch=2))
+PICO16 = _reg(ModelConfig("pico16", vocab=128, seq=32, d_model=32, n_heads=4,
+                          n_blocks=16, d_ff=128, batch=2))
+PICO32 = _reg(ModelConfig("pico32", vocab=128, seq=32, d_model=32, n_heads=4,
+                          n_blocks=32, d_ff=128, batch=2))
+# Width-scaling pair at P=8 for the CPU harness (Fig 7 analog).
+WIDE8 = _reg(ModelConfig("wide8", vocab=128, seq=32, d_model=96, n_heads=4,
+                         n_blocks=8, d_ff=384, batch=2))
+# MoE at pico scale (Fig 21 harness default).
+MOE_PICO = _reg(ModelConfig("moe_pico", vocab=128, seq=32, d_model=32,
+                            n_heads=4, n_blocks=8, d_ff=64, batch=2,
+                            moe=MoeConfig(4, 2)))
+# MoE generalization (Fig 21): 8 experts, top-2.
+MOE_MICRO = _reg(ModelConfig("moe_micro", vocab=64, seq=16, d_model=16,
+                             n_heads=2, n_blocks=2, d_ff=32, batch=2,
+                             moe=MoeConfig(4, 2)))
+MOE_TINY = _reg(ModelConfig("moe_tiny", vocab=256, seq=48, d_model=48,
+                            n_heads=4, n_blocks=8, d_ff=96, batch=4,
+                            moe=MoeConfig(8, 2)))
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _CFGS[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; have {sorted(_CFGS)}")
+
+
+def all_configs():
+    return dict(_CFGS)

@@ -1,0 +1,1 @@
+"""Pallas L1 kernels + pure-jnp reference oracles."""

@@ -1,0 +1,97 @@
+"""L1 Pallas blocked causal attention (flash-style).
+
+Used by the ``--pallas-attn`` model variant: queries are blocked over the
+grid; keys/values stream through VMEM with an online softmax (running
+max + denominator held in the accumulator tile), mirroring the
+HBM↔VMEM schedule FlashAttention expresses with CUDA threadblocks —
+re-thought for the TPU memory hierarchy per DESIGN.md §Hardware-Adaptation.
+
+Because the KV stream is the innermost grid axis, the (bq × hd) output
+tile, the running row-max and the running denominator stay VMEM-resident
+for the whole pass. interpret=True on this image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, rm_ref, rd_ref, *,
+                 scale: float, bq: int, bk: int, n_k: int):
+    """Grid = (H, S/bq, S/bk): online-softmax accumulation over KV blocks."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        rm_ref[...] = jnp.full_like(rm_ref, NEG_INF)
+        rd_ref[...] = jnp.zeros_like(rd_ref)
+
+    q = q_ref[0]  # (bq, hd)
+    k = k_ref[0]  # (bk, hd)
+    v = v_ref[0]  # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Causal mask between absolute positions.
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = rm_ref[...]          # (bq, 1)
+    d_prev = rd_ref[...]          # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    d_new = d_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha[None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )[None]
+    rm_ref[...] = m_new
+    rd_ref[...] = d_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[...] = o_ref[...] / rd_ref[...][None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def causal_attention(q, k, v, interpret: bool = True):
+    """Blocked causal attention. q,k,v: (H, S, hd) → (H, S, hd)."""
+    h, s, hd = q.shape
+    scale = 1.0 / float(hd) ** 0.5
+    bq = pick_block(s, 64)
+    bk = pick_block(s, 64)
+    n_k = s // bk
+    grid = (h, s // bq, n_k)
+    q_spec = pl.BlockSpec((1, bq, hd), lambda hh, qi, ki: (hh, qi, 0))
+    kv_spec = pl.BlockSpec((1, bk, hd), lambda hh, qi, ki: (hh, ki, 0))
+    o_spec = pl.BlockSpec((1, bq, hd), lambda hh, qi, ki: (hh, qi, 0))
+    rm_spec = pl.BlockSpec((bq, 1), lambda hh, qi, ki: (qi, 0))
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, bq=bq, bk=bk, n_k=n_k),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=[o_spec, rm_spec, rm_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[0]
+
+
+def vmem_bytes(s: int, hd: int) -> int:
+    """Static VMEM estimate per grid step (f32)."""
+    bq = pick_block(s, 64)
+    bk = pick_block(s, 64)
+    # q tile + 2 kv tiles (double-buffered) + o tile + running stats + p.
+    return 4 * (bq * hd + 2 * 2 * bk * hd + bq * hd + 2 * bq + bq * bk)

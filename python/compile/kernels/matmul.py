@@ -1,0 +1,95 @@
+"""L1 Pallas tiled matmul — the rotation workhorse.
+
+Every basis-rotation projection (``Uᵀ G``, ``G V``, ``U X Vᵀ`` …) in the
+exported optimizer graphs goes through this kernel so the paper's compute
+hot-spot lives at the Pallas layer and lowers into the same HLO module as
+the surrounding L2 graph.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks are the largest
+divisor ≤ 128 of each dim so full tiles feed the 128×128 MXU systolic
+array; K is the innermost grid axis so the f32 accumulator tile stays
+resident in VMEM while A/B tiles stream HBM→VMEM (double-buffered by the
+Mosaic pipeline). On this image the kernel executes with
+``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls) — numerics
+identical, scheduling simulated; see DESIGN.md §Perf for the static
+VMEM/MXU analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(d: int, cap: int = 128) -> int:
+    """Largest divisor of ``d`` not exceeding ``cap`` (prefer powers of 2)."""
+    if d <= 0:
+        return 1
+    b = 1
+    while b * 2 <= cap and d % (b * 2) == 0:
+        b *= 2
+    if b == 1:
+        for c in range(min(d, cap), 0, -1):
+            if d % c == 0:
+                return c
+    return min(b, d)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Grid = (M/bm, N/bn, K/bk), K innermost.
+
+    The output tile's index map ignores the K axis, so ``o_ref`` stays
+    resident (VMEM) across the K loop and acts as the accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_spec(m: int, k: int, n: int):
+    """(grid, in_specs, out_spec, n_k) for an (m,k)x(k,n) matmul."""
+    bm, bk, bn = pick_block(m), pick_block(k), pick_block(n)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    return grid, in_specs, out_spec, n_k
+
+
+def vmem_bytes(m: int, k: int, n: int) -> int:
+    """Static VMEM footprint estimate of one grid step (f32)."""
+    bm, bk, bn = pick_block(m), pick_block(k), pick_block(n)
+    # A tile + B tile (double-buffered) + resident accumulator tile.
+    return 4 * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(a: jax.Array, b: jax.Array, interpret: bool = True) -> jax.Array:
+    """C = A @ B via the tiled Pallas kernel. A: (m,k), B: (k,n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    grid, in_specs, out_spec, n_k = matmul_spec(m, k, n)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def batched_matmul(a: jax.Array, b: jax.Array, interpret: bool = True):
+    """C[i] = A[i] @ B[i] for stacked (NB,m,k) x (NB,k,n)."""
+    return jax.vmap(lambda x, y: matmul(x, y, interpret=interpret))(a, b)

@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for every L1 kernel and L2 optimizer graph.
+
+These are the correctness ground truth: pytest checks each Pallas kernel
+and each exported optimizer graph against these, and the Rust integration
+tests cross-check the HLO path against independent Rust implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return a @ b
+
+
+def adam_direction_ref(g_rot, m_rot, v, scalars):
+    lr, beta1, beta2, eps, wd, t = (scalars[i] for i in range(6))
+    v_new = beta2 * v + (1.0 - beta2) * g_rot * g_rot
+    mhat = m_rot / (1.0 - beta1**t)
+    vhat = v_new / (1.0 - beta2**t)
+    return mhat / (jnp.sqrt(vhat) + eps), v_new
+
+
+def _uni_side(m, n):
+    """Unilateral geometry rotates the *smaller* dimension (paper 3.2)."""
+    return "left" if m <= n else "right"
+
+
+def _rot(x, u, vv, unilateral):
+    if unilateral:
+        if _uni_side(*x.shape) == "left":
+            return u.T @ x
+        return x @ vv
+    return u.T @ x @ vv
+
+
+def _unrot(x, u, vv, unilateral):
+    if unilateral:
+        if _uni_side(*x.shape) == "left":
+            return u @ x
+        return x @ vv.T
+    return u @ x @ vv.T
+
+
+def rotated_adam_ref(w, g, m, v, u, vv, scalars, *, unilateral=False):
+    """Reference for Algorithm 1 (one step, given fixed U, V).
+
+    m is the *original-space* momentum (updated here with beta1);
+    v is the *rotated-space* second moment.
+    Returns (w_new, m_new, v_new).
+    """
+    lr, beta1, beta2, eps, wd, t = (scalars[i] for i in range(6))
+    m_new = beta1 * m + (1.0 - beta1) * g
+    g_rot = _rot(g, u, vv, unilateral)
+    m_rot = _rot(m_new, u, vv, unilateral)
+    direction, v_new = adam_direction_ref(g_rot, m_rot, v, scalars)
+    upd = _unrot(direction, u, vv, unilateral)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, v_new
+
+
+def soap_update_ref(w, g, m_rot, v, u, vv, scalars, *, unilateral=False):
+    """SOAP variant: momentum accumulated in the rotated space."""
+    lr, beta1, beta2, eps, wd, t = (scalars[i] for i in range(6))
+    g_rot = _rot(g, u, vv, unilateral)
+    m_new = beta1 * m_rot + (1.0 - beta1) * g_rot
+    direction, v_new = adam_direction_ref(g_rot, m_new, v, scalars)
+    upd = _unrot(direction, u, vv, unilateral)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, v_new
+
+
+def ns_orthonormalize_ref(x, quintic: int = 4, cubic: int = 4):
+    """Newton-Schulz polar orthonormalization: quintic (Muon
+    coefficients) to lift small singular values, then cubic to polish to
+    machine-precision orthogonality. Substitutes the paper's
+    power-iteration QR (DESIGN.md S5).
+    """
+    a, b, c = 3.4445, -4.7750, 2.0315
+    m, n = x.shape
+    transpose = m > n
+    y = x.T if transpose else x
+    y = y / (jnp.linalg.norm(y) + 1e-7)
+    for _ in range(quintic):
+        s = y @ y.T
+        y = a * y + (b * s + c * (s @ s)) @ y
+    for _ in range(cubic):
+        s = y @ y.T
+        y = 1.5 * y - 0.5 * (s @ y)
+    return y.T if transpose else y
+
+
+def cgs2_qr_ref(x):
+    """Q of classical Gram-Schmidt with reorthogonalization (CGS2)."""
+    import numpy as _np
+    x = _np.asarray(x, dtype=_np.float32)
+    q = _np.zeros_like(x)
+    for j in range(x.shape[1]):
+        a = x[:, j].copy()
+        for _ in range(2):
+            a = a - q @ (q.T @ a)
+        q[:, j] = a / (_np.linalg.norm(a) + 1e-30)
+    return jnp.asarray(q)
+
+
+def eigen_update_ref(stat, basis):
+    """One power-iteration step + QR: U' = qr(S U).Q (paper Alg. 2).
+
+    Ridge matches ``optim_graphs.power_qr`` (rank-deficient statistics).
+    """
+    import numpy as _np
+    n = stat.shape[0]
+    ridge = 1e-3 * _np.trace(_np.asarray(stat)) / n + 1e-12
+    return cgs2_qr_ref(_np.asarray(stat @ basis) + ridge * _np.asarray(basis))
+
+
+def eigen2nd_ref(ll, rr, g, u, v, beta2, *, unilateral=False):
+    left = not unilateral or _uni_side(*g.shape) == "left"
+    right = not unilateral or _uni_side(*g.shape) == "right"
+    ll_new, u_new, rr_new, v_new = ll, u, rr, v
+    if left:
+        ll_new = beta2 * ll + (1.0 - beta2) * (g @ g.T)
+        u_new = eigen_update_ref(ll_new, u)
+    if right:
+        rr_new = beta2 * rr + (1.0 - beta2) * (g.T @ g)
+        v_new = eigen_update_ref(rr_new, v)
+    return ll_new, rr_new, u_new, v_new
+
+
+def eigen1st_ref(m, u, v, *, unilateral=False):
+    left = not unilateral or _uni_side(*m.shape) == "left"
+    right = not unilateral or _uni_side(*m.shape) == "right"
+    u_new, v_new = u, v
+    if left:
+        u_new = eigen_update_ref(m @ m.T, u)
+    if right:
+        v_new = eigen_update_ref(m.T @ m, v)
+    return u_new, v_new
+
+
+def muon_ref(mom, g, beta):
+    """Muon: momentum + NS-orthogonalized direction. Returns (mom', O)."""
+    mom_new = beta * mom + g
+    o = ns_orthonormalize_ref(mom_new)
+    return mom_new, o
+
+
+def attention_ref(q, k, v):
+    """Causal multi-head attention. q,k,v: (H, S, hd)."""
+    hd = q.shape[-1]
+    s = q.shape[-2]
+    att = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(
+        jnp.float32(hd)
+    )
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    att = jnp.where(mask[None], att, -1e30)
+    p = jnp.exp(att - att.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

@@ -1,0 +1,89 @@
+"""L1 fused basis-rotation Adam update (paper Algorithm 1, lines 8–11).
+
+Composition of the two Pallas kernels:
+
+* ``matmul.matmul``    — rotations ``Uᵀ·``, ``·V``, and the back-projection
+* ``adam_step``        — fused rotated-space moment update + direction
+
+so the entire hot path of the paper's contribution lowers to Pallas ops
+inside the exported HLO. The momentum update (line 4) happens in the
+*original* space, matching Algorithm 1 (and differing from SOAP, which
+accumulates in the rotated space — see ``soap_step`` and Appendix G).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .adam_step import adam_direction
+from .matmul import matmul
+
+
+def _rot(x, u, v, interpret):
+    """x̃ = Uᵀ x V; u or v may be None (unilateral geometry)."""
+    y = x if u is None else matmul(u.T, x, interpret=interpret)
+    if v is not None:
+        y = matmul(y, v, interpret=interpret)
+    return y
+
+
+def _unrot(x, u, v, interpret):
+    """x = U x̃ Vᵀ; u or v may be None (unilateral geometry)."""
+    y = x if u is None else matmul(u, x, interpret=interpret)
+    if v is not None:
+        y = matmul(y, v.T, interpret=interpret)
+    return y
+
+
+def _pick_uv(u, vv, unilateral, shape):
+    """Unilateral geometry rotates the *smaller* dimension (paper §3.2)."""
+    if not unilateral:
+        return u, vv
+    m, n = shape
+    return (u, None) if m <= n else (None, vv)
+
+
+@functools.partial(jax.jit, static_argnames=("unilateral", "interpret"))
+def rotated_adam_step(w, g, m, v, u, vv, scalars, *, unilateral=False,
+                      interpret=True):
+    """One basis-rotation Adam step for a single matrix.
+
+    Args:
+      w:  (m,n) weights.
+      g:  (m,n) (possibly delayed) gradient.
+      m:  (m,n) first moment, original space.
+      v:  (m,n) second moment, rotated space.
+      u:  (m,m) left rotation.
+      vv: (n,n) right rotation (ignored when unilateral).
+      scalars: (8,) [lr, beta1, beta2, eps, wd, t, _, _].
+
+    Returns (w', m', v').
+    """
+    beta1 = scalars[1]
+    lr, wd = scalars[0], scalars[4]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    uu, vvv = _pick_uv(u, vv, unilateral, w.shape)
+    g_rot = _rot(g, uu, vvv, interpret)
+    m_rot = _rot(m_new, uu, vvv, interpret)
+    direction, v_new = adam_direction(g_rot, m_rot, v, scalars,
+                                      interpret=interpret)
+    upd = _unrot(direction, uu, vvv, interpret)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, v_new
+
+
+@functools.partial(jax.jit, static_argnames=("unilateral", "interpret"))
+def soap_step(w, g, m_rot, v, u, vv, scalars, *, unilateral=False,
+              interpret=True):
+    """SOAP variant: first moment accumulated in the *rotated* space."""
+    beta1 = scalars[1]
+    lr, wd = scalars[0], scalars[4]
+    uu, vvv = _pick_uv(u, vv, unilateral, w.shape)
+    g_rot = _rot(g, uu, vvv, interpret)
+    m_new = beta1 * m_rot + (1.0 - beta1) * g_rot
+    direction, v_new = adam_direction(g_rot, m_new, v, scalars,
+                                      interpret=interpret)
+    upd = _unrot(direction, uu, vvv, interpret)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, v_new

@@ -1,0 +1,323 @@
+"""L2 — decoder-only Transformer (nanoGPT-style) in JAX.
+
+Everything here is *build-time only*: graphs are lowered by ``aot.py`` to
+HLO text and executed from the Rust coordinator. Params travel as a flat
+list in the ``configs.ModelConfig.param_schema()`` order.
+
+Graphs exported from this module:
+
+* ``loss_fn`` / ``fwdbwd``      — whole-model loss + grads (autodiff).
+  The coordinator feeds *mixed-version* per-stage weights, which yields
+  exactly the PipeDream-with-stashing gradient (DESIGN.md §3).
+* ``split_fwdbwd``              — hand-written backward where forward
+  activations come from ``w_fwd`` but every weight used *inside* the
+  backward ops comes from ``w_bwd``: the incorrect gradient of
+  asynchronous training **without weight stashing** (paper Fig. 10).
+  Validated against ``jax.grad`` when ``w_fwd == w_bwd``.
+* ``embed_fwd/block_fwd/block_bwd/head_fwdbwd/embed_bwd`` — per-block
+  building blocks for the real threaded 1F1B engine (backward recomputes
+  its forward internally, checkpoint-style, so activations never cross
+  the artifact boundary).
+* ``hvp``                       — Hessian-vector product for the
+  Cauchy-trace Hessian (1,1)-norm estimator (paper Fig. 11).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import causal_attention
+
+RMS_EPS = 1e-5
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+N_BLOCK_PARAMS = 6  # g1, wqkv, wo, g2, w1, w2
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Normal(0, 0.02) init, residual projections scaled by 1/sqrt(2L)."""
+    params = []
+    for name, shape, kind, _blk, _rot in cfg.param_schema():
+        key, sub = jax.random.split(key)
+        if kind == "gain":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 0.02
+            if name.endswith((".wo", ".w2", ".w2e")):
+                std = 0.02 / (2.0 * cfg.n_blocks) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def split_params(cfg: ModelConfig, params):
+    """flat list -> (tok_emb, pos_emb, [per-block tuples], gf, head)."""
+    tok_emb, pos_emb = params[0], params[1]
+    n = N_BLOCK_PARAMS if cfg.moe is None else 7
+    blocks = []
+    for b in range(cfg.n_blocks):
+        o = 2 + b * n
+        blocks.append(tuple(params[o:o + n]))
+    gf, head = params[-2], params[-1]
+    return tok_emb, pos_emb, blocks, gf, head
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + RMS_EPS)
+    return x * r * g
+
+
+def gelu(u):
+    return 0.5 * u * (1.0 + jnp.tanh(_GELU_C * (u + 0.044715 * u * u * u)))
+
+
+def gelu_grad(u):
+    t = jnp.tanh(_GELU_C * (u + 0.044715 * u ** 3))
+    dt = (1.0 - t * t) * _GELU_C * (1.0 + 3 * 0.044715 * u * u)
+    return 0.5 * (1.0 + t) + 0.5 * u * dt
+
+
+def _heads(cfg, x):
+    b, s, d = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _unheads(cfg, x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attention(cfg, q, k, v, pallas_attn=False):
+    """q,k,v: (B,H,S,hd) -> (B,H,S,hd) causal attention."""
+    if pallas_attn:
+        return jax.vmap(causal_attention)(q, k, v)
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((cfg.seq, cfg.seq), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    p = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def block_apply(cfg: ModelConfig, bp, x, pallas_attn=False):
+    """One pre-norm transformer block. bp = (g1,wqkv,wo,g2,w1,w2)."""
+    g1, wqkv, wo, g2, w1, w2 = bp
+    a = rmsnorm(x, g1)
+    qkv = a @ wqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    o = attention(cfg, _heads(cfg, q), _heads(cfg, k), _heads(cfg, v),
+                  pallas_attn)
+    x = x + _unheads(cfg, o) @ wo
+    bnorm = rmsnorm(x, g2)
+    x = x + gelu(bnorm @ w1) @ w2
+    return x
+
+
+def embed_apply(cfg, tok_emb, pos_emb, tokens):
+    return tok_emb[tokens] + pos_emb[None, :, :]
+
+
+def head_loss(cfg, gf, head, x, targets):
+    xf = rmsnorm(x, gf)
+    logits = xf @ head
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def forward(cfg: ModelConfig, params, tokens, pallas_attn=False):
+    tok_emb, pos_emb, blocks, gf, head = split_params(cfg, params)
+    x = embed_apply(cfg, tok_emb, pos_emb, tokens)
+    for bp in blocks:
+        x = block_apply(cfg, bp, x, pallas_attn)
+    xf = rmsnorm(x, gf)
+    return xf @ head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets, pallas_attn=False):
+    tok_emb, pos_emb, blocks, gf, head = split_params(cfg, params)
+    x = embed_apply(cfg, tok_emb, pos_emb, tokens)
+    for bp in blocks:
+        x = block_apply(cfg, bp, x, pallas_attn)
+    return head_loss(cfg, gf, head, x, targets)
+
+
+def fwdbwd(cfg: ModelConfig, params, tokens, targets, pallas_attn=False):
+    """(loss, grads...) — the per-step training graph."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets, pallas_attn))(list(params))
+    return (loss, *grads)
+
+
+def eval_loss(cfg: ModelConfig, params, tokens, targets):
+    return (loss_fn(cfg, params, tokens, targets),)
+
+
+# ---------------------------------------------------------------------------
+# Hand-written split-weight backward (no weight stashing, Fig. 10)
+# ---------------------------------------------------------------------------
+
+def _rms_cache(x):
+    return jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + RMS_EPS)
+
+
+def _rms_bwd(dy, g_bwd, x_fwd, r_fwd):
+    """Backward of y = x*r*g with weight from w_bwd, activations from w_fwd."""
+    dg = jnp.sum(dy * x_fwd * r_fwd, axis=(0, 1))
+    gdy = dy * g_bwd
+    dx = r_fwd * gdy - x_fwd * (r_fwd ** 3) * jnp.mean(
+        gdy * x_fwd, axis=-1, keepdims=True)
+    return dx, dg
+
+
+def split_fwdbwd(cfg: ModelConfig, params_fwd, params_bwd, tokens, targets):
+    """Incorrect gradient of async training *without* weight stashing.
+
+    Forward (and all cached activations) use ``params_fwd`` — the stale
+    weights each stage had at forward time. The backward ops use
+    ``params_bwd`` — the weights at backward time (already updated) —
+    exactly what happens when stashing is disabled (Gaunt et al. 2017;
+    Huo et al. 2018). Returns (loss_fwd, grads...) in schema order.
+    """
+    te_f, pe_f, blocks_f, gf_f, head_f = split_params(cfg, params_fwd)
+    _, _, blocks_b, gf_b, head_b = split_params(cfg, params_bwd)
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    mask = jnp.tril(jnp.ones((cfg.seq, cfg.seq), dtype=bool))
+
+    # ---- forward with activation cache (weights = w_fwd) ----
+    x = embed_apply(cfg, te_f, pe_f, tokens)
+    caches = []
+    for (g1, wqkv, wo, g2, w1, w2) in blocks_f:
+        x_in = x
+        r1 = _rms_cache(x_in)
+        a = x_in * r1 * g1
+        qkv = a @ wqkv
+        q, k, v = (_heads(cfg, t) for t in jnp.split(qkv, 3, axis=-1))
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        att = jnp.where(mask[None, None], att, -1e30)
+        p = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        oc = _unheads(cfg, o)
+        x_mid = x_in + oc @ wo
+        r2 = _rms_cache(x_mid)
+        bnorm = x_mid * r2 * g2
+        u = bnorm @ w1
+        gu = gelu(u)
+        x = x_mid + gu @ w2
+        caches.append((x_in, r1, a, q, k, v, p, oc, x_mid, r2, bnorm, u, gu))
+    x_last = x
+    rf = _rms_cache(x_last)
+    xf = x_last * rf * gf_f
+    logits = xf @ head_f
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    loss = jnp.mean(nll)
+
+    # ---- backward (weights = w_bwd, activations from the fwd cache) ----
+    n_tok = cfg.batch * cfg.seq
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=jnp.float32)
+    dlogits = (jnp.exp(logp) - onehot) / n_tok
+    dhead = jnp.einsum("bsd,bsv->dv", xf, dlogits)
+    dxf = dlogits @ head_b.T
+    dx, dgf = _rms_bwd(dxf, gf_b, x_last, rf)
+
+    grads_blocks = []
+    for (bp_b, cache) in zip(reversed(blocks_b), reversed(caches)):
+        g1b, wqkvb, wob, g2b, w1b, w2b = bp_b
+        (x_in, r1, a, q, k, v, p, oc, x_mid, r2, bnorm, u, gu) = cache
+        # MLP branch: x = x_mid + gelu(bnorm@w1) @ w2
+        dw2 = jnp.einsum("bsf,bsd->fd", gu, dx)
+        dgu = dx @ w2b.T
+        du = dgu * gelu_grad(u)
+        dw1 = jnp.einsum("bsd,bsf->df", bnorm, du)
+        dbnorm = du @ w1b.T
+        dx_mid_norm, dg2 = _rms_bwd(dbnorm, g2b, x_mid, r2)
+        dx_mid = dx + dx_mid_norm
+        # Attention branch: x_mid = x_in + oc @ wo
+        dwo = jnp.einsum("bsd,bse->de", oc, dx_mid)
+        doc = dx_mid @ wob.T
+        do = _heads(cfg, doc)
+        dv = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", do, v)
+        datt = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+        dq = jnp.einsum("bhqk,bhkd->bhqd", datt, k) * scale
+        dk = jnp.einsum("bhqk,bhqd->bhkd", datt, q) * scale
+        dqkv = jnp.concatenate(
+            [_unheads(cfg, t) for t in (dq, dk, dv)], axis=-1)
+        dwqkv = jnp.einsum("bsd,bse->de", a, dqkv)
+        da = dqkv @ wqkvb.T
+        dx_in_norm, dg1 = _rms_bwd(da, g1b, x_in, r1)
+        dx = dx_mid + dx_in_norm
+        grads_blocks.append((dg1, dwqkv, dwo, dg2, dw1, dw2))
+    grads_blocks.reverse()
+
+    dpos = jnp.sum(dx, axis=0)
+    dtok = jnp.zeros_like(te_f).at[tokens].add(dx)
+
+    flat = [dtok, dpos]
+    for gb in grads_blocks:
+        flat.extend(gb)
+    flat.extend([dgf, dhead])
+    return (loss, *flat)
+
+
+# ---------------------------------------------------------------------------
+# Per-block engine graphs (backward recomputes forward internally)
+# ---------------------------------------------------------------------------
+
+def embed_fwd(cfg, tok_emb, pos_emb, tokens):
+    return (embed_apply(cfg, tok_emb, pos_emb, tokens),)
+
+
+def embed_bwd(cfg, tokens, dx):
+    dtok = jnp.zeros((cfg.vocab, cfg.d_model), jnp.float32).at[tokens].add(dx)
+    dpos = jnp.sum(dx, axis=0)
+    return (dtok, dpos)
+
+
+def block_fwd(cfg, g1, wqkv, wo, g2, w1, w2, x):
+    return (block_apply(cfg, (g1, wqkv, wo, g2, w1, w2), x),)
+
+
+def block_bwd(cfg, g1, wqkv, wo, g2, w1, w2, x, dy):
+    """(dx, dparams...) — recomputes the forward inside (checkpoint-style)."""
+    bp = (g1, wqkv, wo, g2, w1, w2)
+
+    def f(bp_, x_):
+        return block_apply(cfg, bp_, x_)
+
+    _, vjp = jax.vjp(f, bp, x)
+    dbp, dx = vjp(dy)
+    return (dx, *dbp)
+
+
+def head_fwdbwd(cfg, gf, head, x, targets):
+    """(loss, dx, dgf, dhead) for the last stage."""
+
+    def f(gf_, head_, x_):
+        return head_loss(cfg, gf_, head_, x_, targets)
+
+    loss, (dgf, dhead, dx) = jax.value_and_grad(
+        f, argnums=(0, 1, 2))(gf, head, x)
+    return (loss, dx, dgf, dhead)
+
+
+# ---------------------------------------------------------------------------
+# Hessian-vector product (Fig. 11 Hessian (1,1)-norm estimation)
+# ---------------------------------------------------------------------------
+
+def hvp(cfg: ModelConfig, params, vec, tokens, targets):
+    """H·v via forward-over-reverse; vec in schema order."""
+
+    def g(p):
+        return jax.grad(lambda q: loss_fn(cfg, q, tokens, targets))(p)
+
+    _, hv = jax.jvp(g, (list(params),), (list(vec),))
+    return tuple(hv)

@@ -1,0 +1,103 @@
+"""L2 — Mixture-of-Experts model variant (paper Fig. 21, nanoMoE-style).
+
+Each block replaces the dense MLP with a top-k routed expert MLP
+(8 experts, top-2 by default). Routing and expert compute stay inside a
+single stage, so the pipeline schedule — and hence the staleness
+semantics — are identical to the dense model; basis rotation applies to
+each expert's matrices independently (expert axis folded into the
+batched optimizer executables' leading dim).
+
+At this scale experts are computed densely and masked by the (sparse)
+gate matrix — numerically identical to dispatch/combine and far simpler
+to lower. A standard load-balancing auxiliary loss (Switch-style) with
+coefficient 0.01 is added, as in nanoMoE.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import (attention, embed_apply, gelu, head_loss, rmsnorm,
+                    split_params, _heads, _unheads)
+
+AUX_COEF = 0.01
+
+
+def _topk_mask(probs, k):
+    """Dense {0,1} mask of the k largest entries along the last axis.
+
+    Implemented as k iterated argmaxes instead of ``jax.lax.top_k``: the
+    xla_extension 0.5.1 HLO text parser predates the dedicated ``topk``
+    instruction, while argmax lowers to a plain reduce (DESIGN.md §5).
+    """
+    e = probs.shape[-1]
+    remaining = probs
+    mask = jnp.zeros_like(probs)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)
+        hot = jax.nn.one_hot(idx, e, dtype=probs.dtype)
+        mask = mask + hot
+        remaining = remaining - hot * 1e9
+    return mask
+
+
+def moe_mlp(cfg: ModelConfig, router, w1e, w2e, x):
+    """Top-k routed expert MLP. x: (B,S,D). Returns (out, aux_loss)."""
+    E = cfg.moe.n_experts
+    k = cfg.moe.top_k
+    scores = x @ router                                   # (B,S,E)
+    probs = jax.nn.softmax(scores, axis=-1)
+    mask = jax.lax.stop_gradient(_topk_mask(probs, k))    # routing decision
+    kept = probs * mask
+    # Renormalized dense gates (gradients flow through the kept probs).
+    gates = kept / (jnp.sum(kept, axis=-1, keepdims=True) + 1e-9)
+    # Dense expert compute: (B,S,E,F) -> (B,S,E,D), gate-combined.
+    h = jnp.einsum("bsd,edf->bsef", x, w1e)
+    h = gelu(h)
+    out_e = jnp.einsum("bsef,efd->bsed", h, w2e)
+    out = jnp.einsum("bsed,bse->bsd", out_e, gates)
+    # Switch-style load-balancing loss.
+    frac_tokens = jnp.mean(gates > 0.0, axis=(0, 1)).astype(jnp.float32)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+def moe_block_apply(cfg: ModelConfig, bp, x):
+    """bp = (g1, wqkv, wo, g2, router, w1e, w2e)."""
+    g1, wqkv, wo, g2, router, w1e, w2e = bp
+    a = rmsnorm(x, g1)
+    qkv = a @ wqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    o = attention(cfg, _heads(cfg, q), _heads(cfg, k), _heads(cfg, v))
+    x = x + _unheads(cfg, o) @ wo
+    bnorm = rmsnorm(x, g2)
+    mlp, aux = moe_mlp(cfg, router, w1e, w2e, bnorm)
+    return x + mlp, aux
+
+
+def moe_loss_fn(cfg: ModelConfig, params, tokens, targets):
+    tok_emb, pos_emb, blocks, gf, head = split_params(cfg, params)
+    x = embed_apply(cfg, tok_emb, pos_emb, tokens)
+    aux_total = 0.0
+    for bp in blocks:
+        x, aux = moe_block_apply(cfg, bp, x)
+        aux_total = aux_total + aux
+    ce = head_loss(cfg, gf, head, x, targets)
+    return ce + AUX_COEF * aux_total / cfg.n_blocks, ce
+
+
+def moe_fwdbwd(cfg: ModelConfig, params, tokens, targets):
+    """(ce_loss, grads...) — grads of total (ce + aux) loss."""
+
+    def total(p):
+        tot, ce = moe_loss_fn(cfg, p, tokens, targets)
+        return tot, ce
+
+    (tot, ce), grads = jax.value_and_grad(total, has_aux=True)(list(params))
+    return (ce, *grads)
+
+
+def moe_eval_loss(cfg: ModelConfig, params, tokens, targets):
+    _, ce = moe_loss_fn(cfg, params, tokens, targets)
+    return (ce,)

@@ -1,0 +1,251 @@
+"""L2 — batched optimizer-update graphs (the paper's Algorithms 1 & 2).
+
+All rotated-matrix parameters of a given shape class (e.g. the 32
+``wqkv`` matrices of `tiny32`) are updated by ONE executable call with a
+leading batch axis, so the Rust hot loop makes ~4 dispatches per step
+instead of ~128. Per-matrix learning rates (PipeDream-LR is stage-wise)
+and per-matrix eigen-update masks (stage-aware rotation frequency) are
+passed as (NB,) vectors.
+
+Every matmul inside these graphs is the L1 Pallas kernel
+(`kernels.matmul`), and the rotated-space moment update is the L1 fused
+Adam kernel (`kernels.adam_step`) — the paper's compute hot-spot lowers
+to Pallas ops inside the exported HLO.
+
+Eigenbasis estimation (Algorithm 2) is exactly the paper's one
+power-iteration step + QR — with QR realized as twice-reorthogonalized
+classical Gram–Schmidt (CGS2) in pure jnp ops, because jax-0.8's
+``jnp.linalg.qr`` lowers to LAPACK FFI custom-calls that xla_extension
+0.5.1 cannot execute. CGS2 keeps the triangular column ordering that
+makes orthogonal (simultaneous) iteration converge to the eigenbasis —
+a symmetric/polar orthonormalization would *not* (its fixed points are
+not attracting per-column), which pytest's
+``test_eigenbasis_estimation_diagonalizes`` guards against.
+Newton–Schulz remains for Muon, where it is the authentic method.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.adam_step import adam_direction
+from .kernels.matmul import matmul
+
+# 4 quintic (Muon-coefficient) steps lift small singular values fast,
+# then 4 cubic steps polish to machine-precision orthogonality — the
+# quintic alone plateaus at ~0.3 off-orthogonality, too loose for a
+# rotation basis.
+NS_QUINTIC, NS_CUBIC = 4, 4
+_NS_A, _NS_B, _NS_C = 3.4445, -4.7750, 2.0315
+
+
+# ---------------------------------------------------------------------------
+# Implementation switch: 'pallas' routes every matmul / fused-Adam step
+# through the L1 kernels (the TPU-authoring path; interpret-mode on this
+# image). 'jnp' emits the same math as native XLA dots — the CPU
+# *production* lowering: interpret-mode Pallas expands each grid cell
+# into an XLA While iteration, which measured 45 s/step on tiny32 vs
+# sub-second for the jnp lowering (EXPERIMENTS.md §Perf). Numerical
+# equivalence of the two lowerings is pinned by pytest
+# (test_impl_equivalence) and by the Rust integration tests.
+# ---------------------------------------------------------------------------
+
+IMPL = "pallas"
+
+
+def set_impl(impl: str):
+    global IMPL
+    assert impl in ("pallas", "jnp"), impl
+    IMPL = impl
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (single matrix; batched via vmap at export)
+# ---------------------------------------------------------------------------
+
+def _mm(a, b):
+    if IMPL == "pallas":
+        return matmul(a, b, interpret=True)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _adam_direction(g_rot, m_rot, vt, sc):
+    if IMPL == "pallas":
+        return adam_direction(g_rot, m_rot, vt, sc, interpret=True)
+    beta1, beta2, eps, t = sc[1], sc[2], sc[3], sc[5]
+    v_new = beta2 * vt + (1.0 - beta2) * g_rot * g_rot
+    mhat = m_rot / (1.0 - beta1**t)
+    vhat = v_new / (1.0 - beta2**t)
+    return mhat / (jnp.sqrt(vhat) + eps), v_new
+
+
+def ns_orthonormalize(x):
+    """Newton–Schulz quintic polar factor (Muon coefficients), Pallas mms."""
+    m, n = x.shape
+    transpose = m > n
+    y = x.T if transpose else x
+    y = y / (jnp.linalg.norm(y) + 1e-7)
+    for _ in range(NS_QUINTIC):
+        s = _mm(y, y.T)
+        y = _NS_A * y + _mm(_NS_B * s + _NS_C * _mm(s, s), y)
+    for _ in range(NS_CUBIC):
+        s = _mm(y, y.T)
+        y = 1.5 * y - 0.5 * _mm(s, y)
+    return y.T if transpose else y
+
+
+def cgs2_qr(x):
+    """Q factor of x via classical Gram–Schmidt with reorthogonalization.
+
+    Column-ordered like LAPACK QR (up to sign), so orthogonal iteration
+    U' = qr(S·U).Q converges to the eigenbasis of SPD S. Lowers to a
+    plain HLO While loop — no custom calls.
+    """
+    def body(j, q):
+        a = lax.dynamic_slice_in_dim(x, j, 1, axis=1)[:, 0]
+        for _ in range(2):  # CGS2: second pass restores orthogonality
+            a = a - q @ (q.T @ a)
+        a = a / (jnp.linalg.norm(a) + 1e-30)
+        return lax.dynamic_update_slice_in_dim(q, a[:, None], j, axis=1)
+
+    return lax.fori_loop(0, x.shape[1], body, jnp.zeros_like(x))
+
+
+def power_qr(stat, basis):
+    """One power-iteration step + QR: the paper's Eigenbasis-Estimation
+    primitive (Algorithm 2's ``Power``).
+
+    A scale-aware ridge (δI shifts eigenvalues uniformly — eigenvectors
+    are unchanged) keeps the iteration well-defined when the
+    statistic is rank-deficient — e.g. E[GᵀG] of a wide matrix (rank ≤
+    min(m,n)) or the near-zero Fisher EMA in the first training steps:
+    null-space columns then decay toward the previous basis instead of
+    normalized fp noise.
+    """
+    n = stat.shape[0]
+    ridge = 1e-3 * jnp.trace(stat) / n + 1e-12
+    return cgs2_qr(_mm(stat, basis) + ridge * basis)
+
+
+def _uni_side(m: int, n: int) -> str:
+    """Unilateral geometry rotates the *smaller* dimension (paper §3.2)."""
+    return "left" if m <= n else "right"
+
+
+def _rotate(x, u, v):
+    """x̃ = Uᵀ x V; u or v may be None for unilateral geometry."""
+    y = x if u is None else _mm(u.T, x)
+    return y if v is None else _mm(y, v)
+
+
+def _unrotate(x, u, v):
+    y = x if u is None else _mm(u, x)
+    return y if v is None else _mm(y, v.T)
+
+
+def _pick_uv(u, v, unilateral, shape):
+    if not unilateral:
+        return u, v
+    if _uni_side(*shape) == "left":
+        return u, None
+    return None, v
+
+
+def _rot_adam_one(w, g, m, vt, u, v, sc, unilateral):
+    """Algorithm 1 lines 3–11 for one matrix. sc=(8,) scalar vector."""
+    lr, beta1, wd = sc[0], sc[1], sc[4]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    uu, vv = _pick_uv(u, v, unilateral, w.shape)
+    g_rot = _rotate(g, uu, vv)
+    m_rot = _rotate(m_new, uu, vv)
+    direction, vt_new = _adam_direction(g_rot, m_rot, vt, sc)
+    upd = _unrotate(direction, uu, vv)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, vt_new
+
+
+def _soap_one(w, g, m_rot, vt, u, v, sc, unilateral):
+    """SOAP: momentum accumulated in the rotated space (Appendix G)."""
+    lr, beta1, wd = sc[0], sc[1], sc[4]
+    uu, vv = _pick_uv(u, v, unilateral, w.shape)
+    g_rot = _rotate(g, uu, vv)
+    m_new = beta1 * m_rot + (1.0 - beta1) * g_rot
+    direction, vt_new = _adam_direction(g_rot, m_new, vt, sc)
+    upd = _unrotate(direction, uu, vv)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, vt_new
+
+
+def _eigen2nd_one(ll, rr, g, u, v, mask, beta2, unilateral):
+    """Algorithm 2, S=2nd: Fisher-factor EMAs + power step + orthonorm.
+
+    ``mask`` in {0,1} gates the basis refresh per matrix (stage-aware
+    frequency allocation): EMAs always update, bases only when mask=1.
+    """
+    left = not unilateral or _uni_side(*g.shape) == "left"
+    right = not unilateral or _uni_side(*g.shape) == "right"
+    ll_new, u_new = ll, u
+    rr_new, v_new = rr, v
+    if left:
+        ll_new = beta2 * ll + (1.0 - beta2) * _mm(g, g.T)
+        u_pow = power_qr(ll_new, u)
+        u_new = mask * u_pow + (1.0 - mask) * u
+    if right:
+        rr_new = beta2 * rr + (1.0 - beta2) * _mm(g.T, g)
+        v_pow = power_qr(rr_new, v)
+        v_new = mask * v_pow + (1.0 - mask) * v
+    return ll_new, rr_new, u_new, v_new
+
+
+def _eigen1st_one(m, u, v, mask, unilateral):
+    """Algorithm 2, S=1st: momentum outer-products, no L/R storage."""
+    left = not unilateral or _uni_side(*m.shape) == "left"
+    right = not unilateral or _uni_side(*m.shape) == "right"
+    u_new, v_new = u, v
+    if left:
+        u_pow = power_qr(_mm(m, m.T), u)
+        u_new = mask * u_pow + (1.0 - mask) * u
+    if right:
+        v_pow = power_qr(_mm(m.T, m), v)
+        v_new = mask * v_pow + (1.0 - mask) * v
+    return u_new, v_new
+
+
+def _muon_one(mom, g, beta):
+    mom_new = beta * mom + g
+    o = ns_orthonormalize(mom_new)
+    return mom_new, o
+
+
+# ---------------------------------------------------------------------------
+# Batched exported graphs. NB matrices of shape (m, n) per call.
+# Scalar layout per matrix i: sc[i] = [lr, beta1, beta2, eps, wd, t, mask, _]
+# ---------------------------------------------------------------------------
+
+def rot_adam_batched(w, g, m, vt, u, v, sc, *, unilateral=False):
+    f = lambda wi, gi, mi, vti, ui, vi, sci: _rot_adam_one(
+        wi, gi, mi, vti, ui, vi, sci, unilateral)
+    return jax.vmap(f)(w, g, m, vt, u, v, sc)
+
+
+def soap_batched(w, g, m_rot, vt, u, v, sc, *, unilateral=False):
+    f = lambda wi, gi, mi, vti, ui, vi, sci: _soap_one(
+        wi, gi, mi, vti, ui, vi, sci, unilateral)
+    return jax.vmap(f)(w, g, m_rot, vt, u, v, sc)
+
+
+def eigen2nd_batched(ll, rr, g, u, v, sc, *, unilateral=False):
+    f = lambda li, ri, gi, ui, vi, sci: _eigen2nd_one(
+        li, ri, gi, ui, vi, sci[6], sci[2], unilateral)
+    return jax.vmap(f)(ll, rr, g, u, v, sc)
+
+
+def eigen1st_batched(m, u, v, sc, *, unilateral=False):
+    f = lambda mi, ui, vi, sci: _eigen1st_one(mi, ui, vi, sci[6], unilateral)
+    return jax.vmap(f)(m, u, v, sc)
+
+
+def muon_batched(mom, g, sc):
+    """Returns (mom', O). Rust applies W -= lr * sqrt(max(m,n)) * O."""
+    f = lambda mi, gi, sci: _muon_one(mi, gi, sci[1])
+    return jax.vmap(f)(mom, g, sc)

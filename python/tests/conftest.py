@@ -1,0 +1,17 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def rand_orth(rng, n):
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    return q.astype(np.float32)

@@ -1,0 +1,91 @@
+"""AOT export path: manifest integrity + HLO text well-formedness."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import MICRO, MOE_MICRO
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts_micro"))
+    aot.export_config(MICRO, out)
+    return out
+
+
+def test_manifest_structure(exported):
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    assert man["config"]["name"] == "micro"
+    assert man["config"]["n_blocks"] == 2
+    names = {p["name"] for p in man["params"]}
+    assert {"tok_emb", "pos_emb", "gf", "head", "b0.wqkv"} <= names
+    assert len(man["shape_classes"]) == 4
+    for ex in man["executables"].values():
+        assert os.path.exists(os.path.join(exported, ex["file"]))
+        assert ex["inputs"] and ex["outputs"]
+
+
+def test_core_executables_present(exported):
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    exes = set(man["executables"])
+    need = {"fwdbwd", "eval_loss", "fwdbwd_split", "hvp", "embed_fwd",
+            "embed_bwd", "block_fwd", "block_bwd", "head_fwdbwd"}
+    assert need <= exes
+    for cls in ("wqkv", "wo", "w1", "w2"):
+        for g in (f"rot_adam_bi_{cls}", f"rot_adam_uni_{cls}",
+                  f"soap_bi_{cls}", f"eigen2nd_bi_{cls}",
+                  f"eigen1st_uni_{cls}", f"muon_{cls}"):
+            assert g in exes, g
+
+
+def test_hlo_text_is_parseable_module(exported):
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    for name, ex in man["executables"].items():
+        text = open(os.path.join(exported, ex["file"])).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_no_custom_calls(exported):
+    """The xla_extension 0.5.1 CPU client can only run core HLO — any
+    custom-call (LAPACK QR, FFI, Mosaic) would fail at compile time."""
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    for name, ex in man["executables"].items():
+        text = open(os.path.join(exported, ex["file"])).read()
+        assert "custom-call" not in text, name
+
+
+def test_fwdbwd_signature_matches_schema(exported):
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    fb = man["executables"]["fwdbwd"]
+    n_params = len(man["params"])
+    assert len(fb["inputs"]) == n_params + 2
+    assert fb["inputs"][-1]["dtype"] == "s32"
+    # outputs: loss + one grad per param
+    assert len(fb["outputs"]) == 1 + n_params
+    assert fb["outputs"][0]["shape"] == []
+    for pspec, ospec in zip(man["params"], fb["outputs"][1:]):
+        assert pspec["shape"] == ospec["shape"]
+
+
+def test_moe_export(tmp_path):
+    out = str(tmp_path / "moe")
+    aot.export_config(MOE_MICRO, out)
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    assert man["config"]["moe"]["n_experts"] == 4
+    assert "fwdbwd" in man["executables"]
+    # expert shape classes fold E into the batch axis
+    cls = {c["name"]: c for c in man["shape_classes"]}
+    assert cls["w1e"]["count"] == MOE_MICRO.n_blocks * 4
+
+
+def test_pallas_attention_variant_exports(tmp_path):
+    out = str(tmp_path / "pattn")
+    aot.export_config(MICRO, out, pallas_attn=True)
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    text = open(
+        os.path.join(out, man["executables"]["eval_loss"]["file"])).read()
+    assert "custom-call" not in text

@@ -1,0 +1,184 @@
+"""L2 model graphs: shapes, autodiff-vs-manual backward, block composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import MICRO, get_config
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MICRO
+    key = jax.random.PRNGKey(0)
+    p = model.init_params(cfg, key)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (cfg.batch, cfg.seq), 0,
+                             cfg.vocab)
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (cfg.batch, cfg.seq), 0,
+                             cfg.vocab)
+    return cfg, p, tok, tgt
+
+
+def test_param_schema_shapes(setup):
+    cfg, p, _, _ = setup
+    for arr, (_n, shape, _k, _b, _r) in zip(p, cfg.param_schema()):
+        assert arr.shape == shape
+
+
+def test_forward_shape_and_loss(setup):
+    cfg, p, tok, tgt = setup
+    logits = model.forward(cfg, p, tok)
+    assert logits.shape == (cfg.batch, cfg.seq, cfg.vocab)
+    loss = model.loss_fn(cfg, p, tok, tgt)
+    # fresh init ⇒ loss ≈ ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.3
+
+
+def test_fwdbwd_returns_all_grads(setup):
+    cfg, p, tok, tgt = setup
+    out = model.fwdbwd(cfg, p, tok, tgt)
+    assert len(out) == 1 + len(p)
+    for g, w in zip(out[1:], p):
+        assert g.shape == w.shape
+        assert np.isfinite(np.array(g)).all()
+
+
+def test_split_bwd_equals_autodiff_when_same_weights(setup):
+    cfg, p, tok, tgt = setup
+    auto = model.fwdbwd(cfg, p, tok, tgt)
+    manual = model.split_fwdbwd(cfg, p, p, tok, tgt)
+    assert abs(float(auto[0]) - float(manual[0])) < 1e-6
+    for a, b in zip(auto[1:], manual[1:]):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_split_bwd_differs_with_stale_backward_weights(setup):
+    """With w_bwd ≠ w_fwd the gradient must be (measurably) incorrect —
+    that is the no-stashing pathology of Fig. 10."""
+    cfg, p, tok, tgt = setup
+    key = jax.random.PRNGKey(9)
+    p_bwd = [x + 0.05 * jax.random.normal(jax.random.fold_in(key, i),
+                                          x.shape) for i, x in enumerate(p)]
+    auto = model.fwdbwd(cfg, p, tok, tgt)
+    manual = model.split_fwdbwd(cfg, p, p_bwd, tok, tgt)
+    # loss is the forward loss — identical
+    assert abs(float(auto[0]) - float(manual[0])) < 1e-6
+    # at least one matrix grad deviates
+    devs = [float(np.abs(np.array(a) - np.array(b)).max())
+            for a, b in zip(auto[1:], manual[1:])]
+    assert max(devs) > 1e-3
+
+
+def test_blocks_compose_to_forward(setup):
+    """embed_fwd ∘ block_fwd^L ∘ head == whole-model loss (engine path)."""
+    cfg, p, tok, tgt = setup
+    te, pe, blocks, gf, head = model.split_params(cfg, p)
+    (x,) = model.embed_fwd(cfg, te, pe, tok)
+    for bp in blocks:
+        (x,) = model.block_fwd(cfg, *bp, x)
+    loss, dx, dgf, dhead = model.head_fwdbwd(cfg, gf, head, x, tgt)
+    want = model.loss_fn(cfg, p, tok, tgt)
+    assert abs(float(loss) - float(want)) < 1e-6
+
+
+def test_block_bwd_matches_autodiff(setup):
+    """Per-block backward (engine) chains to the whole-model gradient."""
+    cfg, p, tok, tgt = setup
+    auto = model.fwdbwd(cfg, p, tok, tgt)
+    te, pe, blocks, gf, head = model.split_params(cfg, p)
+    # forward keeping stage inputs
+    (x,) = model.embed_fwd(cfg, te, pe, tok)
+    xs = [x]
+    for bp in blocks:
+        (x,) = model.block_fwd(cfg, *bp, x)
+        xs.append(x)
+    loss, dx, dgf, dhead = model.head_fwdbwd(cfg, gf, head, xs[-1], tgt)
+    grads_blocks = []
+    for bp, x_in in zip(reversed(blocks), reversed(xs[:-1])):
+        out = model.block_bwd(cfg, *bp, x_in, dx)
+        dx = out[0]
+        grads_blocks.append(out[1:])
+    grads_blocks.reverse()
+    dtok, dpos = model.embed_bwd(cfg, tok, dx)
+    flat = [dtok, dpos]
+    for gb in grads_blocks:
+        flat.extend(gb)
+    flat.extend([dgf, dhead])
+    for a, b in zip(auto[1:], flat):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_hvp_matches_finite_difference(setup):
+    cfg, p, tok, tgt = setup
+    key = jax.random.PRNGKey(4)
+    v = [jax.random.normal(jax.random.fold_in(key, i), x.shape)
+         for i, x in enumerate(p)]
+    hv = model.hvp(cfg, p, v, tok, tgt)
+    eps = 1e-3
+
+    def grad_at(q):
+        return jax.grad(lambda pp: model.loss_fn(cfg, pp, tok, tgt))(q)
+
+    gp = grad_at([x + eps * t for x, t in zip(p, v)])
+    gm = grad_at([x - eps * t for x, t in zip(p, v)])
+    fd = [(a - b) / (2 * eps) for a, b in zip(gp, gm)]
+    # compare on the largest-magnitude entries (fd is noisy in f32)
+    hv_cat = np.concatenate([np.ravel(np.array(x)) for x in hv])
+    fd_cat = np.concatenate([np.ravel(np.array(x)) for x in fd])
+    denom = np.abs(fd_cat).max()
+    assert denom > 0
+    err = np.abs(hv_cat - fd_cat).max() / denom
+    assert err < 0.05, err
+
+
+def test_mixed_version_weights_change_gradient(setup):
+    """The staleness mechanism: feeding per-stage stale weights into
+    fwdbwd yields a different gradient than fresh weights — the exact
+    PipeDream-with-stashing semantics exercised by the Rust simulator."""
+    cfg, p, tok, tgt = setup
+    stale = [x - 0.02 if i < 5 else x for i, x in enumerate(p)]
+    g_fresh = model.fwdbwd(cfg, p, tok, tgt)
+    g_stale = model.fwdbwd(cfg, stale, tok, tgt)
+    assert float(np.abs(np.array(g_fresh[3]) -
+                        np.array(g_stale[3])).max()) > 0
+
+
+def test_tiny_adam_training_reduces_loss(setup):
+    """A handful of plain-Adam steps on one batch reduces the loss —
+    sanity that the graph is trainable end to end."""
+    cfg, p, tok, tgt = setup
+    p = [jnp.array(x) for x in p]
+    m = [jnp.zeros_like(x) for x in p]
+    v = [jnp.zeros_like(x) for x in p]
+    loss0 = None
+    for t in range(1, 11):
+        out = model.fwdbwd(cfg, p, tok, tgt)
+        if loss0 is None:
+            loss0 = float(out[0])
+        for i, g in enumerate(out[1:]):
+            m[i] = 0.9 * m[i] + 0.1 * g
+            v[i] = 0.999 * v[i] + 0.001 * g * g
+            mh = m[i] / (1 - 0.9 ** t)
+            vh = v[i] / (1 - 0.999 ** t)
+            p[i] = p[i] - 3e-3 * mh / (jnp.sqrt(vh) + 1e-8)
+    out = model.fwdbwd(cfg, p, tok, tgt)
+    assert float(out[0]) < loss0 - 0.3
+
+
+def test_gelu_grad_matches_autodiff():
+    u = jnp.linspace(-4, 4, 101)
+    auto = jax.vmap(jax.grad(lambda x: model.gelu(x)))(u)
+    np.testing.assert_allclose(np.array(model.gelu_grad(u)), np.array(auto),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_normalizes():
+    x = jnp.array(np.random.default_rng(0).standard_normal((4, 8, 16)),
+                  dtype=jnp.float32)
+    y = model.rmsnorm(x, jnp.ones(16))
+    rms = np.sqrt(np.mean(np.array(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)

@@ -1,0 +1,175 @@
+"""Batched optimizer graphs (the exported L2 update executables) vs refs."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim_graphs as og
+from compile.kernels import ref
+
+
+def _orth(rng, n):
+    return np.linalg.qr(rng.standard_normal((n, n)))[0].astype(np.float32)
+
+
+def _batch(rng, nb, m, n):
+    w, g, mm = (rng.standard_normal((nb, m, n)).astype(np.float32)
+                for _ in range(3))
+    vt = np.abs(rng.standard_normal((nb, m, n))).astype(np.float32)
+    u = np.stack([_orth(rng, m) for _ in range(nb)])
+    v = np.stack([_orth(rng, n) for _ in range(nb)])
+    sc = np.tile(np.array([1e-3, 0.9, 0.999, 1e-8, 0.01, 3.0, 1.0, 0.0],
+                          dtype=np.float32), (nb, 1))
+    return tuple(jnp.array(x) for x in (w, g, mm, vt, u, v, sc))
+
+
+@pytest.mark.parametrize("m,n", [(16, 48), (48, 16), (16, 16)])
+@pytest.mark.parametrize("uni", [False, True])
+def test_rot_adam_batched(m, n, uni):
+    rng = np.random.default_rng(m * 100 + n + uni)
+    w, g, mm, vt, u, v, sc = _batch(rng, 3, m, n)
+    got = og.rot_adam_batched(w, g, mm, vt, u, v, sc, unilateral=uni)
+    for i in range(3):
+        want = ref.rotated_adam_ref(w[i], g[i], mm[i], vt[i], u[i], v[i],
+                                    sc[i], unilateral=uni)
+        for a, b in zip((got[0][i], got[1][i], got[2][i]), want):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-5,
+                                       atol=1e-6)
+
+
+@pytest.mark.parametrize("uni", [False, True])
+def test_soap_batched(uni):
+    rng = np.random.default_rng(77 + uni)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, 16, 48)
+    got = og.soap_batched(w, g, mm, vt, u, v, sc, unilateral=uni)
+    for i in range(2):
+        want = ref.soap_update_ref(w[i], g[i], mm[i], vt[i], u[i], v[i],
+                                   sc[i], unilateral=uni)
+        for a, b in zip((got[0][i], got[1][i], got[2][i]), want):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-5,
+                                       atol=1e-6)
+
+
+@pytest.mark.parametrize("m,n", [(16, 48), (48, 16)])
+@pytest.mark.parametrize("uni", [False, True])
+def test_eigen2nd_batched(m, n, uni):
+    rng = np.random.default_rng(m + n + uni)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, m, n)
+    ll = jnp.einsum("bij,bkj->bik", g, g)
+    rr = jnp.einsum("bji,bjk->bik", g, g)
+    got = og.eigen2nd_batched(ll, rr, g, u, v, sc, unilateral=uni)
+    for i in range(2):
+        want = ref.eigen2nd_ref(ll[i], rr[i], g[i], u[i], v[i], sc[i, 2],
+                                unilateral=uni)
+        for a, b in zip((got[0][i], got[1][i], got[2][i], got[3][i]), want):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4,
+                                       atol=2e-4)
+
+
+def test_eigen1st_batched():
+    rng = np.random.default_rng(5)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, 16, 48)
+    got = og.eigen1st_batched(mm, u, v, sc)
+    for i in range(2):
+        want = ref.eigen1st_ref(mm[i], u[i], v[i])
+        for a, b in zip((got[0][i], got[1][i]), want):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4,
+                                       atol=2e-4)
+
+
+def test_eigen_mask_freezes_basis():
+    """mask=0 must leave U,V untouched (stage-aware frequency gating)."""
+    rng = np.random.default_rng(9)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, 16, 16)
+    sc = sc.at[:, 6].set(jnp.array([1.0, 0.0]))
+    ll = jnp.einsum("bij,bkj->bik", g, g)
+    rr = jnp.einsum("bji,bjk->bik", g, g)
+    _, _, un, vn = og.eigen2nd_batched(ll, rr, g, u, v, sc)
+    assert not np.allclose(np.array(un[0]), np.array(u[0]))
+    np.testing.assert_array_equal(np.array(un[1]), np.array(u[1]))
+    np.testing.assert_array_equal(np.array(vn[1]), np.array(v[1]))
+
+
+def test_ns_orthonormalize_precision():
+    rng = np.random.default_rng(3)
+    for n in (8, 16, 48):
+        x = rng.standard_normal((n, 4 * n)).astype(np.float32)
+        spd = (x @ x.T / (4 * n)).astype(np.float32)
+        y = np.array(og.ns_orthonormalize(jnp.array(spd @ _orth(rng, n))))
+        err = np.abs(y @ y.T - np.eye(n)).max()
+        assert err < 1e-3, (n, err)
+
+
+def test_cgs2_qr_orthonormal_and_spans():
+    rng = np.random.default_rng(21)
+    x = rng.standard_normal((24, 24)).astype(np.float32)
+    q = np.array(og.cgs2_qr(jnp.array(x)))
+    assert np.abs(q @ q.T - np.eye(24)).max() < 1e-4
+    # same column space: projector onto span(x) reproduces x
+    assert np.abs(q @ (q.T @ x) - x).max() < 1e-3
+
+
+def test_eigenbasis_estimation_diagonalizes():
+    """Repeated Algorithm-2 steps must converge U to the eigenbasis of a
+    fixed SPD statistic: off-diagonal mass of UᵀLU → small. This is the
+    property QR has and a symmetric/polar orthonormalization lacks.
+    """
+    rng = np.random.default_rng(12)
+    n = 16
+    q = _orth(rng, n)
+    lam = np.diag(np.linspace(10.0, 0.5, n)).astype(np.float32)
+    ll = q @ lam @ q.T
+    u = _orth(rng, n)
+    for _ in range(60):
+        u = np.array(og.power_qr(jnp.array(ll), jnp.array(u)))
+    d = u.T @ ll @ u
+    off = np.abs(d - np.diag(np.diag(d))).sum()
+    total = np.abs(d).sum()
+    assert off / total < 0.05, off / total
+
+
+def test_muon_batched():
+    rng = np.random.default_rng(8)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, 16, 48)
+    mom, o = og.muon_batched(mm, g, sc)
+    for i in range(2):
+        want_m, want_o = ref.muon_ref(mm[i], g[i], sc[i, 1])
+        np.testing.assert_allclose(np.array(mom[i]), np.array(want_m),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.array(o[i]), np.array(want_o),
+                                   rtol=2e-4, atol=2e-4)
+    # orthogonalized direction has ~unit singular values
+    oo = np.array(o[0]) @ np.array(o[0]).T
+    assert np.abs(oo - np.eye(16)).max() < 1e-2
+
+
+def test_impl_equivalence_jnp_vs_pallas():
+    """The jnp (CPU production) and Pallas (TPU authoring) lowerings of
+    the rotated update must agree to fp32 tolerance."""
+    rng = np.random.default_rng(55)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, 16, 48)
+    og.set_impl("pallas")
+    a = og.rot_adam_batched(w, g, mm, vt, u, v, sc)
+    og.set_impl("jnp")
+    b = og.rot_adam_batched(w, g, mm, vt, u, v, sc)
+    og.set_impl("pallas")
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.array(x), np.array(y), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_impl_equivalence_eigen_and_muon():
+    rng = np.random.default_rng(56)
+    w, g, mm, vt, u, v, sc = _batch(rng, 2, 16, 16)
+    ll = jnp.einsum("bij,bkj->bik", g, g)
+    rr = jnp.einsum("bji,bjk->bik", g, g)
+    og.set_impl("pallas")
+    a = og.eigen2nd_batched(ll, rr, g, u, v, sc)
+    am = og.muon_batched(mm, g, sc)
+    og.set_impl("jnp")
+    b = og.eigen2nd_batched(ll, rr, g, u, v, sc)
+    bm = og.muon_batched(mm, g, sc)
+    og.set_impl("pallas")
+    for x, y in zip(list(a) + list(am), list(b) + list(bm)):
+        np.testing.assert_allclose(np.array(x), np.array(y), rtol=5e-4,
+                                   atol=5e-4)

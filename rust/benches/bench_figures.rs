@@ -1,0 +1,46 @@
+//! End-to-end figure benches: one bench per paper table/figure family,
+//! at micro scale so `cargo bench` stays fast. The full-scale versions
+//! run through `abrot repro` (see Makefile `figures` target).
+//!
+//!     cargo bench --bench bench_figures
+
+use abrot::bench::time_once;
+use abrot::config::{Method, TrainCfg};
+use abrot::coordinator::figures::{FigOpts, Harness};
+use abrot::coordinator::Coordinator;
+use abrot::landscape;
+
+fn main() {
+    println!("== bench_figures (micro-scale smoke of every table/figure) ==");
+
+    time_once("fig3 grid", || landscape::fig3_grid(2));
+    time_once("fig4 spiral (8 samples)", || landscape::spiral_slowdowns(8, 3));
+
+    let mut coord = Coordinator::new("artifacts");
+    let opts = FigOpts {
+        out: std::path::PathBuf::from("results/bench_smoke"),
+        steps: 24,
+        stages: vec![1, 2],
+        seed: 5,
+        lr: 1e-2,
+    };
+    let mut h = Harness::new(&mut coord, opts);
+    time_once("tables 1+2 (analytic)", || h.tables12().unwrap());
+    time_once("fig5 sweep (micro, P in {1,2})", || h.fig5("micro").unwrap());
+    time_once("fig8 strategies (micro)", || h.fig8("micro").unwrap());
+    time_once("fig9c stage-aware (micro)", || h.fig9c("micro").unwrap());
+    time_once("fig10 no-stash (micro)", || h.fig10("micro").unwrap());
+    time_once("fig19 delay-comp (micro)", || h.fig19("micro").unwrap());
+    time_once("table3 preconditioned (micro)", || h.table3("micro").unwrap());
+    time_once("engine smoke (micro, P=2)", || h.engine("micro", 2).unwrap());
+
+    // per-method single-step latency summary (Fig 9a basis)
+    let rt = abrot::runtime::Runtime::open("artifacts/micro").unwrap();
+    for m in [Method::PipeDream, Method::br_default(), Method::Soap { freq: 10 },
+              Method::Muon, Method::Scion] {
+        let cfg = TrainCfg { method: m, stages: 2, steps: 10, seed: 3, ..Default::default() };
+        let (_, secs) = time_once(&format!("10 steps micro {}", cfg.method.name()),
+                                  || abrot::pipeline::train_sim(&rt, &cfg).unwrap());
+        println!("  -> {:.1} ms/step", secs * 100.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Optimizer benchmarks: element-wise Adam throughput, HLO rotated
+//! update + eigen refresh dispatch latency, and the Pallas-vs-jnp
+//! lowering gap (the §Perf L1 headline).
+//!
+//!     cargo bench --bench bench_optim
+
+use abrot::bench::bench;
+use abrot::optim::reference::{self, Scalars};
+use abrot::optim::ElementAdam;
+use abrot::rngs::Rng;
+use abrot::runtime::{tensor_to_literal, Runtime};
+use abrot::tensor::{stack, Tensor};
+
+fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 1.0);
+    t
+}
+
+fn main() {
+    println!("== bench_optim ==");
+    let mut rng = Rng::new(1);
+
+    // element-wise Adam (1M params)
+    let shapes = vec![vec![1_000_000]];
+    let mut adam = ElementAdam::new(&shapes);
+    let mut w = randn(&mut rng, &[1_000_000]);
+    let g = randn(&mut rng, &[1_000_000]);
+    bench("element_adam 1M params", 2, 20, || {
+        adam.update(0, &mut w, &g, 1e-3, 0.9, 0.999, 1e-8, 0.01, 3, false);
+    });
+
+    // rust-reference rotated update (pico32 wqkv-sized: 32x96)
+    let wr = randn(&mut rng, &[32, 96]);
+    let gr = randn(&mut rng, &[32, 96]);
+    let mr = randn(&mut rng, &[32, 96]);
+    let vr = randn(&mut rng, &[32, 96]).map(f32::abs);
+    let u = reference::cgs2_qr(&randn(&mut rng, &[32, 32]));
+    let v = reference::cgs2_qr(&randn(&mut rng, &[96, 96]));
+    let sc = Scalars { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01, t: 3.0 };
+    bench("rust rotated_adam 32x96", 5, 100, || {
+        std::hint::black_box(reference::rotated_adam(&wr, &gr, &mr, &vr, &u, &v, sc, false));
+    });
+    bench("rust power_qr 96x96", 5, 50, || {
+        std::hint::black_box(reference::power_qr(&v.matmul(&v.transpose()), &v));
+    });
+
+    // HLO batched rotated update + eigen on micro (NB=2, 16x48) —
+    // jnp lowering vs Pallas lowering (same math).
+    let rt = Runtime::open("artifacts/micro").unwrap();
+    let nb = 2;
+    let mk = |rng: &mut Rng| {
+        let mats: Vec<Tensor> = (0..nb).map(|_| randn(rng, &[16, 48])).collect();
+        let refs: Vec<&Tensor> = mats.iter().collect();
+        stack(&refs)
+    };
+    let w2 = mk(&mut rng);
+    let g2 = mk(&mut rng);
+    let m2 = mk(&mut rng);
+    let v2 = mk(&mut rng).map(f32::abs);
+    let us: Vec<Tensor> = (0..nb).map(|_| reference::cgs2_qr(&randn(&mut rng, &[16, 16]))).collect();
+    let vs: Vec<Tensor> = (0..nb).map(|_| reference::cgs2_qr(&randn(&mut rng, &[48, 48]))).collect();
+    let u2 = stack(&us.iter().collect::<Vec<_>>());
+    let v2s = stack(&vs.iter().collect::<Vec<_>>());
+    let mut scs = Tensor::zeros(&[nb, 8]);
+    for i in 0..nb {
+        scs.data[i * 8..(i + 1) * 8].copy_from_slice(&sc.to_row(1.0));
+    }
+    let inputs: Vec<xla::Literal> = [&w2, &g2, &m2, &v2, &u2, &v2s, &scs]
+        .iter()
+        .map(|t| tensor_to_literal(t).unwrap())
+        .collect();
+    rt.exec("rot_adam_bi_wqkv", &inputs).unwrap();
+    bench("HLO rot_adam (jnp lowering)", 3, 50, || {
+        std::hint::black_box(rt.exec("rot_adam_bi_wqkv", &inputs).unwrap());
+    });
+    if rt.has_executable("rot_adam_bi_wqkv_pallas") {
+        rt.exec("rot_adam_bi_wqkv_pallas", &inputs).unwrap();
+        bench("HLO rot_adam (pallas interp)", 1, 10, || {
+            std::hint::black_box(rt.exec("rot_adam_bi_wqkv_pallas", &inputs).unwrap());
+        });
+    }
+    let eig_inputs: Vec<xla::Literal> = [
+        &stack(&(0..nb).map(|i| us[i].matmul(&us[i].transpose())).collect::<Vec<_>>().iter().collect::<Vec<_>>()),
+        &stack(&(0..nb).map(|i| vs[i].matmul(&vs[i].transpose())).collect::<Vec<_>>().iter().collect::<Vec<_>>()),
+        &g2, &u2, &v2s, &scs,
+    ]
+    .iter()
+    .map(|t| tensor_to_literal(t).unwrap())
+    .collect();
+    rt.exec("eigen2nd_bi_wqkv", &eig_inputs).unwrap();
+    bench("HLO eigen2nd refresh", 3, 30, || {
+        std::hint::black_box(rt.exec("eigen2nd_bi_wqkv", &eig_inputs).unwrap());
+    });
+}

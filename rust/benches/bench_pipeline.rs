@@ -1,0 +1,61 @@
+//! Pipeline benchmarks: simulator step latency per method (the Fig.-9a
+//! wall-clock basis), stash-ring overhead, data pipeline, and the
+//! threaded engine's throughput/bubble at several depths.
+//!
+//!     cargo bench --bench bench_pipeline
+
+use abrot::bench::{bench, time_once};
+use abrot::config::{Method, TrainCfg};
+use abrot::coordinator::{Coordinator, Experiment};
+use abrot::data::{BatchIter, Corpus};
+use abrot::pipeline::{train_sim, StashRing};
+use abrot::runtime::Runtime;
+use abrot::tensor::Tensor;
+
+fn main() {
+    println!("== bench_pipeline ==");
+
+    // data pipeline
+    let corpus = Corpus::new(256, 1);
+    let mut it = BatchIter::new(corpus, 4, 48, 0);
+    bench("data next_batch 4x48", 10, 500, || {
+        std::hint::black_box(it.next_batch());
+    });
+
+    // stash ring push (1M params across 8 tensors, delays 0..7)
+    let params: Vec<Tensor> = (0..8).map(|_| Tensor::ones(&[125_000])).collect();
+    let delays: Vec<u32> = (0..8).collect();
+    let mut ring = StashRing::new(&params, &delays);
+    bench("stash_ring push 1M params", 3, 50, || {
+        ring.push(&params);
+    });
+
+    // simulator step latency per method (pico8, P=4)
+    let rt = Runtime::open("artifacts/pico8").unwrap();
+    for m in [Method::PipeDream, Method::br_default(), Method::Muon] {
+        let cfg = TrainCfg { method: m, stages: 4, steps: 12, seed: 3, ..Default::default() };
+        let (r, secs) = time_once(&format!("sim 12 steps pico8 {}", cfg.method.name()),
+                                  || train_sim(&rt, &cfg).unwrap());
+        println!("  -> {:.1} ms/step, {} dispatches", secs * 1000.0 / 12.0, r.dispatches);
+    }
+
+    // threaded engine throughput/bubble
+    let mut coord = Coordinator::new("artifacts");
+    for p in [1usize, 2, 4] {
+        let cfg = TrainCfg {
+            method: Method::PipeDream,
+            stages: p,
+            steps: 16,
+            seed: 3,
+            ..Default::default()
+        };
+        let model = if p <= 2 { "micro" } else { "pico8" };
+        let r = coord
+            .run_engine(&Experiment { model: model.into(), train: cfg })
+            .unwrap();
+        println!(
+            "engine {model} P={p}: {:.0} tokens/s, bubble {:.1}%, wall {:.2}s",
+            r.tokens_per_sec, r.bubble_frac * 100.0, r.wall_secs
+        );
+    }
+}

@@ -1,0 +1,385 @@
+//! Analytic & measurement tooling for the paper's appendix results:
+//!
+//! * `stages` — Table 1: minimum pipeline stages for LLaMA models on
+//!   commodity GPUs (Appendix A memory model).
+//! * `memory` — Table 2: per-matrix memory overhead of the four
+//!   basis-rotation strategies on Llama-3-8B (Appendix H).
+//! * `hessian` — Fig. 11: Hessian (1,1)-norm estimation via HVPs with
+//!   random Cauchy vectors (Xie et al. 2025), and update-oscillation
+//!   tracking along the dominant Hessian eigenvector.
+
+use anyhow::Result;
+
+use crate::config::{Geometry, Source};
+use crate::optim::rotation::rotation_overhead_elems;
+use crate::rngs::Rng;
+use crate::runtime::{tensor_to_literal, tokens_to_literal, Runtime};
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Table 1 (Appendix A): stage-count calculator
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct LlamaModel {
+    pub name: &'static str,
+    pub h: u64,
+    pub a: u64,
+    /// parameters per transformer block
+    pub w: u64,
+    pub l: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub name: &'static str,
+    pub mem_bytes: u64,
+}
+
+pub fn llama_models() -> Vec<LlamaModel> {
+    vec![
+        LlamaModel { name: "Llama 3.2 1B", h: 2048, a: 32, w: 67_000_000, l: 16 },
+        LlamaModel { name: "Llama 3.2 3B", h: 3072, a: 24, w: 113_000_000, l: 28 },
+        LlamaModel { name: "LLaMA 1-7B", h: 4096, a: 32, w: 202_000_000, l: 32 },
+        LlamaModel { name: "LLaMA 1-13B", h: 5120, a: 40, w: 317_000_000, l: 40 },
+        LlamaModel { name: "LLaMA 1-33B", h: 6656, a: 52, w: 535_000_000, l: 60 },
+        LlamaModel { name: "LLaMA 1-65B", h: 8192, a: 64, w: 810_000_000, l: 80 },
+        LlamaModel { name: "Llama 3.1 405B", h: 16384, a: 128, w: 3_190_000_000, l: 126 },
+    ]
+}
+
+pub fn gpus() -> Vec<Gpu> {
+    let gib = 1u64 << 30;
+    vec![
+        Gpu { name: "RTX3070 (8GB)", mem_bytes: 8 * gib },
+        Gpu { name: "RTX3080 (16GB)", mem_bytes: 16 * gib },
+        Gpu { name: "RTX3090 (24GB)", mem_bytes: 24 * gib },
+        Gpu { name: "A6000 (48GB)", mem_bytes: 48 * gib },
+        Gpu { name: "A100 (80GB)", mem_bytes: 80 * gib },
+    ]
+}
+
+/// Appendix A Eq. (7): bytes for one block with mixed-precision AdamW
+/// training and checkpointed activations.
+pub fn block_bytes(w: u64, s: u64, b: u64, h: u64, a: u64) -> u64 {
+    16 * w + 34 * s * b * h + 5 * b * a * s * s
+}
+
+/// Required stages for a model on a device (Appendix A). Returns
+/// (stages, lower_bound_only): when even one block does not fit,
+/// the paper reports "≥ 2L".
+pub fn required_stages(m: &LlamaModel, gpu: &Gpu, s: u64, b: u64) -> (u64, bool) {
+    let mb = block_bytes(m.w, s, b, m.h, m.a);
+    let n_max = gpu.mem_bytes / mb;
+    if n_max == 0 {
+        (2 * m.l, true)
+    } else {
+        (m.l.div_ceil(n_max), false)
+    }
+}
+
+/// Render Table 1 rows (s=4096, b=1, like the paper).
+pub fn table1_rows() -> Vec<(String, Vec<String>)> {
+    llama_models()
+        .iter()
+        .map(|m| {
+            let cells = gpus()
+                .iter()
+                .map(|g| {
+                    let (p, lb) = required_stages(m, g, 4096, 1);
+                    if lb { format!(">={p}*") } else { format!("{p}") }
+                })
+                .collect();
+            (m.name.to_string(), cells)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 (Appendix H): memory overhead calculator
+// ---------------------------------------------------------------------------
+
+pub struct Table2Row {
+    pub source: Source,
+    pub geometry: Geometry,
+    pub attn_gb: f64,
+    pub mlp_gb: f64,
+}
+
+pub fn table2_rows() -> Vec<Table2Row> {
+    let gb = |e: usize| e as f64 * 4.0 / 1e9;
+    let mut rows = Vec::new();
+    for source in [Source::Second, Source::First] {
+        for geometry in [Geometry::Bilateral, Geometry::Unilateral] {
+            rows.push(Table2Row {
+                source,
+                geometry,
+                attn_gb: gb(rotation_overhead_elems(4096, 4096, source, geometry)),
+                mlp_gb: gb(rotation_overhead_elems(4096, 14336, source, geometry)),
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11: Hessian (1,1)-norm via Cauchy HVPs + oscillation tracking
+// ---------------------------------------------------------------------------
+
+fn flat_len(params: &[Tensor]) -> usize {
+    params.iter().map(|p| p.len()).sum()
+}
+
+fn hvp(
+    rt: &Runtime,
+    params: &[Tensor],
+    vec: &[Tensor],
+    toks: &[i32],
+    tgts: &[i32],
+) -> Result<Vec<Tensor>> {
+    let cfg = rt.cfg();
+    let mut ins: Vec<xla::Literal> = Vec::with_capacity(2 * params.len() + 2);
+    for p in params {
+        ins.push(tensor_to_literal(p)?);
+    }
+    for v in vec {
+        ins.push(tensor_to_literal(v)?);
+    }
+    ins.push(tokens_to_literal(toks, cfg.batch, cfg.seq)?);
+    ins.push(tokens_to_literal(tgts, cfg.batch, cfg.seq)?);
+    rt.exec_tensors("hvp", &ins)
+}
+
+/// Estimate the normalized Hessian (1,1)-norm ‖H‖₁,₁/d via the Cauchy
+/// trace estimator of Xie et al. 2025: for s ~ Cauchy(0,1)ᵈ,
+/// median-of-means of sᵀ' H s with the sign trick reduces to estimating
+/// E[|Σ_j H_ij s_j|] = (2/π)·Σ_j |H_ij| per row; averaging |vᵀ (Hs)|
+/// over Cauchy probes estimates (2/π)·‖H‖₁,₁ when v = sign pattern.
+/// We use the practical estimator: E_s[ ‖H s‖₁ / scale ] with Cauchy s,
+/// whose median over probes is proportional to ‖H‖₁,₁ row-sums; the
+/// constant cancels in the *ratio* reported by the paper (before vs
+/// after rotation), which is what we reproduce.
+pub fn hessian_11_norm(
+    rt: &Runtime,
+    params: &[Tensor],
+    n_probes: usize,
+    seed: u64,
+) -> Result<f64> {
+    let cfg = rt.cfg().clone();
+    let corpus = crate::data::Corpus::new(cfg.vocab, seed ^ 0xDA7A);
+    let mut it = crate::data::BatchIter::new(corpus, cfg.batch, cfg.seq, 77);
+    let mut rng = Rng::new(seed);
+    let d = flat_len(params) as f64;
+    let mut estimates = Vec::with_capacity(n_probes);
+    for _ in 0..n_probes {
+        let probe: Vec<Tensor> = params
+            .iter()
+            .map(|p| {
+                let mut t = Tensor::zeros(&p.shape);
+                for x in t.data.iter_mut() {
+                    *x = rng.cauchy();
+                }
+                t
+            })
+            .collect();
+        let (toks, tgts) = it.next_batch();
+        let hv = hvp(rt, params, &probe, &toks, &tgts)?;
+        let l1: f64 = hv.iter().map(|t| t.abs_sum() as f64).sum();
+        estimates.push(l1 / d);
+    }
+    // median for heavy-tailed robustness
+    estimates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(estimates[estimates.len() / 2])
+}
+
+/// Dominant Hessian eigenvector via power iteration on HVPs.
+pub fn dominant_eigvec(
+    rt: &Runtime,
+    params: &[Tensor],
+    iters: usize,
+    seed: u64,
+) -> Result<Vec<Tensor>> {
+    let cfg = rt.cfg().clone();
+    let corpus = crate::data::Corpus::new(cfg.vocab, seed ^ 0xDA7A);
+    let mut it = crate::data::BatchIter::new(corpus, cfg.batch, cfg.seq, 78);
+    let mut rng = Rng::new(seed ^ 0xE16);
+    let mut v: Vec<Tensor> = params
+        .iter()
+        .map(|p| {
+            let mut t = Tensor::zeros(&p.shape);
+            rng.fill_normal(&mut t.data, 1.0);
+            t
+        })
+        .collect();
+    for _ in 0..iters {
+        let (toks, tgts) = it.next_batch();
+        let hv = hvp(rt, params, &v, &toks, &tgts)?;
+        let norm: f32 = hv.iter().map(|t| t.norm().powi(2)).sum::<f32>().sqrt();
+        v = hv.into_iter().map(|t| t.scale(1.0 / norm.max(1e-20))).collect();
+    }
+    Ok(v)
+}
+
+/// Projection of a parameter delta onto a (flattened) direction.
+pub fn project(delta: &[Tensor], dir: &[Tensor]) -> f32 {
+    delta.iter().zip(dir).map(|(d, v)| d.dot(v)).sum()
+}
+
+/// Orthogonalize `v` against `against` and normalize (non-dominant
+/// direction construction, paper D.3).
+pub fn orthogonalize(v: &mut [Tensor], against: &[Tensor]) {
+    let dot: f32 = v.iter().zip(against).map(|(a, b)| a.dot(b)).sum();
+    for (vi, ai) in v.iter_mut().zip(against) {
+        vi.axpy(-dot, ai);
+    }
+    let norm: f32 = v.iter().map(|t| t.norm().powi(2)).sum::<f32>().sqrt();
+    for vi in v.iter_mut() {
+        *vi = vi.scale(1.0 / norm.max(1e-20));
+    }
+}
+
+/// Fig. 11 end-to-end report for one method: train, estimate the
+/// Hessian (1,1)-norm and the update-oscillation scores along the
+/// dominant / a non-dominant eigenvector.
+pub struct AlignmentReport {
+    pub h11: f64,
+    pub osc_dom: f32,
+    pub osc_nondom: f32,
+}
+
+pub fn alignment_report(
+    rt: &Runtime,
+    cfg: &crate::config::TrainCfg,
+    probes: usize,
+) -> Result<AlignmentReport> {
+    // Phase 1: train to the midpoint, keep the params.
+    let (_, params) =
+        crate::pipeline::train_sim_observed(rt, cfg, &mut |_t, _p| {})?;
+    let h11 = hessian_11_norm(rt, &params, probes, cfg.seed ^ 0x1111)?;
+    let dom = dominant_eigvec(rt, &params, 10, cfg.seed ^ 0x2222)?;
+    let mut nondom: Vec<Tensor> = {
+        let mut rng = Rng::new(cfg.seed ^ 0x3333);
+        params
+            .iter()
+            .map(|p| {
+                let mut t = Tensor::zeros(&p.shape);
+                rng.fill_normal(&mut t.data, 1.0);
+                t
+            })
+            .collect()
+    };
+    orthogonalize(&mut nondom, &dom);
+
+    // Phase 2: rerun deterministically for `tail` extra steps and track
+    // update projections along the two directions (paper D.3: 100 its).
+    let tail = 60u32;
+    let mut cfg2 = cfg.clone();
+    cfg2.steps = cfg.steps + tail;
+    let mut prev: Option<Vec<Tensor>> = None;
+    let mut proj_dom = Vec::new();
+    let mut proj_non = Vec::new();
+    let from = cfg.steps as u64;
+    crate::pipeline::train_sim_observed(rt, &cfg2, &mut |t, p| {
+        if t >= from {
+            if let Some(prev) = &prev {
+                let delta: Vec<Tensor> =
+                    p.iter().zip(prev).map(|(a, b)| a.sub(b)).collect();
+                proj_dom.push(project(&delta, &dom));
+                proj_non.push(project(&delta, &nondom));
+            }
+            prev = Some(p.to_vec());
+        }
+    })?;
+    Ok(AlignmentReport {
+        h11,
+        osc_dom: oscillation_score(&proj_dom),
+        osc_nondom: oscillation_score(&proj_non),
+    })
+}
+
+/// Oscillation score of a projection series: mean |sign flip| weighted
+/// by magnitude — the quantity Fig. 11 plots qualitatively.
+pub fn oscillation_score(projections: &[f32]) -> f32 {
+    if projections.len() < 2 {
+        return 0.0;
+    }
+    let mut flips = 0.0f32;
+    for w in projections.windows(2) {
+        if w[0].signum() != w[1].signum() {
+            flips += (w[0] - w[1]).abs();
+        }
+    }
+    flips / (projections.len() - 1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_anchor_cells() {
+        // Paper Table 1 anchors (s=4096, b=1).
+        let models = llama_models();
+        let gs = gpus();
+        let find = |m: &str| models.iter().find(|x| x.name == m).unwrap().clone();
+        let g = |n: &str| gs.iter().find(|x| x.name.starts_with(n)).unwrap().clone();
+        // Anchors our Eq.-(7) memory model reproduces exactly from the
+        // paper's Table 1 (the 1B row needs extra unstated terms — see
+        // EXPERIMENTS.md; orderings still hold there).
+        assert_eq!(required_stages(&find("Llama 3.2 1B"), &g("A100"), 4096, 1).0, 1);
+        assert_eq!(required_stages(&find("LLaMA 1-7B"), &g("RTX3090"), 4096, 1).0, 11);
+        assert_eq!(required_stages(&find("LLaMA 1-65B"), &g("A100"), 4096, 1).0, 20);
+        let (p, lb) = required_stages(&find("LLaMA 1-13B"), &g("RTX3070"), 4096, 1);
+        assert!(lb);
+        assert_eq!(p, 80);
+        let (p405, lb405) =
+            required_stages(&find("Llama 3.1 405B"), &g("A100"), 4096, 1);
+        assert!(!lb405);
+        assert_eq!(p405, 126);
+        // monotonicity: stages never increase with GPU memory
+        for m in &models {
+            let mut prev = u64::MAX;
+            for gpu in &gs {
+                let (p, _) = required_stages(m, gpu, 4096, 1);
+                assert!(p <= prev, "{} on {}", m.name, gpu.name);
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn table2_orderings() {
+        let rows = table2_rows();
+        let get = |s: Source, g: Geometry| {
+            rows.iter()
+                .find(|r| r.source == s && r.geometry == g)
+                .unwrap()
+        };
+        use Geometry::*;
+        use Source::*;
+        // paper Table 2 values (GB): 2nd/Bi 0.25/1.66; 1st/Uni 0.06/0.06
+        let r = get(Second, Bilateral);
+        assert!((r.attn_gb - 0.268).abs() < 0.03 && (r.mlp_gb - 1.78).abs() < 0.2);
+        let r = get(First, Unilateral);
+        assert!(r.attn_gb < 0.08 && r.mlp_gb < 0.08);
+        // monotone orderings
+        assert!(get(First, Bilateral).mlp_gb < get(Second, Bilateral).mlp_gb);
+        assert!(get(Second, Unilateral).mlp_gb < get(Second, Bilateral).mlp_gb);
+    }
+
+    #[test]
+    fn oscillation_score_detects_flipping() {
+        let osc = [1.0f32, -1.0, 1.0, -1.0, 1.0];
+        let smooth = [1.0f32, 0.9, 0.8, 0.7, 0.6];
+        assert!(oscillation_score(&osc) > 10.0 * oscillation_score(&smooth).max(1e-9));
+    }
+
+    #[test]
+    fn orthogonalize_makes_perpendicular() {
+        let a = vec![Tensor::new(vec![2], vec![1.0, 0.0])];
+        let mut b = vec![Tensor::new(vec![2], vec![0.7, 0.7])];
+        orthogonalize(&mut b, &a);
+        assert!(project(&b, &a).abs() < 1e-6);
+        assert!((b[0].norm() - 1.0).abs() < 1e-6);
+    }
+}

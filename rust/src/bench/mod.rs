@@ -1,0 +1,68 @@
+//! Tiny benchmarking framework for the `harness = false` cargo benches
+//! (criterion is unavailable in this offline environment): warmup,
+//! fixed-iteration timing, median/p10/p90 reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_us: f64,
+    pub p10_us: f64,
+    pub p90_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} {:>10.1} us/iter  (p10 {:>9.1}, p90 {:>9.1}, n={})",
+            self.name, self.median_us, self.p10_us, self.p90_us, self.iters
+        );
+    }
+}
+
+/// Run `f` `iters` times after `warmup` calls; per-iteration timing.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_us: q(0.5),
+        p10_us: q(0.1),
+        p90_us: q(0.9),
+    };
+    r.print();
+    r
+}
+
+/// Time a single long-running closure.
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("time  {name:<40} {secs:>10.3} s");
+    (out, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_quantiles() {
+        let r = bench("noop", 2, 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.p10_us <= r.median_us && r.median_us <= r.p90_us);
+    }
+}

@@ -1,0 +1,262 @@
+//! Run configuration: optimization method, schedule, pipeline shape.
+//!
+//! The *model* configuration is owned by the artifact manifest
+//! (`runtime::Manifest`) — single source of truth emitted by
+//! `python/compile/aot.py`. This module configures everything the
+//! coordinator decides at run time.
+
+use std::fmt;
+
+/// Eigenbasis-estimation strategy axes (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    First,  // S = 1st: momentum outer products
+    Second, // S = 2nd: Kronecker-factored empirical Fisher EMA
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Geometry {
+    Unilateral,
+    Bilateral,
+}
+
+/// How the per-stage rotation budget is allocated (paper Fig. 9c / 17).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FreqAlloc {
+    /// Same update frequency everywhere.
+    Uniform,
+    /// More frequent basis refresh at earlier (more delayed) stages.
+    StageAware,
+    /// Ablation: the reverse allocation (paper Fig. 17).
+    InverseStageAware,
+}
+
+/// Training method — the paper's baselines + basis rotation variants +
+/// the preconditioned comparators of Table 3.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Vanilla asynchronous Adam (PipeDream).
+    PipeDream,
+    /// Stage-wise learning-rate rescaling (PipeDream-LR / Yang et al.).
+    PipeDreamLr,
+    /// Nesterov-momentum correction (Ajanthan et al. 2025).
+    Nesterov,
+    /// Delay compensation via Taylor expansion (Zheng et al. 2017).
+    DelayComp { lambda: f32 },
+    /// The paper's contribution.
+    BasisRotation { source: Source, geometry: Geometry, freq: u32,
+                    alloc: FreqAlloc },
+    /// SOAP (Vyas et al. 2025): rotated-space momentum accumulation.
+    Soap { freq: u32 },
+    /// Muon (Jordan et al. 2024): NS-orthogonalized momentum.
+    Muon,
+    /// Scion (Pethick et al. 2025): norm-constrained LMO steps.
+    Scion,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::PipeDream => "pipedream".into(),
+            Method::PipeDreamLr => "pipedream_lr".into(),
+            Method::Nesterov => "nesterov".into(),
+            Method::DelayComp { lambda } => format!("dc_{lambda}"),
+            Method::BasisRotation { source, geometry, freq, alloc } => {
+                let s = match source { Source::First => "1st", Source::Second => "2nd" };
+                let g = match geometry { Geometry::Unilateral => "uni", Geometry::Bilateral => "bi" };
+                let a = match alloc {
+                    FreqAlloc::Uniform => "",
+                    FreqAlloc::StageAware => "_sa",
+                    FreqAlloc::InverseStageAware => "_isa",
+                };
+                format!("br_{s}_{g}_f{freq}{a}")
+            }
+            Method::Soap { freq } => format!("soap_f{freq}"),
+            Method::Muon => "muon".into(),
+            Method::Scion => "scion".into(),
+        }
+    }
+
+    /// Default basis rotation per the paper: S=2nd, bilateral, freq 10.
+    pub fn br_default() -> Method {
+        Method::BasisRotation {
+            source: Source::Second,
+            geometry: Geometry::Bilateral,
+            freq: 10,
+            alloc: FreqAlloc::Uniform,
+        }
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// How stale weights are handled at the forward pass (paper §4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StashMode {
+    /// Weight stashing (PipeDream): forward & backward per stage use the
+    /// stashed version — correct per-stage gradients.
+    Stash,
+    /// No stashing: backward uses current weights against activations
+    /// from stale weights — incorrect gradients (Fig. 10).
+    NoStash,
+    /// PipeMare-style weight prediction at the forward pass (Fig. 15).
+    Predict,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub method: Method,
+    /// Number of pipeline stages P (delay at stage k is P-1-k).
+    pub stages: usize,
+    pub steps: u32,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    /// Linear warmup fraction followed by cosine decay (paper D.2).
+    pub warmup_frac: f32,
+    pub stash: StashMode,
+    pub seed: u64,
+    pub eval_every: u32,
+    pub log_every: u32,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            method: Method::PipeDream,
+            stages: 1,
+            steps: 200,
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            grad_clip: 1.0,
+            warmup_frac: 0.012,
+            stash: StashMode::Stash,
+            seed: 1234,
+            eval_every: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainCfg {
+    /// Scheduled learning rate at step t (1-based): linear warmup then
+    /// cosine decay to 10% (paper Appendix D.2).
+    pub fn lr_at(&self, t: u32) -> f32 {
+        let warm = ((self.steps as f32 * self.warmup_frac).ceil() as u32).max(1);
+        if t <= warm {
+            return self.lr * t as f32 / warm as f32;
+        }
+        let prog = (t - warm) as f32 / (self.steps - warm).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * prog.min(1.0)).cos());
+        self.lr * (0.1 + 0.9 * cos)
+    }
+
+    /// The paper's β1 convention: 0.99 for Nesterov, 0.9 otherwise.
+    pub fn effective_beta1(&self) -> f32 {
+        match self.method {
+            Method::Nesterov => 0.99,
+            _ => self.beta1,
+        }
+    }
+}
+
+/// Stage-wise LR multiplier for PipeDream-LR (Yang et al. 2021): scale
+/// down proportionally to sqrt(1 + delay).
+pub fn pipedream_lr_scale(delay: u32) -> f32 {
+    1.0 / (1.0 + delay as f32).sqrt()
+}
+
+/// Stage-aware rotation frequency (paper Appendix I scheduling rule):
+/// stages with larger delay refresh their basis more often, under the
+/// same total budget as uniform `f0`.
+pub fn stage_aware_freq(f0: u32, delay: u32, stages: usize) -> u32 {
+    if stages <= 1 {
+        return f0;
+    }
+    let mid = (stages / 2).max(1) as f32;
+    let tau = delay as f32;
+    let n = if tau > mid - 1.0 { mid - 1.0 - tau } else { mid - tau };
+    let denom = 1.0 - n / mid; // in (0, 2)
+    ((f0 as f32 / denom.max(0.25)).floor() as u32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_warms_up_then_decays() {
+        let cfg = TrainCfg { steps: 1000, lr: 1e-3, ..Default::default() };
+        assert!(cfg.lr_at(1) < cfg.lr_at(10));
+        let warm = (1000.0f32 * cfg.warmup_frac).ceil() as u32;
+        assert!((cfg.lr_at(warm) - 1e-3).abs() < 1e-9);
+        assert!(cfg.lr_at(500) < 1e-3);
+        assert!(cfg.lr_at(1000) < cfg.lr_at(500));
+        // floor at 10%
+        assert!(cfg.lr_at(1000) >= 0.1 * 1e-3 - 1e-9);
+    }
+
+    #[test]
+    fn lr_schedule_monotone_after_warmup() {
+        let cfg = TrainCfg { steps: 400, ..Default::default() };
+        let warm = (400.0f32 * cfg.warmup_frac).ceil() as u32;
+        let mut prev = f32::INFINITY;
+        for t in warm..=400 {
+            let l = cfg.lr_at(t);
+            assert!(l <= prev + 1e-9);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn pipedream_lr_scale_decreases_with_delay() {
+        assert_eq!(pipedream_lr_scale(0), 1.0);
+        assert!(pipedream_lr_scale(3) < pipedream_lr_scale(1));
+        assert!((pipedream_lr_scale(3) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stage_aware_freq_monotone_in_delay() {
+        // larger delay ⇒ more frequent (smaller freq value)
+        let stages = 8;
+        let f: Vec<u32> =
+            (0..stages as u32).map(|d| stage_aware_freq(10, d, stages)).collect();
+        assert!(f[7] <= f[0], "{f:?}");
+        assert!(f.iter().all(|&x| x >= 1));
+    }
+
+    #[test]
+    fn method_names_unique() {
+        let ms = [
+            Method::PipeDream,
+            Method::PipeDreamLr,
+            Method::Nesterov,
+            Method::DelayComp { lambda: 0.1 },
+            Method::br_default(),
+            Method::Soap { freq: 10 },
+            Method::Muon,
+            Method::Scion,
+        ];
+        let names: std::collections::HashSet<_> =
+            ms.iter().map(|m| m.name()).collect();
+        assert_eq!(names.len(), ms.len());
+    }
+
+    #[test]
+    fn nesterov_beta1_override() {
+        let mut cfg = TrainCfg::default();
+        assert_eq!(cfg.effective_beta1(), 0.9);
+        cfg.method = Method::Nesterov;
+        assert_eq!(cfg.effective_beta1(), 0.99);
+    }
+}

@@ -1,0 +1,693 @@
+//! Figure/table harness: regenerates every quantitative result of the
+//! paper at CPU scale (`abrot repro --fig fig5 --out results`).
+//!
+//! Absolute numbers differ from the paper (single-core CPU testbed,
+//! small models, synthetic corpus — DESIGN.md §5); the *shape* of each
+//! result — who wins, how the gap scales with P, where the orderings
+//! fall — is the reproduction target recorded in EXPERIMENTS.md.
+//!
+//! Runs are cached within the process so overlapping figures (e.g.
+//! Fig. 2a ⊂ Fig. 5, Fig. 9a reuses Fig. 5's wall-clocks) share work.
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::config::{FreqAlloc, Geometry, Method, Source, StashMode, TrainCfg};
+use crate::landscape;
+use crate::metrics::{
+    iter_reduction_vs, iters_to_target, slowdown, write_losses, Csv, RunResult,
+};
+
+use super::{Coordinator, Experiment};
+
+/// Harness options (CLI-settable).
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    pub out: PathBuf,
+    /// steps per training run (default small: single-core CPU)
+    pub steps: u32,
+    /// stage sweep for the P figures
+    pub stages: Vec<usize>,
+    pub seed: u64,
+    pub lr: f32,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            out: PathBuf::from("results"),
+            steps: 200,
+            stages: vec![1, 4, 8, 16, 32],
+            seed: 1234,
+            lr: 1e-3,
+        }
+    }
+}
+
+type RunKey = (String, String, usize, u32, u8);
+
+pub struct Harness<'a> {
+    pub coord: &'a mut Coordinator,
+    pub opts: FigOpts,
+    cache: HashMap<RunKey, RunResult>,
+}
+
+fn stash_tag(s: StashMode) -> u8 {
+    match s {
+        StashMode::Stash => 0,
+        StashMode::NoStash => 1,
+        StashMode::Predict => 2,
+    }
+}
+
+impl<'a> Harness<'a> {
+    pub fn new(coord: &'a mut Coordinator, opts: FigOpts) -> Self {
+        Harness { coord, opts, cache: HashMap::new() }
+    }
+
+    fn cfg(&self, method: Method, stages: usize) -> TrainCfg {
+        TrainCfg {
+            method,
+            stages,
+            steps: self.opts.steps,
+            lr: self.opts.lr,
+            seed: self.opts.seed,
+            log_every: 0,
+            ..Default::default()
+        }
+    }
+
+    pub fn run(&mut self, model: &str, mut cfg: TrainCfg) -> Result<RunResult> {
+        let key = (
+            model.to_string(),
+            cfg.method.name(),
+            cfg.stages,
+            cfg.steps,
+            stash_tag(cfg.stash) + 10 * (cfg.eval_every > 0) as u8,
+        );
+        if let Some(r) = self.cache.get(&key) {
+            return Ok(r.clone());
+        }
+        cfg.seed = self.opts.seed;
+        eprintln!(
+            "  running {model} {} P={} steps={} ...",
+            cfg.method.name(),
+            cfg.stages,
+            cfg.steps
+        );
+        let t0 = std::time::Instant::now();
+        let res = self
+            .coord
+            .run(&Experiment { model: model.into(), train: cfg })?;
+        eprintln!(
+            "    -> final {:.4}  ({:.1}s)",
+            res.final_loss(),
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.insert(key, res.clone());
+        Ok(res)
+    }
+
+    fn out(&self, name: &str) -> PathBuf {
+        self.opts.out.join(name)
+    }
+
+    /// The four headline methods of Figs. 2/5/6.
+    fn main_methods(&self) -> Vec<Method> {
+        vec![
+            Method::PipeDream,
+            Method::PipeDreamLr,
+            Method::Nesterov,
+            Method::br_default(),
+        ]
+    }
+
+    /// Loss target for slowdown metrics: the P=1 PipeDream run's final
+    /// smoothed loss plus a margin (reachable by all methods).
+    fn target_loss(&mut self, model: &str) -> Result<f32> {
+        let base = self.run(model, self.cfg(Method::PipeDream, 1))?;
+        Ok(base.final_loss() + 0.15)
+    }
+
+    // -----------------------------------------------------------------
+    // Figures
+    // -----------------------------------------------------------------
+
+    /// Fig. 2a + Fig. 5 + Fig. 12/13 + Fig. 9a: method × P sweep on the
+    /// 32-block model.
+    pub fn fig5(&mut self, model: &str) -> Result<()> {
+        let stages = self.opts.stages.clone();
+        let methods = self.main_methods();
+        let target = self.target_loss(model)?;
+        let mut rows =
+            Csv::create(self.out("fig5_summary.csv"),
+                        "method,stages,final_loss,iters_to_target,slowdown_vs_p1,wall_secs")?;
+        let mut all_runs: Vec<RunResult> = Vec::new();
+        println!("\n== Fig 2a/5/12/13: method x P sweep on {model} (target loss {target:.3}) ==");
+        println!("{:<16} {:>4} {:>12} {:>10} {:>10} {:>9}",
+                 "method", "P", "final_loss", "iters@tgt", "slowdown", "wall_s");
+        for m in &methods {
+            let base = self.run(model, self.cfg(*m, 1))?;
+            for &p in &stages {
+                let r = self.run(model, self.cfg(*m, p))?;
+                let it = iters_to_target(&r.losses, target);
+                let sd = slowdown(&r.losses, &base.losses, target);
+                println!(
+                    "{:<16} {:>4} {:>12.4} {:>10} {:>10} {:>9.1}",
+                    r.method,
+                    p,
+                    r.final_loss(),
+                    it.map_or("-".into(), |x| x.to_string()),
+                    sd.map_or("-".into(), |x| format!("{x:.2}x")),
+                    r.wall_secs
+                );
+                rows.row(&[
+                    r.method.clone(),
+                    p.to_string(),
+                    format!("{:.4}", r.final_loss()),
+                    it.map_or("-".into(), |x| x.to_string()),
+                    sd.map_or("-".into(), |x| format!("{x:.3}")),
+                    format!("{:.2}", r.wall_secs),
+                ])?;
+                all_runs.push(r);
+            }
+        }
+        let refs: Vec<&RunResult> = all_runs.iter().collect();
+        write_losses(self.out("fig5_losses.csv"), &refs)?;
+        // Fig. 2b headline: iteration reduction of BR vs best baseline at max P
+        let pmax = *stages.last().unwrap();
+        let br = self.run(model, self.cfg(Method::br_default(), pmax))?;
+        let mut best_base: Option<RunResult> = None;
+        for m in &methods[..3] {
+            let r = self.run(model, self.cfg(*m, pmax))?;
+            if best_base.as_ref().map_or(true, |b| r.final_loss() < b.final_loss()) {
+                best_base = Some(r);
+            }
+        }
+        let bb = best_base.unwrap();
+        if let Some(red) = iter_reduction_vs(&br, &bb) {
+            println!(
+                "Fig 2b headline: basis rotation reaches {}'s final loss with {:.1}% fewer iterations (paper: 71.6-81.7%)",
+                bb.method, red * 100.0
+            );
+        }
+        Ok(())
+    }
+
+    /// Fig. 6 / Fig. 14: depth scaling with P = L.
+    pub fn fig6(&mut self) -> Result<()> {
+        let family = [("tiny4", 4usize), ("tiny8", 8), ("tiny16", 16), ("tiny32", 32)];
+        let methods = self.main_methods();
+        let mut rows = Csv::create(self.out("fig6_summary.csv"),
+                                   "method,blocks,stages,final_loss")?;
+        println!("\n== Fig 6/14: depth scaling (P = n_blocks) ==");
+        println!("{:<16} {:>7} {:>12}", "method", "blocks", "final_loss");
+        for m in &methods {
+            let mut prev = f32::INFINITY;
+            let mut monotone_break = false;
+            for (model, p) in family {
+                let r = self.run(model, self.cfg(*m, p))?;
+                println!("{:<16} {:>7} {:>12.4}", r.method, p, r.final_loss());
+                rows.row(&[
+                    r.method.clone(),
+                    p.to_string(),
+                    p.to_string(),
+                    format!("{:.4}", r.final_loss()),
+                ])?;
+                if r.final_loss() > prev + 0.02 {
+                    monotone_break = true;
+                }
+                prev = r.final_loss();
+            }
+            println!("   -> {} scaling {}", m.name(),
+                     if monotone_break { "BROKEN (loss rises with depth)" }
+                     else { "holds (loss falls with depth)" });
+        }
+        Ok(())
+    }
+
+    /// Fig. 7 / Fig. 20: width scaling at fixed P.
+    pub fn fig7(&mut self) -> Result<()> {
+        let p = 8;
+        let methods =
+            [Method::PipeDream, Method::PipeDreamLr, Method::br_default()];
+        let mut rows = Csv::create(self.out("fig7_summary.csv"),
+                                   "method,model,final_loss,iter_reduction_vs_best_baseline")?;
+        println!("\n== Fig 7/20: width scaling at P={p} ==");
+        for model in ["small", "wide"] {
+            let mut runs = Vec::new();
+            for m in &methods {
+                runs.push(self.run(model, self.cfg(*m, p))?);
+            }
+            let br = runs.pop().unwrap();
+            let best = runs
+                .iter()
+                .min_by(|a, b| a.final_loss().partial_cmp(&b.final_loss()).unwrap())
+                .unwrap()
+                .clone();
+            let red = iter_reduction_vs(&br, &best);
+            println!(
+                "{model:>6}: BR final {:.4} vs best baseline ({}) {:.4}; iter reduction {}",
+                br.final_loss(),
+                best.method,
+                best.final_loss(),
+                red.map_or("-".into(), |x| format!("{:.1}%", x * 100.0))
+            );
+            for r in runs.iter().chain(std::iter::once(&br)) {
+                rows.row(&[
+                    r.method.clone(),
+                    model.to_string(),
+                    format!("{:.4}", r.final_loss()),
+                    red.map_or("-".into(), |x| format!("{:.3}", x)),
+                ])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fig. 8 / Table + Fig. 16: eigenbasis-estimation strategy matrix.
+    pub fn fig8(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        let target = self.target_loss(model)?;
+        let mut variants = Vec::new();
+        for source in [Source::First, Source::Second] {
+            for geometry in [Geometry::Unilateral, Geometry::Bilateral] {
+                variants.push(Method::BasisRotation {
+                    source,
+                    geometry,
+                    freq: 10,
+                    alloc: FreqAlloc::Uniform,
+                });
+            }
+        }
+        let mut rows = Csv::create(self.out("fig8_summary.csv"),
+                                   "method,slowdown,final_loss_pmax")?;
+        println!("\n== Fig 8: eigenbasis estimation strategies (P={pmax} vs P=1) ==");
+        println!("{:<16} {:>10} {:>12}", "method", "slowdown", "final@Pmax");
+        let lr_base = self.run(model, self.cfg(Method::PipeDreamLr, 1))?;
+        let lr_pmax = self.run(model, self.cfg(Method::PipeDreamLr, pmax))?;
+        let base_sd = slowdown(&lr_pmax.losses, &lr_base.losses, target);
+        println!("{:<16} {:>10} {:>12.4}", "pipedream_lr",
+                 base_sd.map_or("-".into(), |x| format!("{x:.2}x")),
+                 lr_pmax.final_loss());
+        rows.row(&[
+            "pipedream_lr".into(),
+            base_sd.map_or("-".into(), |x| format!("{x:.3}")),
+            format!("{:.4}", lr_pmax.final_loss()),
+        ])?;
+        let mut sds: Vec<(String, Option<f32>)> = Vec::new();
+        for m in variants {
+            let r1 = self.run(model, self.cfg(m, 1))?;
+            let rp = self.run(model, self.cfg(m, pmax))?;
+            let sd = slowdown(&rp.losses, &r1.losses, target);
+            println!("{:<16} {:>10} {:>12.4}", m.name(),
+                     sd.map_or("-".into(), |x| format!("{x:.2}x")),
+                     rp.final_loss());
+            rows.row(&[
+                m.name(),
+                sd.map_or("-".into(), |x| format!("{x:.3}")),
+                format!("{:.4}", rp.final_loss()),
+            ])?;
+            sds.push((m.name(), sd));
+        }
+        Ok(())
+    }
+
+    /// Fig. 9a/9b: wall-clock efficiency + basis update frequency sweep.
+    pub fn fig9ab(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        println!("\n== Fig 9a: wall-clock to loss at P={pmax} ==");
+        let mut rows = Csv::create(self.out("fig9_summary.csv"),
+                                   "method,final_loss,wall_secs,secs_per_step")?;
+        let methods = [
+            Method::PipeDream,
+            Method::PipeDreamLr,
+            Method::Nesterov,
+            Method::br_default(),
+        ];
+        for m in methods {
+            let r = self.run(model, self.cfg(m, pmax))?;
+            println!("{:<16} final {:.4} in {:>7.1}s ({:.3}s/step)",
+                     r.method, r.final_loss(), r.wall_secs,
+                     r.wall_secs / r.losses.len().max(1) as f64);
+            rows.row(&[
+                r.method.clone(),
+                format!("{:.4}", r.final_loss()),
+                format!("{:.2}", r.wall_secs),
+                format!("{:.4}", r.wall_secs / r.losses.len().max(1) as f64),
+            ])?;
+        }
+        println!("\n== Fig 9b: basis update frequency ==");
+        for freq in [10u32, 33, 100] {
+            let m = Method::BasisRotation {
+                source: Source::Second,
+                geometry: Geometry::Bilateral,
+                freq,
+                alloc: FreqAlloc::Uniform,
+            };
+            let r = self.run(model, self.cfg(m, pmax))?;
+            println!("freq={freq:<4} final {:.4} in {:>7.1}s", r.final_loss(),
+                     r.wall_secs);
+            rows.row(&[
+                r.method.clone(),
+                format!("{:.4}", r.final_loss()),
+                format!("{:.2}", r.wall_secs),
+                format!("{:.4}", r.wall_secs / r.losses.len().max(1) as f64),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Fig. 9c + Fig. 17: stage-aware / inverse-stage-aware allocation.
+    pub fn fig9c(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        let target = self.target_loss(model)?;
+        println!("\n== Fig 9c/17: stage-aware rotation budget at P={pmax} ==");
+        let mut rows = Csv::create(self.out("fig9c_summary.csv"),
+                                   "alloc,final_loss,iters_to_target")?;
+        let mut uniform_it = None;
+        for (alloc, label) in [
+            (FreqAlloc::Uniform, "uniform"),
+            (FreqAlloc::StageAware, "stage_aware"),
+            (FreqAlloc::InverseStageAware, "inverse"),
+        ] {
+            let m = Method::BasisRotation {
+                source: Source::Second,
+                geometry: Geometry::Bilateral,
+                freq: 10,
+                alloc,
+            };
+            let r = self.run(model, self.cfg(m, pmax))?;
+            let it = iters_to_target(&r.losses, target);
+            if alloc == FreqAlloc::Uniform {
+                uniform_it = it;
+            }
+            let speedup = match (it, uniform_it) {
+                (Some(a), Some(u)) => format!("{:+.1}%", (1.0 - a as f32 / u as f32) * 100.0),
+                _ => "-".into(),
+            };
+            println!("{label:<12} final {:.4}  iters@tgt {:>6}  vs uniform {speedup}",
+                     r.final_loss(),
+                     it.map_or("-".into(), |x| x.to_string()));
+            rows.row(&[
+                label.into(),
+                format!("{:.4}", r.final_loss()),
+                it.map_or("-".into(), |x| x.to_string()),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Fig. 10: robustness without weight stashing.
+    pub fn fig10(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        println!("\n== Fig 10: no weight stashing at P={pmax} ==");
+        let mut rows = Csv::create(self.out("fig10_summary.csv"),
+                                   "method,stash,final_loss")?;
+        let mut all = Vec::new();
+        for m in [Method::PipeDream, Method::PipeDreamLr, Method::br_default()] {
+            for stash in [StashMode::Stash, StashMode::NoStash] {
+                let mut cfg = self.cfg(m, pmax);
+                cfg.stash = stash;
+                let r = self.run(model, cfg)?;
+                let tag = if stash == StashMode::Stash { "stash" } else { "nostash" };
+                println!("{:<16} {:<8} final {:.4}{}", r.method, tag, r.final_loss(),
+                         if r.diverged { "  [diverged]" } else { "" });
+                rows.row(&[r.method.clone(), tag.into(), format!("{:.4}", r.final_loss())])?;
+                all.push(r);
+            }
+        }
+        let refs: Vec<&RunResult> = all.iter().collect();
+        write_losses(self.out("fig10_losses.csv"), &refs)?;
+        Ok(())
+    }
+
+    /// Fig. 15: PipeMare-style weight prediction.
+    pub fn fig15(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        println!("\n== Fig 15: weight prediction at P={pmax} ==");
+        let mut rows = Csv::create(self.out("fig15_summary.csv"),
+                                   "method,final_loss")?;
+        for m in [Method::PipeDream, Method::PipeDreamLr, Method::br_default()] {
+            let mut cfg = self.cfg(m, pmax);
+            cfg.stash = StashMode::Predict;
+            let r = self.run(model, cfg)?;
+            println!("{:<16} final {:.4}", r.method, r.final_loss());
+            rows.row(&[r.method.clone(), format!("{:.4}", r.final_loss())])?;
+        }
+        Ok(())
+    }
+
+    /// Fig. 18: validation loss tracking.
+    pub fn fig18(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        println!("\n== Fig 18: train vs validation loss at P={pmax} ==");
+        let mut rows = Csv::create(self.out("fig18_val.csv"),
+                                   "method,step,val_loss")?;
+        for m in [Method::PipeDreamLr, Method::br_default()] {
+            let mut cfg = self.cfg(m, pmax);
+            cfg.eval_every = (self.opts.steps / 8).max(1);
+            let r = self.run(model, cfg)?;
+            for (step, vl) in &r.val_losses {
+                rows.row(&[r.method.clone(), step.to_string(), format!("{vl:.4}")])?;
+            }
+            let last_val = r.val_losses.last().map(|x| x.1).unwrap_or(f32::NAN);
+            println!("{:<16} final train {:.4}  final val {:.4}", r.method,
+                     r.final_loss(), last_val);
+        }
+        Ok(())
+    }
+
+    /// Fig. 19: Delay Compensation λ sweep.
+    pub fn fig19(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        println!("\n== Fig 19: delay compensation at P={pmax} ==");
+        let mut rows = Csv::create(self.out("fig19_summary.csv"),
+                                   "method,final_loss")?;
+        let pd = self.run(model, self.cfg(Method::PipeDream, pmax))?;
+        println!("{:<16} final {:.4}", pd.method, pd.final_loss());
+        rows.row(&[pd.method.clone(), format!("{:.4}", pd.final_loss())])?;
+        for lambda in [0.04f32, 0.1, 0.5, 1.0] {
+            let r = self.run(model, self.cfg(Method::DelayComp { lambda }, pmax))?;
+            println!("{:<16} final {:.4}", r.method, r.final_loss());
+            rows.row(&[r.method.clone(), format!("{:.4}", r.final_loss())])?;
+        }
+        let br = self.run(model, self.cfg(Method::br_default(), pmax))?;
+        println!("{:<16} final {:.4}", br.method, br.final_loss());
+        rows.row(&[br.method.clone(), format!("{:.4}", br.final_loss())])?;
+        Ok(())
+    }
+
+    /// Fig. 21: MoE generalization.
+    pub fn fig21(&mut self) -> Result<()> {
+        let model = "moe_tiny";
+        let p = 8;
+        println!("\n== Fig 21: MoE (8 experts, top-2) at P={p} ==");
+        let mut rows = Csv::create(self.out("fig21_summary.csv"),
+                                   "method,final_loss,iter_reduction_vs_best_baseline")?;
+        let mut runs = Vec::new();
+        for m in [Method::PipeDream, Method::PipeDreamLr, Method::Nesterov] {
+            runs.push(self.run(model, self.cfg(m, p))?);
+        }
+        let br = self.run(model, self.cfg(Method::br_default(), p))?;
+        let best = runs
+            .iter()
+            .min_by(|a, b| a.final_loss().partial_cmp(&b.final_loss()).unwrap())
+            .unwrap()
+            .clone();
+        let red = iter_reduction_vs(&br, &best);
+        for r in runs.iter() {
+            println!("{:<16} final {:.4}", r.method, r.final_loss());
+            rows.row(&[r.method.clone(), format!("{:.4}", r.final_loss()), "-".into()])?;
+        }
+        println!("{:<16} final {:.4}  iter reduction vs {}: {} (paper: 46.8%)",
+                 br.method, br.final_loss(), best.method,
+                 red.map_or("-".into(), |x| format!("{:.1}%", x * 100.0)));
+        rows.row(&[
+            br.method.clone(),
+            format!("{:.4}", br.final_loss()),
+            red.map_or("-".into(), |x| format!("{:.3}", x)),
+        ])?;
+        Ok(())
+    }
+
+    /// Table 3: preconditioned optimizers.
+    pub fn table3(&mut self, model: &str) -> Result<()> {
+        let pmax = *self.opts.stages.last().unwrap();
+        let target = self.target_loss(model)?;
+        println!("\n== Table 3: preconditioned methods, slowdown P={pmax} vs P=1 ==");
+        let mut rows = Csv::create(self.out("table3.csv"), "method,slowdown,final_loss")?;
+        let methods = [
+            Method::PipeDreamLr,
+            Method::Nesterov,
+            Method::Muon,
+            Method::Scion,
+            Method::Soap { freq: 10 },
+            Method::br_default(),
+        ];
+        println!("{:<16} {:>10} {:>12}", "method", "slowdown", "final@Pmax");
+        for m in methods {
+            let r1 = self.run(model, self.cfg(m, 1))?;
+            let rp = self.run(model, self.cfg(m, pmax))?;
+            let sd = slowdown(&rp.losses, &r1.losses, target);
+            println!("{:<16} {:>10} {:>12.4}", m.name(),
+                     sd.map_or("-".into(), |x| format!("{x:.2}x")),
+                     rp.final_loss());
+            rows.row(&[
+                m.name(),
+                sd.map_or("-".into(), |x| format!("{x:.3}")),
+                format!("{:.4}", rp.final_loss()),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Fig. 3: quadratic-landscape grid.
+    pub fn fig3(&mut self) -> Result<()> {
+        println!("\n== Fig 3: AdaSGD/Adam on aligned vs misaligned quadratic ==");
+        let rows = landscape::fig3_grid(2);
+        let mut csv = Csv::create(self.out("fig3.csv"), "opt,aligned,delay,tail_loss")?;
+        for r in &rows {
+            println!("{:<10} aligned={:<5} delay={} tail_loss={:.4}", r.opt,
+                     r.aligned, r.delay, r.tail_loss);
+            csv.row(&[
+                r.opt.into(),
+                r.aligned.to_string(),
+                r.delay.to_string(),
+                format!("{:.6}", r.tail_loss),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Fig. 4: spiral-loss slowdown samples.
+    pub fn fig4(&mut self) -> Result<()> {
+        println!("\n== Fig 4: spiral-loss slowdown T_delay/T_no-delay ==");
+        let samples = landscape::spiral_slowdowns(40, self.opts.seed);
+        let mut csv = Csv::create(self.out("fig4.csv"), "angle_deg,slowdown")?;
+        let mut mean = 0.0;
+        for s in &samples {
+            csv.row(&[format!("{:.2}", s.angle_deg), format!("{:.3}", s.slowdown)])?;
+            mean += s.slowdown;
+        }
+        mean /= samples.len().max(1) as f64;
+        let max = samples.iter().map(|s| s.slowdown).fold(0.0, f64::max);
+        println!("{} samples; mean slowdown {:.2}x, max {:.2}x (delay amplifies in misaligned regions)",
+                 samples.len(), mean, max);
+        Ok(())
+    }
+
+    /// Fig. 11: Hessian (1,1)-norm + oscillation before/after rotation.
+    pub fn fig11(&mut self, model: &str) -> Result<()> {
+        println!("\n== Fig 11: basis-alignment validation on {model} ==");
+        // Train briefly with each method, then measure.
+        let steps = self.opts.steps.min(120);
+        let p = 4usize;
+        let mut out = Csv::create(self.out("fig11.csv"),
+                                  "method,h11_norm,osc_dominant,osc_nondominant")?;
+        for m in [Method::PipeDream, Method::br_default()] {
+            let mut cfg = self.cfg(m, p);
+            cfg.steps = steps;
+            let rt = self.coord.runtime(model)?;
+            let measured = crate::analysis::alignment_report(rt, &cfg, 40)?;
+            println!(
+                "{:<16} H(1,1)/d={:.4}  osc(dominant)={:.4}  osc(non-dom)={:.4}",
+                m.name(), measured.h11, measured.osc_dom, measured.osc_nondom
+            );
+            out.row(&[
+                m.name(),
+                format!("{:.5}", measured.h11),
+                format!("{:.5}", measured.osc_dom),
+                format!("{:.5}", measured.osc_nondom),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Table 1 + Table 2 (analytic).
+    pub fn tables12(&mut self) -> Result<()> {
+        println!("\n== Table 1: required pipeline stages (s=4096, b=1) ==");
+        let gpus = crate::analysis::gpus();
+        print!("{:<16}", "model");
+        for g in &gpus {
+            print!(" {:>14}", g.name.split(' ').next().unwrap());
+        }
+        println!();
+        let mut csv = Csv::create(self.out("table1.csv"), "model,gpu,stages")?;
+        for (model, cells) in crate::analysis::table1_rows() {
+            print!("{model:<16}");
+            for (c, g) in cells.iter().zip(&gpus) {
+                print!(" {c:>14}");
+                csv.row(&[model.clone(), g.name.into(), c.clone()])?;
+            }
+            println!();
+        }
+        println!("\n== Table 2: rotation memory overhead on Llama-3-8B (GB/matrix) ==");
+        let mut csv2 = Csv::create(self.out("table2.csv"),
+                                   "source,geometry,attn_gb,mlp_gb")?;
+        for r in crate::analysis::table2_rows() {
+            let s = match r.source { Source::Second => "2nd", Source::First => "1st" };
+            let g = match r.geometry { Geometry::Bilateral => "Bi", Geometry::Unilateral => "Uni" };
+            println!("{s:<4} {g:<4} attn {:.2} GB   mlp {:.2} GB", r.attn_gb, r.mlp_gb);
+            csv2.row(&[s.into(), g.into(), format!("{:.3}", r.attn_gb),
+                       format!("{:.3}", r.mlp_gb)])?;
+        }
+        Ok(())
+    }
+
+    /// Engine demo: threaded 1F1B throughput/bubble + loss sanity.
+    pub fn engine(&mut self, model: &str, stages: usize) -> Result<()> {
+        println!("\n== Engine: threaded 1F1B pipeline on {model}, P={stages} ==");
+        let cfg = TrainCfg {
+            method: Method::PipeDream,
+            stages,
+            steps: self.opts.steps.min(60),
+            lr: self.opts.lr,
+            seed: self.opts.seed,
+            ..Default::default()
+        };
+        let r = self.coord.run_engine(&Experiment { model: model.into(), train: cfg })?;
+        println!(
+            "microbatches={} final_loss={:.4} tokens/s={:.0} bubble={:.1}% wall={:.1}s",
+            r.losses.len(), r.final_loss(), r.tokens_per_sec,
+            r.bubble_frac * 100.0, r.wall_secs
+        );
+        let mut csv = Csv::create(self.out("engine.csv"),
+                                  "stages,final_loss,tokens_per_sec,bubble_frac,wall_secs")?;
+        csv.row(&[
+            stages.to_string(),
+            format!("{:.4}", r.final_loss()),
+            format!("{:.1}", r.tokens_per_sec),
+            format!("{:.4}", r.bubble_frac),
+            format!("{:.2}", r.wall_secs),
+        ])?;
+        // analytic sync-vs-async bubble comparison (Fig. 1 premise)
+        println!("analytic bubble (sync GPipe, M=P): {:.1}% vs async steady-state 0%",
+                 crate::pipeline::engine::sync_bubble_fraction(stages, stages) * 100.0);
+        Ok(())
+    }
+
+    /// Run everything.
+    pub fn all(&mut self, model: &str) -> Result<()> {
+        self.fig3()?;
+        self.fig4()?;
+        self.tables12()?;
+        self.fig5(model)?;
+        self.fig6()?;
+        self.fig7()?;
+        self.fig8(model)?;
+        self.fig9ab(model)?;
+        self.fig9c(model)?;
+        self.fig10(model)?;
+        self.fig15(model)?;
+        self.fig18(model)?;
+        self.fig19(model)?;
+        self.fig21()?;
+        self.table3(model)?;
+        self.fig11("tiny8")?;
+        self.engine("micro", 2)?;
+        Ok(())
+    }
+}
+

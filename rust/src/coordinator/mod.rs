@@ -1,0 +1,120 @@
+//! Experiment coordinator: wires runtime + data + pipeline + optimizer
+//! into named runs, and regenerates every table and figure of the paper
+//! (`figures` submodule → `abrot repro --fig ...`).
+
+pub mod figures;
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+use crate::config::TrainCfg;
+use crate::metrics::RunResult;
+use crate::pipeline::train_sim;
+use crate::runtime::Runtime;
+
+/// One fully-specified experiment: model config + training config.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub model: String,
+    pub train: TrainCfg,
+}
+
+pub struct Coordinator {
+    pub artifacts_root: PathBuf,
+    /// cached runtimes per model config (compile once per process).
+    runtimes: std::collections::HashMap<String, Runtime>,
+}
+
+impl Coordinator {
+    pub fn new(artifacts_root: impl AsRef<Path>) -> Self {
+        Coordinator {
+            artifacts_root: artifacts_root.as_ref().to_path_buf(),
+            runtimes: Default::default(),
+        }
+    }
+
+    pub fn runtime(&mut self, model: &str) -> Result<&Runtime> {
+        if !self.runtimes.contains_key(model) {
+            let rt = Runtime::open(self.artifacts_root.join(model))?;
+            self.runtimes.insert(model.to_string(), rt);
+        }
+        Ok(&self.runtimes[model])
+    }
+
+    /// Run one experiment through the delay-accurate simulator.
+    pub fn run(&mut self, exp: &Experiment) -> Result<RunResult> {
+        let rt = self.runtime(&exp.model)?;
+        let mut res = train_sim(rt, &exp.train)?;
+        res.method = exp.train.method.name();
+        Ok(res)
+    }
+
+    /// Run the real threaded pipeline engine.
+    pub fn run_engine(&mut self, exp: &Experiment) -> Result<RunResult> {
+        crate::pipeline::engine::train_engine(
+            self.artifacts_root.join(&exp.model),
+            &exp.train,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn micro_pipedream_trains() {
+        let mut c = Coordinator::new(root());
+        let exp = Experiment {
+            model: "micro".into(),
+            train: TrainCfg {
+                method: Method::PipeDream,
+                stages: 2,
+                steps: 80,
+                lr: 1e-2,
+                eval_every: 40,
+                ..Default::default()
+            },
+        };
+        let res = c.run(&exp).unwrap();
+        assert_eq!(res.losses.len(), 80);
+        assert!(!res.diverged);
+        // the synthetic language is learnable: loss must fall
+        let first = res.losses[0];
+        let last = res.final_loss();
+        assert!(last < first - 0.4, "loss {first} -> {last}");
+        assert_eq!(res.val_losses.len(), 2);
+    }
+
+    #[test]
+    fn micro_basis_rotation_trains() {
+        let mut c = Coordinator::new(root());
+        let exp = Experiment {
+            model: "micro".into(),
+            train: TrainCfg {
+                method: Method::br_default(),
+                stages: 2,
+                steps: 50,
+                lr: 1e-2,
+                ..Default::default()
+            },
+        };
+        let res = c.run(&exp).unwrap();
+        assert!(!res.diverged);
+        assert!(res.final_loss() < res.losses[0] - 0.2);
+    }
+
+    #[test]
+    fn runtime_cache_reused() {
+        let mut c = Coordinator::new(root());
+        c.runtime("micro").unwrap();
+        let n = c.runtimes.len();
+        c.runtime("micro").unwrap();
+        assert_eq!(c.runtimes.len(), n);
+    }
+}

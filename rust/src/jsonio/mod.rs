@@ -1,0 +1,371 @@
+//! Minimal JSON parser/writer (no external crates) — enough for the
+//! artifact manifests emitted by `python/compile/aot.py`, run configs
+//! and result files. Not a general-purpose library: numbers are f64,
+//! strings support the standard escapes, and input is assumed UTF-8.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let b = s.as_bytes();
+        let mut i = 0usize;
+        let v = parse_value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            return Err(format!("trailing data at byte {i}"));
+        }
+        Ok(v)
+    }
+
+    // ---- typed accessors ----
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn at(&self, key: &str) -> &Json {
+        self.get(key).unwrap_or_else(|| panic!("missing key {key:?}"))
+    }
+
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Json::Num(x) => *x,
+            _ => panic!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> usize {
+        self.as_f64() as usize
+    }
+
+    pub fn as_i64(&self) -> i64 {
+        self.as_f64() as i64
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            Json::Str(s) => s,
+            _ => panic!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(a) => a,
+            _ => panic!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> bool {
+        match self {
+            Json::Bool(b) => *b,
+            _ => panic!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    // ---- writer ----
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        write_value(self, &mut s);
+        s
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    skip_ws(b, i);
+    if *i >= b.len() {
+        return Err("unexpected end".into());
+    }
+    match b[*i] {
+        b'{' => parse_obj(b, i),
+        b'[' => parse_arr(b, i),
+        b'"' => Ok(Json::Str(parse_string(b, i)?)),
+        b't' => lit(b, i, "true", Json::Bool(true)),
+        b'f' => lit(b, i, "false", Json::Bool(false)),
+        b'n' => lit(b, i, "null", Json::Null),
+        _ => parse_num(b, i),
+    }
+}
+
+fn lit(b: &[u8], i: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+    if b[*i..].starts_with(word.as_bytes()) {
+        *i += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {i}", i = *i))
+    }
+}
+
+fn parse_num(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    let start = *i;
+    while *i < b.len()
+        && matches!(b[*i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *i += 1;
+    }
+    std::str::from_utf8(&b[start..*i])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    let mut out = String::new();
+    while *i < b.len() {
+        match b[*i] {
+            b'"' => {
+                *i += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *i += 1;
+                if *i >= b.len() {
+                    break;
+                }
+                match b[*i] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = std::str::from_utf8(&b[*i + 1..*i + 5])
+                            .map_err(|_| "bad \\u")?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| "bad \\u hex")?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *i += 4;
+                    }
+                    c => return Err(format!("bad escape \\{}", c as char)),
+                }
+                *i += 1;
+            }
+            _ => {
+                // copy a full UTF-8 scalar
+                let s = &b[*i..];
+                let ch_len = utf8_len(s[0]);
+                let ch = std::str::from_utf8(&s[..ch_len])
+                    .map_err(|_| "bad utf8")?;
+                out.push_str(ch);
+                *i += ch_len;
+            }
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn utf8_len(b0: u8) -> usize {
+    match b0 {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_arr(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    *i += 1; // '['
+    let mut arr = Vec::new();
+    skip_ws(b, i);
+    if *i < b.len() && b[*i] == b']' {
+        *i += 1;
+        return Ok(Json::Arr(arr));
+    }
+    loop {
+        arr.push(parse_value(b, i)?);
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b']') => {
+                *i += 1;
+                return Ok(Json::Arr(arr));
+            }
+            _ => return Err(format!("expected , or ] at byte {}", *i)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    *i += 1; // '{'
+    let mut map = BTreeMap::new();
+    skip_ws(b, i);
+    if *i < b.len() && b[*i] == b'}' {
+        *i += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, i);
+        let key = parse_string(b, i)?;
+        skip_ws(b, i);
+        if b.get(*i) != Some(&b':') {
+            return Err(format!("expected : at byte {}", *i));
+        }
+        *i += 1;
+        map.insert(key, parse_value(b, i)?);
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => return Err(format!("expected , or }} at byte {}", *i)),
+        }
+    }
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(x) => {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                let _ = write!(out, "{}", *x as i64);
+            } else {
+                let _ = write!(out, "{x}");
+            }
+        }
+        Json::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(&Json::Str(k.clone()), out);
+                out.push(':');
+                write_value(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Convenience builders.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+pub fn s(x: &str) -> Json {
+    Json::Str(x.to_string())
+}
+
+pub fn arr(v: Vec<Json>) -> Json {
+    Json::Arr(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        assert_eq!(j.at("a").as_arr()[1], Json::Num(2.0));
+        assert_eq!(j.at("a").as_arr()[2].at("b").as_str(), "c");
+        assert!(j.at("d").is_null());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"config":{"batch":4,"name":"tiny32"},"xs":[1,2.5,true,null,"s\"q"]}"#;
+        let j = Json::parse(src).unwrap();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn parses_real_manifest_fragment() {
+        let frag = r#"{
+ "config": {"name": "micro", "vocab": 64, "moe": null},
+ "params": [{"name": "tok_emb", "shape": [64, 16], "rotated": false}],
+ "executables": {"fwdbwd": {"file": "fwdbwd.hlo.txt", "inputs": []}}
+}"#;
+        let j = Json::parse(frag).unwrap();
+        assert_eq!(j.at("config").at("vocab").as_usize(), 64);
+        assert!(j.at("config").at("moe").is_null());
+        assert_eq!(j.at("params").as_arr()[0].at("shape").as_arr()[0].as_usize(), 64);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+}

@@ -1,0 +1,308 @@
+//! 2-D optimization lab — reproduces the paper's diagnostic figures:
+//!
+//! * Fig. 3: AdaSGD vs Adam on an ill-conditioned quadratic, Hessian
+//!   aligned vs 45°-rotated, with and without delay (τ = 2).
+//! * Fig. 4: Adam on the spiral loss
+//!   `f(r,θ) = r² + (20·sin(4r−θ)+1)²`, and the slowdown ratio
+//!   `T_delay / T_no-delay` along the trajectory.
+//!
+//! These run in microseconds and carry the paper's core mechanism in a
+//! form unit tests can assert on.
+
+use crate::rngs::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opt2d {
+    /// Adam with coordinate-wise second moments.
+    Adam,
+    /// AdaSGD (Wang & Wiens 2020): one global adaptive scale — the EMA
+    /// of the *mean* second moment across coordinates.
+    AdaSgd,
+}
+
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub points: Vec<[f64; 2]>,
+    pub losses: Vec<f64>,
+}
+
+/// Generic delayed optimizer driver on an arbitrary 2-D loss.
+/// `rotate`: optional orthogonal basis (columns) in which the adaptive
+/// scaling is applied (basis rotation).
+#[allow(clippy::too_many_arguments)]
+pub fn run_2d(
+    grad: &dyn Fn([f64; 2]) -> [f64; 2],
+    loss: &dyn Fn([f64; 2]) -> f64,
+    x0: [f64; 2],
+    opt: Opt2d,
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    delay: usize,
+    steps: usize,
+    rotate: Option<[[f64; 2]; 2]>,
+) -> Trajectory {
+    let mut x = x0;
+    let mut m = [0.0f64; 2];
+    let mut v = [0.0f64; 2];
+    let mut v_scalar = 0.0f64;
+    let eps = 1e-8;
+    let mut ring: Vec<[f64; 2]> = vec![x0; delay + 1];
+    let mut points = vec![x0];
+    let mut losses = vec![loss(x0)];
+    let rot = |g: [f64; 2], q: &[[f64; 2]; 2]| {
+        // q^T g (columns of q are the basis)
+        [q[0][0] * g[0] + q[1][0] * g[1], q[0][1] * g[0] + q[1][1] * g[1]]
+    };
+    let unrot = |g: [f64; 2], q: &[[f64; 2]; 2]| {
+        [q[0][0] * g[0] + q[0][1] * g[1], q[1][0] * g[0] + q[1][1] * g[1]]
+    };
+    for _t in 1..=steps {
+        let stale = ring[0];
+        let mut g = grad(stale);
+        if let Some(q) = &rotate {
+            g = rot(g, q);
+        }
+        for i in 0..2 {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        }
+        let mut step = [0.0f64; 2];
+        match opt {
+            Opt2d::Adam => {
+                for i in 0..2 {
+                    v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                    step[i] = m[i] / (v[i].sqrt() + eps);
+                }
+            }
+            Opt2d::AdaSgd => {
+                let mean_sq = (g[0] * g[0] + g[1] * g[1]) / 2.0;
+                v_scalar = beta2 * v_scalar + (1.0 - beta2) * mean_sq;
+                for i in 0..2 {
+                    step[i] = m[i] / (v_scalar.sqrt() + eps);
+                }
+            }
+        }
+        if let Some(q) = &rotate {
+            step = unrot(step, q);
+        }
+        for i in 0..2 {
+            x[i] -= lr * step[i];
+        }
+        ring.remove(0);
+        ring.push(x);
+        points.push(x);
+        losses.push(loss(x));
+    }
+    Trajectory { points, losses }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3: quadratic landscape
+// ---------------------------------------------------------------------------
+
+/// ½ xᵀHx with H = Q Λ Qᵀ, Λ = diag(λ1, λ2); `angle` rotates the basis.
+pub fn quadratic(lam: [f64; 2], angle_deg: f64) -> (impl Fn([f64; 2]) -> [f64; 2], impl Fn([f64; 2]) -> f64, [[f64; 2]; 2]) {
+    let th = angle_deg.to_radians();
+    let q = [[th.cos(), -th.sin()], [th.sin(), th.cos()]];
+    let h = {
+        let mut h = [[0.0f64; 2]; 2];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    h[i][j] += q[i][k] * lam[k] * q[j][k];
+                }
+            }
+        }
+        h
+    };
+    let grad = move |x: [f64; 2]| {
+        [h[0][0] * x[0] + h[0][1] * x[1], h[1][0] * x[0] + h[1][1] * x[1]]
+    };
+    let loss = move |x: [f64; 2]| {
+        0.5 * (x[0] * (h[0][0] * x[0] + h[0][1] * x[1])
+            + x[1] * (h[1][0] * x[0] + h[1][1] * x[1]))
+    };
+    (grad, loss, q)
+}
+
+/// One row of the Fig.-3 grid: tail loss for {AdaSGD, Adam} × {aligned,
+/// misaligned} × {delay 0, delay τ} (+ Adam rotated under delay).
+pub struct Fig3Row {
+    pub opt: &'static str,
+    pub aligned: bool,
+    pub delay: usize,
+    pub tail_loss: f64,
+}
+
+pub fn fig3_grid(delay: usize) -> Vec<Fig3Row> {
+    let lam = [100.0, 1.0];
+    let x0 = [3.0, 0.5];
+    let mut rows = Vec::new();
+    for (opt, name) in [(Opt2d::AdaSgd, "adasgd"), (Opt2d::Adam, "adam")] {
+        for aligned in [true, false] {
+            for d in [0usize, delay] {
+                let (g, l, _q) = quadratic(lam, if aligned { 0.0 } else { 45.0 });
+                let tr = run_2d(&g, &l, x0, opt, 0.05, 0.0, 0.5, d, 400, None);
+                let tail = tail_mean(&tr.losses, 20);
+                rows.push(Fig3Row { opt: name, aligned, delay: d, tail_loss: tail });
+            }
+        }
+    }
+    // Adam + basis rotation on the misaligned quadratic under delay
+    let (g, l, q) = quadratic(lam, 45.0);
+    let tr = run_2d(&g, &l, x0, Opt2d::Adam, 0.05, 0.0, 0.5, delay, 400, Some(q));
+    rows.push(Fig3Row {
+        opt: "adam+rot",
+        aligned: false,
+        delay,
+        tail_loss: tail_mean(&tr.losses, 20),
+    });
+    rows
+}
+
+pub fn tail_mean(xs: &[f64], k: usize) -> f64 {
+    let n = xs.len().min(k);
+    xs[xs.len() - n..].iter().sum::<f64>() / n as f64
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4: spiral loss
+// ---------------------------------------------------------------------------
+
+/// f(r,θ) = r² + (20·sin(4r − θ) + 1)² in Cartesian coordinates.
+pub fn spiral_loss(x: [f64; 2]) -> f64 {
+    let r = (x[0] * x[0] + x[1] * x[1]).sqrt();
+    let th = x[1].atan2(x[0]);
+    let s = 20.0 * (4.0 * r - th).sin() + 1.0;
+    r * r + s * s
+}
+
+pub fn spiral_grad(x: [f64; 2]) -> [f64; 2] {
+    // numerical gradient: the paper's landscape is diagnostic, not a
+    // performance path; central differences are exact enough.
+    let h = 1e-6;
+    let mut g = [0.0f64; 2];
+    for i in 0..2 {
+        let mut xp = x;
+        let mut xm = x;
+        xp[i] += h;
+        xm[i] -= h;
+        g[i] = (spiral_loss(xp) - spiral_loss(xm)) / (2.0 * h);
+    }
+    g
+}
+
+/// Fig. 4b: slowdown ratio T_delay/T_no-delay to advance a fixed angular
+/// interval, sampled at points along the no-delay trajectory.
+pub struct SpiralSample {
+    pub angle_deg: f64,
+    pub slowdown: f64,
+}
+
+pub fn spiral_slowdowns(n_samples: usize, seed: u64) -> Vec<SpiralSample> {
+    // lr = 0.01 tracks the spiral valley (width ~1/80); larger steps
+    // hop across it and never advance.
+    let base = run_2d(&spiral_grad, &spiral_loss, [4.0, 0.0], Opt2d::Adam, 0.01,
+                      0.0, 0.9, 0, 8000, None);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..n_samples {
+        let idx = 200 + rng.below(base.points.len().saturating_sub(400));
+        let start = base.points[idx];
+        let ang0 = start[1].atan2(start[0]);
+        let advance = 3.0f64.to_radians();
+        let count_iters = |delay: usize| -> Option<f64> {
+            let tr = run_2d(&spiral_grad, &spiral_loss, start, Opt2d::Adam, 0.01,
+                            0.0, 0.9, delay, 6000, None);
+            for (i, p) in tr.points.iter().enumerate().skip(1) {
+                let a = p[1].atan2(p[0]);
+                // unwrap relative to ang0 (the trajectory spirals inward,
+                // angle increases)
+                let mut da = a - ang0;
+                while da < -std::f64::consts::PI {
+                    da += 2.0 * std::f64::consts::PI;
+                }
+                while da > std::f64::consts::PI {
+                    da -= 2.0 * std::f64::consts::PI;
+                }
+                if da.abs() >= advance {
+                    return Some(i as f64);
+                }
+            }
+            None
+        };
+        if let (Some(t1), Some(t0)) = (count_iters(1), count_iters(0)) {
+            out.push(SpiralSample {
+                angle_deg: ang0.to_degrees(),
+                slowdown: t1 / t0,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_beats_adasgd_on_aligned_quadratic() {
+        // Fig. 3a: coordinate-wise adaptivity suppresses the oscillation
+        // AdaSGD shows along the dominant direction.
+        let (g, l, _) = quadratic([100.0, 1.0], 0.0);
+        let adam = run_2d(&g, &l, [3.0, 0.5], Opt2d::Adam, 0.05, 0.0, 0.5, 0, 400, None);
+        let ada = run_2d(&g, &l, [3.0, 0.5], Opt2d::AdaSgd, 0.05, 0.0, 0.5, 0, 400, None);
+        assert!(tail_mean(&adam.losses, 20) < tail_mean(&ada.losses, 20));
+    }
+
+    #[test]
+    fn fig3_misalignment_amplifies_delay_and_rotation_fixes_it() {
+        let rows = fig3_grid(3);
+        let get = |opt: &str, aligned: bool, delay: usize| {
+            rows.iter()
+                .find(|r| r.opt == opt && r.aligned == aligned && r.delay == delay)
+                .unwrap()
+                .tail_loss
+        };
+        // delay hurts the misaligned case much more than the aligned one
+        assert!(get("adam", false, 3) > 2.0 * get("adam", true, 3));
+        // basis rotation under delay recovers ~the aligned behaviour
+        let rot = rows.iter().find(|r| r.opt == "adam+rot").unwrap().tail_loss;
+        assert!(rot < 0.6 * get("adam", false, 3));
+    }
+
+    #[test]
+    fn adam_equivariance_under_rotation_no_delay() {
+        // Rotated Adam on H = QΛQᵀ started at Q·x0 must trace exactly the
+        // loss curve of plain Adam on Λ started at x0 (Appendix C).
+        let (ga, la, _) = quadratic([100.0, 1.0], 0.0);
+        let (gm, lm, q) = quadratic([100.0, 1.0], 45.0);
+        let x0 = [3.0, 0.5];
+        let x0_rot = [
+            q[0][0] * x0[0] + q[0][1] * x0[1],
+            q[1][0] * x0[0] + q[1][1] * x0[1],
+        ];
+        let a = run_2d(&ga, &la, x0, Opt2d::Adam, 0.05, 0.0, 0.5, 0, 200, None);
+        let r = run_2d(&gm, &lm, x0_rot, Opt2d::Adam, 0.05, 0.0, 0.5, 0, 200, Some(q));
+        for (x, y) in a.losses.iter().zip(&r.losses) {
+            assert!((x - y).abs() < 1e-6 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn spiral_loss_shape() {
+        // global structure: radial growth plus ridge oscillation
+        assert!(spiral_loss([8.0, 0.0]) > spiral_loss([0.05, 0.0]));
+        let g = spiral_grad([2.0, 1.0]);
+        assert!(g[0].is_finite() && g[1].is_finite());
+    }
+
+    #[test]
+    fn spiral_slowdown_exceeds_one_on_average() {
+        let samples = spiral_slowdowns(12, 3);
+        assert!(samples.len() >= 6, "only {} samples converged", samples.len());
+        let mean: f64 =
+            samples.iter().map(|s| s.slowdown).sum::<f64>() / samples.len() as f64;
+        assert!(mean > 1.0, "mean slowdown {mean}");
+    }
+}

@@ -1,0 +1,32 @@
+//! # abrot — Asynchronous Basis-Rotation Pipeline Training
+//!
+//! Reproduction of "Mitigating Staleness in Asynchronous Pipeline
+//! Parallelism via Basis Rotation" (Jung, Shin, Lee; ICML 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the pipeline-parallel training coordinator:
+//!   1F1B asynchronous schedule, weight stashing, stage-dependent delay,
+//!   per-stage optimizers (PipeDream / PipeDream-LR / Nesterov / DC /
+//!   Muon / Scion / SOAP / **basis rotation**), metrics and benchmarks.
+//! * **L2 (python/compile)** — JAX transformer fwd/bwd lowered AOT to
+//!   HLO text artifacts, executed here via the PJRT CPU client.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the rotated
+//!   Adam update, tiled matmul and attention, lowered into the same HLO.
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! python invocation; afterwards the `abrot` binary is self-contained.
+
+pub mod tensor;
+pub mod rngs;
+pub mod jsonio;
+pub mod config;
+pub mod data;
+pub mod runtime;
+pub mod model;
+pub mod optim;
+pub mod pipeline;
+pub mod coordinator;
+pub mod landscape;
+pub mod analysis;
+pub mod metrics;
+pub mod bench;

@@ -1,0 +1,253 @@
+//! `abrot` — asynchronous basis-rotation pipeline training CLI.
+//!
+//! Subcommands:
+//!   info       --config <name>                 show manifest summary
+//!   train      --config <name> --method <m> --stages P --steps N [...]
+//!   engine     --config <name> --stages P --steps N    threaded 1F1B run
+//!   repro      --fig <id>|--table <id>|--all [--steps N] [--out DIR]
+//!   landscape                                  Figs 3–4 toy experiments
+//!   calc       stage/memory calculators (Tables 1–2)
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use abrot::config::{FreqAlloc, Geometry, Method, Source, StashMode, TrainCfg};
+use abrot::coordinator::figures::{FigOpts, Harness};
+use abrot::coordinator::{Coordinator, Experiment};
+use abrot::metrics::write_losses;
+use abrot::runtime::Runtime;
+
+/// Minimal flag parser: --key value pairs after the subcommand.
+struct Args {
+    map: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut map = std::collections::HashMap::new();
+        let mut flags = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    map.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { map, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains(key) || self.map.contains_key(key)
+    }
+}
+
+fn parse_method(name: &str) -> Result<Method> {
+    Ok(match name {
+        "pipedream" | "adam" => Method::PipeDream,
+        "pipedream_lr" => Method::PipeDreamLr,
+        "nesterov" => Method::Nesterov,
+        "muon" => Method::Muon,
+        "scion" => Method::Scion,
+        "soap" => Method::Soap { freq: 10 },
+        "br" | "basis_rotation" => Method::br_default(),
+        s if s.starts_with("dc_") => Method::DelayComp {
+            lambda: s[3..].parse().map_err(|_| anyhow!("bad dc lambda"))?,
+        },
+        s if s.starts_with("br_") => {
+            // br_<1st|2nd>_<uni|bi>[_f<freq>][_sa|_isa]
+            let parts: Vec<&str> = s.split('_').collect();
+            let source = match parts.get(1) {
+                Some(&"1st") => Source::First,
+                Some(&"2nd") => Source::Second,
+                _ => bail!("bad br source in {s}"),
+            };
+            let geometry = match parts.get(2) {
+                Some(&"uni") => Geometry::Unilateral,
+                Some(&"bi") => Geometry::Bilateral,
+                _ => bail!("bad br geometry in {s}"),
+            };
+            let mut freq = 10;
+            let mut alloc = FreqAlloc::Uniform;
+            for p in &parts[3..] {
+                if let Some(f) = p.strip_prefix('f') {
+                    freq = f.parse().map_err(|_| anyhow!("bad freq in {s}"))?;
+                } else if *p == "sa" {
+                    alloc = FreqAlloc::StageAware;
+                } else if *p == "isa" {
+                    alloc = FreqAlloc::InverseStageAware;
+                }
+            }
+            Method::BasisRotation { source, geometry, freq, alloc }
+        }
+        _ => bail!("unknown method {name:?}"),
+    })
+}
+
+fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
+    let method = parse_method(&args.get_or("method", "pipedream"))?;
+    let stash = match args.get_or("stash", "stash").as_str() {
+        "stash" => StashMode::Stash,
+        "nostash" => StashMode::NoStash,
+        "predict" => StashMode::Predict,
+        s => bail!("bad --stash {s}"),
+    };
+    Ok(TrainCfg {
+        method,
+        stages: args.parse_num("stages", 1usize),
+        steps: args.parse_num("steps", 200u32),
+        lr: args.parse_num("lr", 1e-3f32),
+        seed: args.parse_num("seed", 1234u64),
+        eval_every: args.parse_num("eval-every", 0u32),
+        stash,
+        ..Default::default()
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    match cmd {
+        "info" => {
+            let cfg = args.get_or("config", "micro");
+            let rt = Runtime::open(root.join(&cfg))?;
+            let m = &rt.manifest;
+            println!("config {} : vocab={} seq={} d_model={} heads={} blocks={} d_ff={} batch={}{}",
+                     m.cfg.name, m.cfg.vocab, m.cfg.seq, m.cfg.d_model,
+                     m.cfg.n_heads, m.cfg.n_blocks, m.cfg.d_ff, m.cfg.batch,
+                     m.cfg.moe.as_ref().map_or(String::new(),
+                         |x| format!(" moe={}x top{}", x.n_experts, x.top_k)));
+            println!("params: {} tensors, {} total elements",
+                     m.params.len(), m.total_params());
+            println!("executables: {}", m.executables.len());
+            let mut names: Vec<_> = m.executables.keys().collect();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        "train" => {
+            let cfg_name = args.get_or("config", "micro");
+            let tcfg = train_cfg_from(&args)?;
+            let mut coord = Coordinator::new(&root);
+            println!("training {cfg_name} with {} (P={}, {} steps)",
+                     tcfg.method.name(), tcfg.stages, tcfg.steps);
+            let res = coord.run(&Experiment { model: cfg_name, train: tcfg })?;
+            for (i, l) in res.losses.iter().enumerate() {
+                if (i + 1) % 10 == 0 || i == 0 {
+                    println!("step {:>5}  loss {:.4}", i + 1, l);
+                }
+            }
+            println!("final (smoothed) {:.4}  wall {:.1}s  dispatches {}",
+                     res.final_loss(), res.wall_secs, res.dispatches);
+            if let Some(out) = args.get("out") {
+                write_losses(out, &[&res])?;
+                println!("losses -> {out}");
+            }
+        }
+        "engine" => {
+            let cfg_name = args.get_or("config", "micro");
+            let tcfg = train_cfg_from(&args)?;
+            let mut coord = Coordinator::new(&root);
+            let res =
+                coord.run_engine(&Experiment { model: cfg_name, train: tcfg })?;
+            println!(
+                "engine: final {:.4}  tokens/s {:.0}  bubble {:.1}%  wall {:.1}s",
+                res.final_loss(), res.tokens_per_sec, res.bubble_frac * 100.0,
+                res.wall_secs
+            );
+        }
+        "repro" => {
+            let opts = FigOpts {
+                out: PathBuf::from(args.get_or("out", "results")),
+                steps: args.parse_num("steps", 200u32),
+                stages: args
+                    .get("stages")
+                    .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+                    .unwrap_or_else(|| vec![1, 4, 8, 16, 32]),
+                seed: args.parse_num("seed", 1234u64),
+                lr: args.parse_num("lr", 1e-3f32),
+            };
+            let model = args.get_or("model", "tiny32");
+            let mut coord = Coordinator::new(&root);
+            let mut h = Harness::new(&mut coord, opts);
+            if args.has("all") {
+                h.all(&model)?;
+            } else if let Some(t) = args.get("table") {
+                match t {
+                    "table1" | "table2" => h.tables12()?,
+                    "table3" => h.table3(&model)?,
+                    _ => bail!("unknown table {t}"),
+                }
+            } else if let Some(fspec) = args.get("fig") {
+                for f in fspec.split(',') {
+                    match f {
+                    "fig2a" | "fig2b" | "fig5" | "fig12" | "fig13" => h.fig5(&model)?,
+                    "fig3" => h.fig3()?,
+                    "fig4" => h.fig4()?,
+                    "fig6" | "fig14" => h.fig6()?,
+                    "fig7" | "fig20" => h.fig7()?,
+                    "fig8" | "fig16" => h.fig8(&model)?,
+                    "fig9a" | "fig9b" => h.fig9ab(&model)?,
+                    "fig9c" | "fig17" => h.fig9c(&model)?,
+                    "fig10" => h.fig10(&model)?,
+                    "fig11" => h.fig11("tiny8")?,
+                    "fig15" => h.fig15(&model)?,
+                    "fig18" => h.fig18(&model)?,
+                    "fig19" => h.fig19(&model)?,
+                    "fig21" => h.fig21()?,
+                    "engine" => {
+                        let p = args.parse_num("stages-engine", 2usize);
+                        h.engine(&args.get_or("engine-model", "micro"), p)?
+                    }
+                    _ => bail!("unknown figure {f}"),
+                    }
+                }
+            } else {
+                bail!("repro needs --fig, --table or --all");
+            }
+        }
+        "landscape" => {
+            let mut coord = Coordinator::new(&root);
+            let mut h = Harness::new(&mut coord, FigOpts::default());
+            h.fig3()?;
+            h.fig4()?;
+        }
+        "calc" => {
+            let mut coord = Coordinator::new(&root);
+            let mut h = Harness::new(&mut coord, FigOpts::default());
+            h.tables12()?;
+        }
+        _ => {
+            println!("abrot — asynchronous basis-rotation pipeline training");
+            println!("usage: abrot <info|train|engine|repro|landscape|calc> [--flags]");
+            println!("  e.g. abrot train --config tiny32 --method br --stages 32 --steps 300");
+            println!("       abrot repro --fig fig5 --steps 200 --out results");
+        }
+    }
+    Ok(())
+}

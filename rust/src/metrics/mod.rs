@@ -1,0 +1,152 @@
+//! Run results, loss-curve utilities (smoothing, iterations-to-target,
+//! slowdown ratios) and CSV output for the figure harness.
+
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub method: String,
+    pub stages: usize,
+    pub losses: Vec<f32>,
+    pub val_losses: Vec<(u32, f32)>,
+    pub wall_secs: f64,
+    pub dispatches: u64,
+    pub diverged: bool,
+    pub param_count: usize,
+    pub optimizer_state_elems: usize,
+    /// engine-only counters
+    pub bubble_frac: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl RunResult {
+    pub fn new(method: &str, stages: usize) -> Self {
+        RunResult { method: method.to_string(), stages, ..Default::default() }
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        smoothed(&self.losses, 20).last().copied().unwrap_or(f32::NAN)
+    }
+}
+
+/// Trailing-window moving average.
+pub fn smoothed(xs: &[f32], window: usize) -> Vec<f32> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0f64;
+    for (i, &x) in xs.iter().enumerate() {
+        acc += x as f64;
+        if i >= window {
+            acc -= xs[i - window] as f64;
+        }
+        let n = (i + 1).min(window);
+        out.push((acc / n as f64) as f32);
+    }
+    out
+}
+
+/// First step (1-based) at which the smoothed loss reaches `target`.
+pub fn iters_to_target(losses: &[f32], target: f32) -> Option<u32> {
+    smoothed(losses, 20)
+        .iter()
+        .position(|&l| l <= target)
+        .map(|i| i as u32 + 1)
+}
+
+/// Paper's slowdown metric: iterations-to-target at P stages relative to
+/// P=1. `None` when either run never reaches the target.
+pub fn slowdown(losses_p: &[f32], losses_1: &[f32], target: f32) -> Option<f32> {
+    let a = iters_to_target(losses_p, target)? as f32;
+    let b = iters_to_target(losses_1, target)? as f32;
+    Some(a / b)
+}
+
+/// Iteration-reduction headline: how many fewer iterations method A
+/// needs than B to reach B's final (smoothed) loss.
+pub fn iter_reduction_vs(a: &RunResult, b: &RunResult) -> Option<f32> {
+    let target = b.final_loss();
+    let ia = iters_to_target(&a.losses, target)? as f32;
+    let ib = b.losses.len() as f32;
+    Some(1.0 - ia / ib)
+}
+
+// ---------------------------------------------------------------------------
+// CSV output
+// ---------------------------------------------------------------------------
+
+pub struct Csv {
+    file: std::fs::File,
+}
+
+impl Csv {
+    pub fn create(path: impl AsRef<Path>, header: &str) -> std::io::Result<Csv> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{header}")?;
+        Ok(Csv { file })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", cells.join(","))
+    }
+}
+
+/// Write a loss trajectory as step,loss CSV.
+pub fn write_losses(path: impl AsRef<Path>, runs: &[&RunResult]) -> std::io::Result<()> {
+    let mut csv = Csv::create(path, "method,stages,step,loss")?;
+    for r in runs {
+        for (i, &l) in r.losses.iter().enumerate() {
+            csv.row(&[
+                r.method.clone(),
+                r.stages.to_string(),
+                (i + 1).to_string(),
+                format!("{l:.5}"),
+            ])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_window() {
+        let xs = vec![4.0, 2.0, 0.0, 0.0];
+        let s = smoothed(&xs, 2);
+        assert_eq!(s, vec![4.0, 3.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn iters_to_target_finds_first_crossing() {
+        let losses: Vec<f32> = (0..100).map(|i| 5.0 - 0.04 * i as f32).collect();
+        let it = iters_to_target(&losses, 3.0).unwrap();
+        // smoothed lags the raw curve slightly
+        assert!(it >= 51 && it <= 80, "{it}");
+        assert!(iters_to_target(&losses, 0.5).is_none());
+    }
+
+    #[test]
+    fn slowdown_ratio() {
+        let fast: Vec<f32> = (0..100).map(|i| 5.0 - 0.1 * i as f32).collect();
+        let slow: Vec<f32> = (0..400).map(|i| 5.0 - 0.025 * i as f32).collect();
+        let s = slowdown(&slow, &fast, 3.0).unwrap();
+        assert!(s > 2.5 && s < 5.0, "{s}");
+    }
+
+    #[test]
+    fn csv_writes(){
+        let dir = std::env::temp_dir().join("abrot_csv_test");
+        let p = dir.join("x.csv");
+        let mut c = Csv::create(&p, "a,b").unwrap();
+        c.row(&["1".into(), "2".into()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

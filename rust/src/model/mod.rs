@@ -1,0 +1,275 @@
+//! Model-side metadata on the Rust side: parameter initialization,
+//! pipeline-stage partitioning and the param↔shape-class mapping used by
+//! the batched optimizer executables.
+//!
+//! The schema itself comes from the manifest (single source of truth in
+//! `python/compile/configs.py`); this module only *derives* from it.
+
+use crate::runtime::{Manifest, ParamSpec};
+use crate::rngs::Rng;
+use crate::tensor::Tensor;
+
+/// Initialize parameters exactly like `model.init_params` on the python
+/// side: gains = 1, everything else N(0, 0.02), residual projections
+/// (wo / w2 / w2e) scaled by 1/sqrt(2L).
+pub fn init_params(man: &Manifest, seed: u64) -> Vec<Tensor> {
+    let rng = Rng::new(seed);
+    let resid_scale = 1.0 / (2.0 * man.cfg.n_blocks as f32).sqrt();
+    man.params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            if p.kind == "gain" {
+                Tensor::ones(&p.shape)
+            } else {
+                let mut std = 0.02;
+                if p.name.ends_with(".wo")
+                    || p.name.ends_with(".w2")
+                    || p.name.ends_with(".w2e")
+                {
+                    std *= resid_scale;
+                }
+                let mut t = Tensor::zeros(&p.shape);
+                rng.fold(i as u64).fill_normal(&mut t.data, std);
+                t
+            }
+        })
+        .collect()
+}
+
+/// Pipeline partition: block b → stage floor(b·P/L); embeddings live on
+/// stage 0, final norm + head on the last stage (paper D.2).
+#[derive(Clone, Debug)]
+pub struct StagePartition {
+    pub stages: usize,
+    /// stage id per parameter (manifest order).
+    pub stage_of: Vec<usize>,
+    /// gradient delay per parameter: τ = P-1-stage (paper: τ_i = K-k).
+    pub delay_of: Vec<u32>,
+    /// blocks assigned to each stage (contiguous ranges).
+    pub blocks_of_stage: Vec<Vec<usize>>,
+}
+
+impl StagePartition {
+    pub fn new(man: &Manifest, stages: usize) -> StagePartition {
+        let l = man.cfg.n_blocks;
+        assert!(stages >= 1 && stages <= l, "need 1 <= P <= L (= {l}), got {stages}");
+        let stage_of_block =
+            |b: usize| -> usize { (b * stages / l).min(stages - 1) };
+        let stage_of: Vec<usize> = man
+            .params
+            .iter()
+            .map(|p: &ParamSpec| {
+                if p.block >= 0 {
+                    stage_of_block(p.block as usize)
+                } else if p.name == "tok_emb" || p.name == "pos_emb" {
+                    0
+                } else {
+                    stages - 1 // gf, head
+                }
+            })
+            .collect();
+        let delay_of =
+            stage_of.iter().map(|&s| (stages - 1 - s) as u32).collect();
+        let mut blocks_of_stage = vec![Vec::new(); stages];
+        for b in 0..l {
+            blocks_of_stage[stage_of_block(b)].push(b);
+        }
+        StagePartition { stages, stage_of, delay_of, blocks_of_stage }
+    }
+
+    pub fn max_delay(&self) -> u32 {
+        (self.stages - 1) as u32
+    }
+
+    /// Effective stage-aware delay τ' of Eq. (3), with uniform per-
+    /// coordinate smoothness weights (C_i identical): the RMS of the
+    /// per-parameter delays weighted by parameter count.
+    pub fn effective_delay_uniform(&self, man: &Manifest) -> f32 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (p, &tau) in man.params.iter().zip(&self.delay_of) {
+            let d = p.shape.iter().product::<usize>() as f64;
+            num += d * (tau as f64) * (tau as f64);
+            den += d;
+        }
+        (num / den).sqrt() as f32
+    }
+}
+
+/// Mapping of rotated parameters into the batched shape-class
+/// executables: class `c` packs `count` matrices (one per block, or one
+/// per block×expert for MoE) in block order.
+#[derive(Clone, Debug)]
+pub struct ClassSlot {
+    /// index into the manifest param list
+    pub param: usize,
+    /// sub-matrix along axis 0 for expert tensors; 0 for plain matrices
+    pub slot: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClassMap {
+    pub class: crate::runtime::ShapeClass,
+    pub slots: Vec<ClassSlot>,
+}
+
+/// Build the per-class slot lists from the manifest schema.
+pub fn class_maps(man: &Manifest) -> Vec<ClassMap> {
+    man.shape_classes
+        .iter()
+        .map(|sc| {
+            let suffix = format!(".{}", sc.name);
+            let mut slots = Vec::new();
+            for (i, p) in man.params.iter().enumerate() {
+                if !p.name.ends_with(&suffix) || !p.rotated {
+                    continue;
+                }
+                if p.kind == "expert" {
+                    for e in 0..p.shape[0] {
+                        slots.push(ClassSlot { param: i, slot: e });
+                    }
+                } else {
+                    slots.push(ClassSlot { param: i, slot: 0 });
+                }
+            }
+            assert_eq!(
+                slots.len(),
+                sc.count,
+                "class {} slot mismatch",
+                sc.name
+            );
+            ClassMap { class: sc.clone(), slots }
+        })
+        .collect()
+}
+
+/// Extract the (m,n) matrix for a slot (copies; experts are sliced).
+pub fn slot_matrix(params: &[Tensor], s: &ClassSlot) -> Tensor {
+    let p = &params[s.param];
+    if p.rank() == 3 {
+        p.index_axis0(s.slot)
+    } else {
+        p.clone()
+    }
+}
+
+/// Write a slot matrix back.
+pub fn set_slot_matrix(params: &mut [Tensor], s: &ClassSlot, t: &Tensor) {
+    if params[s.param].rank() == 3 {
+        params[s.param].set_axis0(s.slot, t);
+    } else {
+        params[s.param] = t.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn man(name: &str) -> Manifest {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+        Manifest::load(&p).unwrap()
+    }
+
+    #[test]
+    fn init_matches_schema_and_seed_determinism() {
+        let m = man("micro");
+        let a = init_params(&m, 7);
+        let b = init_params(&m, 7);
+        let c = init_params(&m, 8);
+        assert_eq!(a.len(), m.params.len());
+        for ((x, y), p) in a.iter().zip(&b).zip(&m.params) {
+            assert_eq!(x.shape, p.shape);
+            assert_eq!(x.data, y.data);
+            if p.kind == "gain" {
+                assert!(x.data.iter().all(|&v| v == 1.0));
+            }
+        }
+        assert_ne!(a[0].data, c[0].data);
+    }
+
+    #[test]
+    fn residual_projections_scaled_down() {
+        let m = man("micro");
+        let p = init_params(&m, 3);
+        let iw1 = m.param_index("b0.w1").unwrap();
+        let iw2 = m.param_index("b0.w2").unwrap();
+        let s1 = p[iw1].norm() / (p[iw1].len() as f32).sqrt();
+        let s2 = p[iw2].norm() / (p[iw2].len() as f32).sqrt();
+        assert!(s2 < s1 * 0.7, "w2 std {s2} vs w1 std {s1}");
+    }
+
+    #[test]
+    fn partition_p1_no_delay() {
+        let m = man("micro");
+        let part = StagePartition::new(&m, 1);
+        assert!(part.delay_of.iter().all(|&d| d == 0));
+        assert_eq!(part.effective_delay_uniform(&m), 0.0);
+    }
+
+    #[test]
+    fn partition_p_equals_l() {
+        let m = man("micro"); // L = 2
+        let part = StagePartition::new(&m, 2);
+        // embeds stage 0, block0 stage 0, block1 stage 1, head stage 1
+        let i_b0 = m.param_index("b0.wqkv").unwrap();
+        let i_b1 = m.param_index("b1.wqkv").unwrap();
+        assert_eq!(part.stage_of[i_b0], 0);
+        assert_eq!(part.stage_of[i_b1], 1);
+        assert_eq!(part.stage_of[m.param_index("tok_emb").unwrap()], 0);
+        assert_eq!(part.stage_of[m.param_index("head").unwrap()], 1);
+        assert_eq!(part.delay_of[i_b0], 1);
+        assert_eq!(part.delay_of[i_b1], 0);
+        assert!(part.effective_delay_uniform(&m) > 0.0);
+        assert!(part.effective_delay_uniform(&m) <= part.max_delay() as f32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_more_stages_than_blocks_panics() {
+        let m = man("micro");
+        let _ = StagePartition::new(&m, 5);
+    }
+
+    #[test]
+    fn class_maps_cover_all_rotated_params() {
+        let m = man("micro");
+        let maps = class_maps(&m);
+        assert_eq!(maps.len(), 4);
+        let total: usize = maps.iter().map(|c| c.slots.len()).sum();
+        let rotated = m.params.iter().filter(|p| p.rotated).count();
+        assert_eq!(total, rotated); // dense: 1 slot per rotated matrix
+        for cm in &maps {
+            for s in &cm.slots {
+                let p = &m.params[s.param];
+                assert!(p.rotated);
+                let (mm, nn) = (p.shape[p.shape.len() - 2], p.shape[p.shape.len() - 1]);
+                assert_eq!((mm, nn), (cm.class.m, cm.class.n));
+            }
+        }
+    }
+
+    #[test]
+    fn moe_class_maps_fold_experts() {
+        let m = man("moe_micro");
+        let maps = class_maps(&m);
+        let w1e = maps.iter().find(|c| c.class.name == "w1e").unwrap();
+        assert_eq!(w1e.slots.len(), m.cfg.n_blocks * m.cfg.moe.as_ref().unwrap().n_experts);
+    }
+
+    #[test]
+    fn slot_roundtrip() {
+        let m = man("moe_micro");
+        let mut params = init_params(&m, 1);
+        let maps = class_maps(&m);
+        let cm = maps.iter().find(|c| c.class.name == "w1e").unwrap();
+        let s = &cm.slots[3];
+        let t = slot_matrix(&params, s);
+        let t2 = t.scale(2.0);
+        set_slot_matrix(&mut params, s, &t2);
+        assert_eq!(slot_matrix(&params, s), t2);
+    }
+}

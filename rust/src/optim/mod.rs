@@ -1,0 +1,338 @@
+//! Per-stage optimizers: the paper's baselines (PipeDream Adam,
+//! PipeDream-LR, Nesterov, Delay Compensation), the paper's contribution
+//! (basis rotation, in `rotation`), and the preconditioned comparators
+//! of Table 3 (SOAP in `rotation`, Muon/Scion in `muon`).
+//!
+//! Element-wise methods run natively in Rust; matrix-rotation methods
+//! dispatch the batched HLO executables whose hot path is the L1 Pallas
+//! kernels. `reference` holds independent Rust implementations of the
+//! rotated update used by integration tests to cross-check the HLO path.
+
+pub mod muon;
+pub mod reference;
+pub mod rotation;
+
+use anyhow::Result;
+
+use crate::config::{pipedream_lr_scale, Method, TrainCfg};
+use crate::model::StagePartition;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Everything an optimizer may need for one step.
+pub struct StepCtx<'a> {
+    /// 1-based step count.
+    pub t: u64,
+    /// Scheduled base learning rate for this step.
+    pub lr: f32,
+    pub cfg: &'a TrainCfg,
+    pub part: &'a StagePartition,
+    /// The (stale) weights the gradients were computed at — needed by
+    /// Delay Compensation's Taylor correction.
+    pub stale: Option<&'a [Tensor]>,
+    pub rt: &'a Runtime,
+}
+
+impl StepCtx<'_> {
+    /// Per-parameter LR: PipeDream-LR rescales by the stage delay.
+    pub fn lr_for(&self, param_idx: usize) -> f32 {
+        match self.cfg.method {
+            Method::PipeDreamLr => {
+                self.lr * pipedream_lr_scale(self.part.delay_of[param_idx])
+            }
+            _ => self.lr,
+        }
+    }
+}
+
+pub trait Optimizer {
+    fn step(&mut self, ctx: &StepCtx, params: &mut [Tensor], grads: &[Tensor])
+        -> Result<()>;
+    fn name(&self) -> &'static str;
+    /// Optimizer-state memory in f32 elements (Table 2 accounting).
+    fn state_elems(&self) -> usize;
+}
+
+/// Construct the optimizer for a method.
+pub fn build(method: &Method, rt: &Runtime, cfg: &TrainCfg) -> Box<dyn Optimizer> {
+    match method {
+        Method::PipeDream | Method::PipeDreamLr => {
+            Box::new(Adam::new(&rt.manifest, false))
+        }
+        Method::Nesterov => Box::new(Adam::new(&rt.manifest, true)),
+        Method::DelayComp { lambda } => {
+            Box::new(DelayComp::new(&rt.manifest, *lambda))
+        }
+        Method::BasisRotation { source, geometry, freq, alloc } => Box::new(
+            rotation::BasisRotation::new(rt, cfg, *source, *geometry, *freq,
+                                         *alloc, false),
+        ),
+        Method::Soap { freq } => Box::new(rotation::BasisRotation::new(
+            rt,
+            cfg,
+            crate::config::Source::Second,
+            crate::config::Geometry::Bilateral,
+            *freq,
+            crate::config::FreqAlloc::Uniform,
+            true,
+        )),
+        Method::Muon => Box::new(muon::Muon::new(rt, false)),
+        Method::Scion => Box::new(muon::Muon::new(rt, true)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Element-wise Adam core (shared by several methods)
+// ---------------------------------------------------------------------------
+
+/// Fused element-wise Adam state/update for a set of parameters.
+pub struct ElementAdam {
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+impl ElementAdam {
+    pub fn new(shapes: &[Vec<usize>]) -> Self {
+        ElementAdam {
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+
+    /// One Adam step on slot `i`. `nesterov` applies the momentum
+    /// lookahead of Ajanthan et al. 2025 (NAdam-style numerator).
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        i: usize,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+        wd: f32,
+        t: u64,
+        nesterov: bool,
+    ) {
+        let bc1 = 1.0 - b1.powi(t as i32);
+        let bc2 = 1.0 - b2.powi(t as i32);
+        let m = &mut self.m[i].data;
+        let v = &mut self.v[i].data;
+        for ((wi, &gi), (mi, vi)) in
+            w.data.iter_mut().zip(&g.data).zip(m.iter_mut().zip(v.iter_mut()))
+        {
+            *mi = b1 * *mi + (1.0 - b1) * gi;
+            *vi = b2 * *vi + (1.0 - b2) * gi * gi;
+            let num = if nesterov {
+                // Nesterov lookahead: β1·m_t + (1-β1)·g_t
+                b1 * *mi + (1.0 - b1) * gi
+            } else {
+                *mi
+            };
+            let mhat = num / bc1;
+            let vhat = *vi / bc2;
+            *wi -= lr * (mhat / (vhat.sqrt() + eps) + wd * *wi);
+        }
+    }
+
+    pub fn state_elems(&self) -> usize {
+        self.m.iter().map(|t| t.len()).sum::<usize>() * 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adam (PipeDream / PipeDream-LR / Nesterov)
+// ---------------------------------------------------------------------------
+
+pub struct Adam {
+    inner: ElementAdam,
+    nesterov: bool,
+}
+
+impl Adam {
+    pub fn new(man: &crate::runtime::Manifest, nesterov: bool) -> Self {
+        let shapes: Vec<Vec<usize>> =
+            man.params.iter().map(|p| p.shape.clone()).collect();
+        Adam { inner: ElementAdam::new(&shapes), nesterov }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, ctx: &StepCtx, params: &mut [Tensor], grads: &[Tensor])
+        -> Result<()> {
+        let b1 = ctx.cfg.effective_beta1();
+        for i in 0..params.len() {
+            self.inner.update(
+                i,
+                &mut params[i],
+                &grads[i],
+                ctx.lr_for(i),
+                b1,
+                ctx.cfg.beta2,
+                ctx.cfg.eps,
+                ctx.cfg.weight_decay,
+                ctx.t,
+                self.nesterov,
+            );
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        if self.nesterov { "nesterov" } else { "adam" }
+    }
+
+    fn state_elems(&self) -> usize {
+        self.inner.state_elems()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Delay Compensation (Zheng et al. 2017, Fig. 19)
+// ---------------------------------------------------------------------------
+
+pub struct DelayComp {
+    inner: ElementAdam,
+    lambda: f32,
+}
+
+impl DelayComp {
+    pub fn new(man: &crate::runtime::Manifest, lambda: f32) -> Self {
+        let shapes: Vec<Vec<usize>> =
+            man.params.iter().map(|p| p.shape.clone()).collect();
+        DelayComp { inner: ElementAdam::new(&shapes), lambda }
+    }
+}
+
+impl Optimizer for DelayComp {
+    fn step(&mut self, ctx: &StepCtx, params: &mut [Tensor], grads: &[Tensor])
+        -> Result<()> {
+        let stale = ctx
+            .stale
+            .expect("DelayComp needs the stale weights the grads came from");
+        for i in 0..params.len() {
+            // g' = g + λ · g ⊙ g ⊙ (w_now − w_stale): first-order Taylor
+            // correction with the diagonal empirical Fisher as Hessian.
+            let g = &grads[i];
+            let mut gc = g.clone();
+            for ((gc_i, &g_i), (&w_i, &ws_i)) in gc
+                .data
+                .iter_mut()
+                .zip(&g.data)
+                .zip(params[i].data.iter().zip(&stale[i].data))
+            {
+                *gc_i = g_i + self.lambda * g_i * g_i * (w_i - ws_i);
+            }
+            self.inner.update(
+                i,
+                &mut params[i],
+                &gc,
+                ctx.lr_for(i),
+                ctx.cfg.beta1,
+                ctx.cfg.beta2,
+                ctx.cfg.eps,
+                ctx.cfg.weight_decay,
+                ctx.t,
+                false,
+            );
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "delay_comp"
+    }
+
+    fn state_elems(&self) -> usize {
+        self.inner.state_elems()
+    }
+}
+
+/// Global gradient-norm clipping (paper D.2: clip at 1.0). Returns the
+/// pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
+    let total: f32 =
+        grads.iter().map(|g| g.data.iter().map(|x| x * x).sum::<f32>()).sum();
+    let norm = total.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let s = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in g.data.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_adam_first_step_is_signed_lr() {
+        // With zero init state, bias correction makes the first Adam step
+        // ≈ lr·sign(g) (wd = 0).
+        let shapes = vec![vec![4]];
+        let mut p = Tensor::new(vec![4], vec![1.0, -2.0, 3.0, 0.5]);
+        let before = p.clone();
+        let mut ad = ElementAdam::new(&shapes);
+        let g = Tensor::new(vec![4], vec![0.3, -0.7, 0.1, 0.0]);
+        ad.update(0, &mut p, &g, 0.01, 0.9, 0.999, 1e-12, 0.0, 1, false);
+        for i in 0..3 {
+            let step = p.data[i] - before.data[i];
+            assert!((step + 0.01 * g.data[i].signum()).abs() < 1e-4, "{step}");
+        }
+        assert_eq!(p.data[3], before.data[3]); // zero grad → no move
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let shapes = vec![vec![2]];
+        let mut p = Tensor::new(vec![2], vec![5.0, -3.0]);
+        let mut ad = ElementAdam::new(&shapes);
+        for t in 1..=800 {
+            let g = Tensor::new(vec![2], vec![2.0 * p.data[0], 10.0 * p.data[1]]);
+            ad.update(0, &mut p, &g, 0.05, 0.9, 0.999, 1e-8, 0.0, t, false);
+        }
+        assert!(p.max_abs() < 0.1, "{p:?}");
+    }
+
+    #[test]
+    fn nesterov_differs_from_adam() {
+        let shapes = vec![vec![2]];
+        let g = Tensor::new(vec![2], vec![1.0, -1.0]);
+        let mut p1 = Tensor::zeros(&[2]);
+        let mut p2 = Tensor::zeros(&[2]);
+        let mut a1 = ElementAdam::new(&shapes);
+        let mut a2 = ElementAdam::new(&shapes);
+        for t in 1..=3 {
+            a1.update(0, &mut p1, &g, 0.1, 0.9, 0.999, 1e-8, 0.0, t, false);
+            a2.update(0, &mut p2, &g, 0.1, 0.9, 0.999, 1e-8, 0.0, t, true);
+        }
+        assert_ne!(p1.data, p2.data);
+    }
+
+    #[test]
+    fn clip_rescales_only_when_needed() {
+        let mut gs = vec![Tensor::new(vec![2], vec![3.0, 4.0])];
+        let n = clip_global_norm(&mut gs, 1.0);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((gs[0].norm() - 1.0).abs() < 1e-6);
+        let mut gs2 = vec![Tensor::new(vec![2], vec![0.3, 0.4])];
+        let n2 = clip_global_norm(&mut gs2, 1.0);
+        assert!((n2 - 0.5).abs() < 1e-6);
+        assert_eq!(gs2[0].data, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let shapes = vec![vec![1]];
+        let mut p = Tensor::new(vec![1], vec![10.0]);
+        let mut ad = ElementAdam::new(&shapes);
+        let g = Tensor::zeros(&[1]);
+        ad.update(0, &mut p, &g, 0.1, 0.9, 0.999, 1e-8, 0.1, 1, false);
+        assert!(p.data[0] < 10.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Muon (Jordan et al. 2024) and Scion (Pethick et al. 2025) — the
+//! non-rotating preconditioned comparators of the paper's Table 3.
+//!
+//! Both orthogonalize a momentum buffer with Newton–Schulz via the
+//! batched `muon_<class>` executables (Pallas matmuls inside) and apply
+//! it with a spectral-scaled step; embeddings/gains/head fall back to
+//! element-wise Adam (Muon's own convention) or sign-descent LMO
+//! (Scion's ℓ∞ ball for non-matrix params).
+
+use anyhow::Result;
+
+use crate::model::{class_maps, set_slot_matrix, slot_matrix, ClassMap};
+use crate::runtime::{tensor_to_literal, Runtime};
+use crate::tensor::{stack, unstack, Tensor};
+
+use super::{ElementAdam, Optimizer, StepCtx};
+
+const MUON_BETA: f32 = 0.95;
+/// Keller Jordan's lr scale: 0.2·sqrt(max(m,n)) relative to the Adam lr.
+const MUON_SCALE: f32 = 0.2;
+
+struct MuonClass {
+    map: ClassMap,
+    mom: Tensor, // (NB, m, n)
+}
+
+pub struct Muon {
+    classes: Vec<MuonClass>,
+    fallback: ElementAdam,
+    fallback_idx: Vec<usize>,
+    /// Scion mode: norm-constrained LMO — spectral ball for matrices,
+    /// ℓ∞ (sign) ball for the fallback params; no Adam state there.
+    scion: bool,
+}
+
+impl Muon {
+    pub fn new(rt: &Runtime, scion: bool) -> Self {
+        let man = &rt.manifest;
+        let maps = class_maps(man);
+        let classes = maps
+            .into_iter()
+            .map(|map| {
+                let (nb, m, n) = (map.class.count, map.class.m, map.class.n);
+                MuonClass { mom: Tensor::zeros(&[nb, m, n]), map }
+            })
+            .collect();
+        let mut covered = vec![false; man.params.len()];
+        for cm in &class_maps(man) {
+            for s in &cm.slots {
+                covered[s.param] = true;
+            }
+        }
+        let fallback_idx: Vec<usize> =
+            (0..man.params.len()).filter(|&i| !covered[i]).collect();
+        let shapes: Vec<Vec<usize>> =
+            fallback_idx.iter().map(|&i| man.params[i].shape.clone()).collect();
+        Muon { classes, fallback: ElementAdam::new(&shapes), fallback_idx, scion }
+    }
+}
+
+impl Optimizer for Muon {
+    fn step(&mut self, ctx: &StepCtx, params: &mut [Tensor], grads: &[Tensor])
+        -> Result<()> {
+        // Fallback params.
+        for (slot, &pi) in self.fallback_idx.clone().iter().enumerate() {
+            if self.scion {
+                // ℓ∞-ball LMO: sign descent on the momentum.
+                let b1 = MUON_BETA;
+                let m = &mut self.fallback.m[slot];
+                for ((wi, &gi), mi) in params[pi]
+                    .data
+                    .iter_mut()
+                    .zip(&grads[pi].data)
+                    .zip(m.data.iter_mut())
+                {
+                    *mi = b1 * *mi + (1.0 - b1) * gi;
+                    *wi -= ctx.lr_for(pi) * mi.signum();
+                }
+            } else {
+                self.fallback.update(
+                    slot,
+                    &mut params[pi],
+                    &grads[pi],
+                    ctx.lr_for(pi),
+                    ctx.cfg.beta1,
+                    ctx.cfg.beta2,
+                    ctx.cfg.eps,
+                    ctx.cfg.weight_decay,
+                    ctx.t,
+                    false,
+                );
+            }
+        }
+
+        // Matrix classes: one batched NS-orthogonalization per class.
+        for cs in self.classes.iter_mut() {
+            let (m_dim, n_dim) = (cs.map.class.m, cs.map.class.n);
+            let mats: Vec<Tensor> = cs
+                .map
+                .slots
+                .iter()
+                .map(|s| {
+                    let mut g = slot_matrix(grads, s);
+                    g.shape = vec![m_dim, n_dim];
+                    g
+                })
+                .collect();
+            let refs: Vec<&Tensor> = mats.iter().collect();
+            let g_stack = stack(&refs);
+            let nb = cs.map.class.count;
+            let mut sc = Tensor::zeros(&[nb, 8]);
+            for i in 0..nb {
+                sc.data[i * 8 + 1] = MUON_BETA;
+            }
+            let name = format!("muon_{}", cs.map.class.name);
+            let inputs = vec![
+                tensor_to_literal(&cs.mom)?,
+                tensor_to_literal(&g_stack)?,
+                tensor_to_literal(&sc)?,
+            ];
+            let outs = ctx.rt.exec_tensors(&name, &inputs)?;
+            cs.mom = outs[0].clone();
+            let orth = unstack(&outs[1]);
+            // Spectral scale: Muon uses 0.2·sqrt(max(m,n)); Scion's
+            // spectral-ball LMO radius is equivalent up to the constant.
+            let scale = MUON_SCALE * (m_dim.max(n_dim) as f32).sqrt();
+            for (s, o) in cs.map.slots.iter().zip(&orth) {
+                let lr = ctx.lr_for(s.param) * scale;
+                let mut w = slot_matrix(params, s);
+                let wd = if self.scion { 0.0 } else { ctx.cfg.weight_decay };
+                for (wi, &oi) in w.data.iter_mut().zip(&o.data) {
+                    *wi -= lr * (oi + wd * *wi);
+                }
+                if params[s.param].rank() == 3 {
+                    set_slot_matrix(params, s, &w);
+                } else {
+                    w.shape = params[s.param].shape.clone();
+                    params[s.param] = w;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        if self.scion { "scion" } else { "muon" }
+    }
+
+    fn state_elems(&self) -> usize {
+        let mats: usize = self.classes.iter().map(|c| c.mom.len()).sum();
+        mats + self.fallback.state_elems()
+    }
+}

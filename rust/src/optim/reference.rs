@@ -1,0 +1,335 @@
+//! Independent Rust implementations of the rotated update and eigen
+//! estimation — used by integration tests to cross-check the HLO/Pallas
+//! path, and by the threaded pipeline engine (whose per-stage batch
+//! counts don't match the full-model batched executables).
+
+use crate::tensor::Tensor;
+
+/// Scalars vector layout shared with the exported graphs:
+/// [lr, beta1, beta2, eps, wd, t, mask, _]
+#[derive(Clone, Copy, Debug)]
+pub struct Scalars {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub wd: f32,
+    pub t: f32,
+}
+
+impl Scalars {
+    pub fn to_row(self, mask: f32) -> [f32; 8] {
+        [self.lr, self.beta1, self.beta2, self.eps, self.wd, self.t, mask, 0.0]
+    }
+}
+
+fn uni_left(m: usize, n: usize) -> bool {
+    m <= n
+}
+
+fn rot(x: &Tensor, u: Option<&Tensor>, v: Option<&Tensor>) -> Tensor {
+    let mut y = match u {
+        Some(u) => u.transpose().matmul(x),
+        None => x.clone(),
+    };
+    if let Some(v) = v {
+        y = y.matmul(v);
+    }
+    y
+}
+
+fn unrot(x: &Tensor, u: Option<&Tensor>, v: Option<&Tensor>) -> Tensor {
+    let mut y = match u {
+        Some(u) => u.matmul(x),
+        None => x.clone(),
+    };
+    if let Some(v) = v {
+        y = y.matmul(&v.transpose());
+    }
+    y
+}
+
+fn pick_uv<'a>(
+    u: &'a Tensor,
+    v: &'a Tensor,
+    unilateral: bool,
+    shape: (usize, usize),
+) -> (Option<&'a Tensor>, Option<&'a Tensor>) {
+    if !unilateral {
+        (Some(u), Some(v))
+    } else if uni_left(shape.0, shape.1) {
+        (Some(u), None)
+    } else {
+        (None, Some(v))
+    }
+}
+
+/// One basis-rotation Adam step (paper Algorithm 1 lines 3–11).
+/// Returns (w', m', vt').
+#[allow(clippy::too_many_arguments)]
+pub fn rotated_adam(
+    w: &Tensor,
+    g: &Tensor,
+    m: &Tensor,
+    vt: &Tensor,
+    u: &Tensor,
+    v: &Tensor,
+    sc: Scalars,
+    unilateral: bool,
+) -> (Tensor, Tensor, Tensor) {
+    let (mm, nn) = w.dims2();
+    let m_new = m.scale(sc.beta1).add(&g.scale(1.0 - sc.beta1));
+    let (uu, vv) = pick_uv(u, v, unilateral, (mm, nn));
+    let g_rot = rot(g, uu, vv);
+    let m_rot = rot(&m_new, uu, vv);
+    let bc1 = 1.0 - sc.beta1.powf(sc.t);
+    let bc2 = 1.0 - sc.beta2.powf(sc.t);
+    let mut vt_new = vt.clone();
+    let mut dir = g_rot.clone();
+    for i in 0..vt_new.data.len() {
+        let gr = g_rot.data[i];
+        vt_new.data[i] = sc.beta2 * vt.data[i] + (1.0 - sc.beta2) * gr * gr;
+        let mhat = m_rot.data[i] / bc1;
+        let vhat = vt_new.data[i] / bc2;
+        dir.data[i] = mhat / (vhat.sqrt() + sc.eps);
+    }
+    let upd = unrot(&dir, uu, vv);
+    let mut w_new = w.clone();
+    for i in 0..w_new.data.len() {
+        w_new.data[i] -= sc.lr * (upd.data[i] + sc.wd * w.data[i]);
+    }
+    (w_new, m_new, vt_new)
+}
+
+/// SOAP variant: momentum accumulated in the rotated space.
+#[allow(clippy::too_many_arguments)]
+pub fn soap_update(
+    w: &Tensor,
+    g: &Tensor,
+    m_rot_prev: &Tensor,
+    vt: &Tensor,
+    u: &Tensor,
+    v: &Tensor,
+    sc: Scalars,
+    unilateral: bool,
+) -> (Tensor, Tensor, Tensor) {
+    let (mm, nn) = w.dims2();
+    let (uu, vv) = pick_uv(u, v, unilateral, (mm, nn));
+    let g_rot = rot(g, uu, vv);
+    let m_new = m_rot_prev.scale(sc.beta1).add(&g_rot.scale(1.0 - sc.beta1));
+    let bc1 = 1.0 - sc.beta1.powf(sc.t);
+    let bc2 = 1.0 - sc.beta2.powf(sc.t);
+    let mut vt_new = vt.clone();
+    let mut dir = g_rot.clone();
+    for i in 0..vt_new.data.len() {
+        let gr = g_rot.data[i];
+        vt_new.data[i] = sc.beta2 * vt.data[i] + (1.0 - sc.beta2) * gr * gr;
+        let mhat = m_new.data[i] / bc1;
+        let vhat = vt_new.data[i] / bc2;
+        dir.data[i] = mhat / (vhat.sqrt() + sc.eps);
+    }
+    let upd = unrot(&dir, uu, vv);
+    let mut w_new = w.clone();
+    for i in 0..w_new.data.len() {
+        w_new.data[i] -= sc.lr * (upd.data[i] + sc.wd * w.data[i]);
+    }
+    (w_new, m_new, vt_new)
+}
+
+/// CGS2 QR (Q factor) — mirrors `optim_graphs.cgs2_qr` exactly.
+pub fn cgs2_qr(x: &Tensor) -> Tensor {
+    let (n, k) = x.dims2();
+    let mut q = Tensor::zeros(&[n, k]);
+    for j in 0..k {
+        let mut a: Vec<f32> = (0..n).map(|i| x.data[i * k + j]).collect();
+        for _pass in 0..2 {
+            // coeff = Qᵀ a (columns ≥ j are zero)
+            let mut coeff = vec![0.0f32; k];
+            for (i, &ai) in a.iter().enumerate() {
+                let row = &q.data[i * k..(i + 1) * k];
+                for (c, &qv) in coeff.iter_mut().zip(row) {
+                    *c += qv * ai;
+                }
+            }
+            for (i, ai) in a.iter_mut().enumerate() {
+                let row = &q.data[i * k..(i + 1) * k];
+                let mut proj = 0.0f32;
+                for (c, &qv) in coeff.iter().zip(row) {
+                    proj += c * qv;
+                }
+                *ai -= proj;
+            }
+        }
+        let norm = a.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-30;
+        for (i, &ai) in a.iter().enumerate() {
+            q.data[i * k + j] = ai / norm;
+        }
+    }
+    q
+}
+
+/// One power-iteration + QR step with the scale-aware ridge, matching
+/// `optim_graphs.power_qr`.
+pub fn power_qr(stat: &Tensor, basis: &Tensor) -> Tensor {
+    let n = stat.shape[0];
+    let trace: f32 = (0..n).map(|i| stat.data[i * n + i]).sum();
+    let ridge = 1e-3 * trace / n as f32 + 1e-12;
+    let mut x = stat.matmul(basis);
+    x.axpy(ridge, basis);
+    cgs2_qr(&x)
+}
+
+/// Newton–Schulz orthogonalization (Muon): 4 quintic + 4 cubic steps.
+pub fn ns_orthonormalize(x: &Tensor) -> Tensor {
+    let (m, n) = x.dims2();
+    let transpose = m > n;
+    let mut y = if transpose { x.transpose() } else { x.clone() };
+    let norm = y.norm() + 1e-7;
+    y = y.scale(1.0 / norm);
+    const A: f32 = 3.4445;
+    const B: f32 = -4.7750;
+    const C: f32 = 2.0315;
+    for _ in 0..4 {
+        let s = y.matmul(&y.transpose());
+        let s2 = s.matmul(&s);
+        let poly = s.scale(B).add(&s2.scale(C));
+        y = y.scale(A).add(&poly.matmul(&y));
+    }
+    for _ in 0..4 {
+        let s = y.matmul(&y.transpose());
+        y = y.scale(1.5).sub(&s.matmul(&y).scale(0.5));
+    }
+    if transpose {
+        y.transpose()
+    } else {
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Rng;
+
+    fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    fn orth(rng: &mut Rng, n: usize) -> Tensor {
+        cgs2_qr(&randn(rng, &[n, n]))
+    }
+
+    #[test]
+    fn cgs2_qr_orthonormal() {
+        let mut rng = Rng::new(4);
+        let x = randn(&mut rng, &[12, 12]);
+        let q = cgs2_qr(&x);
+        let qqt = q.matmul(&q.transpose());
+        let err = qqt.sub(&Tensor::eye(12)).max_abs();
+        assert!(err < 1e-4, "{err}");
+    }
+
+    #[test]
+    fn power_qr_converges_to_eigenbasis() {
+        let mut rng = Rng::new(5);
+        let n = 10;
+        let q0 = orth(&mut rng, n);
+        // SPD with distinct spectrum
+        let mut lam = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            lam.data[i * n + i] = 10.0 - i as f32;
+        }
+        let stat = q0.matmul(&lam).matmul(&q0.transpose());
+        let mut u = orth(&mut rng, n);
+        for _ in 0..80 {
+            u = power_qr(&stat, &u);
+        }
+        let d = u.transpose().matmul(&stat).matmul(&u);
+        let mut off = 0.0f32;
+        let mut tot = 0.0f32;
+        for i in 0..n {
+            for j in 0..n {
+                let v = d.data[i * n + j].abs();
+                tot += v;
+                if i != j {
+                    off += v;
+                }
+            }
+        }
+        assert!(off / tot < 0.05, "off/tot {}", off / tot);
+    }
+
+    #[test]
+    fn rotated_adam_identity_rotation_is_adam() {
+        let mut rng = Rng::new(6);
+        let (m, n) = (6, 8);
+        let w = randn(&mut rng, &[m, n]);
+        let g = randn(&mut rng, &[m, n]);
+        let mom = Tensor::zeros(&[m, n]);
+        let vt = Tensor::zeros(&[m, n]);
+        let sc = Scalars { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.0, t: 1.0 };
+        let (w1, _, _) = rotated_adam(&w, &g, &mom, &vt, &Tensor::eye(m),
+                                      &Tensor::eye(n), sc, false);
+        // first step == lr*sign(g)
+        for i in 0..w1.data.len() {
+            let step = w1.data[i] - w.data[i];
+            assert!((step + 1e-2 * g.data[i].signum()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotated_adam_equivariance() {
+        // Rotating with any fixed orthogonal U,V and then projecting the
+        // update back equals Adam run natively in the rotated space.
+        let mut rng = Rng::new(7);
+        let (m, n) = (6, 6);
+        let w = randn(&mut rng, &[m, n]);
+        let g = randn(&mut rng, &[m, n]);
+        let u = orth(&mut rng, m);
+        let v = orth(&mut rng, n);
+        let sc = Scalars { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.0, t: 1.0 };
+        let (w1, _, _) = rotated_adam(
+            &w, &g, &Tensor::zeros(&[m, n]), &Tensor::zeros(&[m, n]), &u, &v,
+            sc, false,
+        );
+        // native rotated-space Adam step
+        let wr = u.transpose().matmul(&w).matmul(&v);
+        let gr = u.transpose().matmul(&g).matmul(&v);
+        let mut wr_new = wr.clone();
+        for i in 0..wr.data.len() {
+            let mhat = (1.0 - sc.beta1) * gr.data[i] / (1.0 - sc.beta1);
+            let vhat = (1.0 - sc.beta2) * gr.data[i] * gr.data[i] / (1.0 - sc.beta2);
+            wr_new.data[i] -= sc.lr * mhat / (vhat.sqrt() + sc.eps);
+        }
+        let back = u.matmul(&wr_new).matmul(&v.transpose());
+        assert!(w1.sub(&back).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn ns_orthonormalize_orthogonal() {
+        let mut rng = Rng::new(8);
+        let x = randn(&mut rng, &[8, 20]);
+        let o = ns_orthonormalize(&x);
+        let err = o.matmul(&o.transpose()).sub(&Tensor::eye(8)).max_abs();
+        assert!(err < 1e-2, "{err}");
+    }
+
+    #[test]
+    fn unilateral_side_matches_shape() {
+        let mut rng = Rng::new(9);
+        // wide matrix (m < n): left rotation only; V must be unused.
+        let (m, n) = (4, 10);
+        let w = randn(&mut rng, &[m, n]);
+        let g = randn(&mut rng, &[m, n]);
+        let u = orth(&mut rng, m);
+        let v_garbage = Tensor::full(&[n, n], f32::NAN);
+        let sc = Scalars { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.0, t: 1.0 };
+        let (w1, _, _) = rotated_adam(
+            &w, &g, &Tensor::zeros(&[m, n]), &Tensor::zeros(&[m, n]), &u,
+            &v_garbage, sc, true,
+        );
+        assert!(w1.all_finite());
+    }
+}

@@ -1,0 +1,386 @@
+//! Basis rotation (paper Algorithms 1 & 2) and SOAP — the HLO-backed
+//! optimizers.
+//!
+//! Rotated matrices are updated through the batched per-shape-class
+//! executables exported by `aot.py` (one dispatch per class per step;
+//! the Pallas matmul/Adam kernels are the hot path inside). Everything
+//! that is not a rotated matrix (embeddings, gains, head, MoE routers)
+//! falls back to the element-wise Rust Adam, matching the paper's setup
+//! ("we only perform rotation to the MLP and attention layers").
+//!
+//! Stage-aware frequency allocation (paper Fig. 9c/17) is expressed as
+//! the per-slot `mask` scalar: the eigen executables always advance the
+//! Fisher EMAs but refresh U/V only where mask = 1.
+
+use anyhow::Result;
+
+use crate::config::{stage_aware_freq, FreqAlloc, Geometry, Source, TrainCfg};
+use crate::model::{class_maps, set_slot_matrix, slot_matrix, ClassMap};
+use crate::runtime::{tensor_to_literal, Runtime};
+use crate::tensor::{stack, unstack, Tensor};
+
+use super::{ElementAdam, Optimizer, StepCtx};
+
+/// Per-class batched optimizer state.
+struct ClassState {
+    map: ClassMap,
+    /// First moment: original space (basis rotation) or rotated space (SOAP).
+    m: Tensor, // (NB, m, n)
+    /// Second moment in the rotated space.
+    vt: Tensor, // (NB, m, n)
+    u: Tensor,  // (NB, m, m)
+    v: Tensor,  // (NB, n, n)
+    /// Fisher-factor EMAs (S = 2nd only).
+    l: Option<Tensor>, // (NB, m, m)
+    r: Option<Tensor>, // (NB, n, n)
+    /// Per-slot basis refresh period.
+    freqs: Vec<u32>,
+}
+
+pub struct BasisRotation {
+    source: Source,
+    geometry: Geometry,
+    freq: u32,
+    alloc: FreqAlloc,
+    /// SOAP mode: momentum accumulated in the rotated space + basis
+    /// refreshed *after* the parameter update (Appendix G).
+    soap: bool,
+    classes: Vec<ClassState>,
+    fallback: ElementAdam,
+    /// manifest indices of params handled by the fallback Adam.
+    fallback_idx: Vec<usize>,
+    /// cached count of eigen-executable dispatches (perf accounting).
+    pub eigen_dispatches: u64,
+}
+
+impl BasisRotation {
+    pub fn new(
+        rt: &Runtime,
+        cfg: &TrainCfg,
+        source: Source,
+        geometry: Geometry,
+        freq: u32,
+        alloc: FreqAlloc,
+        soap: bool,
+    ) -> Self {
+        let man = &rt.manifest;
+        let maps = class_maps(man);
+        let part = crate::model::StagePartition::new(man, cfg.stages);
+        let classes = maps
+            .into_iter()
+            .map(|map| {
+                let (nb, m, n) = (map.class.count, map.class.m, map.class.n);
+                let eye_m = Tensor::eye(m);
+                let eye_n = Tensor::eye(n);
+                let u = stack(&vec![&eye_m; nb]);
+                let v = stack(&vec![&eye_n; nb]);
+                let (l, r) = if source == Source::Second {
+                    (Some(Tensor::zeros(&[nb, m, m])), Some(Tensor::zeros(&[nb, n, n])))
+                } else {
+                    (None, None)
+                };
+                let freqs = map
+                    .slots
+                    .iter()
+                    .map(|s| {
+                        let delay = part.delay_of[s.param];
+                        match alloc {
+                            FreqAlloc::Uniform => freq,
+                            FreqAlloc::StageAware => {
+                                stage_aware_freq(freq, delay, cfg.stages)
+                            }
+                            FreqAlloc::InverseStageAware => stage_aware_freq(
+                                freq,
+                                part.max_delay() - delay,
+                                cfg.stages,
+                            ),
+                        }
+                    })
+                    .collect();
+                ClassState {
+                    m: Tensor::zeros(&[nb, m, n]),
+                    vt: Tensor::zeros(&[nb, m, n]),
+                    u,
+                    v,
+                    l,
+                    r,
+                    freqs,
+                    map,
+                }
+            })
+            .collect();
+        // fallback params: everything not covered by a rotated class
+        let mut covered = vec![false; man.params.len()];
+        let maps2 = class_maps(man);
+        for cm in &maps2 {
+            for s in &cm.slots {
+                covered[s.param] = true;
+            }
+        }
+        let fallback_idx: Vec<usize> =
+            (0..man.params.len()).filter(|&i| !covered[i]).collect();
+        let shapes: Vec<Vec<usize>> =
+            fallback_idx.iter().map(|&i| man.params[i].shape.clone()).collect();
+        BasisRotation {
+            source,
+            geometry,
+            freq,
+            alloc,
+            soap,
+            classes,
+            fallback: ElementAdam::new(&shapes),
+            fallback_idx,
+            eigen_dispatches: 0,
+        }
+    }
+
+    fn geo_tag(&self) -> &'static str {
+        match self.geometry {
+            Geometry::Unilateral => "uni",
+            Geometry::Bilateral => "bi",
+        }
+    }
+
+    fn scalars_stack(&self, cs: &ClassState, ctx: &StepCtx, masks: &[f32]) -> Tensor {
+        let nb = cs.map.class.count;
+        let mut sc = Tensor::zeros(&[nb, 8]);
+        for (i, s) in cs.map.slots.iter().enumerate() {
+            let row = [
+                ctx.lr_for(s.param),
+                ctx.cfg.beta1,
+                ctx.cfg.beta2,
+                ctx.cfg.eps,
+                ctx.cfg.weight_decay,
+                ctx.t as f32,
+                masks[i],
+                0.0,
+            ];
+            sc.data[i * 8..(i + 1) * 8].copy_from_slice(&row);
+        }
+        sc
+    }
+
+    /// Refresh bases for slots whose mask=1 via the eigen executables.
+    fn eigen_step(
+        &mut self,
+        ci: usize,
+        ctx: &StepCtx,
+        g_stack: &Tensor,
+        masks: &[f32],
+    ) -> Result<()> {
+        if masks.iter().all(|&m| m == 0.0) && self.source == Source::First {
+            return Ok(()); // S=1st has no EMA state to advance
+        }
+        let cs = &self.classes[ci];
+        let cls = cs.map.class.name.clone();
+        let tag = self.geo_tag();
+        let sc = self.scalars_stack(cs, ctx, masks);
+        match self.source {
+            Source::Second => {
+                let name = format!("eigen2nd_{tag}_{cls}");
+                let cs = &mut self.classes[ci];
+                let inputs = vec![
+                    tensor_to_literal(cs.l.as_ref().unwrap())?,
+                    tensor_to_literal(cs.r.as_ref().unwrap())?,
+                    tensor_to_literal(g_stack)?,
+                    tensor_to_literal(&cs.u)?,
+                    tensor_to_literal(&cs.v)?,
+                    tensor_to_literal(&sc)?,
+                ];
+                let outs = ctx.rt.exec_tensors(&name, &inputs)?;
+                cs.l = Some(outs[0].clone());
+                cs.r = Some(outs[1].clone());
+                cs.u = outs[2].clone();
+                cs.v = outs[3].clone();
+            }
+            Source::First => {
+                // Algorithm 1 line 6 passes the *updated* momentum M_t;
+                // compute it here (cheap, element-wise) — the rot_adam
+                // executable recomputes the identical update internally.
+                let cs = &mut self.classes[ci];
+                let b1 = ctx.cfg.beta1;
+                let mut m_upd = cs.m.clone();
+                for (mi, &gi) in m_upd.data.iter_mut().zip(&g_stack.data) {
+                    *mi = b1 * *mi + (1.0 - b1) * gi;
+                }
+                let name = format!("eigen1st_{tag}_{cls}");
+                let inputs = vec![
+                    tensor_to_literal(&m_upd)?,
+                    tensor_to_literal(&cs.u)?,
+                    tensor_to_literal(&cs.v)?,
+                    tensor_to_literal(&sc)?,
+                ];
+                let outs = ctx.rt.exec_tensors(&name, &inputs)?;
+                cs.u = outs[0].clone();
+                cs.v = outs[1].clone();
+            }
+        }
+        self.eigen_dispatches += 1;
+        Ok(())
+    }
+}
+
+impl Optimizer for BasisRotation {
+    fn step(&mut self, ctx: &StepCtx, params: &mut [Tensor], grads: &[Tensor])
+        -> Result<()> {
+        // 1. Non-rotated params: plain element-wise Adam.
+        for (slot, &pi) in self.fallback_idx.clone().iter().enumerate() {
+            self.fallback.update(
+                slot,
+                &mut params[pi],
+                &grads[pi],
+                ctx.lr_for(pi),
+                ctx.cfg.beta1,
+                ctx.cfg.beta2,
+                ctx.cfg.eps,
+                ctx.cfg.weight_decay,
+                ctx.t,
+                false,
+            );
+        }
+
+        // 2. Rotated classes: eigen refresh (Alg. 2) + rotated update
+        //    (Alg. 1) through the batched executables.
+        for ci in 0..self.classes.len() {
+            let (g_stack, masks, cls_name, tag) = {
+                let cs = &self.classes[ci];
+                let mats: Vec<Tensor> = cs
+                    .map
+                    .slots
+                    .iter()
+                    .map(|s| {
+                        let mut g = slot_matrix(grads, s);
+                        g.shape = vec![cs.map.class.m, cs.map.class.n];
+                        g
+                    })
+                    .collect();
+                let refs: Vec<&Tensor> = mats.iter().collect();
+                let g_stack = stack(&refs);
+                let masks: Vec<f32> = cs
+                    .freqs
+                    .iter()
+                    .map(|&f| if ctx.t % f as u64 == 0 { 1.0 } else { 0.0 })
+                    .collect();
+                (g_stack, masks, cs.map.class.name.clone(), self.geo_tag())
+            };
+
+            // Basis rotation refreshes the basis *before* the update
+            // (Alg. 1 line 5); SOAP refreshes after (Appendix G).
+            let refresh_now = masks.iter().any(|&m| m == 1.0)
+                || self.source == Source::Second; // EMAs advance every step
+            if !self.soap && refresh_now {
+                self.eigen_step(ci, ctx, &g_stack, &masks)?;
+            }
+
+            {
+                let cs = &self.classes[ci];
+                let exec = if self.soap {
+                    format!("soap_{tag}_{cls_name}")
+                } else {
+                    format!("rot_adam_{tag}_{cls_name}")
+                };
+                let w_mats: Vec<Tensor> = cs
+                    .map
+                    .slots
+                    .iter()
+                    .map(|s| {
+                        let mut w = slot_matrix(params, s);
+                        w.shape = vec![cs.map.class.m, cs.map.class.n];
+                        w
+                    })
+                    .collect();
+                let refs: Vec<&Tensor> = w_mats.iter().collect();
+                let w_stack = stack(&refs);
+                let sc = self.scalars_stack(cs, ctx, &masks);
+                let inputs = vec![
+                    tensor_to_literal(&w_stack)?,
+                    tensor_to_literal(&g_stack)?,
+                    tensor_to_literal(&cs.m)?,
+                    tensor_to_literal(&cs.vt)?,
+                    tensor_to_literal(&cs.u)?,
+                    tensor_to_literal(&cs.v)?,
+                    tensor_to_literal(&sc)?,
+                ];
+                let outs = ctx.rt.exec_tensors(&exec, &inputs)?;
+                let w_new = unstack(&outs[0]);
+                let cs = &mut self.classes[ci];
+                cs.m = outs[1].clone();
+                cs.vt = outs[2].clone();
+                for (s, w) in cs.map.slots.iter().zip(&w_new) {
+                    let mut w = w.clone();
+                    if params[s.param].rank() == 3 {
+                        // expert slot
+                        set_slot_matrix(params, s, &w);
+                    } else {
+                        w.shape = params[s.param].shape.clone();
+                        params[s.param] = w;
+                    }
+                }
+            }
+
+            if self.soap && refresh_now {
+                self.eigen_step(ci, ctx, &g_stack, &masks)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        if self.soap { "soap" } else { "basis_rotation" }
+    }
+
+    fn state_elems(&self) -> usize {
+        let mut total = self.fallback.state_elems();
+        for cs in &self.classes {
+            total += cs.m.len() + cs.vt.len() + cs.u.len() + cs.v.len();
+            if let Some(l) = &cs.l {
+                total += l.len();
+            }
+            if let Some(r) = &cs.r {
+                total += r.len();
+            }
+        }
+        total
+    }
+}
+
+/// Memory overhead (in f32 elements) of one (m,n) matrix for each
+/// strategy — Table 2 of the paper (Appendix H).
+pub fn rotation_overhead_elems(
+    m: usize,
+    n: usize,
+    source: Source,
+    geometry: Geometry,
+) -> usize {
+    let rot = match geometry {
+        Geometry::Bilateral => m * m + n * n,
+        Geometry::Unilateral => m.min(n) * m.min(n),
+    };
+    let moments = match source {
+        Source::Second => rot,
+        Source::First => 0,
+    };
+    rot + moments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_matches_table2_formulas() {
+        // Llama-3-8B attention (4096x4096) and MLP (4096x14336), FP32 GB.
+        let gb = |e: usize| e as f64 * 4.0 / 1e9;
+        let attn = |s, g| gb(rotation_overhead_elems(4096, 4096, s, g));
+        let mlp = |s, g| gb(rotation_overhead_elems(4096, 14336, s, g));
+        use Geometry::*;
+        use Source::*;
+        assert!((attn(Second, Bilateral) - 0.268).abs() < 0.02);
+        assert!((mlp(Second, Bilateral) - 1.78).abs() < 0.15);
+        assert!((attn(Second, Unilateral) - 0.134).abs() < 0.01);
+        assert!((mlp(First, Unilateral) - 0.067).abs() < 0.01);
+        // orderings from the paper's Table 2
+        assert!(attn(First, Bilateral) < attn(Second, Bilateral));
+        assert!(mlp(Second, Unilateral) < mlp(Second, Bilateral));
+    }
+}

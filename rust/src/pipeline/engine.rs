@@ -1,0 +1,493 @@
+//! The real asynchronous pipeline engine: one OS thread per stage,
+//! mpsc channels carrying activations, deterministic 1F1B schedule with
+//! per-microbatch weight stashing and immediate updates on backward —
+//! PipeDream's execution model, end to end, on per-block HLO
+//! executables.
+//!
+//! Each stage thread opens its own `PjRtClient` (the xla crate's client
+//! is not `Send`), compiles only the executables it needs, and owns its
+//! blocks' parameters and optimizer state. Activations cross threads as
+//! plain `Vec<f32>`.
+//!
+//! Schedule: stage k (0-indexed of P) performs `P-1-k` warmup forwards,
+//! then strictly alternates backward/forward. In steady state the
+//! forward of microbatch m therefore uses stage-k weights of version
+//! `m-(P-1-k)` — exactly the simulator's staleness model, which the
+//! `engine_matches_sim` integration test pins down.
+//!
+//! Differences from the simulator (documented, not bugs): gradient-norm
+//! clipping is per-stage (a real distributed pipeline has no global
+//! norm without an extra collective), so equivalence tests disable
+//! clipping.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Method, TrainCfg};
+use crate::data::{BatchIter, Corpus};
+use crate::metrics::RunResult;
+use crate::model::{init_params, StagePartition};
+use crate::optim::ElementAdam;
+use crate::runtime::{
+    literal_scalar_f32, literal_to_tensor, tensor_to_literal, tokens_to_literal,
+    Runtime,
+};
+use crate::tensor::Tensor;
+
+struct FwdMsg {
+    mb: u64,
+    x: Vec<f32>,
+}
+
+struct BwdMsg {
+    mb: u64,
+    dx: Vec<f32>,
+}
+
+/// Loss + perf sample emitted by the last stage / each stage.
+pub struct StageReport {
+    pub stage: usize,
+    pub losses: Vec<f32>,
+    pub compute_s: f64,
+    pub idle_s: f64,
+    pub updates: u64,
+}
+
+struct Worker {
+    k: usize,
+    stages: usize,
+    rt: Runtime,
+    /// manifest indices of this stage's params.
+    param_idx: Vec<usize>,
+    blocks: Vec<usize>,
+    params: Vec<Tensor>,
+    opt: ElementAdam,
+    cfg: TrainCfg,
+    delays: Vec<u32>,
+    /// (mb, weight snapshot, per-block input activations)
+    stash: std::collections::VecDeque<(u64, Vec<Tensor>, Vec<Tensor>)>,
+    pending_tokens: std::collections::HashMap<u64, Vec<i32>>,
+    pending_targets: std::collections::HashMap<u64, Vec<i32>>,
+    use_stash: bool,
+    updates: u64,
+    compute_s: f64,
+    idle_s: f64,
+    losses: Vec<f32>,
+}
+
+impl Worker {
+    fn first(&self) -> bool {
+        self.k == 0
+    }
+
+    fn last(&self) -> bool {
+        self.k == self.stages - 1
+    }
+
+    fn local_index(&self, name: &str) -> usize {
+        self.param_idx
+            .iter()
+            .position(|&pi| self.rt.manifest.params[pi].name == name)
+            .unwrap_or_else(|| panic!("stage {} missing {name}", self.k))
+    }
+
+    fn block_params(&self, b: usize, snapshot: &[Tensor]) -> Vec<Tensor> {
+        let prefix = format!("b{b}.");
+        self.param_idx
+            .iter()
+            .enumerate()
+            .filter(|(_, &pi)| self.rt.manifest.params[pi].name.starts_with(&prefix))
+            .map(|(local, _)| snapshot[local].clone())
+            .collect()
+    }
+
+    /// Forward one microbatch through this stage; returns the output
+    /// activation (to send or, on the last stage, to feed the head).
+    fn forward(
+        &mut self,
+        mb: u64,
+        data: &mut BatchIter,
+        rx_fwd: Option<&Receiver<FwdMsg>>,
+    ) -> Result<Tensor> {
+        let mcfg = self.rt.cfg().clone();
+        let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
+        let x0: Vec<f32> = if self.first() {
+            let (toks, tgts) = data.next_batch();
+            if self.last() {
+                self.pending_targets.insert(mb, tgts);
+            }
+            let t0 = Instant::now();
+            let te = &self.params[self.local_index("tok_emb")];
+            let pe = &self.params[self.local_index("pos_emb")];
+            let outs = self.rt.exec(
+                "embed_fwd",
+                &[
+                    tensor_to_literal(te)?,
+                    tensor_to_literal(pe)?,
+                    tokens_to_literal(&toks, b, s)?,
+                ],
+            )?;
+            self.compute_s += t0.elapsed().as_secs_f64();
+            self.pending_tokens.insert(mb, toks);
+            outs[0].to_vec::<f32>()?
+        } else {
+            if self.last() {
+                // last stage needs this microbatch's targets; re-derive
+                // the deterministic batch stream locally.
+                let (_toks, tgts) = data.next_batch();
+                self.pending_targets.insert(mb, tgts);
+            }
+            let t0 = Instant::now();
+            let msg =
+                rx_fwd.unwrap().recv().map_err(|_| anyhow!("fwd channel closed"))?;
+            self.idle_s += t0.elapsed().as_secs_f64();
+            assert_eq!(msg.mb, mb, "stage {}: out-of-order microbatch", self.k);
+            msg.x
+        };
+
+        let t0 = Instant::now();
+        let snapshot = self.params.clone();
+        let mut x = Tensor::new(vec![b, s, d], x0);
+        let mut block_inputs = Vec::with_capacity(self.blocks.len());
+        for &blk in &self.blocks.clone() {
+            block_inputs.push(x.clone());
+            let bp = self.block_params(blk, &snapshot);
+            let mut ins: Vec<xla::Literal> =
+                bp.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+            ins.push(tensor_to_literal(&x)?);
+            let outs = self.rt.exec("block_fwd", &ins)?;
+            x = literal_to_tensor(&outs[0], &[b, s, d])?;
+        }
+        self.compute_s += t0.elapsed().as_secs_f64();
+        let stashed = if self.use_stash { snapshot } else { Vec::new() };
+        self.stash.push_back((mb, stashed, block_inputs));
+        Ok(x)
+    }
+
+    /// Backward for microbatch mb. On the last stage, `x_out` is the
+    /// forward output and the head provides loss + dx; otherwise dx
+    /// comes from `rx_bwd`.
+    fn backward(
+        &mut self,
+        mb: u64,
+        x_out: Option<Tensor>,
+        rx_bwd: Option<&Receiver<BwdMsg>>,
+        tx_bwd: Option<&Sender<BwdMsg>>,
+    ) -> Result<()> {
+        let mcfg = self.rt.cfg().clone();
+        let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
+        let pos = self
+            .stash
+            .iter()
+            .position(|(m, _, _)| *m == mb)
+            .ok_or_else(|| anyhow!("stage {}: no stash for mb {mb}", self.k))?;
+        let (_, snapshot, block_inputs) = self.stash.remove(pos).unwrap();
+        let weights = if self.use_stash { snapshot } else { self.params.clone() };
+
+        let mut grads: Vec<Tensor> =
+            self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+
+        // ---- obtain dx at the stage output ----
+        let mut dx = if self.last() {
+            let tgts = self.pending_targets.remove(&mb).expect("targets");
+            let x = x_out.expect("last stage forwards its own x");
+            let t0 = Instant::now();
+            let gf = if self.use_stash {
+                weights[self.local_index("gf")].clone()
+            } else {
+                self.params[self.local_index("gf")].clone()
+            };
+            let head = if self.use_stash {
+                weights[self.local_index("head")].clone()
+            } else {
+                self.params[self.local_index("head")].clone()
+            };
+            let outs = self.rt.exec(
+                "head_fwdbwd",
+                &[
+                    tensor_to_literal(&gf)?,
+                    tensor_to_literal(&head)?,
+                    tensor_to_literal(&x)?,
+                    tokens_to_literal(&tgts, b, s)?,
+                ],
+            )?;
+            self.compute_s += t0.elapsed().as_secs_f64();
+            let loss = literal_scalar_f32(&outs[0])?;
+            self.losses.push(loss);
+            let i_gf = self.local_index("gf");
+            let i_head = self.local_index("head");
+            let gf_shape = self.params[i_gf].shape.clone();
+            let head_shape = self.params[i_head].shape.clone();
+            grads[i_gf] = literal_to_tensor(&outs[2], &gf_shape)?;
+            grads[i_head] = literal_to_tensor(&outs[3], &head_shape)?;
+            literal_to_tensor(&outs[1], &[b, s, d])?
+        } else {
+            let t0 = Instant::now();
+            let msg =
+                rx_bwd.unwrap().recv().map_err(|_| anyhow!("bwd channel closed"))?;
+            self.idle_s += t0.elapsed().as_secs_f64();
+            assert_eq!(msg.mb, mb, "stage {}: out-of-order backward", self.k);
+            Tensor::new(vec![b, s, d], msg.dx)
+        };
+
+        // ---- backward through this stage's blocks ----
+        let t0 = Instant::now();
+        for (bi, &blk) in self.blocks.clone().iter().enumerate().rev() {
+            let bp = self.block_params(blk, &weights);
+            let mut ins: Vec<xla::Literal> =
+                bp.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+            ins.push(tensor_to_literal(&block_inputs[bi])?);
+            ins.push(tensor_to_literal(&dx)?);
+            let outs = self.rt.exec("block_bwd", &ins)?;
+            dx = literal_to_tensor(&outs[0], &[b, s, d])?;
+            let prefix = format!("b{blk}.");
+            let mut gi = 1;
+            for (local, &pi) in self.param_idx.clone().iter().enumerate() {
+                if self.rt.manifest.params[pi].name.starts_with(&prefix) {
+                    let shape = self.params[local].shape.clone();
+                    grads[local] = literal_to_tensor(&outs[gi], &shape)?;
+                    gi += 1;
+                }
+            }
+        }
+        self.compute_s += t0.elapsed().as_secs_f64();
+
+        if let Some(tx) = tx_bwd {
+            tx.send(BwdMsg { mb, dx: dx.data.clone() })
+                .map_err(|_| anyhow!("bwd send"))?;
+        }
+
+        // ---- embedding backward on stage 0 ----
+        if self.first() {
+            let toks = self.pending_tokens.remove(&mb).expect("tokens");
+            let t0e = Instant::now();
+            let outs = self.rt.exec(
+                "embed_bwd",
+                &[tokens_to_literal(&toks, b, s)?, tensor_to_literal(&dx)?],
+            )?;
+            self.compute_s += t0e.elapsed().as_secs_f64();
+            let i_te = self.local_index("tok_emb");
+            let i_pe = self.local_index("pos_emb");
+            let te_shape = self.params[i_te].shape.clone();
+            let pe_shape = self.params[i_pe].shape.clone();
+            grads[i_te] = literal_to_tensor(&outs[0], &te_shape)?;
+            grads[i_pe] = literal_to_tensor(&outs[1], &pe_shape)?;
+        }
+
+        // ---- per-stage clip + immediate update (async semantics) ----
+        crate::optim::clip_global_norm(&mut grads, self.cfg.grad_clip);
+        self.updates += 1;
+        let t = self.updates;
+        let lr = self.cfg.lr_at(t as u32);
+        let b1 = self.cfg.effective_beta1();
+        let nesterov = matches!(self.cfg.method, Method::Nesterov);
+        for local in 0..self.params.len() {
+            let pi = self.param_idx[local];
+            let scale = match self.cfg.method {
+                Method::PipeDreamLr => {
+                    crate::config::pipedream_lr_scale(self.delays[pi])
+                }
+                _ => 1.0,
+            };
+            self.opt.update(
+                local,
+                &mut self.params[local],
+                &grads[local],
+                lr * scale,
+                b1,
+                self.cfg.beta2,
+                self.cfg.eps,
+                self.cfg.weight_decay,
+                t,
+                nesterov,
+            );
+        }
+        Ok(())
+    }
+
+    fn report(self) -> StageReport {
+        StageReport {
+            stage: self.k,
+            losses: self.losses,
+            compute_s: self.compute_s,
+            idle_s: self.idle_s,
+            updates: self.updates,
+        }
+    }
+}
+
+fn run_stage(
+    mut w: Worker,
+    mut data: BatchIter,
+    rx_fwd: Option<Receiver<FwdMsg>>,
+    tx_fwd: Option<Sender<FwdMsg>>,
+    rx_bwd: Option<Receiver<BwdMsg>>,
+    tx_bwd: Option<Sender<BwdMsg>>,
+    n_micro: u64,
+) -> Result<StageReport> {
+    let warmup = (w.stages - 1 - w.k) as u64;
+    if w.last() {
+        // fused fwd+bwd per microbatch (no warmup, delay 0)
+        for mb in 0..n_micro {
+            let x = w.forward(mb, &mut data, rx_fwd.as_ref())?;
+            w.backward(mb, Some(x), None, tx_bwd.as_ref())?;
+        }
+        return Ok(w.report());
+    }
+    let mut next_fwd = 0u64;
+    while next_fwd < warmup.min(n_micro) {
+        let x = w.forward(next_fwd, &mut data, rx_fwd.as_ref())?;
+        tx_fwd
+            .as_ref()
+            .unwrap()
+            .send(FwdMsg { mb: next_fwd, x: x.data })
+            .map_err(|_| anyhow!("fwd send"))?;
+        next_fwd += 1;
+    }
+    for mb_b in 0..n_micro {
+        if next_fwd < n_micro {
+            let x = w.forward(next_fwd, &mut data, rx_fwd.as_ref())?;
+            tx_fwd
+                .as_ref()
+                .unwrap()
+                .send(FwdMsg { mb: next_fwd, x: x.data })
+                .map_err(|_| anyhow!("fwd send"))?;
+            next_fwd += 1;
+        }
+        w.backward(mb_b, None, rx_bwd.as_ref(), tx_bwd.as_ref())?;
+    }
+    Ok(w.report())
+}
+
+/// Train with the real threaded pipeline. `cfg.steps` = microbatches.
+pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult> {
+    let man0 = crate::runtime::Manifest::load(&artifacts_dir)?;
+    if man0.cfg.moe.is_some() {
+        anyhow::bail!("engine supports dense configs only");
+    }
+    let part = StagePartition::new(&man0, cfg.stages);
+    let init = init_params(&man0, cfg.seed);
+    let p = cfg.stages;
+    let n_micro = cfg.steps as u64;
+    let mcfg = man0.cfg.clone();
+
+    // channels between consecutive stages
+    let mut fwd_txs = Vec::new();
+    let mut fwd_rxs = vec![None];
+    let mut bwd_txs = vec![None];
+    let mut bwd_rxs = Vec::new();
+    for _ in 0..p.saturating_sub(1) {
+        let (ftx, frx) = channel::<FwdMsg>();
+        fwd_txs.push(Some(ftx));
+        fwd_rxs.push(Some(frx));
+        let (btx, brx) = channel::<BwdMsg>();
+        bwd_txs.push(Some(btx));
+        bwd_rxs.push(Some(brx));
+    }
+    fwd_txs.push(None);
+    bwd_rxs.push(None);
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for k in (0..p).rev() {
+        let dir = artifacts_dir.clone();
+        let cfg_k = cfg.clone();
+        let part_k = part.clone();
+        let init_k: Vec<Tensor> = (0..man0.params.len())
+            .filter(|&i| part.stage_of[i] == k)
+            .map(|i| init[i].clone())
+            .collect();
+        let rx_fwd = fwd_rxs[k].take();
+        let tx_fwd = fwd_txs[k].take();
+        let rx_bwd = bwd_rxs[k].take();
+        let tx_bwd = bwd_txs[k].take();
+        let use_stash = cfg.stash != crate::config::StashMode::NoStash;
+        let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
+        let data = BatchIter::new(corpus, mcfg.batch, mcfg.seq, 1);
+        handles.push((
+            k,
+            std::thread::spawn(move || -> Result<StageReport> {
+                let rt = Runtime::open(&dir)?;
+                let param_idx: Vec<usize> = (0..rt.manifest.params.len())
+                    .filter(|&i| part_k.stage_of[i] == k)
+                    .collect();
+                let shapes: Vec<Vec<usize>> =
+                    init_k.iter().map(|t| t.shape.clone()).collect();
+                let worker = Worker {
+                    k,
+                    stages: part_k.stages,
+                    blocks: part_k.blocks_of_stage[k].clone(),
+                    param_idx,
+                    params: init_k,
+                    opt: ElementAdam::new(&shapes),
+                    cfg: cfg_k,
+                    delays: part_k.delay_of.clone(),
+                    stash: Default::default(),
+                    pending_tokens: Default::default(),
+                    pending_targets: Default::default(),
+                    use_stash,
+                    updates: 0,
+                    compute_s: 0.0,
+                    idle_s: 0.0,
+                    losses: Vec::new(),
+                    rt,
+                };
+                run_stage(worker, data, rx_fwd, tx_fwd, rx_bwd, tx_bwd, n_micro)
+            }),
+        ));
+    }
+
+    let mut result = RunResult::new(&cfg.method.name(), p);
+    result.param_count = man0.total_params();
+    let mut total_compute = 0.0;
+    let mut total_idle = 0.0;
+    for (k, h) in handles {
+        let rep = h.join().map_err(|_| anyhow!("stage {k} panicked"))??;
+        total_compute += rep.compute_s;
+        total_idle += rep.idle_s;
+        if rep.stage == p - 1 {
+            result.losses = rep.losses;
+        }
+    }
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    result.bubble_frac = if total_compute + total_idle > 0.0 {
+        total_idle / (total_compute + total_idle)
+    } else {
+        0.0
+    };
+    result.tokens_per_sec =
+        (n_micro as f64 * mcfg.batch as f64 * mcfg.seq as f64) / result.wall_secs;
+    Ok(result)
+}
+
+/// Analytic schedule model (Fig. 1): bubble fraction of synchronous
+/// GPipe vs asynchronous PipeDream for P stages and M in-flight
+/// microbatches per step, with unit per-stage fwd+bwd cost.
+pub fn sync_bubble_fraction(p: usize, m: usize) -> f64 {
+    (p as f64 - 1.0) / (m as f64 + p as f64 - 1.0)
+}
+
+pub fn async_bubble_fraction_steady() -> f64 {
+    0.0 // PipeDream's steady state keeps every stage busy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_bubbles_shrink_with_microbatches() {
+        assert!(sync_bubble_fraction(4, 1) > sync_bubble_fraction(4, 16));
+        assert!((sync_bubble_fraction(4, 4) - 3.0 / 7.0).abs() < 1e-12);
+        assert!(sync_bubble_fraction(1, 8) == 0.0);
+        assert_eq!(async_bubble_fraction_steady(), 0.0);
+    }
+
+    #[test]
+    fn sync_bubbles_grow_with_depth() {
+        assert!(sync_bubble_fraction(32, 8) > sync_bubble_fraction(4, 8));
+    }
+}

@@ -1,0 +1,281 @@
+//! Asynchronous pipeline-parallel execution.
+//!
+//! * `sim` (this file) — the delay-accurate single-process simulator:
+//!   one whole-model `fwdbwd` dispatch per step on mixed-version weights
+//!   held in per-parameter stash rings. Reproduces PipeDream's staleness
+//!   semantics exactly (DESIGN.md §3) at minimal dispatch overhead; used
+//!   by all loss-curve experiments.
+//! * `engine` — the real threaded 1F1B pipeline (one OS thread per
+//!   stage, per-block executables, weight stashing per microbatch).
+//!   An integration test pins its loss trajectory to the simulator's.
+
+pub mod engine;
+
+use anyhow::Result;
+
+use crate::config::{Method, StashMode, TrainCfg};
+use crate::data::{BatchIter, Corpus};
+use crate::metrics::RunResult;
+use crate::model::{init_params, StagePartition};
+use crate::optim::{self, clip_global_norm, StepCtx};
+use crate::runtime::{
+    literal_scalar_f32, literal_to_tensor, tensor_to_literal, tokens_to_literal,
+    Runtime,
+};
+use crate::tensor::Tensor;
+
+/// Per-parameter ring of stashed weight versions. `front()` is the
+/// version a stage with delay τ uses at the current step; during
+/// pipeline fill the oldest version is clamped to v0 (exactly like the
+/// real schedule's warmup forwards).
+pub struct StashRing {
+    rings: Vec<std::collections::VecDeque<Tensor>>,
+    delays: Vec<u32>,
+}
+
+impl StashRing {
+    pub fn new(params: &[Tensor], delays: &[u32]) -> Self {
+        let rings = params
+            .iter()
+            .zip(delays)
+            .map(|(p, &d)| {
+                let mut q = std::collections::VecDeque::with_capacity(d as usize + 1);
+                q.push_back(p.clone());
+                q
+            })
+            .collect();
+        StashRing { rings, delays: delays.to_vec() }
+    }
+
+    /// The stale view for parameter `i` (version t-1-τ_i, clamped).
+    pub fn stale(&self, i: usize) -> &Tensor {
+        self.rings[i].front().unwrap()
+    }
+
+    /// Record the post-update version of every parameter.
+    pub fn push(&mut self, params: &[Tensor]) {
+        for ((ring, p), &d) in self.rings.iter_mut().zip(params).zip(&self.delays) {
+            ring.push_back(p.clone());
+            while ring.len() > d as usize + 1 {
+                ring.pop_front();
+            }
+        }
+    }
+
+    /// Total stashed elements (memory accounting).
+    pub fn stashed_elems(&self) -> usize {
+        self.rings.iter().map(|r| r.iter().map(|t| t.len()).sum::<usize>()).sum()
+    }
+}
+
+/// PipeMare-style weight predictor: ŵ = w + τ·velocity, with velocity an
+/// EMA of recent update deltas (Fig. 15).
+pub struct Predictor {
+    vel: Vec<Tensor>,
+    beta: f32,
+}
+
+impl Predictor {
+    pub fn new(params: &[Tensor]) -> Self {
+        Predictor {
+            vel: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            beta: 0.9,
+        }
+    }
+
+    pub fn observe(&mut self, before: &[Tensor], after: &[Tensor]) {
+        for ((v, b), a) in self.vel.iter_mut().zip(before).zip(after) {
+            for ((vi, &bi), &ai) in v.data.iter_mut().zip(&b.data).zip(&a.data) {
+                *vi = self.beta * *vi + (1.0 - self.beta) * (ai - bi);
+            }
+        }
+    }
+
+    pub fn predict(&self, i: usize, w: &Tensor, tau: u32) -> Tensor {
+        let mut out = w.clone();
+        out.axpy(tau as f32, &self.vel[i]);
+        out
+    }
+}
+
+/// Train with the delay-accurate simulator. Returns the loss trajectory
+/// and counters.
+pub fn train_sim(rt: &Runtime, cfg: &TrainCfg) -> Result<RunResult> {
+    train_sim_observed(rt, cfg, &mut |_t, _p| {}).map(|(r, _)| r)
+}
+
+/// `train_sim` with an observer called after every update with
+/// (step, current params), returning the final params — used by the
+/// Fig. 11 alignment analysis and by checkpoint-style consumers.
+pub fn train_sim_observed(
+    rt: &Runtime,
+    cfg: &TrainCfg,
+    observe: &mut dyn FnMut(u64, &[Tensor]),
+) -> Result<(RunResult, Vec<Tensor>)> {
+    let man = &rt.manifest;
+    let mcfg = rt.cfg().clone();
+    let part = StagePartition::new(man, cfg.stages);
+    let mut params = init_params(man, cfg.seed);
+    let mut stash = StashRing::new(&params, &part.delay_of);
+    let mut predictor = match cfg.stash {
+        StashMode::Predict => Some(Predictor::new(&params)),
+        _ => None,
+    };
+    let mut opt = optim::build(&cfg.method, rt, cfg);
+    let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
+    let mut train_iter = BatchIter::new(corpus.clone(), mcfg.batch, mcfg.seq, 1);
+    let mut val_iter = BatchIter::new(corpus, mcfg.batch, mcfg.seq, 999);
+
+    let mut result = RunResult::new(&cfg.method.name(), cfg.stages);
+    result.param_count = man.total_params();
+    result.optimizer_state_elems = opt.state_elems();
+    let t0 = std::time::Instant::now();
+
+    for t in 1..=cfg.steps as u64 {
+        let (toks, tgts) = train_iter.next_batch();
+        let tok_lit = tokens_to_literal(&toks, mcfg.batch, mcfg.seq)?;
+        let tgt_lit = tokens_to_literal(&tgts, mcfg.batch, mcfg.seq)?;
+
+        // Assemble forward weights per staleness mode.
+        let (exec_name, mut inputs): (&str, Vec<xla::Literal>) = match cfg.stash {
+            StashMode::Stash => {
+                let ins: Result<Vec<_>> = (0..params.len())
+                    .map(|i| tensor_to_literal(stash.stale(i)))
+                    .collect();
+                ("fwdbwd", ins?)
+            }
+            StashMode::NoStash => {
+                // forward at stale weights, backward ops at current ones
+                let mut ins = Vec::with_capacity(2 * params.len() + 2);
+                for i in 0..params.len() {
+                    ins.push(tensor_to_literal(stash.stale(i))?);
+                }
+                for p in &params {
+                    ins.push(tensor_to_literal(p)?);
+                }
+                ("fwdbwd_split", ins)
+            }
+            StashMode::Predict => {
+                let pred = predictor.as_ref().unwrap();
+                let ins: Result<Vec<_>> = params
+                    .iter()
+                    .enumerate()
+                    .map(|(i, w)| {
+                        tensor_to_literal(&pred.predict(i, w, part.delay_of[i]))
+                    })
+                    .collect();
+                ("fwdbwd", ins?)
+            }
+        };
+        inputs.push(tok_lit);
+        inputs.push(tgt_lit);
+
+        let outs = rt.exec(exec_name, &inputs)?;
+        let loss = literal_scalar_f32(&outs[0])?;
+        let mut grads: Vec<Tensor> = outs[1..]
+            .iter()
+            .zip(man.params.iter())
+            .map(|(lit, p)| literal_to_tensor(lit, &p.shape))
+            .collect::<Result<_>>()?;
+        if !loss.is_finite() {
+            result.diverged = true;
+            break;
+        }
+        clip_global_norm(&mut grads, cfg.grad_clip);
+
+        // Apply the (delayed) gradient to the *current* weights.
+        let before = match cfg.stash {
+            StashMode::Predict => Some(params.clone()),
+            _ => None,
+        };
+        let stale_view: Vec<Tensor> = match cfg.method {
+            Method::DelayComp { .. } => {
+                (0..params.len()).map(|i| stash.stale(i).clone()).collect()
+            }
+            _ => Vec::new(),
+        };
+        let ctx = StepCtx {
+            t,
+            lr: cfg.lr_at(t as u32),
+            cfg,
+            part: &part,
+            stale: if stale_view.is_empty() { None } else { Some(&stale_view) },
+            rt,
+        };
+        opt.step(&ctx, &mut params, &grads)?;
+        if let (Some(pred), Some(before)) = (predictor.as_mut(), before.as_ref()) {
+            pred.observe(before, &params);
+        }
+        stash.push(&params);
+        observe(t, &params);
+
+        result.losses.push(loss);
+        if cfg.eval_every > 0 && (t as u32) % cfg.eval_every == 0 {
+            let (vt, vg) = val_iter.next_batch();
+            let mut ins: Vec<xla::Literal> =
+                params.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+            ins.push(tokens_to_literal(&vt, mcfg.batch, mcfg.seq)?);
+            ins.push(tokens_to_literal(&vg, mcfg.batch, mcfg.seq)?);
+            let vouts = rt.exec("eval_loss", &ins)?;
+            result.val_losses.push((t as u32, literal_scalar_f32(&vouts[0])?));
+        }
+    }
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    result.dispatches = rt.total_dispatches();
+    Ok((result, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stash_ring_serves_delayed_versions() {
+        let p0 = vec![Tensor::full(&[2], 0.0), Tensor::full(&[2], 0.0)];
+        // param 0: delay 2, param 1: delay 0
+        let mut ring = StashRing::new(&p0, &[2, 0]);
+        for v in 1..=5 {
+            let pv = vec![Tensor::full(&[2], v as f32), Tensor::full(&[2], v as f32)];
+            ring.push(&pv);
+            // param 1 always sees the freshest version
+            assert_eq!(ring.stale(1).data[0], v as f32);
+        }
+        // param 0 sees version 5-2 = 3
+        assert_eq!(ring.stale(0).data[0], 3.0);
+    }
+
+    #[test]
+    fn stash_ring_clamps_during_fill() {
+        let p0 = vec![Tensor::full(&[1], 0.0)];
+        let mut ring = StashRing::new(&p0, &[3]);
+        ring.push(&[Tensor::full(&[1], 1.0)]);
+        // only versions {0,1} exist; oldest (0) is served
+        assert_eq!(ring.stale(0).data[0], 0.0);
+    }
+
+    #[test]
+    fn stash_memory_bounded() {
+        let p0 = vec![Tensor::zeros(&[10])];
+        let mut ring = StashRing::new(&p0, &[2]);
+        for v in 0..100 {
+            ring.push(&[Tensor::full(&[10], v as f32)]);
+        }
+        assert_eq!(ring.stashed_elems(), 3 * 10);
+    }
+
+    #[test]
+    fn predictor_extrapolates_linear_motion() {
+        let w0 = vec![Tensor::full(&[1], 0.0)];
+        let mut pred = Predictor::new(&w0);
+        let mut prev = w0.clone();
+        // constant velocity +1 per step
+        for v in 1..=50 {
+            let cur = vec![Tensor::full(&[1], v as f32)];
+            pred.observe(&prev, &cur);
+            prev = cur;
+        }
+        let hat = pred.predict(0, &prev[0], 3);
+        // EMA velocity ≈ 1 ⇒ prediction ≈ 50 + 3
+        assert!((hat.data[0] - 53.0).abs() < 0.5, "{}", hat.data[0]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Deterministic RNG stack (no external crates): SplitMix64 seeding,
+//! Xoshiro256** core, and the samplers the system needs — normal
+//! (Box–Muller) for init, Cauchy for the Hessian (1,1)-norm trace
+//! estimator (paper Fig. 11 / Xie et al. 2025), and Zipf for the
+//! synthetic corpus.
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    spare_normal: Option<f32>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm),
+                 splitmix64(&mut sm)];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (stable across runs) for `label`.
+    pub fn fold(&self, label: u64) -> Rng {
+        let mut sm = self.s[0] ^ label.wrapping_mul(0xA24BAED4963EE407);
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm),
+                 splitmix64(&mut sm)];
+        Rng { s, spare_normal: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (pairs cached).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Standard Cauchy (heavy-tailed) — for (1,1)-norm trace estimation.
+    pub fn cauchy(&mut self) -> f32 {
+        let u = self.uniform();
+        (std::f32::consts::PI * (u - 0.5)).tan()
+    }
+
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal() * std;
+        }
+    }
+}
+
+/// Zipf(α) sampler over {0..n-1} via precomputed CDF.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f32>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f32) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha as f64);
+            cdf.push(acc as f32);
+        }
+        let total = *cdf.last().unwrap();
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fold_streams_independent() {
+        let base = Rng::new(7);
+        let mut s1 = base.fold(1);
+        let mut s2 = base.fold(2);
+        assert_ne!(s1.next_u64(), s2.next_u64());
+        // fold is pure
+        let mut s1b = base.fold(1);
+        let mut s1c = base.fold(1);
+        assert_eq!(s1b.next_u64(), s1c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mean: f32 = (0..n).map(|_| r.uniform()).sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn cauchy_median_zero_heavy_tails() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.cauchy()).collect();
+        let below = xs.iter().filter(|&&x| x < 0.0).count() as f32 / n as f32;
+        assert!((below - 0.5).abs() < 0.02);
+        // heavy tails: |x| > 10 should appear with prob ≈ 2/(π·10) ≈ 0.063
+        let tail = xs.iter().filter(|&&x| x.abs() > 10.0).count() as f32 / n as f32;
+        assert!(tail > 0.03 && tail < 0.10, "tail {tail}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let z = Zipf::new(64, 1.1);
+        let mut r = Rng::new(11);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[5]);
+        assert!(counts[1] > counts[20]);
+        assert!(counts[0] > counts[63] * 10);
+    }
+}

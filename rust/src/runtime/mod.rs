@@ -1,0 +1,372 @@
+//! PJRT runtime: load `artifacts/<config>/*.hlo.txt`, compile on the CPU
+//! client, execute from the training hot path.
+//!
+//! * Interchange is HLO **text** (jax ≥0.5 emits 64-bit-id protos that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! * All graphs were lowered with `return_tuple=True`, so every
+//!   execution returns a 1-tuple literal that we decompose.
+//! * Executables are compiled lazily and cached by name.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::Json;
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Manifest (emitted by python/compile/aot.py)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MoeCfg {
+    pub n_experts: usize,
+    pub top_k: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub d_ff: usize,
+    pub batch: usize,
+    pub moe: Option<MoeCfg>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String, // embed | gain | matrix | expert
+    pub block: i64,   // -1 for global params
+    pub rotated: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ShapeClass {
+    pub name: String,
+    pub count: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "s32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub cfg: ModelCfg,
+    pub params: Vec<ParamSpec>,
+    pub shape_classes: Vec<ShapeClass>,
+    pub executables: HashMap<String, ExecSpec>,
+}
+
+fn io_spec(j: &Json) -> IoSpec {
+    IoSpec {
+        shape: j.at("shape").as_arr().iter().map(|x| x.as_usize()).collect(),
+        dtype: j.at("dtype").as_str().to_string(),
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let c = j.at("config");
+        let moe = if c.at("moe").is_null() {
+            None
+        } else {
+            Some(MoeCfg {
+                n_experts: c.at("moe").at("n_experts").as_usize(),
+                top_k: c.at("moe").at("top_k").as_usize(),
+            })
+        };
+        let cfg = ModelCfg {
+            name: c.at("name").as_str().to_string(),
+            vocab: c.at("vocab").as_usize(),
+            seq: c.at("seq").as_usize(),
+            d_model: c.at("d_model").as_usize(),
+            n_heads: c.at("n_heads").as_usize(),
+            n_blocks: c.at("n_blocks").as_usize(),
+            d_ff: c.at("d_ff").as_usize(),
+            batch: c.at("batch").as_usize(),
+            moe,
+        };
+        let params = j
+            .at("params")
+            .as_arr()
+            .iter()
+            .map(|p| ParamSpec {
+                name: p.at("name").as_str().to_string(),
+                shape: p.at("shape").as_arr().iter().map(|x| x.as_usize()).collect(),
+                kind: p.at("kind").as_str().to_string(),
+                block: p.at("block").as_i64(),
+                rotated: p.at("rotated").as_bool(),
+            })
+            .collect();
+        let shape_classes = j
+            .at("shape_classes")
+            .as_arr()
+            .iter()
+            .map(|s| ShapeClass {
+                name: s.at("name").as_str().to_string(),
+                count: s.at("count").as_usize(),
+                m: s.at("m").as_usize(),
+                n: s.at("n").as_usize(),
+            })
+            .collect();
+        let mut executables = HashMap::new();
+        if let Json::Obj(m) = j.at("executables") {
+            for (name, e) in m {
+                executables.insert(
+                    name.clone(),
+                    ExecSpec {
+                        file: e.at("file").as_str().to_string(),
+                        inputs: e.at("inputs").as_arr().iter().map(io_spec).collect(),
+                        outputs: e.at("outputs").as_arr().iter().map(io_spec).collect(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { cfg, params, shape_classes, executables })
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers
+// ---------------------------------------------------------------------------
+
+/// Tensor → literal with a single memcpy: `create_from_shape_and_
+/// untyped_data` builds the shaped literal directly (the obvious
+/// vec1+reshape route costs two copies + a reshape literal — §Perf L3:
+/// 147 µs → ~30 µs for a 256×256 tensor).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &t.shape,
+        bytes,
+    )?)
+}
+
+pub fn tokens_to_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    let bytes = unsafe {
+        std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[batch, seq],
+        bytes,
+    )?)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(shape.to_vec(), data))
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Per-executable dispatch counters (perf accounting).
+    pub exec_count: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory for one model config.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open `<root>/<config>` (e.g. `artifacts/tiny32`).
+    pub fn open_config(root: impl AsRef<Path>, config: &str) -> Result<Runtime> {
+        Runtime::open(root.as_ref().join(config))
+    }
+
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.manifest.cfg
+    }
+
+    /// Lazily compile (and cache) an executable by manifest name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name:?} in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn has_executable(&self, name: &str) -> bool {
+        self.manifest.executables.contains_key(name)
+    }
+
+    /// Execute by name; returns the decomposed output tuple as literals.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name:?}"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: got {} inputs, manifest says {}", inputs.len(), spec.inputs.len());
+        }
+        let exe = self.executable(name)?;
+        *self.exec_count.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        // execute_b with explicitly-managed device buffers: the crate's
+        // literal-taking `execute` leaks its temporary input buffers in
+        // the C glue (~input size per dispatch — OOM over long runs;
+        // EXPERIMENTS.md §Perf). Our PjRtBuffers are dropped right after.
+        let in_bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()?;
+        let bufs = exe.execute_b::<xla::PjRtBuffer>(&in_bufs)?;
+        drop(in_bufs);
+        let mut result = bufs[0][0].to_literal_sync()?;
+        drop(bufs);
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// Execute a graph whose outputs are all f32 tensors.
+    pub fn exec_tensors(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let out_specs: Vec<IoSpec> = self
+            .manifest
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name:?}"))?
+            .outputs
+            .clone();
+        let outs = self.exec(name, inputs)?;
+        outs.iter()
+            .zip(&out_specs)
+            .map(|(lit, os)| literal_to_tensor(lit, &os.shape))
+            .collect()
+    }
+
+    pub fn total_dispatches(&self) -> u64 {
+        self.exec_count.borrow().values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_micro() {
+        let m = Manifest::load(&artifacts_root().join("micro")).unwrap();
+        assert_eq!(m.cfg.name, "micro");
+        assert_eq!(m.cfg.n_blocks, 2);
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(m.params[0].shape, vec![64, 16]);
+        assert!(m.executables.contains_key("fwdbwd"));
+        assert_eq!(m.shape_classes.len(), 4);
+        // schema: 2 embeds + 2 blocks * 6 + gf + head
+        assert_eq!(m.params.len(), 2 + 2 * 6 + 2);
+    }
+
+    #[test]
+    fn fwdbwd_runs_and_loss_is_ln_vocab() {
+        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        let cfg = rt.cfg().clone();
+        let params = crate::model::init_params(&rt.manifest, 0);
+        let mut inputs: Vec<xla::Literal> =
+            params.iter().map(|t| tensor_to_literal(t).unwrap()).collect();
+        let toks: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+        inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+        inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+        let outs = rt.exec("fwdbwd", &inputs).unwrap();
+        assert_eq!(outs.len(), 1 + params.len());
+        let loss = literal_scalar_f32(&outs[0]).unwrap();
+        let expect = (cfg.vocab as f32).ln();
+        assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln V {expect}");
+        for (lit, p) in outs[1..].iter().zip(&params) {
+            let g = literal_to_tensor(lit, &p.shape).unwrap();
+            assert!(g.all_finite());
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        let a = rt.executable("eval_loss").unwrap();
+        let b = rt.executable("eval_loss").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+        assert_eq!(rt.total_dispatches(), 0); // compiling is not dispatching
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        assert!(rt.exec("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn input_arity_checked() {
+        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        assert!(rt.exec("fwdbwd", &[]).is_err());
+    }
+}

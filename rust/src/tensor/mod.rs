@@ -1,0 +1,286 @@
+//! Dense f32 tensor — the coordinator's host-side value type.
+//!
+//! Deliberately dependency-free: the hot path only needs elementwise
+//! ops, small matmuls (reference implementations cross-checking the
+//! HLO/Pallas path) and (de)serialization into PJRT literals.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} el]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// Identity matrix (n, n).
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "not a matrix: {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    // ---- elementwise ----
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a - b)
+    }
+
+    pub fn mul(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn axpy(&mut self, alpha: f32, x: &Tensor) {
+        assert_eq!(self.shape, x.shape);
+        for (a, b) in self.data.iter_mut().zip(&x.data) {
+            *a += alpha * b;
+        }
+    }
+
+    // ---- reductions ----
+
+    pub fn dot(&self, o: &Tensor) -> f32 {
+        assert_eq!(self.shape, o.shape);
+        self.data.iter().zip(&o.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    // ---- linear algebra (reference-grade, blocked for cache locality) ----
+
+    /// C = A @ B for 2-D tensors.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        // i-k-j loop order: streams B rows, accumulates into C rows.
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += a * bv;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Slice out sub-tensor `idx` along axis 0 (e.g. one expert of (E,D,F)).
+    pub fn index_axis0(&self, idx: usize) -> Tensor {
+        assert!(self.rank() >= 2 && idx < self.shape[0]);
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor::new(self.shape[1..].to_vec(), self.data[idx * sub..(idx + 1) * sub].to_vec())
+    }
+
+    /// Overwrite sub-tensor `idx` along axis 0.
+    pub fn set_axis0(&mut self, idx: usize, t: &Tensor) {
+        let sub: usize = self.shape[1..].iter().product();
+        assert_eq!(t.data.len(), sub);
+        self.data[idx * sub..(idx + 1) * sub].copy_from_slice(&t.data);
+    }
+}
+
+/// Stack equally-shaped tensors along a new leading axis.
+pub fn stack(ts: &[&Tensor]) -> Tensor {
+    assert!(!ts.is_empty());
+    let shape = &ts[0].shape;
+    let mut data = Vec::with_capacity(ts.len() * ts[0].len());
+    for t in ts {
+        assert_eq!(&t.shape, shape);
+        data.extend_from_slice(&t.data);
+    }
+    let mut s = vec![ts.len()];
+    s.extend_from_slice(shape);
+    Tensor::new(s, data)
+}
+
+/// Split a stacked tensor back along axis 0.
+pub fn unstack(t: &Tensor) -> Vec<Tensor> {
+    (0..t.shape[0]).map(|i| t.index_axis0(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![3, 3], (0..9).map(|x| x as f32).collect());
+        let i = Tensor::eye(3);
+        assert_eq!(a.matmul(&i).data, a.data);
+        assert_eq!(i.matmul(&a).data, a.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().shape, vec![3, 2]);
+        assert_eq!(a.transpose().data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn elementwise_and_reductions() {
+        let a = Tensor::new(vec![4], vec![1., -2., 3., -4.]);
+        let b = Tensor::ones(&[4]);
+        assert_eq!(a.add(&b).data, vec![2., -1., 4., -3.]);
+        assert_eq!(a.sub(&b).data, vec![0., -3., 2., -5.]);
+        assert_eq!(a.mul(&a).data, vec![1., 4., 9., 16.]);
+        assert_eq!(a.abs_sum(), 10.0);
+        assert_eq!(a.max_abs(), 4.0);
+        assert!((a.norm() - 30.0f32.sqrt()).abs() < 1e-6);
+        assert_eq!(a.dot(&b), -2.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = Tensor::zeros(&[3]);
+        let x = Tensor::new(vec![3], vec![1., 2., 3.]);
+        a.axpy(2.0, &x);
+        a.axpy(-1.0, &x);
+        assert_eq!(a.data, vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        let s = stack(&[&a, &b]);
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        let us = unstack(&s);
+        assert_eq!(us[0], a);
+        assert_eq!(us[1], b);
+    }
+
+    #[test]
+    fn index_set_axis0() {
+        let mut s = Tensor::zeros(&[3, 2, 2]);
+        let t = Tensor::ones(&[2, 2]);
+        s.set_axis0(1, &t);
+        assert_eq!(s.index_axis0(1), t);
+        assert_eq!(s.index_axis0(0), Tensor::zeros(&[2, 2]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        let _ = a.add(&b);
+    }
+}
