@@ -1,33 +1,46 @@
 //! Memory-stability check: dispatching thousands of executions must not
-//! grow RSS (regression guard for the executable-input leak worked
-//! around in `runtime::exec` via `execute_b` — EXPERIMENTS.md §Perf).
+//! grow RSS. Originally a regression guard for a PJRT input-buffer leak
+//! (worked around in `runtime::pjrt` via `execute_b`); under the
+//! default native backend it guards the value-conversion and dispatch
+//! paths the same way.
+//!
+//!     cargo run --release --example memcheck
 
-use abrot::runtime::*;
+use abrot::runtime::{tensor_to_value, tokens_to_value, Runtime, Value};
 use abrot::tensor::Tensor;
+
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/status").unwrap();
     let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
     line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
 }
+
 fn main() {
     let t = Tensor::ones(&[512, 512]); // 1MB
     println!("start rss {:.0} MB", rss_mb());
     for i in 0..2000 {
-        let l = tensor_to_literal(&t).unwrap();
-        drop(l);
-        if i % 500 == 499 { println!("after {} literals rss {:.0} MB", i+1, rss_mb()); }
+        let v = tensor_to_value(&t).unwrap();
+        drop(v);
+        if i % 500 == 499 {
+            println!("after {} value conversions rss {:.0} MB", i + 1, rss_mb());
+        }
     }
     let rt = Runtime::open("artifacts/micro").unwrap();
+    println!("backend: {}", rt.backend_kind());
     let cfg = rt.cfg().clone();
     let params = abrot::model::init_params(&rt.manifest, 0);
-    let toks: Vec<i32> = (0..cfg.batch*cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
-    let mut inputs: Vec<xla::Literal> = params.iter().map(|p| tensor_to_literal(p).unwrap()).collect();
-    inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
-    inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+    let toks: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+    let mut inputs: Vec<Value> =
+        params.iter().map(|p| tensor_to_value(p).unwrap()).collect();
+    inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+    inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
     println!("before exec loop rss {:.0} MB", rss_mb());
     for i in 0..1500 {
         let outs = rt.exec("fwdbwd", &inputs).unwrap();
         drop(outs);
-        if i % 500 == 499 { println!("after {} execs rss {:.0} MB", i+1, rss_mb()); }
+        if i % 500 == 499 {
+            println!("after {} execs rss {:.0} MB", i + 1, rss_mb());
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! parallelism (P=4), first with vanilla async Adam (PipeDream), then
 //! with the paper's basis rotation — and watch staleness stop hurting.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use abrot::config::{Method, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};

@@ -1,6 +1,6 @@
-//! Optimizer benchmarks: element-wise Adam throughput, HLO rotated
-//! update + eigen refresh dispatch latency, and the Pallas-vs-jnp
-//! lowering gap (the §Perf L1 headline).
+//! Optimizer benchmarks: element-wise Adam throughput, batched rotated
+//! update + eigen refresh dispatch latency through the active backend
+//! (native by default; HLO/Pallas with `--features pjrt` + artifacts).
 //!
 //!     cargo bench --bench bench_optim
 
@@ -8,7 +8,7 @@ use abrot::bench::bench;
 use abrot::optim::reference::{self, Scalars};
 use abrot::optim::ElementAdam;
 use abrot::rngs::Rng;
-use abrot::runtime::{tensor_to_literal, Runtime};
+use abrot::runtime::{tensor_to_value, Runtime, Value};
 use abrot::tensor::{stack, Tensor};
 
 fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
@@ -45,9 +45,10 @@ fn main() {
         std::hint::black_box(reference::power_qr(&v.matmul(&v.transpose()), &v));
     });
 
-    // HLO batched rotated update + eigen on micro (NB=2, 16x48) —
-    // jnp lowering vs Pallas lowering (same math).
+    // Backend-dispatched batched rotated update + eigen on micro
+    // (NB=2, 16x48).
     let rt = Runtime::open("artifacts/micro").unwrap();
+    println!("backend: {}", rt.backend_kind());
     let nb = 2;
     let mk = |rng: &mut Rng| {
         let mats: Vec<Tensor> = (0..nb).map(|_| randn(rng, &[16, 48])).collect();
@@ -66,12 +67,12 @@ fn main() {
     for i in 0..nb {
         scs.data[i * 8..(i + 1) * 8].copy_from_slice(&sc.to_row(1.0));
     }
-    let inputs: Vec<xla::Literal> = [&w2, &g2, &m2, &v2, &u2, &v2s, &scs]
+    let inputs: Vec<Value> = [&w2, &g2, &m2, &v2, &u2, &v2s, &scs]
         .iter()
-        .map(|t| tensor_to_literal(t).unwrap())
+        .map(|t| tensor_to_value(t).unwrap())
         .collect();
     rt.exec("rot_adam_bi_wqkv", &inputs).unwrap();
-    bench("HLO rot_adam (jnp lowering)", 3, 50, || {
+    bench("backend rot_adam dispatch", 3, 50, || {
         std::hint::black_box(rt.exec("rot_adam_bi_wqkv", &inputs).unwrap());
     });
     if rt.has_executable("rot_adam_bi_wqkv_pallas") {
@@ -80,16 +81,16 @@ fn main() {
             std::hint::black_box(rt.exec("rot_adam_bi_wqkv_pallas", &inputs).unwrap());
         });
     }
-    let eig_inputs: Vec<xla::Literal> = [
+    let eig_inputs: Vec<Value> = [
         &stack(&(0..nb).map(|i| us[i].matmul(&us[i].transpose())).collect::<Vec<_>>().iter().collect::<Vec<_>>()),
         &stack(&(0..nb).map(|i| vs[i].matmul(&vs[i].transpose())).collect::<Vec<_>>().iter().collect::<Vec<_>>()),
         &g2, &u2, &v2s, &scs,
     ]
     .iter()
-    .map(|t| tensor_to_literal(t).unwrap())
+    .map(|t| tensor_to_value(t).unwrap())
     .collect();
     rt.exec("eigen2nd_bi_wqkv", &eig_inputs).unwrap();
-    bench("HLO eigen2nd refresh", 3, 30, || {
+    bench("backend eigen2nd refresh", 3, 30, || {
         std::hint::black_box(rt.exec("eigen2nd_bi_wqkv", &eig_inputs).unwrap());
     });
 }

@@ -1,40 +1,38 @@
-//! Runtime hot-path microbenchmarks: literal conversion, executable
+//! Runtime hot-path microbenchmarks: value conversion, executable
 //! dispatch, whole-step fwdbwd latency per config.
 //!
 //!     cargo bench --bench bench_runtime
 
 use abrot::bench::bench;
 use abrot::model::init_params;
-use abrot::runtime::{tensor_to_literal, tokens_to_literal, Runtime};
+use abrot::runtime::{tensor_to_value, tokens_to_value, Runtime, Value};
 use abrot::tensor::Tensor;
 
 fn main() {
     println!("== bench_runtime ==");
     let rt = Runtime::open("artifacts/micro").unwrap();
+    println!("backend: {}", rt.backend_kind());
     let cfg = rt.cfg().clone();
     let params = init_params(&rt.manifest, 0);
 
     let big = Tensor::ones(&[256, 256]);
-    bench("tensor_to_literal 256x256", 10, 200, || {
-        std::hint::black_box(tensor_to_literal(&big).unwrap());
+    bench("tensor_to_value 256x256", 10, 200, || {
+        std::hint::black_box(tensor_to_value(&big).unwrap());
     });
-    let lit = tensor_to_literal(&big).unwrap();
-    bench("literal_to_vec 256x256", 10, 200, || {
-        std::hint::black_box(lit.to_vec::<f32>().unwrap());
+    let val = tensor_to_value(&big).unwrap();
+    bench("value_to_vec 256x256", 10, 200, || {
+        std::hint::black_box(val.to_f32().unwrap());
     });
 
     let toks: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
-    let mut inputs: Vec<xla::Literal> =
-        params.iter().map(|p| tensor_to_literal(p).unwrap()).collect();
-    inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
-    inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
-    rt.exec("fwdbwd", &inputs).unwrap(); // compile
+    let mut inputs: Vec<Value> =
+        params.iter().map(|p| tensor_to_value(p).unwrap()).collect();
+    inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+    inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+    rt.exec("fwdbwd", &inputs).unwrap(); // warm (compiles under pjrt)
     bench("fwdbwd dispatch micro", 3, 50, || {
         std::hint::black_box(rt.exec("fwdbwd", &inputs).unwrap());
     });
-    let mut ev_inputs = inputs.clone();
-    ev_inputs.pop();
-    rt.exec("eval_loss", &ev_inputs[..]).unwrap_or_default();
     // eval_loss takes params + tok + tgt (same arity as fwdbwd)
     bench("eval_loss dispatch micro", 3, 50, || {
         std::hint::black_box(rt.exec("eval_loss", &inputs).unwrap());
@@ -46,10 +44,10 @@ fn main() {
         let params = init_params(&rt.manifest, 0);
         let toks: Vec<i32> =
             (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
-        let mut inputs: Vec<xla::Literal> =
-            params.iter().map(|p| tensor_to_literal(p).unwrap()).collect();
-        inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
-        inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+        let mut inputs: Vec<Value> =
+            params.iter().map(|p| tensor_to_value(p).unwrap()).collect();
+        inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+        inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
         rt.exec("fwdbwd", &inputs).unwrap();
         bench(&format!("fwdbwd dispatch {model}"), 2, 20, || {
             std::hint::black_box(rt.exec("fwdbwd", &inputs).unwrap());

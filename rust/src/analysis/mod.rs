@@ -13,7 +13,7 @@ use anyhow::Result;
 use crate::config::{Geometry, Source};
 use crate::optim::rotation::rotation_overhead_elems;
 use crate::rngs::Rng;
-use crate::runtime::{tensor_to_literal, tokens_to_literal, Runtime};
+use crate::runtime::{tensor_to_value, tokens_to_value, Runtime, Value};
 use crate::tensor::Tensor;
 
 // ---------------------------------------------------------------------------
@@ -138,15 +138,15 @@ fn hvp(
     tgts: &[i32],
 ) -> Result<Vec<Tensor>> {
     let cfg = rt.cfg();
-    let mut ins: Vec<xla::Literal> = Vec::with_capacity(2 * params.len() + 2);
+    let mut ins: Vec<Value> = Vec::with_capacity(2 * params.len() + 2);
     for p in params {
-        ins.push(tensor_to_literal(p)?);
+        ins.push(tensor_to_value(p)?);
     }
     for v in vec {
-        ins.push(tensor_to_literal(v)?);
+        ins.push(tensor_to_value(v)?);
     }
-    ins.push(tokens_to_literal(toks, cfg.batch, cfg.seq)?);
-    ins.push(tokens_to_literal(tgts, cfg.batch, cfg.seq)?);
+    ins.push(tokens_to_value(toks, cfg.batch, cfg.seq)?);
+    ins.push(tokens_to_value(tgts, cfg.batch, cfg.seq)?);
     rt.exec_tensors("hvp", &ins)
 }
 

@@ -2,31 +2,46 @@
 //!
 //! Reproduction of "Mitigating Staleness in Asynchronous Pipeline
 //! Parallelism via Basis Rotation" (Jung, Shin, Lee; ICML 2026) as a
-//! three-layer Rust + JAX + Pallas stack:
+//! three-layer stack with a **pluggable compute backend**:
 //!
 //! * **L3 (this crate)** — the pipeline-parallel training coordinator:
 //!   1F1B asynchronous schedule, weight stashing, stage-dependent delay,
 //!   per-stage optimizers (PipeDream / PipeDream-LR / Nesterov / DC /
 //!   Muon / Scion / SOAP / **basis rotation**), metrics and benchmarks.
-//! * **L2 (python/compile)** — JAX transformer fwd/bwd lowered AOT to
-//!   HLO text artifacts, executed here via the PJRT CPU client.
+//! * **L2** — the model graphs (transformer fwd/bwd, batched optimizer
+//!   updates), served by one of two interchangeable backends behind
+//!   [`runtime::Backend`]:
+//!   - [`runtime::native`] (default): pure-Rust reference kernels.
+//!     `cargo build && cargo test` work on a clean machine with no
+//!     Python, no XLA and no artifacts directory.
+//!   - `runtime::pjrt` (cargo feature `pjrt`): HLO text artifacts
+//!     lowered AOT by `python/compile/aot.py` from JAX, executed via
+//!     the PJRT CPU client.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the rotated
-//!   Adam update, tiled matmul and attention, lowered into the same HLO.
+//!   Adam update, tiled matmul and attention, lowered into the HLO the
+//!   PJRT backend executes. The native backend mirrors them with the
+//!   reference implementations in [`optim::reference`].
 //!
-//! Python never runs on the training path: `make artifacts` is the only
-//! python invocation; afterwards the `abrot` binary is self-contained.
+//! Python never runs on the training path: it is an optional,
+//! build-time artifact generator for the `pjrt` feature. See
+//! `README.md` for the quickstart and `docs/ARCHITECTURE.md` for the
+//! schedule/staleness model.
 
-pub mod tensor;
-pub mod rngs;
-pub mod jsonio;
+// Index-heavy reference kernels read better with explicit loops, and
+// the exported graph signatures are long by design.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+pub mod analysis;
+pub mod bench;
 pub mod config;
+pub mod coordinator;
 pub mod data;
-pub mod runtime;
+pub mod jsonio;
+pub mod landscape;
+pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod pipeline;
-pub mod coordinator;
-pub mod landscape;
-pub mod analysis;
-pub mod metrics;
-pub mod bench;
+pub mod rngs;
+pub mod runtime;
+pub mod tensor;

@@ -136,6 +136,7 @@ fn main() -> Result<()> {
             let cfg = args.get_or("config", "micro");
             let rt = Runtime::open(root.join(&cfg))?;
             let m = &rt.manifest;
+            println!("backend: {}", rt.backend_kind());
             println!("config {} : vocab={} seq={} d_model={} heads={} blocks={} d_ff={} batch={}{}",
                      m.cfg.name, m.cfg.vocab, m.cfg.seq, m.cfg.d_model,
                      m.cfg.n_heads, m.cfg.n_blocks, m.cfg.d_ff, m.cfg.batch,
@@ -247,6 +248,9 @@ fn main() -> Result<()> {
             println!("usage: abrot <info|train|engine|repro|landscape|calc> [--flags]");
             println!("  e.g. abrot train --config tiny32 --method br --stages 32 --steps 300");
             println!("       abrot repro --fig fig5 --steps 200 --out results");
+            println!("backends: native reference kernels by default; with an");
+            println!("  artifacts/<config>/ dir and a `pjrt`-feature build, the");
+            println!("  HLO/PJRT path is used instead (see README).");
         }
     }
     Ok(())

@@ -2,8 +2,9 @@
 //! pipeline-stage partitioning and the param↔shape-class mapping used by
 //! the batched optimizer executables.
 //!
-//! The schema itself comes from the manifest (single source of truth in
-//! `python/compile/configs.py`); this module only *derives* from it.
+//! The schema itself comes from the manifest (built-in registry in
+//! `runtime::presets`, mirrored by `python/compile/configs.py` for the
+//! PJRT artifact path); this module only *derives* from it.
 
 use crate::runtime::{Manifest, ParamSpec};
 use crate::rngs::Rng;
@@ -167,11 +168,9 @@ pub fn set_slot_matrix(params: &mut [Tensor], s: &ClassSlot, t: &Tensor) {
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     fn man(name: &str) -> Manifest {
-        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
-        Manifest::load(&p).unwrap()
+        Manifest::builtin(name).unwrap()
     }
 
     #[test]

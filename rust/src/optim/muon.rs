@@ -2,7 +2,8 @@
 //! non-rotating preconditioned comparators of the paper's Table 3.
 //!
 //! Both orthogonalize a momentum buffer with Newton–Schulz via the
-//! batched `muon_<class>` executables (Pallas matmuls inside) and apply
+//! batched `muon_<class>` executables (native reference kernels, or
+//! Pallas-bearing HLO under the `pjrt` feature) and apply
 //! it with a spectral-scaled step; embeddings/gains/head fall back to
 //! element-wise Adam (Muon's own convention) or sign-descent LMO
 //! (Scion's ℓ∞ ball for non-matrix params).
@@ -10,7 +11,7 @@
 use anyhow::Result;
 
 use crate::model::{class_maps, set_slot_matrix, slot_matrix, ClassMap};
-use crate::runtime::{tensor_to_literal, Runtime};
+use crate::runtime::{tensor_to_value, Runtime};
 use crate::tensor::{stack, unstack, Tensor};
 
 use super::{ElementAdam, Optimizer, StepCtx};
@@ -114,9 +115,9 @@ impl Optimizer for Muon {
             }
             let name = format!("muon_{}", cs.map.class.name);
             let inputs = vec![
-                tensor_to_literal(&cs.mom)?,
-                tensor_to_literal(&g_stack)?,
-                tensor_to_literal(&sc)?,
+                tensor_to_value(&cs.mom)?,
+                tensor_to_value(&g_stack)?,
+                tensor_to_value(&sc)?,
             ];
             let outs = ctx.rt.exec_tensors(&name, &inputs)?;
             cs.mom = outs[0].clone();

@@ -1,12 +1,14 @@
-//! Basis rotation (paper Algorithms 1 & 2) and SOAP — the HLO-backed
-//! optimizers.
+//! Basis rotation (paper Algorithms 1 & 2) and SOAP — the
+//! backend-dispatched matrix optimizers.
 //!
 //! Rotated matrices are updated through the batched per-shape-class
-//! executables exported by `aot.py` (one dispatch per class per step;
-//! the Pallas matmul/Adam kernels are the hot path inside). Everything
-//! that is not a rotated matrix (embeddings, gains, head, MoE routers)
-//! falls back to the element-wise Rust Adam, matching the paper's setup
-//! ("we only perform rotation to the MLP and attention layers").
+//! executables (one dispatch per class per step) served by the
+//! runtime's backend: native Rust reference kernels by default, or the
+//! `aot.py`-exported HLO graphs whose hot path is the L1 Pallas kernels
+//! under the `pjrt` feature. Everything that is not a rotated matrix
+//! (embeddings, gains, head, MoE routers) falls back to the
+//! element-wise Rust Adam, matching the paper's setup ("we only perform
+//! rotation to the MLP and attention layers").
 //!
 //! Stage-aware frequency allocation (paper Fig. 9c/17) is expressed as
 //! the per-slot `mask` scalar: the eigen executables always advance the
@@ -16,7 +18,7 @@ use anyhow::Result;
 
 use crate::config::{stage_aware_freq, FreqAlloc, Geometry, Source, TrainCfg};
 use crate::model::{class_maps, set_slot_matrix, slot_matrix, ClassMap};
-use crate::runtime::{tensor_to_literal, Runtime};
+use crate::runtime::{tensor_to_value, Runtime};
 use crate::tensor::{stack, unstack, Tensor};
 
 use super::{ElementAdam, Optimizer, StepCtx};
@@ -180,12 +182,12 @@ impl BasisRotation {
                 let name = format!("eigen2nd_{tag}_{cls}");
                 let cs = &mut self.classes[ci];
                 let inputs = vec![
-                    tensor_to_literal(cs.l.as_ref().unwrap())?,
-                    tensor_to_literal(cs.r.as_ref().unwrap())?,
-                    tensor_to_literal(g_stack)?,
-                    tensor_to_literal(&cs.u)?,
-                    tensor_to_literal(&cs.v)?,
-                    tensor_to_literal(&sc)?,
+                    tensor_to_value(cs.l.as_ref().unwrap())?,
+                    tensor_to_value(cs.r.as_ref().unwrap())?,
+                    tensor_to_value(g_stack)?,
+                    tensor_to_value(&cs.u)?,
+                    tensor_to_value(&cs.v)?,
+                    tensor_to_value(&sc)?,
                 ];
                 let outs = ctx.rt.exec_tensors(&name, &inputs)?;
                 cs.l = Some(outs[0].clone());
@@ -205,10 +207,10 @@ impl BasisRotation {
                 }
                 let name = format!("eigen1st_{tag}_{cls}");
                 let inputs = vec![
-                    tensor_to_literal(&m_upd)?,
-                    tensor_to_literal(&cs.u)?,
-                    tensor_to_literal(&cs.v)?,
-                    tensor_to_literal(&sc)?,
+                    tensor_to_value(&m_upd)?,
+                    tensor_to_value(&cs.u)?,
+                    tensor_to_value(&cs.v)?,
+                    tensor_to_value(&sc)?,
                 ];
                 let outs = ctx.rt.exec_tensors(&name, &inputs)?;
                 cs.u = outs[0].clone();
@@ -293,13 +295,13 @@ impl Optimizer for BasisRotation {
                 let w_stack = stack(&refs);
                 let sc = self.scalars_stack(cs, ctx, &masks);
                 let inputs = vec![
-                    tensor_to_literal(&w_stack)?,
-                    tensor_to_literal(&g_stack)?,
-                    tensor_to_literal(&cs.m)?,
-                    tensor_to_literal(&cs.vt)?,
-                    tensor_to_literal(&cs.u)?,
-                    tensor_to_literal(&cs.v)?,
-                    tensor_to_literal(&sc)?,
+                    tensor_to_value(&w_stack)?,
+                    tensor_to_value(&g_stack)?,
+                    tensor_to_value(&cs.m)?,
+                    tensor_to_value(&cs.vt)?,
+                    tensor_to_value(&cs.u)?,
+                    tensor_to_value(&cs.v)?,
+                    tensor_to_value(&sc)?,
                 ];
                 let outs = ctx.rt.exec_tensors(&exec, &inputs)?;
                 let w_new = unstack(&outs[0]);

@@ -1,13 +1,14 @@
 //! The real asynchronous pipeline engine: one OS thread per stage,
 //! mpsc channels carrying activations, deterministic 1F1B schedule with
 //! per-microbatch weight stashing and immediate updates on backward —
-//! PipeDream's execution model, end to end, on per-block HLO
-//! executables.
+//! PipeDream's execution model, end to end, on per-block executables
+//! (`embed_fwd` / `block_fwd` / `block_bwd` / `head_fwdbwd`).
 //!
-//! Each stage thread opens its own `PjRtClient` (the xla crate's client
-//! is not `Send`), compiles only the executables it needs, and owns its
-//! blocks' parameters and optimizer state. Activations cross threads as
-//! plain `Vec<f32>`.
+//! Each stage thread opens its own [`Runtime`] and thereby owns its own
+//! boxed [`crate::runtime::Backend`] (the PJRT client is not `Send`;
+//! the native backend is stateless either way), executes only the
+//! graphs it needs, and owns its blocks' parameters and optimizer
+//! state. Activations cross threads as plain `Vec<f32>`.
 //!
 //! Schedule: stage k (0-indexed of P) performs `P-1-k` warmup forwards,
 //! then strictly alternates backward/forward. In steady state the
@@ -32,8 +33,8 @@ use crate::metrics::RunResult;
 use crate::model::{init_params, StagePartition};
 use crate::optim::ElementAdam;
 use crate::runtime::{
-    literal_scalar_f32, literal_to_tensor, tensor_to_literal, tokens_to_literal,
-    Runtime,
+    tensor_to_value, tokens_to_value, value_scalar_f32, value_to_tensor, Runtime,
+    Value,
 };
 use crate::tensor::Tensor;
 
@@ -125,14 +126,14 @@ impl Worker {
             let outs = self.rt.exec(
                 "embed_fwd",
                 &[
-                    tensor_to_literal(te)?,
-                    tensor_to_literal(pe)?,
-                    tokens_to_literal(&toks, b, s)?,
+                    tensor_to_value(te)?,
+                    tensor_to_value(pe)?,
+                    tokens_to_value(&toks, b, s)?,
                 ],
             )?;
             self.compute_s += t0.elapsed().as_secs_f64();
             self.pending_tokens.insert(mb, toks);
-            outs[0].to_vec::<f32>()?
+            outs[0].to_f32()?
         } else {
             if self.last() {
                 // last stage needs this microbatch's targets; re-derive
@@ -155,11 +156,11 @@ impl Worker {
         for &blk in &self.blocks.clone() {
             block_inputs.push(x.clone());
             let bp = self.block_params(blk, &snapshot);
-            let mut ins: Vec<xla::Literal> =
-                bp.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-            ins.push(tensor_to_literal(&x)?);
+            let mut ins: Vec<Value> =
+                bp.iter().map(tensor_to_value).collect::<Result<_>>()?;
+            ins.push(tensor_to_value(&x)?);
             let outs = self.rt.exec("block_fwd", &ins)?;
-            x = literal_to_tensor(&outs[0], &[b, s, d])?;
+            x = value_to_tensor(&outs[0], &[b, s, d])?;
         }
         self.compute_s += t0.elapsed().as_secs_f64();
         let stashed = if self.use_stash { snapshot } else { Vec::new() };
@@ -208,22 +209,22 @@ impl Worker {
             let outs = self.rt.exec(
                 "head_fwdbwd",
                 &[
-                    tensor_to_literal(&gf)?,
-                    tensor_to_literal(&head)?,
-                    tensor_to_literal(&x)?,
-                    tokens_to_literal(&tgts, b, s)?,
+                    tensor_to_value(&gf)?,
+                    tensor_to_value(&head)?,
+                    tensor_to_value(&x)?,
+                    tokens_to_value(&tgts, b, s)?,
                 ],
             )?;
             self.compute_s += t0.elapsed().as_secs_f64();
-            let loss = literal_scalar_f32(&outs[0])?;
+            let loss = value_scalar_f32(&outs[0])?;
             self.losses.push(loss);
             let i_gf = self.local_index("gf");
             let i_head = self.local_index("head");
             let gf_shape = self.params[i_gf].shape.clone();
             let head_shape = self.params[i_head].shape.clone();
-            grads[i_gf] = literal_to_tensor(&outs[2], &gf_shape)?;
-            grads[i_head] = literal_to_tensor(&outs[3], &head_shape)?;
-            literal_to_tensor(&outs[1], &[b, s, d])?
+            grads[i_gf] = value_to_tensor(&outs[2], &gf_shape)?;
+            grads[i_head] = value_to_tensor(&outs[3], &head_shape)?;
+            value_to_tensor(&outs[1], &[b, s, d])?
         } else {
             let t0 = Instant::now();
             let msg =
@@ -237,18 +238,18 @@ impl Worker {
         let t0 = Instant::now();
         for (bi, &blk) in self.blocks.clone().iter().enumerate().rev() {
             let bp = self.block_params(blk, &weights);
-            let mut ins: Vec<xla::Literal> =
-                bp.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-            ins.push(tensor_to_literal(&block_inputs[bi])?);
-            ins.push(tensor_to_literal(&dx)?);
+            let mut ins: Vec<Value> =
+                bp.iter().map(tensor_to_value).collect::<Result<_>>()?;
+            ins.push(tensor_to_value(&block_inputs[bi])?);
+            ins.push(tensor_to_value(&dx)?);
             let outs = self.rt.exec("block_bwd", &ins)?;
-            dx = literal_to_tensor(&outs[0], &[b, s, d])?;
+            dx = value_to_tensor(&outs[0], &[b, s, d])?;
             let prefix = format!("b{blk}.");
             let mut gi = 1;
             for (local, &pi) in self.param_idx.clone().iter().enumerate() {
                 if self.rt.manifest.params[pi].name.starts_with(&prefix) {
                     let shape = self.params[local].shape.clone();
-                    grads[local] = literal_to_tensor(&outs[gi], &shape)?;
+                    grads[local] = value_to_tensor(&outs[gi], &shape)?;
                     gi += 1;
                 }
             }
@@ -266,15 +267,15 @@ impl Worker {
             let t0e = Instant::now();
             let outs = self.rt.exec(
                 "embed_bwd",
-                &[tokens_to_literal(&toks, b, s)?, tensor_to_literal(&dx)?],
+                &[tokens_to_value(&toks, b, s)?, tensor_to_value(&dx)?],
             )?;
             self.compute_s += t0e.elapsed().as_secs_f64();
             let i_te = self.local_index("tok_emb");
             let i_pe = self.local_index("pos_emb");
             let te_shape = self.params[i_te].shape.clone();
             let pe_shape = self.params[i_pe].shape.clone();
-            grads[i_te] = literal_to_tensor(&outs[0], &te_shape)?;
-            grads[i_pe] = literal_to_tensor(&outs[1], &pe_shape)?;
+            grads[i_te] = value_to_tensor(&outs[0], &te_shape)?;
+            grads[i_pe] = value_to_tensor(&outs[1], &pe_shape)?;
         }
 
         // ---- per-stage clip + immediate update (async semantics) ----
@@ -364,7 +365,7 @@ fn run_stage(
 
 /// Train with the real threaded pipeline. `cfg.steps` = microbatches.
 pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult> {
-    let man0 = crate::runtime::Manifest::load(&artifacts_dir)?;
+    let man0 = crate::runtime::Manifest::resolve(&artifacts_dir)?;
     if man0.cfg.moe.is_some() {
         anyhow::bail!("engine supports dense configs only");
     }

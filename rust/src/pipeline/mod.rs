@@ -19,8 +19,8 @@ use crate::metrics::RunResult;
 use crate::model::{init_params, StagePartition};
 use crate::optim::{self, clip_global_norm, StepCtx};
 use crate::runtime::{
-    literal_scalar_f32, literal_to_tensor, tensor_to_literal, tokens_to_literal,
-    Runtime,
+    tensor_to_value, tokens_to_value, value_scalar_f32, value_to_tensor, Runtime,
+    Value,
 };
 use crate::tensor::Tensor;
 
@@ -34,6 +34,7 @@ pub struct StashRing {
 }
 
 impl StashRing {
+    /// Seed every ring with the initial parameter version.
     pub fn new(params: &[Tensor], delays: &[u32]) -> Self {
         let rings = params
             .iter()
@@ -76,6 +77,7 @@ pub struct Predictor {
 }
 
 impl Predictor {
+    /// Zero-velocity predictor over the given parameter shapes.
     pub fn new(params: &[Tensor]) -> Self {
         Predictor {
             vel: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
@@ -83,6 +85,7 @@ impl Predictor {
         }
     }
 
+    /// Fold one observed update delta into the velocity EMA.
     pub fn observe(&mut self, before: &[Tensor], after: &[Tensor]) {
         for ((v, b), a) in self.vel.iter_mut().zip(before).zip(after) {
             for ((vi, &bi), &ai) in v.data.iter_mut().zip(&b.data).zip(&a.data) {
@@ -91,6 +94,7 @@ impl Predictor {
         }
     }
 
+    /// Extrapolate parameter `i` forward by `tau` steps.
     pub fn predict(&self, i: usize, w: &Tensor, tau: u32) -> Tensor {
         let mut out = w.clone();
         out.axpy(tau as f32, &self.vel[i]);
@@ -133,14 +137,14 @@ pub fn train_sim_observed(
 
     for t in 1..=cfg.steps as u64 {
         let (toks, tgts) = train_iter.next_batch();
-        let tok_lit = tokens_to_literal(&toks, mcfg.batch, mcfg.seq)?;
-        let tgt_lit = tokens_to_literal(&tgts, mcfg.batch, mcfg.seq)?;
+        let tok_val = tokens_to_value(&toks, mcfg.batch, mcfg.seq)?;
+        let tgt_val = tokens_to_value(&tgts, mcfg.batch, mcfg.seq)?;
 
         // Assemble forward weights per staleness mode.
-        let (exec_name, mut inputs): (&str, Vec<xla::Literal>) = match cfg.stash {
+        let (exec_name, mut inputs): (&str, Vec<Value>) = match cfg.stash {
             StashMode::Stash => {
                 let ins: Result<Vec<_>> = (0..params.len())
-                    .map(|i| tensor_to_literal(stash.stale(i)))
+                    .map(|i| tensor_to_value(stash.stale(i)))
                     .collect();
                 ("fwdbwd", ins?)
             }
@@ -148,10 +152,10 @@ pub fn train_sim_observed(
                 // forward at stale weights, backward ops at current ones
                 let mut ins = Vec::with_capacity(2 * params.len() + 2);
                 for i in 0..params.len() {
-                    ins.push(tensor_to_literal(stash.stale(i))?);
+                    ins.push(tensor_to_value(stash.stale(i))?);
                 }
                 for p in &params {
-                    ins.push(tensor_to_literal(p)?);
+                    ins.push(tensor_to_value(p)?);
                 }
                 ("fwdbwd_split", ins)
             }
@@ -161,21 +165,21 @@ pub fn train_sim_observed(
                     .iter()
                     .enumerate()
                     .map(|(i, w)| {
-                        tensor_to_literal(&pred.predict(i, w, part.delay_of[i]))
+                        tensor_to_value(&pred.predict(i, w, part.delay_of[i]))
                     })
                     .collect();
                 ("fwdbwd", ins?)
             }
         };
-        inputs.push(tok_lit);
-        inputs.push(tgt_lit);
+        inputs.push(tok_val);
+        inputs.push(tgt_val);
 
         let outs = rt.exec(exec_name, &inputs)?;
-        let loss = literal_scalar_f32(&outs[0])?;
+        let loss = value_scalar_f32(&outs[0])?;
         let mut grads: Vec<Tensor> = outs[1..]
             .iter()
             .zip(man.params.iter())
-            .map(|(lit, p)| literal_to_tensor(lit, &p.shape))
+            .map(|(val, p)| value_to_tensor(val, &p.shape))
             .collect::<Result<_>>()?;
         if !loss.is_finite() {
             result.diverged = true;
@@ -212,12 +216,12 @@ pub fn train_sim_observed(
         result.losses.push(loss);
         if cfg.eval_every > 0 && (t as u32) % cfg.eval_every == 0 {
             let (vt, vg) = val_iter.next_batch();
-            let mut ins: Vec<xla::Literal> =
-                params.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-            ins.push(tokens_to_literal(&vt, mcfg.batch, mcfg.seq)?);
-            ins.push(tokens_to_literal(&vg, mcfg.batch, mcfg.seq)?);
+            let mut ins: Vec<Value> =
+                params.iter().map(tensor_to_value).collect::<Result<_>>()?;
+            ins.push(tokens_to_value(&vt, mcfg.batch, mcfg.seq)?);
+            ins.push(tokens_to_value(&vg, mcfg.batch, mcfg.seq)?);
             let vouts = rt.exec("eval_loss", &ins)?;
-            result.val_losses.push((t as u32, literal_scalar_f32(&vouts[0])?));
+            result.val_losses.push((t as u32, value_scalar_f32(&vouts[0])?));
         }
     }
     result.wall_secs = t0.elapsed().as_secs_f64();

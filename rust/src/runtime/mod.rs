@@ -1,15 +1,33 @@
-//! PJRT runtime: load `artifacts/<config>/*.hlo.txt`, compile on the CPU
-//! client, execute from the training hot path.
+//! Execution runtime: a pluggable [`Backend`] behind a uniform
+//! exec-by-name interface.
 //!
-//! * Interchange is HLO **text** (jax ≥0.5 emits 64-bit-id protos that
-//!   xla_extension 0.5.1 rejects; the text parser reassigns ids).
-//! * All graphs were lowered with `return_tuple=True`, so every
-//!   execution returns a 1-tuple literal that we decompose.
-//! * Executables are compiled lazily and cached by name.
+//! Two backends implement the same set of named executables (`fwdbwd`,
+//! `block_fwd`, `rot_adam_bi_wqkv`, ...):
+//!
+//! * [`native`] — pure-Rust reference kernels (transformer forward /
+//!   backward, batched rotated-Adam / eigen / Muon updates). The
+//!   default: zero external dependencies, builds and trains offline.
+//! * `pjrt` (cargo feature `pjrt`) — the original HLO path: load
+//!   `artifacts/<config>/*.hlo.txt` lowered by `python/compile/aot.py`,
+//!   compile on the PJRT CPU client, execute from the training loop.
+//!
+//! [`Runtime::open`] picks the backend: a directory containing a
+//! `manifest.json` uses the artifact manifest (and, when the `pjrt`
+//! feature is enabled, the PJRT backend); otherwise the final path
+//! component is treated as a built-in model-config name (see
+//! [`presets`]) and the native backend is used.
+//!
+//! Data crosses the backend boundary as [`Value`]s — dense f32 tensors
+//! or i32 token grids — never as backend-specific buffer types.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod presets;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -17,63 +35,111 @@ use crate::jsonio::Json;
 use crate::tensor::Tensor;
 
 // ---------------------------------------------------------------------------
-// Manifest (emitted by python/compile/aot.py)
+// Manifest: the model/param/executable schema
 // ---------------------------------------------------------------------------
 
+/// Mixture-of-Experts settings of a model config.
 #[derive(Clone, Debug)]
 pub struct MoeCfg {
+    /// Number of experts per block.
     pub n_experts: usize,
+    /// Experts routed per token.
     pub top_k: usize,
 }
 
+/// Model hyperparameters (mirrors `python/compile/configs.py`).
 #[derive(Clone, Debug)]
 pub struct ModelCfg {
+    /// Config name (`micro`, `tiny32`, ...).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads (`d_model % n_heads == 0`).
     pub n_heads: usize,
+    /// Transformer blocks.
     pub n_blocks: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// Microbatch size.
     pub batch: usize,
+    /// `Some` for MoE variants.
     pub moe: Option<MoeCfg>,
 }
 
+impl ModelCfg {
+    /// Per-head width.
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+}
+
+/// One parameter tensor in flatten order.
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
+    /// Name (`tok_emb`, `b3.wqkv`, ...).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
-    pub kind: String, // embed | gain | matrix | expert
-    pub block: i64,   // -1 for global params
+    /// `embed | gain | matrix | expert`.
+    pub kind: String,
+    /// Owning block index; -1 for global params.
+    pub block: i64,
+    /// Eligible for basis rotation (attention + MLP projections only).
     pub rotated: bool,
 }
 
+/// A batch of same-shaped rotated matrices updated by one executable
+/// call (e.g. the 32 `wqkv` matrices of `tiny32`).
 #[derive(Clone, Debug)]
 pub struct ShapeClass {
+    /// Class name (`wqkv`, `wo`, `w1`, `w2`, `w1e`, `w2e`).
     pub name: String,
+    /// Matrices in the batch (blocks, or blocks x experts for MoE).
     pub count: usize,
+    /// Rows.
     pub m: usize,
+    /// Columns.
     pub n: usize,
 }
 
+/// Input/output tensor spec of an executable.
 #[derive(Clone, Debug)]
 pub struct IoSpec {
+    /// Tensor shape (empty = scalar).
     pub shape: Vec<usize>,
-    pub dtype: String, // "f32" | "s32"
+    /// `"f32"` or `"s32"`.
+    pub dtype: String,
 }
 
+/// One named executable: its artifact file (PJRT only; empty for
+/// built-in manifests) and its I/O signature.
 #[derive(Clone, Debug)]
 pub struct ExecSpec {
+    /// HLO text file relative to the artifact dir ("" for native).
     pub file: String,
+    /// Input signature.
     pub inputs: Vec<IoSpec>,
+    /// Output signature.
     pub outputs: Vec<IoSpec>,
 }
 
+/// The full schema one [`Runtime`] serves: model config, parameter
+/// flatten order, rotated shape classes and the executable table.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Model hyperparameters.
     pub cfg: ModelCfg,
+    /// Parameters in flatten order (the single source of truth every
+    /// executable's input order follows).
     pub params: Vec<ParamSpec>,
+    /// Rotated-matrix shape classes.
     pub shape_classes: Vec<ShapeClass>,
+    /// Executable table.
     pub executables: HashMap<String, ExecSpec>,
 }
 
@@ -85,6 +151,8 @@ fn io_spec(j: &Json) -> IoSpec {
 }
 
 impl Manifest {
+    /// Load `manifest.json` from an artifact directory (emitted by
+    /// `python/compile/aot.py`).
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {dir:?}"))?;
@@ -148,81 +216,185 @@ impl Manifest {
         Ok(Manifest { cfg, params, shape_classes, executables })
     }
 
+    /// Build the manifest of a built-in model config (no artifacts on
+    /// disk needed) — see [`presets`] for the registry.
+    pub fn builtin(config: &str) -> Result<Manifest> {
+        presets::builtin_manifest(config)
+    }
+
+    /// Resolve a model directory the way [`Runtime::open`] does:
+    /// `dir/manifest.json` when present, otherwise the built-in config
+    /// named by the final path component.
+    pub fn resolve(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            return Manifest::load(dir);
+        }
+        let name = dir
+            .file_name()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow!("bad model path {dir:?}"))?;
+        Manifest::builtin(name)
+    }
+
+    /// Index of a parameter by name.
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|p| p.name == name)
     }
 
+    /// Total scalar parameter count.
     pub fn total_params(&self) -> usize {
         self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
     }
 }
 
 // ---------------------------------------------------------------------------
-// Literal conversion helpers
+// Value: the backend-neutral tensor interchange type
 // ---------------------------------------------------------------------------
 
-/// Tensor → literal with a single memcpy: `create_from_shape_and_
-/// untyped_data` builds the shaped literal directly (the obvious
-/// vec1+reshape route costs two copies + a reshape literal — §Perf L3:
-/// 147 µs → ~30 µs for a 256×256 tensor).
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        &t.shape,
-        bytes,
-    )?)
+/// A value crossing the [`Backend`] boundary: a dense f32 tensor or an
+/// i32 token grid. Replaces the PJRT-specific `xla::Literal` on every
+/// call site; the PJRT backend converts at its own edge.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Dense f32 tensor (scalars use an empty shape).
+    F32(Tensor),
+    /// i32 tensor (token / target grids).
+    I32 {
+        /// Tensor shape.
+        shape: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<i32>,
+    },
 }
 
-pub fn tokens_to_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
-    assert_eq!(tokens.len(), batch * seq);
-    let bytes = unsafe {
-        std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        &[batch, seq],
-        bytes,
-    )?)
+impl Value {
+    /// `"f32"` or `"s32"` (matching [`IoSpec::dtype`]).
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "f32",
+            Value::I32 { .. } => "s32",
+        }
+    }
+
+    /// Shape of the carried tensor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Borrow as an f32 tensor.
+    pub fn as_tensor(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => bail!("expected f32 value, got s32"),
+        }
+    }
+
+    /// Borrow as i32 elements.
+    pub fn as_tokens(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            Value::F32(_) => bail!("expected s32 value, got f32"),
+        }
+    }
+
+    /// Copy out the f32 elements.
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        Ok(self.as_tensor()?.data.clone())
+    }
 }
 
-pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let data = lit.to_vec::<f32>()?;
-    Ok(Tensor::new(shape.to_vec(), data))
+/// Wrap a tensor as a [`Value`] (kept `Result`-returning for drop-in
+/// compatibility with the old literal-conversion call sites).
+pub fn tensor_to_value(t: &Tensor) -> Result<Value> {
+    Ok(Value::F32(t.clone()))
 }
 
-pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.to_vec::<f32>()?[0])
+/// Wrap a `(batch, seq)` token grid as a [`Value`].
+pub fn tokens_to_value(tokens: &[i32], batch: usize, seq: usize) -> Result<Value> {
+    if tokens.len() != batch * seq {
+        bail!("token grid: {} elements for shape [{batch}, {seq}]", tokens.len());
+    }
+    Ok(Value::I32 { shape: vec![batch, seq], data: tokens.to_vec() })
+}
+
+/// Unwrap a [`Value`] into a tensor of the given shape (element count
+/// must match; the shape may differ, e.g. flattening a batch axis).
+pub fn value_to_tensor(v: &Value, shape: &[usize]) -> Result<Tensor> {
+    let t = v.as_tensor()?;
+    let want: usize = shape.iter().product();
+    if want != t.data.len() {
+        bail!("value has {} elements, target shape {shape:?} wants {want}", t.data.len());
+    }
+    Ok(Tensor::new(shape.to_vec(), t.data.clone()))
+}
+
+/// Read a scalar f32 result (e.g. a loss output).
+pub fn value_scalar_f32(v: &Value) -> Result<f32> {
+    let t = v.as_tensor()?;
+    t.data.first().copied().ok_or_else(|| anyhow!("empty value, expected scalar"))
 }
 
 // ---------------------------------------------------------------------------
-// Runtime
+// Backend trait + Runtime facade
 // ---------------------------------------------------------------------------
 
+/// A compute backend: executes manifest-named graphs on [`Value`]s.
+///
+/// Implementations: [`native::NativeBackend`] (pure Rust, default) and
+/// `pjrt::PjrtBackend` (HLO artifacts on the PJRT CPU client, cargo
+/// feature `pjrt`). The threaded 1F1B engine gives each stage thread
+/// its own boxed backend, so backends need not be `Send` or `Sync`.
+pub trait Backend {
+    /// Short backend tag for logs (`"native"` / `"pjrt"`).
+    fn kind(&self) -> &'static str;
+
+    /// Execute `name` with `inputs` in manifest order; returns the
+    /// outputs in manifest order. Arity is pre-checked by [`Runtime`].
+    fn exec(&self, man: &Manifest, name: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+}
+
+/// The coordinator's handle to one model config on one backend:
+/// manifest + boxed [`Backend`] + dispatch accounting.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub dir: PathBuf,
+    /// The schema this runtime serves.
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
     /// Per-executable dispatch counters (perf accounting).
     pub exec_count: RefCell<HashMap<String, u64>>,
 }
 
 impl Runtime {
-    /// Open the artifacts directory for one model config.
+    /// Open a model by directory. `dir/manifest.json` present: use the
+    /// artifact manifest (PJRT backend when the `pjrt` feature is on,
+    /// native otherwise). Absent: the final path component names a
+    /// built-in config served natively — `Runtime::open("artifacts/micro")`
+    /// works on a machine that has never run Python.
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(HashMap::new()),
-        })
+        let dir = dir.as_ref();
+        // One predicate decides both the manifest source and the
+        // backend, so the two cannot drift apart.
+        let from_artifacts = dir.join("manifest.json").exists();
+        let manifest = if from_artifacts {
+            Manifest::load(dir)?
+        } else {
+            let name = dir
+                .file_name()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| anyhow!("bad model path {dir:?}"))?;
+            Manifest::builtin(name)?
+        };
+        #[cfg(feature = "pjrt")]
+        let backend: Box<dyn Backend> = if from_artifacts {
+            Box::new(pjrt::PjrtBackend::open(dir)?)
+        } else {
+            Box::new(native::NativeBackend)
+        };
+        #[cfg(not(feature = "pjrt"))]
+        let backend: Box<dyn Backend> = Box::new(native::NativeBackend);
+        Ok(Runtime::from_parts(manifest, backend))
     }
 
     /// Open `<root>/<config>` (e.g. `artifacts/tiny32`).
@@ -230,63 +402,50 @@ impl Runtime {
         Runtime::open(root.as_ref().join(config))
     }
 
+    /// Open a built-in config on the native backend explicitly.
+    pub fn native(config: &str) -> Result<Runtime> {
+        let manifest = Manifest::builtin(config)?;
+        Ok(Runtime::from_parts(manifest, Box::new(native::NativeBackend)))
+    }
+
+    /// Assemble from an explicit manifest + backend (used by backend
+    /// constructors and tests).
+    pub fn from_parts(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { manifest, backend, exec_count: RefCell::new(HashMap::new()) }
+    }
+
+    /// The model config this runtime serves.
     pub fn cfg(&self) -> &ModelCfg {
         &self.manifest.cfg
     }
 
-    /// Lazily compile (and cache) an executable by manifest name.
-    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
+    /// Which backend executes dispatches (`"native"` / `"pjrt"`).
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend.kind()
+    }
+
+    /// Whether the manifest lists an executable by this name.
+    pub fn has_executable(&self, name: &str) -> bool {
+        self.manifest.executables.contains_key(name)
+    }
+
+    /// Execute by name; returns the decomposed output tuple.
+    pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         let spec = self
             .manifest
             .executables
             .get(name)
             .ok_or_else(|| anyhow!("no executable {name:?} in manifest"))?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    pub fn has_executable(&self, name: &str) -> bool {
-        self.manifest.executables.contains_key(name)
-    }
-
-    /// Execute by name; returns the decomposed output tuple as literals.
-    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let spec = self
-            .manifest
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("no executable {name:?}"))?;
         if inputs.len() != spec.inputs.len() {
             bail!("{name}: got {} inputs, manifest says {}", inputs.len(), spec.inputs.len());
         }
-        let exe = self.executable(name)?;
         *self.exec_count.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-        // execute_b with explicitly-managed device buffers: the crate's
-        // literal-taking `execute` leaks its temporary input buffers in
-        // the C glue (~input size per dispatch — OOM over long runs;
-        // EXPERIMENTS.md §Perf). Our PjRtBuffers are dropped right after.
-        let in_bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|l| self.client.buffer_from_host_literal(None, l))
-            .collect::<std::result::Result<_, _>>()?;
-        let bufs = exe.execute_b::<xla::PjRtBuffer>(&in_bufs)?;
-        drop(in_bufs);
-        let mut result = bufs[0][0].to_literal_sync()?;
-        drop(bufs);
-        Ok(result.decompose_tuple()?)
+        self.backend.exec(&self.manifest, name, inputs)
     }
 
-    /// Execute a graph whose outputs are all f32 tensors.
-    pub fn exec_tensors(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+    /// Execute a graph whose outputs are all f32 tensors, reshaped to
+    /// the manifest's output specs.
+    pub fn exec_tensors(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
         let out_specs: Vec<IoSpec> = self
             .manifest
             .executables
@@ -297,10 +456,11 @@ impl Runtime {
         let outs = self.exec(name, inputs)?;
         outs.iter()
             .zip(&out_specs)
-            .map(|(lit, os)| literal_to_tensor(lit, &os.shape))
+            .map(|(v, os)| value_to_tensor(v, &os.shape))
             .collect()
     }
 
+    /// Total executions dispatched through this runtime.
     pub fn total_dispatches(&self) -> u64 {
         self.exec_count.borrow().values().sum()
     }
@@ -309,14 +469,15 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_root() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
     #[test]
-    fn manifest_loads_micro() {
-        let m = Manifest::load(&artifacts_root().join("micro")).unwrap();
+    fn builtin_manifest_micro_schema() {
+        let m = Manifest::builtin("micro").unwrap();
         assert_eq!(m.cfg.name, "micro");
         assert_eq!(m.cfg.n_blocks, 2);
         assert_eq!(m.params[0].name, "tok_emb");
@@ -328,45 +489,88 @@ mod tests {
     }
 
     #[test]
+    fn open_without_artifacts_uses_native_backend() {
+        // artifacts/micro does not exist in a clean checkout — open()
+        // must still serve the built-in config natively.
+        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        assert_eq!(rt.backend_kind(), "native");
+        assert_eq!(rt.cfg().name, "micro");
+    }
+
+    #[test]
+    fn open_unknown_config_errors() {
+        assert!(Runtime::open(artifacts_root().join("no_such_model")).is_err());
+    }
+
+    #[test]
     fn fwdbwd_runs_and_loss_is_ln_vocab() {
         let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
         let cfg = rt.cfg().clone();
         let params = crate::model::init_params(&rt.manifest, 0);
-        let mut inputs: Vec<xla::Literal> =
-            params.iter().map(|t| tensor_to_literal(t).unwrap()).collect();
+        let mut inputs: Vec<Value> =
+            params.iter().map(|t| tensor_to_value(t).unwrap()).collect();
         let toks: Vec<i32> =
             (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
-        inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
-        inputs.push(tokens_to_literal(&toks, cfg.batch, cfg.seq).unwrap());
+        inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+        inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
         let outs = rt.exec("fwdbwd", &inputs).unwrap();
         assert_eq!(outs.len(), 1 + params.len());
-        let loss = literal_scalar_f32(&outs[0]).unwrap();
+        let loss = value_scalar_f32(&outs[0]).unwrap();
         let expect = (cfg.vocab as f32).ln();
         assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln V {expect}");
-        for (lit, p) in outs[1..].iter().zip(&params) {
-            let g = literal_to_tensor(lit, &p.shape).unwrap();
+        for (v, p) in outs[1..].iter().zip(&params) {
+            let g = value_to_tensor(v, &p.shape).unwrap();
             assert!(g.all_finite());
         }
     }
 
     #[test]
-    fn executable_cache_hits() {
-        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
-        let a = rt.executable("eval_loss").unwrap();
-        let b = rt.executable("eval_loss").unwrap();
-        assert!(std::rc::Rc::ptr_eq(&a, &b));
-        assert_eq!(rt.total_dispatches(), 0); // compiling is not dispatching
+    fn dispatch_counter_counts() {
+        let rt = Runtime::native("micro").unwrap();
+        assert_eq!(rt.total_dispatches(), 0);
+        let cfg = rt.cfg().clone();
+        let params = crate::model::init_params(&rt.manifest, 0);
+        let mut inputs: Vec<Value> =
+            params.iter().map(|t| tensor_to_value(t).unwrap()).collect();
+        let toks: Vec<i32> = vec![0; cfg.batch * cfg.seq];
+        inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+        inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
+        rt.exec("eval_loss", &inputs).unwrap();
+        rt.exec("eval_loss", &inputs).unwrap();
+        assert_eq!(rt.total_dispatches(), 2);
+        assert_eq!(rt.exec_count.borrow()["eval_loss"], 2);
     }
 
     #[test]
     fn missing_executable_errors() {
-        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        let rt = Runtime::native("micro").unwrap();
         assert!(rt.exec("nope", &[]).is_err());
     }
 
     #[test]
     fn input_arity_checked() {
-        let rt = Runtime::open(artifacts_root().join("micro")).unwrap();
+        let rt = Runtime::native("micro").unwrap();
         assert!(rt.exec("fwdbwd", &[]).is_err());
+    }
+
+    #[test]
+    fn value_roundtrips() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let v = tensor_to_value(&t).unwrap();
+        assert_eq!(v.dtype(), "f32");
+        assert_eq!(v.shape(), &[2, 3]);
+        let back = value_to_tensor(&v, &[3, 2]).unwrap();
+        assert_eq!(back.shape, vec![3, 2]);
+        assert_eq!(back.data, t.data);
+        assert!(value_to_tensor(&v, &[4]).is_err());
+
+        let toks = tokens_to_value(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert_eq!(toks.dtype(), "s32");
+        assert_eq!(toks.as_tokens().unwrap(), &[1, 2, 3, 4]);
+        assert!(toks.as_tensor().is_err());
+        assert!(tokens_to_value(&[1, 2, 3], 2, 2).is_err());
+
+        let scalar = Value::F32(Tensor::new(vec![], vec![7.5]));
+        assert_eq!(value_scalar_f32(&scalar).unwrap(), 7.5);
     }
 }

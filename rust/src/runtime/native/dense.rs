@@ -1,0 +1,845 @@
+//! Pure-Rust reference kernels for the dense decoder-only transformer —
+//! the native port of `python/compile/model.py` (and of the reference
+//! kernels in `python/compile/kernels/ref.py`): embedding, pre-norm
+//! block (RMSNorm → causal attention → RMSNorm → GELU MLP), head loss,
+//! and the hand-written backward through all of it.
+//!
+//! The backward mirrors `model.split_fwdbwd`: forward activations come
+//! from `params_fwd`, every weight used *inside* backward ops comes
+//! from `params_bwd`. With both sets equal this is exactly the true
+//! gradient (`fwdbwd`); with them different it is the deliberately
+//! incorrect no-weight-stashing gradient (`fwdbwd_split`, paper
+//! Fig. 10).
+//!
+//! All math is f32, row-major, and runs identically whether invoked as
+//! the whole-model `fwdbwd` graph (simulator) or as the per-block
+//! `block_fwd`/`block_bwd` graphs (threaded engine) — the engine's
+//! backward recomputes the forward from the same weights, so both paths
+//! produce bit-identical trajectories, which `engine_matches_sim` pins.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+
+pub const RMS_EPS: f32 = 1e-5;
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const NEG_INF: f32 = -1e30;
+
+pub const N_BLOCK_PARAMS: usize = 6; // g1, wqkv, wo, g2, w1, w2
+
+// ---------------------------------------------------------------------------
+// Small matmul helpers on raw row-major slices
+// ---------------------------------------------------------------------------
+
+/// C(m,n) = A(m,k) @ B(k,n).
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// C(m,n) = A(m,k) @ B(n,k)^T.
+pub fn mm_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+/// C(m,n) = A(k,m)^T @ B(k,n).
+pub fn mm_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn add_into(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+fn added(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Activation pieces
+// ---------------------------------------------------------------------------
+
+pub fn gelu(u: f32) -> f32 {
+    0.5 * u * (1.0 + (GELU_C * (u + 0.044715 * u * u * u)).tanh())
+}
+
+pub fn gelu_grad(u: f32) -> f32 {
+    let t = (GELU_C * (u + 0.044715 * u * u * u)).tanh();
+    let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * u * u);
+    0.5 * (1.0 + t) + 0.5 * u * dt
+}
+
+/// Per-token RMSNorm scale r = 1/sqrt(mean(x^2) + eps). x: (T, d).
+pub fn rms_r(x: &[f32], d: usize) -> Vec<f32> {
+    x.chunks_exact(d)
+        .map(|row| {
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            1.0 / (ms + RMS_EPS).sqrt()
+        })
+        .collect()
+}
+
+/// y = x * r * g.
+pub fn rms_apply(x: &[f32], r: &[f32], g: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (t, row) in x.chunks_exact(d).enumerate() {
+        let orow = &mut out[t * d..(t + 1) * d];
+        for ((o, &xi), &gi) in orow.iter_mut().zip(row).zip(g) {
+            *o = xi * r[t] * gi;
+        }
+    }
+    out
+}
+
+/// Backward of y = x*r*g: weights from `g_bwd`, activations (x, r) from
+/// the forward cache. Returns (dx, dg).
+pub fn rms_bwd(
+    dy: &[f32],
+    g_bwd: &[f32],
+    x: &[f32],
+    r: &[f32],
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let t_len = r.len();
+    let mut dx = vec![0.0f32; dy.len()];
+    let mut dg = vec![0.0f32; d];
+    for t in 0..t_len {
+        let xr = &x[t * d..(t + 1) * d];
+        let dyr = &dy[t * d..(t + 1) * d];
+        let rt = r[t];
+        let mut mean = 0.0f32;
+        for i in 0..d {
+            dg[i] += dyr[i] * xr[i] * rt;
+            mean += dyr[i] * g_bwd[i] * xr[i];
+        }
+        mean /= d as f32;
+        let r3 = rt * rt * rt;
+        let dxr = &mut dx[t * d..(t + 1) * d];
+        for i in 0..d {
+            dxr[i] = rt * dyr[i] * g_bwd[i] - xr[i] * r3 * mean;
+        }
+    }
+    (dx, dg)
+}
+
+// ---------------------------------------------------------------------------
+// Causal multi-head attention
+// ---------------------------------------------------------------------------
+
+/// Forward cache of one attention call, laid out per (batch, head):
+/// q/k/v are `[b][h][s][hd]`, p is the `[b][h][query][key]` softmax.
+pub struct AttnCache {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub p: Vec<f32>,
+}
+
+/// Causal attention over a packed qkv projection. `qkv`: (T, 3*d_model)
+/// with T = batch*seq. Returns the head-concatenated context (T, d_model)
+/// plus the cache for backward.
+pub fn attention_fwd(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let h = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let bh = b * h;
+    let mut q = vec![0.0f32; bh * s * hd];
+    let mut k = vec![0.0f32; bh * s * hd];
+    let mut v = vec![0.0f32; bh * s * hd];
+    let mut p = vec![0.0f32; bh * s * s];
+    let mut oc = vec![0.0f32; b * s * d];
+
+    for bi in 0..b {
+        for hi in 0..h {
+            let base = (bi * h + hi) * s * hd;
+            // gather per-head q/k/v from the packed (T, 3D) projection
+            for si in 0..s {
+                let row = (bi * s + si) * 3 * d;
+                for j in 0..hd {
+                    q[base + si * hd + j] = qkv[row + hi * hd + j];
+                    k[base + si * hd + j] = qkv[row + d + hi * hd + j];
+                    v[base + si * hd + j] = qkv[row + 2 * d + hi * hd + j];
+                }
+            }
+            let qm = &q[base..base + s * hd];
+            let km = &k[base..base + s * hd];
+            let vm = &v[base..base + s * hd];
+            // att = q k^T * scale, causal mask, row softmax
+            let mut att = mm_bt(qm, km, s, hd, s);
+            for x in att.iter_mut() {
+                *x *= scale;
+            }
+            for qi in 0..s {
+                for ki in (qi + 1)..s {
+                    att[qi * s + ki] = NEG_INF;
+                }
+            }
+            let pbase = (bi * h + hi) * s * s;
+            for qi in 0..s {
+                let row = &mut att[qi * s..(qi + 1) * s];
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let mut sum = 0.0f32;
+                for x in row.iter_mut() {
+                    *x = (*x - max).exp();
+                    sum += *x;
+                }
+                let prow = &mut p[pbase + qi * s..pbase + (qi + 1) * s];
+                for (pv, &e) in prow.iter_mut().zip(row.iter()) {
+                    *pv = e / sum;
+                }
+            }
+            // o = p @ v, scattered back head-concatenated
+            let o = mm(&p[pbase..pbase + s * s], vm, s, s, hd);
+            for si in 0..s {
+                let row = (bi * s + si) * d;
+                for j in 0..hd {
+                    oc[row + hi * hd + j] = o[si * hd + j];
+                }
+            }
+        }
+    }
+    (oc, AttnCache { q, k, v, p })
+}
+
+/// Backward of [`attention_fwd`]: `doc` is the gradient w.r.t. the
+/// head-concatenated context (T, d_model); returns the gradient w.r.t.
+/// the packed qkv projection (T, 3*d_model).
+pub fn attention_bwd(cfg: &ModelCfg, cache: &AttnCache, doc: &[f32]) -> Vec<f32> {
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let h = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = vec![0.0f32; b * s * 3 * d];
+
+    for bi in 0..b {
+        for hi in 0..h {
+            let base = (bi * h + hi) * s * hd;
+            let pbase = (bi * h + hi) * s * s;
+            let qm = &cache.q[base..base + s * hd];
+            let km = &cache.k[base..base + s * hd];
+            let vm = &cache.v[base..base + s * hd];
+            let pm = &cache.p[pbase..pbase + s * s];
+            // gather the per-head slice of doc
+            let mut do_h = vec![0.0f32; s * hd];
+            for si in 0..s {
+                let row = (bi * s + si) * d;
+                do_h[si * hd..(si + 1) * hd]
+                    .copy_from_slice(&doc[row + hi * hd..row + (hi + 1) * hd]);
+            }
+            // dv = p^T @ do ; dp = do @ v^T
+            let dv = mm_at(pm, &do_h, s, s, hd);
+            let dp = mm_bt(&do_h, vm, s, hd, s);
+            // softmax backward: datt = p * (dp - rowsum(dp * p))
+            let mut datt = vec![0.0f32; s * s];
+            for qi in 0..s {
+                let prow = &pm[qi * s..(qi + 1) * s];
+                let dprow = &dp[qi * s..(qi + 1) * s];
+                let mut dot = 0.0f32;
+                for (pv, dpv) in prow.iter().zip(dprow) {
+                    dot += pv * dpv;
+                }
+                let drow = &mut datt[qi * s..(qi + 1) * s];
+                for ((dr, &pv), &dpv) in drow.iter_mut().zip(prow).zip(dprow) {
+                    *dr = pv * (dpv - dot);
+                }
+            }
+            // dq = datt @ k * scale ; dk = datt^T @ q * scale
+            let mut dq = mm(&datt, km, s, s, hd);
+            let mut dk = mm_at(&datt, qm, s, s, hd);
+            for x in dq.iter_mut() {
+                *x *= scale;
+            }
+            for x in dk.iter_mut() {
+                *x *= scale;
+            }
+            // scatter into the packed layout
+            for si in 0..s {
+                let row = (bi * s + si) * 3 * d;
+                for j in 0..hd {
+                    dqkv[row + hi * hd + j] = dq[si * hd + j];
+                    dqkv[row + d + hi * hd + j] = dk[si * hd + j];
+                    dqkv[row + 2 * d + hi * hd + j] = dv[si * hd + j];
+                }
+            }
+        }
+    }
+    dqkv
+}
+
+// ---------------------------------------------------------------------------
+// Transformer block (pre-norm, GELU MLP)
+// ---------------------------------------------------------------------------
+
+/// Forward activation cache of one block.
+pub struct BlockCache {
+    pub x_in: Vec<f32>,
+    pub r1: Vec<f32>,
+    pub a: Vec<f32>,
+    pub attn: AttnCache,
+    pub oc: Vec<f32>,
+    pub x_mid: Vec<f32>,
+    pub r2: Vec<f32>,
+    pub bnorm: Vec<f32>,
+    pub u: Vec<f32>,
+    pub gu: Vec<f32>,
+}
+
+/// One pre-norm block. `bp` = [g1, wqkv, wo, g2, w1, w2] (schema
+/// order); `x_in`: (T, d_model). Returns (x_out, cache).
+pub fn block_fwd_cached(cfg: &ModelCfg, bp: &[&Tensor], x_in: &[f32]) -> (Vec<f32>, BlockCache) {
+    let (b, s, d, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff);
+    let t = b * s;
+    let (g1, wqkv, wo, g2, w1, w2) = (bp[0], bp[1], bp[2], bp[3], bp[4], bp[5]);
+
+    let r1 = rms_r(x_in, d);
+    let a = rms_apply(x_in, &r1, &g1.data, d);
+    let qkv = mm(&a, &wqkv.data, t, d, 3 * d);
+    let (oc, attn) = attention_fwd(cfg, &qkv);
+    let x_mid = added(x_in, &mm(&oc, &wo.data, t, d, d));
+    let r2 = rms_r(&x_mid, d);
+    let bnorm = rms_apply(&x_mid, &r2, &g2.data, d);
+    let u = mm(&bnorm, &w1.data, t, d, f);
+    let gu: Vec<f32> = u.iter().map(|&x| gelu(x)).collect();
+    let x_out = added(&x_mid, &mm(&gu, &w2.data, t, f, d));
+    let cache = BlockCache {
+        x_in: x_in.to_vec(),
+        r1,
+        a,
+        attn,
+        oc,
+        x_mid,
+        r2,
+        bnorm,
+        u,
+        gu,
+    };
+    (x_out, cache)
+}
+
+/// Backward through one block: weights from `bp_bwd`, activations from
+/// `cache`, upstream gradient `dy`. Returns (dx, [dg1, dwqkv, dwo, dg2,
+/// dw1, dw2]).
+pub fn block_bwd_from_cache(
+    cfg: &ModelCfg,
+    bp_bwd: &[&Tensor],
+    cache: &BlockCache,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<Tensor>) {
+    let (b, s, d, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff);
+    let t = b * s;
+    let (g1, wqkv, wo, g2, w1, w2) =
+        (bp_bwd[0], bp_bwd[1], bp_bwd[2], bp_bwd[3], bp_bwd[4], bp_bwd[5]);
+
+    // MLP branch: x_out = x_mid + gelu(bnorm @ w1) @ w2
+    let dw2 = mm_at(&cache.gu, dy, t, f, d);
+    let dgu = mm_bt(dy, &w2.data, t, d, f);
+    let du: Vec<f32> = dgu
+        .iter()
+        .zip(&cache.u)
+        .map(|(&dg, &u)| dg * gelu_grad(u))
+        .collect();
+    let dw1 = mm_at(&cache.bnorm, &du, t, d, f);
+    let dbnorm = mm_bt(&du, &w1.data, t, f, d);
+    let (dx_mid_norm, dg2) = rms_bwd(&dbnorm, &g2.data, &cache.x_mid, &cache.r2, d);
+    let dx_mid = added(dy, &dx_mid_norm);
+
+    // Attention branch: x_mid = x_in + oc @ wo
+    let dwo = mm_at(&cache.oc, &dx_mid, t, d, d);
+    let doc = mm_bt(&dx_mid, &wo.data, t, d, d);
+    let dqkv = attention_bwd(cfg, &cache.attn, &doc);
+    let dwqkv = mm_at(&cache.a, &dqkv, t, d, 3 * d);
+    let da = mm_bt(&dqkv, &wqkv.data, t, 3 * d, d);
+    let (dx_in_norm, dg1) = rms_bwd(&da, &g1.data, &cache.x_in, &cache.r1, d);
+    let dx = added(&dx_mid, &dx_in_norm);
+
+    let grads = vec![
+        Tensor::new(g1.shape.clone(), dg1),
+        Tensor::new(wqkv.shape.clone(), dwqkv),
+        Tensor::new(wo.shape.clone(), dwo),
+        Tensor::new(g2.shape.clone(), dg2),
+        Tensor::new(w1.shape.clone(), dw1),
+        Tensor::new(w2.shape.clone(), dw2),
+    ];
+    (dx, grads)
+}
+
+// ---------------------------------------------------------------------------
+// Embedding and head
+// ---------------------------------------------------------------------------
+
+/// x[b,s] = tok_emb[tokens[b,s]] + pos_emb[s]; returns (T, d_model).
+pub fn embed_fwd(cfg: &ModelCfg, tok_emb: &Tensor, pos_emb: &Tensor, toks: &[i32]) -> Vec<f32> {
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let mut x = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let tok = toks[bi * s + si] as usize;
+            let row = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
+            let te = &tok_emb.data[tok * d..(tok + 1) * d];
+            let pe = &pos_emb.data[si * d..(si + 1) * d];
+            for ((xo, &t), &p) in row.iter_mut().zip(te).zip(pe) {
+                *xo = t + p;
+            }
+        }
+    }
+    x
+}
+
+/// Backward of the embedding: scatter-add into dtok, batch-sum into
+/// dpos.
+pub fn embed_bwd(cfg: &ModelCfg, toks: &[i32], dx: &[f32]) -> (Tensor, Tensor) {
+    let (b, s, d, v) = (cfg.batch, cfg.seq, cfg.d_model, cfg.vocab);
+    let mut dtok = vec![0.0f32; v * d];
+    let mut dpos = vec![0.0f32; s * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let tok = toks[bi * s + si] as usize;
+            let row = &dx[(bi * s + si) * d..(bi * s + si + 1) * d];
+            add_into(&mut dtok[tok * d..(tok + 1) * d], row);
+            add_into(&mut dpos[si * d..(si + 1) * d], row);
+        }
+    }
+    (Tensor::new(vec![v, d], dtok), Tensor::new(vec![s, d], dpos))
+}
+
+/// Forward-only head loss (eval path): mean cross-entropy of
+/// `rmsnorm(x, gf) @ head` against `targets`.
+pub fn head_loss(cfg: &ModelCfg, gf: &Tensor, head: &Tensor, x: &[f32], tgts: &[i32]) -> f32 {
+    let (d, v) = (cfg.d_model, cfg.vocab);
+    let t = cfg.batch * cfg.seq;
+    let rf = rms_r(x, d);
+    let xf = rms_apply(x, &rf, &gf.data, d);
+    let logits = mm(&xf, &head.data, t, d, v);
+    let mut loss = 0.0f32;
+    for ti in 0..t {
+        let row = &logits[ti * v..(ti + 1) * v];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let lse = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+        loss += lse - row[tgts[ti] as usize];
+    }
+    loss / t as f32
+}
+
+/// Head forward+backward with split weights: the loss and `dhead`'s
+/// activation side use the forward weights; the matmul/norm transposes
+/// inside the backward use the backward weights. Returns
+/// (loss, dx, dgf, dhead).
+#[allow(clippy::too_many_arguments)]
+pub fn head_fwdbwd_split(
+    cfg: &ModelCfg,
+    gf_f: &Tensor,
+    head_f: &Tensor,
+    gf_b: &Tensor,
+    head_b: &Tensor,
+    x: &[f32],
+    tgts: &[i32],
+) -> (f32, Vec<f32>, Tensor, Tensor) {
+    let (d, v) = (cfg.d_model, cfg.vocab);
+    let t = cfg.batch * cfg.seq;
+    let rf = rms_r(x, d);
+    let xf = rms_apply(x, &rf, &gf_f.data, d);
+    let logits = mm(&xf, &head_f.data, t, d, v);
+
+    let mut loss = 0.0f32;
+    let mut dlogits = vec![0.0f32; t * v];
+    let inv_t = 1.0 / t as f32;
+    for ti in 0..t {
+        let row = &logits[ti * v..(ti + 1) * v];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        let drow = &mut dlogits[ti * v..(ti + 1) * v];
+        for (dv, &l) in drow.iter_mut().zip(row) {
+            *dv = (l - max).exp();
+            sum += *dv;
+        }
+        let lse = sum.ln() + max;
+        let tgt = tgts[ti] as usize;
+        loss += lse - row[tgt];
+        for dv in drow.iter_mut() {
+            *dv = *dv / sum * inv_t; // softmax prob / T
+        }
+        drow[tgt] -= inv_t;
+    }
+    loss *= inv_t;
+
+    let dhead = mm_at(&xf, &dlogits, t, d, v);
+    let dxf = mm_bt(&dlogits, &head_b.data, t, v, d);
+    let (dx, dgf) = rms_bwd(&dxf, &gf_b.data, x, &rf, d);
+    (
+        loss,
+        dx,
+        Tensor::new(gf_b.shape.clone(), dgf),
+        Tensor::new(head_b.shape.clone(), dhead),
+    )
+}
+
+/// Head forward+backward with a single weight set (the engine's
+/// `head_fwdbwd` graph).
+pub fn head_fwdbwd(
+    cfg: &ModelCfg,
+    gf: &Tensor,
+    head: &Tensor,
+    x: &[f32],
+    tgts: &[i32],
+) -> (f32, Vec<f32>, Tensor, Tensor) {
+    head_fwdbwd_split(cfg, gf, head, gf, head, x, tgts)
+}
+
+// ---------------------------------------------------------------------------
+// Whole-model graphs (composed from the per-block primitives)
+// ---------------------------------------------------------------------------
+
+/// The 6 block parameters of block `b` in schema order.
+pub fn block_params(params: &[Tensor], b: usize) -> Vec<&Tensor> {
+    params[2 + b * N_BLOCK_PARAMS..2 + (b + 1) * N_BLOCK_PARAMS].iter().collect()
+}
+
+fn check_dense(cfg: &ModelCfg) -> Result<()> {
+    if cfg.moe.is_some() {
+        bail!("dense graph invoked on MoE config {:?}", cfg.name);
+    }
+    Ok(())
+}
+
+/// Whole-model eval loss.
+pub fn eval_loss(cfg: &ModelCfg, params: &[Tensor], toks: &[i32], tgts: &[i32]) -> Result<f32> {
+    check_dense(cfg)?;
+    let mut x = embed_fwd(cfg, &params[0], &params[1], toks);
+    for b in 0..cfg.n_blocks {
+        let bp = block_params(params, b);
+        let (x_out, _) = block_fwd_cached(cfg, &bp, &x);
+        x = x_out;
+    }
+    let n = params.len();
+    Ok(head_loss(cfg, &params[n - 2], &params[n - 1], &x, tgts))
+}
+
+/// Whole-model loss + gradients with split forward/backward weights
+/// (`fwdbwd_split`); `fwdbwd` is the special case `params_fwd ==
+/// params_bwd`. Returns (loss, grads in schema order).
+pub fn fwdbwd_split(
+    cfg: &ModelCfg,
+    params_fwd: &[Tensor],
+    params_bwd: &[Tensor],
+    toks: &[i32],
+    tgts: &[i32],
+) -> Result<(f32, Vec<Tensor>)> {
+    check_dense(cfg)?;
+    let n = params_fwd.len();
+    // forward with activation caches (weights = fwd)
+    let mut x = embed_fwd(cfg, &params_fwd[0], &params_fwd[1], toks);
+    let mut caches = Vec::with_capacity(cfg.n_blocks);
+    for b in 0..cfg.n_blocks {
+        let bp = block_params(params_fwd, b);
+        let (x_out, cache) = block_fwd_cached(cfg, &bp, &x);
+        caches.push(cache);
+        x = x_out;
+    }
+    // head (loss from fwd weights, backward transposes from bwd ones)
+    let (loss, mut dx, dgf, dhead) = head_fwdbwd_split(
+        cfg,
+        &params_fwd[n - 2],
+        &params_fwd[n - 1],
+        &params_bwd[n - 2],
+        &params_bwd[n - 1],
+        &x,
+        tgts,
+    );
+    // blocks in reverse (weights = bwd, activations from the caches)
+    let mut block_grads: Vec<Vec<Tensor>> = Vec::with_capacity(cfg.n_blocks);
+    for b in (0..cfg.n_blocks).rev() {
+        let bp = block_params(params_bwd, b);
+        let (dx_new, grads) = block_bwd_from_cache(cfg, &bp, &caches[b], &dx);
+        dx = dx_new;
+        block_grads.push(grads);
+    }
+    block_grads.reverse();
+    let (dtok, dpos) = embed_bwd(cfg, toks, &dx);
+
+    let mut grads = Vec::with_capacity(n);
+    grads.push(dtok);
+    grads.push(dpos);
+    for bg in block_grads {
+        grads.extend(bg);
+    }
+    grads.push(dgf);
+    grads.push(dhead);
+    Ok((loss, grads))
+}
+
+/// Whole-model loss + true gradients.
+pub fn fwdbwd(
+    cfg: &ModelCfg,
+    params: &[Tensor],
+    toks: &[i32],
+    tgts: &[i32],
+) -> Result<(f32, Vec<Tensor>)> {
+    fwdbwd_split(cfg, params, params, toks, tgts)
+}
+
+/// Hessian-vector product via central differences of the gradient:
+/// `Hv = (g(p + eps v) - g(p - eps v)) / (2 eps)`. The PJRT path lowers
+/// an exact forward-over-reverse `hvp` graph; the native backend uses
+/// this O(eps^2) finite-difference approximation, which is accurate
+/// enough for the Fig. 11 alignment diagnostics it serves.
+pub fn hvp(
+    cfg: &ModelCfg,
+    params: &[Tensor],
+    vec: &[Tensor],
+    toks: &[i32],
+    tgts: &[i32],
+) -> Result<Vec<Tensor>> {
+    check_dense(cfg)?;
+    let vnorm: f32 = vec
+        .iter()
+        .map(|t| t.data.iter().map(|x| x * x).sum::<f32>())
+        .sum::<f32>()
+        .sqrt();
+    if vnorm == 0.0 {
+        return Ok(vec.iter().map(|t| Tensor::zeros(&t.shape)).collect());
+    }
+    let eps = 1e-2 / vnorm;
+    let shift = |sign: f32| -> Vec<Tensor> {
+        params
+            .iter()
+            .zip(vec)
+            .map(|(p, v)| {
+                let mut q = p.clone();
+                q.axpy(sign * eps, v);
+                q
+            })
+            .collect()
+    };
+    let (_, g_plus) = fwdbwd(cfg, &shift(1.0), toks, tgts)?;
+    let (_, g_minus) = fwdbwd(cfg, &shift(-1.0), toks, tgts)?;
+    Ok(g_plus
+        .iter()
+        .zip(&g_minus)
+        .map(|(gp, gm)| {
+            let data = gp
+                .data
+                .iter()
+                .zip(&gm.data)
+                .map(|(&a, &b)| (a - b) / (2.0 * eps))
+                .collect();
+            Tensor::new(gp.shape.clone(), data)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Rng;
+
+    fn micro() -> ModelCfg {
+        crate::runtime::presets::builtin_model_cfg("micro").unwrap()
+    }
+
+    fn randn(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    #[test]
+    fn mm_variants_agree_with_tensor_matmul() {
+        let mut rng = Rng::new(1);
+        let a = randn(&mut rng, &[3, 5], 1.0);
+        let b = randn(&mut rng, &[5, 4], 1.0);
+        let c = a.matmul(&b);
+        assert_eq!(mm(&a.data, &b.data, 3, 5, 4), c.data);
+        let bt = b.transpose();
+        assert_eq!(mm_bt(&a.data, &bt.data, 3, 5, 4), c.data);
+        let at = a.transpose();
+        assert_eq!(mm_at(&at.data, &b.data, 5, 3, 4), c.data);
+    }
+
+    #[test]
+    fn rms_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(2);
+        let d = 6;
+        let t = 4;
+        let x = randn(&mut rng, &[t, d], 1.0);
+        let g = randn(&mut rng, &[d], 1.0);
+        let dy = randn(&mut rng, &[t, d], 1.0);
+        let r = rms_r(&x.data, d);
+        let (dx, dg) = rms_bwd(&dy.data, &g.data, &x.data, &r, d);
+        // loss = sum(dy * rmsnorm(x, g)); check d loss / d x numerically
+        let loss = |xd: &[f32], gd: &[f32]| -> f64 {
+            let r = rms_r(xd, d);
+            let y = rms_apply(xd, &r, gd, d);
+            y.iter().zip(&dy.data).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, 13, 23] {
+            let mut xp = x.data.clone();
+            let mut xm = x.data.clone();
+            xp[idx] += eps;
+            xm[idx] -= eps;
+            let num = (loss(&xp, &g.data) - loss(&xm, &g.data)) / (2.0 * eps as f64);
+            assert!((num - dx[idx] as f64).abs() < 2e-3, "dx[{idx}]: {num} vs {}", dx[idx]);
+        }
+        for idx in [0usize, 3, 5] {
+            let mut gp = g.data.clone();
+            let mut gm = g.data.clone();
+            gp[idx] += eps;
+            gm[idx] -= eps;
+            let num = (loss(&x.data, &gp) - loss(&x.data, &gm)) / (2.0 * eps as f64);
+            assert!((num - dg[idx] as f64).abs() < 2e-3, "dg[{idx}]: {num} vs {}", dg[idx]);
+        }
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // Changing a *future* token's q/k/v must not change earlier
+        // outputs.
+        let cfg = micro();
+        let t = cfg.batch * cfg.seq;
+        let mut rng = Rng::new(3);
+        let qkv = randn(&mut rng, &[t, 3 * cfg.d_model], 1.0);
+        let (oc1, _) = attention_fwd(&cfg, &qkv.data);
+        let mut qkv2 = qkv.data.clone();
+        // perturb the last position of batch row 0
+        let last = (cfg.seq - 1) * 3 * cfg.d_model;
+        for x in qkv2[last..last + 3 * cfg.d_model].iter_mut() {
+            *x += 1.0;
+        }
+        let (oc2, _) = attention_fwd(&cfg, &qkv2);
+        let d = cfg.d_model;
+        for si in 0..cfg.seq - 1 {
+            for j in 0..d {
+                assert_eq!(oc1[si * d + j], oc2[si * d + j], "leak at s={si}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwdbwd_grads_match_finite_differences() {
+        let cfg = micro();
+        let man = crate::runtime::presets::manifest_from_cfg(&cfg);
+        let params = crate::model::init_params(&man, 5);
+        let t = cfg.batch * cfg.seq;
+        let toks: Vec<i32> = (0..t).map(|i| ((i * 5 + 1) % cfg.vocab) as i32).collect();
+        let tgts: Vec<i32> = (0..t).map(|i| ((i * 3 + 2) % cfg.vocab) as i32).collect();
+        let (loss, grads) = fwdbwd(&cfg, &params, &toks, &tgts).unwrap();
+        assert!(loss.is_finite());
+        // spot-check a handful of coordinates across distinct params
+        let mut rng = Rng::new(9);
+        let eps = 3e-2f32;
+        for pi in [0usize, 2, 3, 4, 6, 7, 14, 15] {
+            let idx = rng.below(params[pi].len());
+            let mut pp = params.clone();
+            pp[pi].data[idx] += eps;
+            let lp = eval_loss(&cfg, &pp, &toks, &tgts).unwrap();
+            let mut pm = params.clone();
+            pm[pi].data[idx] -= eps;
+            let lm = eval_loss(&cfg, &pm, &toks, &tgts).unwrap();
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = grads[pi].data[idx];
+            assert!(
+                (num - ana).abs() < 2e-3 + 0.05 * ana.abs().max(num.abs()),
+                "param {pi} [{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_equals_fused_when_weights_equal() {
+        let cfg = micro();
+        let man = crate::runtime::presets::manifest_from_cfg(&cfg);
+        let params = crate::model::init_params(&man, 6);
+        let t = cfg.batch * cfg.seq;
+        let toks: Vec<i32> = (0..t).map(|i| ((i * 7) % cfg.vocab) as i32).collect();
+        let (l1, g1) = fwdbwd(&cfg, &params, &toks, &toks).unwrap();
+        let (l2, g2) = fwdbwd_split(&cfg, &params, &params, &toks, &toks).unwrap();
+        assert_eq!(l1, l2);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn hvp_is_approximately_linear() {
+        // H(2v) == 2 Hv up to the finite-difference error.
+        let cfg = micro();
+        let man = crate::runtime::presets::manifest_from_cfg(&cfg);
+        let params = crate::model::init_params(&man, 7);
+        let t = cfg.batch * cfg.seq;
+        let toks: Vec<i32> = (0..t).map(|i| ((i * 11) % cfg.vocab) as i32).collect();
+        let mut rng = Rng::new(8);
+        let v: Vec<Tensor> = params
+            .iter()
+            .map(|p| {
+                let mut t = Tensor::zeros(&p.shape);
+                rng.fill_normal(&mut t.data, 1.0);
+                t
+            })
+            .collect();
+        let v2: Vec<Tensor> = v.iter().map(|t| t.scale(2.0)).collect();
+        let hv = hvp(&cfg, &params, &v, &toks, &toks).unwrap();
+        let hv2 = hvp(&cfg, &params, &v2, &toks, &toks).unwrap();
+        let norm = |xs: &[Tensor]| -> f64 {
+            xs.iter()
+                .map(|t| t.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+                .sum::<f64>()
+                .sqrt()
+        };
+        let diff: Vec<Tensor> = hv2
+            .iter()
+            .zip(&hv)
+            .map(|(a, b)| a.sub(&b.scale(2.0)))
+            .collect();
+        let rel = norm(&diff) / norm(&hv2).max(1e-12);
+        assert!(rel < 0.15, "relative nonlinearity {rel}");
+        assert!(hv.iter().all(|t| t.all_finite()));
+    }
+}

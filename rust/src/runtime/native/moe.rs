@@ -1,0 +1,466 @@
+//! Pure-Rust reference kernels for the Mixture-of-Experts model variant
+//! (native port of `python/compile/moe.py`, paper Fig. 21).
+//!
+//! Each block replaces the dense MLP with a top-k routed expert MLP.
+//! Experts are computed densely and combined with the (sparse,
+//! renormalized) gate matrix — numerically identical to
+//! dispatch/combine at this scale. The routing decision (the top-k
+//! mask) is a stop-gradient, gradients flow through the kept
+//! probabilities; a Switch-style load-balancing auxiliary loss with
+//! coefficient 0.01 is added to the training objective (the reported
+//! loss stays plain cross-entropy).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+
+use super::dense::{
+    attention_bwd, attention_fwd, embed_bwd, embed_fwd, gelu, gelu_grad, head_fwdbwd,
+    head_loss, mm, mm_at, mm_bt, rms_apply, rms_bwd, rms_r, AttnCache,
+};
+
+const AUX_COEF: f32 = 0.01;
+const N_BLOCK_PARAMS: usize = 7; // g1, wqkv, wo, g2, router, w1e, w2e
+
+struct MoeBlockCache {
+    x_in: Vec<f32>,
+    r1: Vec<f32>,
+    a: Vec<f32>,
+    attn: AttnCache,
+    oc: Vec<f32>,
+    x_mid: Vec<f32>,
+    r2: Vec<f32>,
+    bnorm: Vec<f32>,
+    probs: Vec<f32>,       // (T, E)
+    mask: Vec<f32>,        // (T, E) in {0, 1}, stop-gradient
+    kept: Vec<f32>,        // (T, E)
+    denom: Vec<f32>,       // (T,)
+    gates: Vec<f32>,       // (T, E)
+    h_pre: Vec<f32>,       // (E, T, F)
+    h: Vec<f32>,           // (E, T, F)
+    out_e: Vec<f32>,       // (E, T, D)
+    frac_tokens: Vec<f32>, // (E,)
+    aux: f32,
+}
+
+fn block_params(params: &[Tensor], b: usize) -> Vec<&Tensor> {
+    params[2 + b * N_BLOCK_PARAMS..2 + (b + 1) * N_BLOCK_PARAMS].iter().collect()
+}
+
+fn moe_cfg(cfg: &ModelCfg) -> Result<(usize, usize)> {
+    match &cfg.moe {
+        Some(m) => Ok((m.n_experts, m.top_k)),
+        None => bail!("MoE graph invoked on dense config {:?}", cfg.name),
+    }
+}
+
+/// One MoE block forward. `bp` = [g1, wqkv, wo, g2, router, w1e, w2e].
+fn block_fwd_cached(cfg: &ModelCfg, bp: &[&Tensor], x_in: &[f32]) -> Result<(Vec<f32>, MoeBlockCache)> {
+    let (b, s, d, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff);
+    let t = b * s;
+    let (e_n, top_k) = moe_cfg(cfg)?;
+    let (g1, wqkv, wo, g2, router, w1e, w2e) =
+        (bp[0], bp[1], bp[2], bp[3], bp[4], bp[5], bp[6]);
+
+    // attention half — identical to the dense block
+    let r1 = rms_r(x_in, d);
+    let a = rms_apply(x_in, &r1, &g1.data, d);
+    let qkv = mm(&a, &wqkv.data, t, d, 3 * d);
+    let (oc, attn) = attention_fwd(cfg, &qkv);
+    let x_mid: Vec<f32> = x_in
+        .iter()
+        .zip(&mm(&oc, &wo.data, t, d, d))
+        .map(|(x, y)| x + y)
+        .collect();
+    let r2 = rms_r(&x_mid, d);
+    let bnorm = rms_apply(&x_mid, &r2, &g2.data, d);
+
+    // routing: softmax scores, stop-gradient top-k mask, renormalized
+    // dense gates
+    let scores = mm(&bnorm, &router.data, t, d, e_n);
+    let mut probs = vec![0.0f32; t * e_n];
+    for ti in 0..t {
+        let row = &scores[ti * e_n..(ti + 1) * e_n];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        let prow = &mut probs[ti * e_n..(ti + 1) * e_n];
+        for (p, &x) in prow.iter_mut().zip(row) {
+            *p = (x - max).exp();
+            sum += *p;
+        }
+        for p in prow.iter_mut() {
+            *p /= sum;
+        }
+    }
+    let mut mask = vec![0.0f32; t * e_n];
+    let mut remaining = probs.clone();
+    for _ in 0..top_k {
+        for ti in 0..t {
+            let row = &remaining[ti * e_n..(ti + 1) * e_n];
+            let mut best = 0usize;
+            for (ei, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = ei;
+                }
+            }
+            mask[ti * e_n + best] += 1.0;
+            remaining[ti * e_n + best] -= 1e9;
+        }
+    }
+    let kept: Vec<f32> = probs.iter().zip(&mask).map(|(p, m)| p * m).collect();
+    let mut denom = vec![0.0f32; t];
+    for ti in 0..t {
+        denom[ti] =
+            kept[ti * e_n..(ti + 1) * e_n].iter().sum::<f32>() + 1e-9;
+    }
+    let mut gates = vec![0.0f32; t * e_n];
+    for ti in 0..t {
+        for ei in 0..e_n {
+            gates[ti * e_n + ei] = kept[ti * e_n + ei] / denom[ti];
+        }
+    }
+
+    // dense expert compute, gate-combined
+    let mut h_pre = vec![0.0f32; e_n * t * f];
+    let mut h = vec![0.0f32; e_n * t * f];
+    let mut out_e = vec![0.0f32; e_n * t * d];
+    let mut out = vec![0.0f32; t * d];
+    for ei in 0..e_n {
+        let w1 = &w1e.data[ei * d * f..(ei + 1) * d * f];
+        let w2 = &w2e.data[ei * f * d..(ei + 1) * f * d];
+        let hp = mm(&bnorm, w1, t, d, f);
+        let hg: Vec<f32> = hp.iter().map(|&x| gelu(x)).collect();
+        let oe = mm(&hg, w2, t, f, d);
+        for ti in 0..t {
+            let g = gates[ti * e_n + ei];
+            if g != 0.0 {
+                for j in 0..d {
+                    out[ti * d + j] += g * oe[ti * d + j];
+                }
+            }
+        }
+        h_pre[ei * t * f..(ei + 1) * t * f].copy_from_slice(&hp);
+        h[ei * t * f..(ei + 1) * t * f].copy_from_slice(&hg);
+        out_e[ei * t * d..(ei + 1) * t * d].copy_from_slice(&oe);
+    }
+
+    // Switch-style load-balancing loss
+    let mut frac_tokens = vec![0.0f32; e_n];
+    let mut frac_probs = vec![0.0f32; e_n];
+    for ti in 0..t {
+        for ei in 0..e_n {
+            if gates[ti * e_n + ei] > 0.0 {
+                frac_tokens[ei] += 1.0;
+            }
+            frac_probs[ei] += probs[ti * e_n + ei];
+        }
+    }
+    for ei in 0..e_n {
+        frac_tokens[ei] /= t as f32;
+        frac_probs[ei] /= t as f32;
+    }
+    let aux: f32 = (e_n as f32)
+        * frac_tokens.iter().zip(&frac_probs).map(|(a, b)| a * b).sum::<f32>();
+
+    let x_out: Vec<f32> = x_mid.iter().zip(&out).map(|(x, y)| x + y).collect();
+    let cache = MoeBlockCache {
+        x_in: x_in.to_vec(),
+        r1,
+        a,
+        attn,
+        oc,
+        x_mid,
+        r2,
+        bnorm,
+        probs,
+        mask,
+        kept,
+        denom,
+        gates,
+        h_pre,
+        h,
+        out_e,
+        frac_tokens,
+        aux,
+    };
+    Ok((x_out, cache))
+}
+
+/// Backward through one MoE block. `daux` is the coefficient the total
+/// loss puts on this block's auxiliary loss (AUX_COEF / n_blocks).
+/// Returns (dx, [dg1, dwqkv, dwo, dg2, drouter, dw1e, dw2e]).
+fn block_bwd_from_cache(
+    cfg: &ModelCfg,
+    bp: &[&Tensor],
+    cache: &MoeBlockCache,
+    dy: &[f32],
+    daux: f32,
+) -> Result<(Vec<f32>, Vec<Tensor>)> {
+    let (b, s, d, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff);
+    let t = b * s;
+    let (e_n, _) = moe_cfg(cfg)?;
+    let (g1, wqkv, wo, g2, router, w1e, w2e) =
+        (bp[0], bp[1], bp[2], bp[3], bp[4], bp[5], bp[6]);
+
+    // ---- expert MLP branch: x_out = x_mid + sum_e gates_e * out_e ----
+    let mut dgates = vec![0.0f32; t * e_n];
+    let mut dw1e = vec![0.0f32; e_n * d * f];
+    let mut dw2e = vec![0.0f32; e_n * f * d];
+    let mut dbnorm = vec![0.0f32; t * d];
+    for ei in 0..e_n {
+        let oe = &cache.out_e[ei * t * d..(ei + 1) * t * d];
+        let hg = &cache.h[ei * t * f..(ei + 1) * t * f];
+        let hp = &cache.h_pre[ei * t * f..(ei + 1) * t * f];
+        let w1 = &w1e.data[ei * d * f..(ei + 1) * d * f];
+        let w2 = &w2e.data[ei * f * d..(ei + 1) * f * d];
+        // dgates and the gated upstream gradient
+        let mut dout_e = vec![0.0f32; t * d];
+        for ti in 0..t {
+            let g = cache.gates[ti * e_n + ei];
+            let mut acc = 0.0f32;
+            for j in 0..d {
+                let dyv = dy[ti * d + j];
+                acc += oe[ti * d + j] * dyv;
+                dout_e[ti * d + j] = g * dyv;
+            }
+            dgates[ti * e_n + ei] = acc;
+        }
+        dw2e[ei * f * d..(ei + 1) * f * d]
+            .copy_from_slice(&mm_at(hg, &dout_e, t, f, d));
+        let dh = mm_bt(&dout_e, w2, t, d, f);
+        let dh_pre: Vec<f32> = dh
+            .iter()
+            .zip(hp)
+            .map(|(&g, &u)| g * gelu_grad(u))
+            .collect();
+        dw1e[ei * d * f..(ei + 1) * d * f]
+            .copy_from_slice(&mm_at(&cache.bnorm, &dh_pre, t, d, f));
+        let db = mm_bt(&dh_pre, w1, t, f, d);
+        for (acc, &x) in dbnorm.iter_mut().zip(&db) {
+            *acc += x;
+        }
+    }
+
+    // ---- routing backward ----
+    // gates = kept / denom (mask is a stop-gradient)
+    let mut dprobs = vec![0.0f32; t * e_n];
+    for ti in 0..t {
+        let dg = &dgates[ti * e_n..(ti + 1) * e_n];
+        let kept = &cache.kept[ti * e_n..(ti + 1) * e_n];
+        let den = cache.denom[ti];
+        let mut num = 0.0f32;
+        for (x, k) in dg.iter().zip(kept) {
+            num += x * k;
+        }
+        for ei in 0..e_n {
+            let dkept = dg[ei] / den - num / (den * den);
+            dprobs[ti * e_n + ei] = dkept * cache.mask[ti * e_n + ei];
+        }
+    }
+    // auxiliary loss: d aux / d probs[t,e] = E * frac_tokens[e] / T
+    // (frac_tokens goes through a `> 0` comparison — zero gradient).
+    let aux_scale = daux * e_n as f32 / t as f32;
+    for ti in 0..t {
+        for ei in 0..e_n {
+            dprobs[ti * e_n + ei] += aux_scale * cache.frac_tokens[ei];
+        }
+    }
+    // softmax backward
+    let mut dscores = vec![0.0f32; t * e_n];
+    for ti in 0..t {
+        let p = &cache.probs[ti * e_n..(ti + 1) * e_n];
+        let dp = &dprobs[ti * e_n..(ti + 1) * e_n];
+        let mut dot = 0.0f32;
+        for (x, y) in p.iter().zip(dp) {
+            dot += x * y;
+        }
+        for ei in 0..e_n {
+            dscores[ti * e_n + ei] = p[ei] * (dp[ei] - dot);
+        }
+    }
+    let drouter = mm_at(&cache.bnorm, &dscores, t, d, e_n);
+    let db = mm_bt(&dscores, &router.data, t, e_n, d);
+    for (acc, &x) in dbnorm.iter_mut().zip(&db) {
+        *acc += x;
+    }
+
+    // ---- back through the second norm + attention (as dense) ----
+    let (dx_mid_norm, dg2) = rms_bwd(&dbnorm, &g2.data, &cache.x_mid, &cache.r2, d);
+    let dx_mid: Vec<f32> = dy.iter().zip(&dx_mid_norm).map(|(a, b)| a + b).collect();
+    let dwo = mm_at(&cache.oc, &dx_mid, t, d, d);
+    let doc = mm_bt(&dx_mid, &wo.data, t, d, d);
+    let dqkv = attention_bwd(cfg, &cache.attn, &doc);
+    let dwqkv = mm_at(&cache.a, &dqkv, t, d, 3 * d);
+    let da = mm_bt(&dqkv, &wqkv.data, t, 3 * d, d);
+    let (dx_in_norm, dg1) = rms_bwd(&da, &g1.data, &cache.x_in, &cache.r1, d);
+    let dx: Vec<f32> = dx_mid.iter().zip(&dx_in_norm).map(|(a, b)| a + b).collect();
+
+    let grads = vec![
+        Tensor::new(g1.shape.clone(), dg1),
+        Tensor::new(wqkv.shape.clone(), dwqkv),
+        Tensor::new(wo.shape.clone(), dwo),
+        Tensor::new(g2.shape.clone(), dg2),
+        Tensor::new(router.shape.clone(), drouter),
+        Tensor::new(w1e.shape.clone(), dw1e),
+        Tensor::new(w2e.shape.clone(), dw2e),
+    ];
+    Ok((dx, grads))
+}
+
+/// Whole-model MoE eval loss (plain cross-entropy; aux loss excluded,
+/// matching `moe.moe_eval_loss`).
+pub fn eval_loss(cfg: &ModelCfg, params: &[Tensor], toks: &[i32], tgts: &[i32]) -> Result<f32> {
+    let mut x = embed_fwd(cfg, &params[0], &params[1], toks);
+    for b in 0..cfg.n_blocks {
+        let bp = block_params(params, b);
+        let (x_out, _) = block_fwd_cached(cfg, &bp, &x)?;
+        x = x_out;
+    }
+    let n = params.len();
+    Ok(head_loss(cfg, &params[n - 2], &params[n - 1], &x, tgts))
+}
+
+/// Whole-model MoE loss + gradients. The returned loss is the plain
+/// cross-entropy; the gradients are of `ce + 0.01 * mean_blocks(aux)`
+/// (matching `moe.moe_fwdbwd`).
+pub fn fwdbwd(
+    cfg: &ModelCfg,
+    params: &[Tensor],
+    toks: &[i32],
+    tgts: &[i32],
+) -> Result<(f32, Vec<Tensor>)> {
+    let n = params.len();
+    let mut x = embed_fwd(cfg, &params[0], &params[1], toks);
+    let mut caches = Vec::with_capacity(cfg.n_blocks);
+    for b in 0..cfg.n_blocks {
+        let bp = block_params(params, b);
+        let (x_out, cache) = block_fwd_cached(cfg, &bp, &x)?;
+        caches.push(cache);
+        x = x_out;
+    }
+    let (ce, mut dx, dgf, dhead) =
+        head_fwdbwd(cfg, &params[n - 2], &params[n - 1], &x, tgts);
+    let daux = AUX_COEF / cfg.n_blocks as f32;
+    let mut block_grads: Vec<Vec<Tensor>> = Vec::with_capacity(cfg.n_blocks);
+    for b in (0..cfg.n_blocks).rev() {
+        let bp = block_params(params, b);
+        let (dx_new, grads) = block_bwd_from_cache(cfg, &bp, &caches[b], &dx, daux)?;
+        dx = dx_new;
+        block_grads.push(grads);
+    }
+    block_grads.reverse();
+    let (dtok, dpos) = embed_bwd(cfg, toks, &dx);
+
+    let mut grads = Vec::with_capacity(n);
+    grads.push(dtok);
+    grads.push(dpos);
+    for bg in block_grads {
+        grads.extend(bg);
+    }
+    grads.push(dgf);
+    grads.push(dhead);
+    let _total_aux: f32 = caches.iter().map(|c| c.aux).sum();
+    Ok((ce, grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+    use crate::runtime::presets;
+
+    fn setup() -> (ModelCfg, Vec<Tensor>, Vec<i32>, Vec<i32>) {
+        let cfg = presets::builtin_model_cfg("moe_micro").unwrap();
+        let man = presets::manifest_from_cfg(&cfg);
+        let params = init_params(&man, 11);
+        let t = cfg.batch * cfg.seq;
+        let toks: Vec<i32> = (0..t).map(|i| ((i * 5 + 1) % cfg.vocab) as i32).collect();
+        let tgts: Vec<i32> = (0..t).map(|i| ((i * 3 + 2) % cfg.vocab) as i32).collect();
+        (cfg, params, toks, tgts)
+    }
+
+    #[test]
+    fn moe_loss_near_ln_vocab_at_init() {
+        let (cfg, params, toks, tgts) = setup();
+        let loss = eval_loss(&cfg, &params, &toks, &tgts).unwrap();
+        let expect = (cfg.vocab as f32).ln();
+        assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln V {expect}");
+    }
+
+    #[test]
+    fn moe_fwdbwd_finite_and_top_k_routes() {
+        let (cfg, params, toks, tgts) = setup();
+        let (ce, grads) = fwdbwd(&cfg, &params, &toks, &tgts).unwrap();
+        assert!(ce.is_finite());
+        assert_eq!(grads.len(), params.len());
+        for (g, p) in grads.iter().zip(&params) {
+            assert_eq!(g.shape, p.shape);
+            assert!(g.all_finite());
+        }
+        // routing: every token keeps exactly top_k experts
+        let bp = block_params(&params, 0);
+        let x = embed_fwd(&cfg, &params[0], &params[1], &toks);
+        let (_, cache) = block_fwd_cached(&cfg, &bp, &x).unwrap();
+        let e_n = cfg.moe.as_ref().unwrap().n_experts;
+        let k = cfg.moe.as_ref().unwrap().top_k;
+        for ti in 0..cfg.batch * cfg.seq {
+            let nz = cache.mask[ti * e_n..(ti + 1) * e_n]
+                .iter()
+                .filter(|&&m| m > 0.0)
+                .count();
+            assert_eq!(nz, k);
+            let gate_sum: f32 =
+                cache.gates[ti * e_n..(ti + 1) * e_n].iter().sum();
+            assert!((gate_sum - 1.0).abs() < 1e-4, "gates sum {gate_sum}");
+        }
+    }
+
+    #[test]
+    fn moe_router_grads_match_finite_differences() {
+        let (cfg, params, toks, tgts) = setup();
+        let (_, grads) = fwdbwd(&cfg, &params, &toks, &tgts).unwrap();
+        let man = presets::manifest_from_cfg(&cfg);
+        // total loss = ce + 0.01 * mean_b(aux): rebuild it for the
+        // numeric check
+        let total = |ps: &[Tensor]| -> f32 {
+            let mut x = embed_fwd(&cfg, &ps[0], &ps[1], &toks);
+            let mut aux_sum = 0.0f32;
+            for b in 0..cfg.n_blocks {
+                let bp = block_params(ps, b);
+                let (x_out, cache) = block_fwd_cached(&cfg, &bp, &x).unwrap();
+                aux_sum += cache.aux;
+                x = x_out;
+            }
+            let n = ps.len();
+            head_loss(&cfg, &ps[n - 2], &ps[n - 1], &x, &tgts)
+                + AUX_COEF * aux_sum / cfg.n_blocks as f32
+        };
+        let eps = 1e-2f32;
+        // Spot-check router, expert matrices, a gain and the head. A
+        // perturbation can discretely flip a top-k routing decision
+        // (the mask is a stop-gradient), so individual coordinates may
+        // disagree; require the large majority to match instead.
+        let mut checked = 0usize;
+        let mut ok = 0usize;
+        let mut worst = String::new();
+        for name in ["b0.router", "b0.w1e", "b1.w2e", "b0.g2", "head"] {
+            let pi = man.param_index(name).unwrap();
+            for idx in [0usize, params[pi].len() / 2] {
+                let mut pp = params.clone();
+                pp[pi].data[idx] += eps;
+                let mut pm = params.clone();
+                pm[pi].data[idx] -= eps;
+                let num = (total(&pp) - total(&pm)) / (2.0 * eps);
+                let ana = grads[pi].data[idx];
+                checked += 1;
+                if (num - ana).abs() < 3e-3 + 0.08 * ana.abs().max(num.abs()) {
+                    ok += 1;
+                } else {
+                    worst = format!("{name}[{idx}]: numeric {num} vs analytic {ana}");
+                }
+            }
+        }
+        assert!(ok + 1 >= checked, "{ok}/{checked} matched; e.g. {worst}");
+    }
+}

@@ -1,0 +1,339 @@
+//! Built-in model configs and their derived manifests.
+//!
+//! Mirrors `python/compile/configs.py` — same names, same
+//! hyperparameters, same parameter flatten order — so the native
+//! backend serves exactly the schema the Python AOT path would emit,
+//! without any `artifacts/` directory on disk.
+//!
+//! Dense block layout (per block): `g1, wqkv, wo, g2, w1, w2`.
+//! MoE   block layout (per block): `g1, wqkv, wo, g2, router, w1e, w2e`.
+//! Global layout: `tok_emb, pos_emb, <blocks...>, gf, head`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::{ExecSpec, IoSpec, Manifest, ModelCfg, MoeCfg, ParamSpec, ShapeClass};
+
+fn cfg(
+    name: &str,
+    vocab: usize,
+    seq: usize,
+    d_model: usize,
+    n_heads: usize,
+    n_blocks: usize,
+    d_ff: usize,
+    batch: usize,
+    moe: Option<MoeCfg>,
+) -> ModelCfg {
+    ModelCfg {
+        name: name.to_string(),
+        vocab,
+        seq,
+        d_model,
+        n_heads,
+        n_blocks,
+        d_ff,
+        batch,
+        moe,
+    }
+}
+
+/// All built-in configs, in registry order.
+pub fn builtin_configs() -> Vec<ModelCfg> {
+    vec![
+        // Unit/integration-test scale (~40k params).
+        cfg("micro", 64, 16, 16, 2, 2, 64, 2, None),
+        // Workhorse for the P in {1,4,8,16,32} staleness experiments.
+        cfg("tiny32", 256, 48, 48, 4, 32, 192, 4, None),
+        // Depth-scaling family (Fig 6): same width, depth = P.
+        cfg("tiny4", 256, 48, 48, 4, 4, 192, 4, None),
+        cfg("tiny8", 256, 48, 48, 4, 8, 192, 4, None),
+        cfg("tiny16", 256, 48, 48, 4, 16, 192, 4, None),
+        // Width-scaling pair (Fig 7 analog) at P=8.
+        cfg("small", 512, 64, 128, 4, 8, 512, 4, None),
+        cfg("wide", 512, 64, 256, 8, 8, 1024, 4, None),
+        // End-to-end driver (~13M params).
+        cfg("e2e", 2048, 128, 256, 8, 16, 1024, 4, None),
+        // Pico family: figure-harness workhorses on a single core.
+        cfg("pico4", 128, 32, 32, 4, 4, 128, 2, None),
+        cfg("pico8", 128, 32, 32, 4, 8, 128, 2, None),
+        cfg("pico16", 128, 32, 32, 4, 16, 128, 2, None),
+        cfg("pico32", 128, 32, 32, 4, 32, 128, 2, None),
+        cfg("wide8", 128, 32, 96, 4, 8, 384, 2, None),
+        // MoE variants (Fig 21).
+        cfg("moe_pico", 128, 32, 32, 4, 8, 64, 2, Some(MoeCfg { n_experts: 4, top_k: 2 })),
+        cfg("moe_micro", 64, 16, 16, 2, 2, 32, 2, Some(MoeCfg { n_experts: 4, top_k: 2 })),
+        cfg("moe_tiny", 256, 48, 48, 4, 8, 96, 4, Some(MoeCfg { n_experts: 8, top_k: 2 })),
+    ]
+}
+
+/// Names of all built-in configs.
+pub fn builtin_names() -> Vec<String> {
+    builtin_configs().into_iter().map(|c| c.name).collect()
+}
+
+/// Look up one built-in config by name.
+pub fn builtin_model_cfg(name: &str) -> Result<ModelCfg> {
+    builtin_configs()
+        .into_iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| {
+            anyhow!("unknown model config {name:?}; built-ins: {:?}", builtin_names())
+        })
+}
+
+/// Build the full manifest (params, shape classes, executables) of a
+/// built-in config.
+pub fn builtin_manifest(name: &str) -> Result<Manifest> {
+    Ok(manifest_from_cfg(&builtin_model_cfg(name)?))
+}
+
+/// Parameter flatten order of a config (`configs.ModelConfig.param_schema`).
+pub fn param_schema(cfg: &ModelCfg) -> Vec<ParamSpec> {
+    let (v, s, d, f) = (cfg.vocab, cfg.seq, cfg.d_model, cfg.d_ff);
+    let spec = |name: String, shape: Vec<usize>, kind: &str, block: i64, rotated: bool| {
+        ParamSpec { name, shape, kind: kind.to_string(), block, rotated }
+    };
+    let mut out = vec![
+        spec("tok_emb".into(), vec![v, d], "embed", -1, false),
+        spec("pos_emb".into(), vec![s, d], "embed", -1, false),
+    ];
+    for b in 0..cfg.n_blocks {
+        let bi = b as i64;
+        out.push(spec(format!("b{b}.g1"), vec![d], "gain", bi, false));
+        out.push(spec(format!("b{b}.wqkv"), vec![d, 3 * d], "matrix", bi, true));
+        out.push(spec(format!("b{b}.wo"), vec![d, d], "matrix", bi, true));
+        out.push(spec(format!("b{b}.g2"), vec![d], "gain", bi, false));
+        match &cfg.moe {
+            None => {
+                out.push(spec(format!("b{b}.w1"), vec![d, f], "matrix", bi, true));
+                out.push(spec(format!("b{b}.w2"), vec![f, d], "matrix", bi, true));
+            }
+            Some(moe) => {
+                let e = moe.n_experts;
+                out.push(spec(format!("b{b}.router"), vec![d, e], "matrix", bi, false));
+                out.push(spec(format!("b{b}.w1e"), vec![e, d, f], "expert", bi, true));
+                out.push(spec(format!("b{b}.w2e"), vec![e, f, d], "expert", bi, true));
+            }
+        }
+    }
+    out.push(spec("gf".into(), vec![d], "gain", -1, false));
+    out.push(spec("head".into(), vec![d, v], "matrix", -1, false));
+    out
+}
+
+/// Rotated-matrix shape classes (`configs.ModelConfig.shape_classes`).
+pub fn shape_classes(cfg: &ModelCfg) -> Vec<ShapeClass> {
+    let (d, f, l) = (cfg.d_model, cfg.d_ff, cfg.n_blocks);
+    let sc = |name: &str, count: usize, m: usize, n: usize| ShapeClass {
+        name: name.to_string(),
+        count,
+        m,
+        n,
+    };
+    match &cfg.moe {
+        None => vec![
+            sc("wqkv", l, d, 3 * d),
+            sc("wo", l, d, d),
+            sc("w1", l, d, f),
+            sc("w2", l, f, d),
+        ],
+        Some(moe) => {
+            let e = moe.n_experts;
+            vec![
+                sc("wqkv", l, d, 3 * d),
+                sc("wo", l, d, d),
+                sc("w1e", l * e, d, f),
+                sc("w2e", l * e, f, d),
+            ]
+        }
+    }
+}
+
+fn f32s(shape: &[usize]) -> IoSpec {
+    IoSpec { shape: shape.to_vec(), dtype: "f32".to_string() }
+}
+
+fn s32s(batch: usize, seq: usize) -> IoSpec {
+    IoSpec { shape: vec![batch, seq], dtype: "s32".to_string() }
+}
+
+fn exec(inputs: Vec<IoSpec>, outputs: Vec<IoSpec>) -> ExecSpec {
+    ExecSpec { file: String::new(), inputs, outputs }
+}
+
+/// Derive the full manifest — including the executable table the
+/// native backend serves — from a model config.
+pub fn manifest_from_cfg(cfg: &ModelCfg) -> Manifest {
+    let params = param_schema(cfg);
+    let classes = shape_classes(cfg);
+    let (b, s, d, f, v) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.vocab);
+    let scalar = f32s(&[]);
+    let act = f32s(&[b, s, d]);
+    let toks = s32s(b, s);
+    let param_specs: Vec<IoSpec> = params.iter().map(|p| f32s(&p.shape)).collect();
+
+    let mut ex: HashMap<String, ExecSpec> = HashMap::new();
+
+    // --- whole-model training graphs (dense + MoE) ---
+    let mut fwdbwd_in = param_specs.clone();
+    fwdbwd_in.push(toks.clone());
+    fwdbwd_in.push(toks.clone());
+    let mut fwdbwd_out = vec![scalar.clone()];
+    fwdbwd_out.extend(param_specs.clone());
+    ex.insert("fwdbwd".into(), exec(fwdbwd_in.clone(), fwdbwd_out.clone()));
+    ex.insert("eval_loss".into(), exec(fwdbwd_in.clone(), vec![scalar.clone()]));
+
+    if cfg.moe.is_none() {
+        // Split-weight (no-stash) backward: stale forward weights, then
+        // current backward weights.
+        let mut split_in = param_specs.clone();
+        split_in.extend(param_specs.clone());
+        split_in.push(toks.clone());
+        split_in.push(toks.clone());
+        ex.insert("fwdbwd_split".into(), exec(split_in, fwdbwd_out));
+
+        // Hessian-vector product (params, vec, tokens, targets).
+        let mut hvp_in = param_specs.clone();
+        hvp_in.extend(param_specs.clone());
+        hvp_in.push(toks.clone());
+        hvp_in.push(toks.clone());
+        ex.insert("hvp".into(), exec(hvp_in, param_specs.clone()));
+
+        // --- per-block engine graphs (dense only; the threaded 1F1B
+        //     engine bails on MoE configs) ---
+        ex.insert(
+            "embed_fwd".into(),
+            exec(vec![f32s(&[v, d]), f32s(&[s, d]), toks.clone()], vec![act.clone()]),
+        );
+        ex.insert(
+            "embed_bwd".into(),
+            exec(vec![toks.clone(), act.clone()], vec![f32s(&[v, d]), f32s(&[s, d])]),
+        );
+        let block_params = vec![
+            f32s(&[d]),
+            f32s(&[d, 3 * d]),
+            f32s(&[d, d]),
+            f32s(&[d]),
+            f32s(&[d, f]),
+            f32s(&[f, d]),
+        ];
+        let mut bf_in = block_params.clone();
+        bf_in.push(act.clone());
+        ex.insert("block_fwd".into(), exec(bf_in.clone(), vec![act.clone()]));
+        let mut bb_in = bf_in;
+        bb_in.push(act.clone());
+        let mut bb_out = vec![act.clone()];
+        bb_out.extend(block_params);
+        ex.insert("block_bwd".into(), exec(bb_in, bb_out));
+        ex.insert(
+            "head_fwdbwd".into(),
+            exec(
+                vec![f32s(&[d]), f32s(&[d, v]), act.clone(), toks.clone()],
+                vec![scalar.clone(), act.clone(), f32s(&[d]), f32s(&[d, v])],
+            ),
+        );
+    }
+
+    // --- batched per-shape-class optimizer graphs ---
+    for sc in &classes {
+        let (nb, m, n) = (sc.count, sc.m, sc.n);
+        let mat = f32s(&[nb, m, n]);
+        let um = f32s(&[nb, m, m]);
+        let vn = f32s(&[nb, n, n]);
+        let scal = f32s(&[nb, 8]);
+        for tag in ["bi", "uni"] {
+            ex.insert(
+                format!("rot_adam_{tag}_{}", sc.name),
+                exec(
+                    vec![mat.clone(), mat.clone(), mat.clone(), mat.clone(),
+                         um.clone(), vn.clone(), scal.clone()],
+                    vec![mat.clone(), mat.clone(), mat.clone()],
+                ),
+            );
+            ex.insert(
+                format!("soap_{tag}_{}", sc.name),
+                exec(
+                    vec![mat.clone(), mat.clone(), mat.clone(), mat.clone(),
+                         um.clone(), vn.clone(), scal.clone()],
+                    vec![mat.clone(), mat.clone(), mat.clone()],
+                ),
+            );
+            ex.insert(
+                format!("eigen2nd_{tag}_{}", sc.name),
+                exec(
+                    vec![um.clone(), vn.clone(), mat.clone(), um.clone(),
+                         vn.clone(), scal.clone()],
+                    vec![um.clone(), vn.clone(), um.clone(), vn.clone()],
+                ),
+            );
+            ex.insert(
+                format!("eigen1st_{tag}_{}", sc.name),
+                exec(
+                    vec![mat.clone(), um.clone(), vn.clone(), scal.clone()],
+                    vec![um.clone(), vn.clone()],
+                ),
+            );
+        }
+        ex.insert(
+            format!("muon_{}", sc.name),
+            exec(
+                vec![mat.clone(), mat.clone(), scal.clone()],
+                vec![mat.clone(), mat.clone()],
+            ),
+        );
+    }
+
+    Manifest { cfg: cfg.clone(), params, shape_classes: classes, executables: ex }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtin_manifests_are_consistent() {
+        for c in builtin_configs() {
+            let m = manifest_from_cfg(&c);
+            assert_eq!(m.cfg.name, c.name);
+            // schema size: 2 embeds + per-block params + gf + head
+            let per_block = if c.moe.is_some() { 7 } else { 6 };
+            assert_eq!(m.params.len(), 2 + c.n_blocks * per_block + 2, "{}", c.name);
+            // every rotated class slot count matches the schema
+            for sc in &m.shape_classes {
+                let suffix = format!(".{}", sc.name);
+                let slots: usize = m
+                    .params
+                    .iter()
+                    .filter(|p| p.rotated && p.name.ends_with(&suffix))
+                    .map(|p| if p.kind == "expert" { p.shape[0] } else { 1 })
+                    .sum();
+                assert_eq!(slots, sc.count, "{} class {}", c.name, sc.name);
+            }
+            assert!(m.executables.contains_key("fwdbwd"));
+            assert!(m.executables.contains_key("eval_loss"));
+            if c.moe.is_none() {
+                assert!(m.executables.contains_key("block_bwd"));
+                assert!(m.executables.contains_key("fwdbwd_split"));
+                assert!(m.executables.contains_key("hvp"));
+            }
+            assert!(m.executables.contains_key("muon_wqkv"));
+            assert!(m.executables.contains_key("rot_adam_bi_wqkv"));
+        }
+    }
+
+    #[test]
+    fn unknown_config_lists_builtins() {
+        let err = builtin_model_cfg("nope").unwrap_err().to_string();
+        assert!(err.contains("micro"), "{err}");
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for c in builtin_configs() {
+            assert_eq!(c.d_model % c.n_heads, 0, "{}", c.name);
+            assert_eq!(c.head_dim() * c.n_heads, c.d_model);
+        }
+    }
+}

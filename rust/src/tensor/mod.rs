@@ -1,8 +1,9 @@
 //! Dense f32 tensor — the coordinator's host-side value type.
 //!
 //! Deliberately dependency-free: the hot path only needs elementwise
-//! ops, small matmuls (reference implementations cross-checking the
-//! HLO/Pallas path) and (de)serialization into PJRT literals.
+//! ops, small matmuls (the reference kernels the native backend runs
+//! on, doubling as the cross-check for the HLO/Pallas path) and
+//! conversion into [`crate::runtime::Value`]s at the backend boundary.
 
 use std::fmt;
 
@@ -19,6 +20,7 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// Build from shape + row-major data (panics on length mismatch).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -30,14 +32,17 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// All-zeros tensor.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// All-ones tensor.
     pub fn ones(shape: &[usize]) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
     }
 
+    /// Constant-filled tensor.
     pub fn full(shape: &[usize], v: f32) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
     }
@@ -51,14 +56,17 @@ impl Tensor {
         t
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of axes.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -71,32 +79,47 @@ impl Tensor {
 
     // ---- elementwise ----
 
+    /// Elementwise map.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
     }
 
+    /// Elementwise combine of two same-shaped tensors.
     pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
         assert_eq!(self.shape, other.shape);
         let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
         Tensor { shape: self.shape.clone(), data }
     }
 
+    /// Elementwise sum.
     pub fn add(&self, o: &Tensor) -> Tensor {
         self.zip(o, |a, b| a + b)
     }
 
+    /// Elementwise difference.
     pub fn sub(&self, o: &Tensor) -> Tensor {
         self.zip(o, |a, b| a - b)
     }
 
+    /// Elementwise (Hadamard) product.
     pub fn mul(&self, o: &Tensor) -> Tensor {
         self.zip(o, |a, b| a * b)
     }
 
+    /// Scalar multiple.
     pub fn scale(&self, s: f32) -> Tensor {
         self.map(|x| x * s)
     }
 
+    /// self += alpha * x (BLAS axpy), in place.
+    ///
+    /// ```
+    /// use abrot::tensor::Tensor;
+    /// let mut y = Tensor::zeros(&[3]);
+    /// let x = Tensor::new(vec![3], vec![1., 2., 3.]);
+    /// y.axpy(2.0, &x);
+    /// assert_eq!(y.data, vec![2., 4., 6.]);
+    /// ```
     pub fn axpy(&mut self, alpha: f32, x: &Tensor) {
         assert_eq!(self.shape, x.shape);
         for (a, b) in self.data.iter_mut().zip(&x.data) {
@@ -106,23 +129,28 @@ impl Tensor {
 
     // ---- reductions ----
 
+    /// Flattened dot product.
     pub fn dot(&self, o: &Tensor) -> f32 {
         assert_eq!(self.shape, o.shape);
         self.data.iter().zip(&o.data).map(|(a, b)| a * b).sum()
     }
 
+    /// Frobenius / L2 norm.
     pub fn norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// Sum of absolute values (L1 norm).
     pub fn abs_sum(&self) -> f32 {
         self.data.iter().map(|x| x.abs()).sum()
     }
 
+    /// Largest absolute entry (L-infinity norm).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
+    /// Mean element (0 for empty tensors).
     pub fn mean(&self) -> f32 {
         if self.data.is_empty() {
             0.0
@@ -131,6 +159,7 @@ impl Tensor {
         }
     }
 
+    /// True when no element is NaN or infinite.
     pub fn all_finite(&self) -> bool {
         self.data.iter().all(|x| x.is_finite())
     }
@@ -138,6 +167,16 @@ impl Tensor {
     // ---- linear algebra (reference-grade, blocked for cache locality) ----
 
     /// C = A @ B for 2-D tensors.
+    ///
+    /// ```
+    /// use abrot::tensor::Tensor;
+    /// let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+    /// let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+    /// let c = a.matmul(&b);
+    /// assert_eq!(c.shape, vec![2, 2]);
+    /// assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    /// assert_eq!(a.matmul(&Tensor::eye(3)), a);
+    /// ```
     pub fn matmul(&self, b: &Tensor) -> Tensor {
         let (m, k) = self.dims2();
         let (k2, n) = b.dims2();
@@ -160,6 +199,7 @@ impl Tensor {
         Tensor::new(vec![m, n], out)
     }
 
+    /// Matrix transpose of a 2-D tensor.
     pub fn transpose(&self) -> Tensor {
         let (m, n) = self.dims2();
         let mut out = vec![0.0f32; m * n];

@@ -1,0 +1,242 @@
+//! Compile-only stub of the `xla` (xla_extension / PJRT) client API.
+//!
+//! The `abrot` crate's `pjrt` cargo feature compiles `runtime::pjrt`
+//! against this surface. Host-side `Literal` handling is fully
+//! functional (it is just shape + bytes); every operation that would
+//! need the native `xla_extension` library — client creation, HLO
+//! compilation, execution — returns [`Error::Unavailable`] at runtime.
+//!
+//! To actually execute HLO artifacts, patch in the real crate, e.g. in
+//! the workspace `Cargo.toml`:
+//!
+//! ```toml
+//! [patch."crates-io"]
+//! # or point the `xla` path dependency at a checkout of xla-rs built
+//! # against xla_extension 0.5.1
+//! ```
+//!
+//! The stub intentionally mirrors the signatures `abrot` uses so the
+//! swap is source-compatible.
+
+use std::fmt;
+
+/// Stub error type.
+#[derive(Debug)]
+pub enum Error {
+    /// The native xla_extension library is not linked into this build.
+    Unavailable(&'static str),
+    /// Host-side literal error (shape/dtype mismatch).
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(op) => write!(
+                f,
+                "xla stub: `{op}` needs the native xla_extension library; \
+                 this build uses the compile-only stub (see rust/vendor/xla)"
+            ),
+            Error::Literal(m) => write!(f, "xla literal: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(op: &'static str) -> Result<T> {
+    Err(Error::Unavailable(op))
+}
+
+/// Element dtypes `abrot` exchanges with PJRT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Plain-old-data element types a [`Literal`] can be viewed as.
+pub trait NativeType: Copy {
+    fn element_type() -> ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+    fn from_le_bytes(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+    fn from_le_bytes(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// Host-side literal: dtype + shape + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        if elems * ty.byte_width() != data.len() {
+            return Err(Error::Literal(format!(
+                "shape {shape:?} needs {} bytes, got {}",
+                elems * ty.byte_width(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::element_type() != self.ty {
+            return Err(Error::Literal(format!(
+                "dtype mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Tuple decomposition needs the native runtime (tuple literals are
+    /// only ever produced by executions, which the stub cannot run).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+/// Stub PJRT CPU client — construction fails at runtime.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl AsRef<PjRtBuffer> for PjRtBuffer {
+    fn as_ref(&self) -> &PjRtBuffer {
+        self
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: AsRef<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Stub HLO module proto (text-parsed).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
