@@ -18,5 +18,18 @@ fn main() -> anyhow::Result<()> {
         println!("{:<16} loss {:.3} -> {:.3}  ({:.1}s)",
                  r.method, r.losses[0], r.final_loss(), r.wall_secs);
     }
+
+    // The real threaded 1F1B engine runs the MoE blocks too, with each
+    // stage owning its method's optimizer (here: per-expert rotation).
+    println!("\n-- threaded engine, MoE --");
+    for method in [Method::PipeDream, Method::br_default()] {
+        let r = coord.run_engine(&Experiment {
+            model: "moe_pico".into(),
+            train: TrainCfg { method, steps: 40, ..base.clone() },
+        })?;
+        println!("engine {:<16} loss {:.3} -> {:.3}  ({:.0} tokens/s, bubble {:.1}%)",
+                 r.method, r.losses[0], r.final_loss(),
+                 r.tokens_per_sec, r.bubble_frac * 100.0);
+    }
     Ok(())
 }

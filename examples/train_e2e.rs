@@ -37,22 +37,28 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== e2e: {model}, P={stages}, {steps} steps/microbatches ===\n");
 
-    // 1. Real pipelined engine (async PipeDream execution model).
+    // 1. Real pipelined engine (async PipeDream execution model),
+    //    sampling validation losses through the pipeline.
     println!("[1/3] threaded 1F1B engine (PipeDream)...");
+    let eng_steps = steps.min(60);
     let eng = coord.run_engine(&Experiment {
         model: model.clone(),
         train: TrainCfg {
             method: Method::PipeDream,
-            eval_every: 0,
-            steps: steps.min(60),
+            steps: eng_steps,
+            eval_every: (eng_steps / 3).max(1),
             ..base.clone()
         },
     })?;
     println!(
-        "  engine: {} microbatches, loss {:.3} -> {:.3}, {:.0} tokens/s, bubble {:.1}%\n",
+        "  engine: {} microbatches, loss {:.3} -> {:.3}, {:.0} tokens/s, bubble {:.1}%",
         eng.losses.len(), eng.losses[0], eng.final_loss(),
         eng.tokens_per_sec, eng.bubble_frac * 100.0
     );
+    for (t, v) in &eng.val_losses {
+        println!("  engine val@{t}: {v:.4}");
+    }
+    println!();
 
     // 2. Full-length async baseline (simulator, same semantics).
     println!("[2/3] async baseline (PipeDream, {steps} steps)...");

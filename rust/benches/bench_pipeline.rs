@@ -58,4 +58,17 @@ fn main() {
             r.tokens_per_sec, r.bubble_frac * 100.0, r.wall_secs
         );
     }
+
+    // engine with per-stage optimizers beyond Adam: the paper's method
+    // (stage-local eigen dispatches) and an MoE config
+    for (model, m) in [("pico8", Method::br_default()), ("moe_pico", Method::PipeDream)] {
+        let cfg = TrainCfg { method: m, stages: 4, steps: 16, seed: 3, ..Default::default() };
+        let r = coord
+            .run_engine(&Experiment { model: model.into(), train: cfg })
+            .unwrap();
+        println!(
+            "engine {model} P=4 {}: {:.0} tokens/s, bubble {:.1}%, {} dispatches",
+            r.method, r.tokens_per_sec, r.bubble_frac * 100.0, r.dispatches
+        );
+    }
 }

@@ -83,6 +83,12 @@ impl StagePartition {
         (self.stages - 1) as u32
     }
 
+    /// Manifest indices of the parameters stage `k` owns (the engine's
+    /// per-stage parameter view; order follows the manifest).
+    pub fn params_of_stage(&self, k: usize) -> Vec<usize> {
+        (0..self.stage_of.len()).filter(|&i| self.stage_of[i] == k).collect()
+    }
+
     /// Effective stage-aware delay τ' of Eq. (3), with uniform per-
     /// coordinate smoothness weights (C_i identical): the RMS of the
     /// per-parameter delays weighted by parameter count.
@@ -115,23 +121,16 @@ pub struct ClassMap {
     pub slots: Vec<ClassSlot>,
 }
 
-/// Build the per-class slot lists from the manifest schema.
+/// Build the per-class slot lists from the manifest schema (slot
+/// convention: `ParamSpec::slots_in_class`).
 pub fn class_maps(man: &Manifest) -> Vec<ClassMap> {
     man.shape_classes
         .iter()
         .map(|sc| {
-            let suffix = format!(".{}", sc.name);
             let mut slots = Vec::new();
             for (i, p) in man.params.iter().enumerate() {
-                if !p.name.ends_with(&suffix) || !p.rotated {
-                    continue;
-                }
-                if p.kind == "expert" {
-                    for e in 0..p.shape[0] {
-                        slots.push(ClassSlot { param: i, slot: e });
-                    }
-                } else {
-                    slots.push(ClassSlot { param: i, slot: 0 });
+                for e in 0..p.slots_in_class(&sc.name) {
+                    slots.push(ClassSlot { param: i, slot: e });
                 }
             }
             assert_eq!(
@@ -224,6 +223,23 @@ mod tests {
         assert_eq!(part.delay_of[i_b1], 0);
         assert!(part.effective_delay_uniform(&m) > 0.0);
         assert!(part.effective_delay_uniform(&m) <= part.max_delay() as f32);
+    }
+
+    #[test]
+    fn params_of_stage_covers_everything_once() {
+        let m = man("micro");
+        let part = StagePartition::new(&m, 2);
+        let s0 = part.params_of_stage(0);
+        let s1 = part.params_of_stage(1);
+        assert_eq!(s0.len() + s1.len(), m.params.len());
+        assert!(s0.iter().all(|i| !s1.contains(i)));
+        // a restricted manifest re-partitions to the same stages/delays
+        let sub = m.restrict(&s1);
+        let part_local = StagePartition::new(&sub, 2);
+        for (local, &global) in s1.iter().enumerate() {
+            assert_eq!(part_local.stage_of[local], part.stage_of[global]);
+            assert_eq!(part_local.delay_of[local], part.delay_of[global]);
+        }
     }
 
     #[test]

@@ -53,7 +53,25 @@ pub trait Optimizer {
     fn state_elems(&self) -> usize;
 }
 
+/// Manifest indices of the parameters *not* covered by any rotated
+/// shape class — the ones the matrix optimizers (BasisRotation, SOAP,
+/// Muon, Scion) hand to their element-wise fallback.
+pub fn fallback_indices(man: &crate::runtime::Manifest) -> Vec<usize> {
+    let mut covered = vec![false; man.params.len()];
+    for cm in &crate::model::class_maps(man) {
+        for s in &cm.slots {
+            covered[s.param] = true;
+        }
+    }
+    (0..man.params.len()).filter(|&i| !covered[i]).collect()
+}
+
 /// Construct the optimizer for a method.
+///
+/// Works on a full-model runtime (the simulator) and on a stage-local
+/// one (`Runtime::restricted`, the threaded engine): every optimizer
+/// sizes its state from `rt.manifest`, so a restricted manifest yields
+/// a stage-local optimizer over exactly the stage-resident parameters.
 pub fn build(method: &Method, rt: &Runtime, cfg: &TrainCfg) -> Box<dyn Optimizer> {
     match method {
         Method::PipeDream | Method::PipeDreamLr => {
@@ -229,7 +247,9 @@ impl Optimizer for DelayComp {
                 &mut params[i],
                 &gc,
                 ctx.lr_for(i),
-                ctx.cfg.beta1,
+                // same β1 convention as the Adam path (the paper's
+                // per-method override), not the raw configured value
+                ctx.cfg.effective_beta1(),
                 ctx.cfg.beta2,
                 ctx.cfg.eps,
                 ctx.cfg.weight_decay,
@@ -324,6 +344,57 @@ mod tests {
         let n2 = clip_global_norm(&mut gs2, 1.0);
         assert!((n2 - 0.5).abs() < 1e-6);
         assert_eq!(gs2[0].data, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn delay_comp_uses_effective_beta1_like_adam() {
+        // Pins the observable contract behind the effective_beta1()
+        // wiring (today effective_beta1() == beta1 for DelayComp, so
+        // the fix is about staying in lockstep with the Adam path if
+        // the per-method β1 convention ever changes): with zero delay
+        // (stale == current) the Taylor correction vanishes and a
+        // DelayComp step must equal an Adam step coordinate-for-
+        // coordinate under the same config.
+        let rt = Runtime::native("micro").unwrap();
+        let part = StagePartition::new(&rt.manifest, 1);
+        let mut cfg = TrainCfg::default();
+        let init = crate::model::init_params(&rt.manifest, 4);
+        let grads: Vec<Tensor> = init
+            .iter()
+            .map(|p| Tensor::new(p.shape.clone(), p.data.iter().map(|x| x * 0.1).collect()))
+            .collect();
+
+        cfg.method = Method::DelayComp { lambda: 0.3 };
+        let mut dc = DelayComp::new(&rt.manifest, 0.3);
+        let mut p_dc = init.clone();
+        let stale = init.clone();
+        let ctx = StepCtx {
+            t: 1,
+            lr: cfg.lr_at(1),
+            cfg: &cfg,
+            part: &part,
+            stale: Some(&stale),
+            rt: &rt,
+        };
+        dc.step(&ctx, &mut p_dc, &grads).unwrap();
+
+        let mut cfg_adam = cfg.clone();
+        cfg_adam.method = Method::PipeDream;
+        let mut adam = Adam::new(&rt.manifest, false);
+        let mut p_adam = init.clone();
+        let ctx2 = StepCtx {
+            t: 1,
+            lr: cfg_adam.lr_at(1),
+            cfg: &cfg_adam,
+            part: &part,
+            stale: None,
+            rt: &rt,
+        };
+        adam.step(&ctx2, &mut p_adam, &grads).unwrap();
+
+        for (a, b) in p_dc.iter().zip(&p_adam) {
+            assert_eq!(a.data, b.data);
+        }
     }
 
     #[test]

@@ -45,14 +45,7 @@ impl Muon {
                 MuonClass { mom: Tensor::zeros(&[nb, m, n]), map }
             })
             .collect();
-        let mut covered = vec![false; man.params.len()];
-        for cm in &class_maps(man) {
-            for s in &cm.slots {
-                covered[s.param] = true;
-            }
-        }
-        let fallback_idx: Vec<usize> =
-            (0..man.params.len()).filter(|&i| !covered[i]).collect();
+        let fallback_idx = super::fallback_indices(man);
         let shapes: Vec<Vec<usize>> =
             fallback_idx.iter().map(|&i| man.params[i].shape.clone()).collect();
         Muon { classes, fallback: ElementAdam::new(&shapes), fallback_idx, scion }

@@ -112,15 +112,7 @@ impl BasisRotation {
             })
             .collect();
         // fallback params: everything not covered by a rotated class
-        let mut covered = vec![false; man.params.len()];
-        let maps2 = class_maps(man);
-        for cm in &maps2 {
-            for s in &cm.slots {
-                covered[s.param] = true;
-            }
-        }
-        let fallback_idx: Vec<usize> =
-            (0..man.params.len()).filter(|&i| !covered[i]).collect();
+        let fallback_idx = super::fallback_indices(man);
         let shapes: Vec<Vec<usize>> =
             fallback_idx.iter().map(|&i| man.params[i].shape.clone()).collect();
         BasisRotation {
@@ -258,10 +250,16 @@ impl Optimizer for BasisRotation {
                     .collect();
                 let refs: Vec<&Tensor> = mats.iter().collect();
                 let g_stack = stack(&refs);
+                // Refresh on t = 1, f+1, 2f+1, ... : the *first* step
+                // already leaves the identity basis (Algorithm 2 line 1
+                // initializes from the first gradient); `t % f == 0`
+                // would sit on the identity for the first f-1 steps.
                 let masks: Vec<f32> = cs
                     .freqs
                     .iter()
-                    .map(|&f| if ctx.t % f as u64 == 0 { 1.0 } else { 0.0 })
+                    .map(|&f| {
+                        if f == 1 || ctx.t % f as u64 == 1 { 1.0 } else { 0.0 }
+                    })
                     .collect();
                 (g_stack, masks, cs.map.class.name.clone(), self.geo_tag())
             };
@@ -368,6 +366,62 @@ pub fn rotation_overhead_elems(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{init_params, StagePartition};
+    use crate::runtime::Runtime;
+
+    /// Step a fresh S=1st BasisRotation `steps` times on a micro
+    /// runtime and return eigen_dispatches after each step.
+    fn eigen_dispatch_trace(freq: u32, steps: u64) -> Vec<u64> {
+        let rt = Runtime::native("micro").unwrap();
+        let cfg = TrainCfg { method: crate::config::Method::BasisRotation {
+            source: Source::First,
+            geometry: Geometry::Bilateral,
+            freq,
+            alloc: FreqAlloc::Uniform,
+        }, ..Default::default() };
+        let part = StagePartition::new(&rt.manifest, 1);
+        let mut opt = BasisRotation::new(
+            &rt, &cfg, Source::First, Geometry::Bilateral, freq,
+            FreqAlloc::Uniform, false,
+        );
+        let mut params = init_params(&rt.manifest, 2);
+        let grads: Vec<crate::tensor::Tensor> = params
+            .iter()
+            .map(|p| {
+                crate::tensor::Tensor::new(
+                    p.shape.clone(),
+                    p.data.iter().map(|x| 0.1 * x + 0.01).collect(),
+                )
+            })
+            .collect();
+        let mut trace = Vec::new();
+        for t in 1..=steps {
+            let ctx = StepCtx {
+                t,
+                lr: cfg.lr_at(t as u32),
+                cfg: &cfg,
+                part: &part,
+                stale: None,
+                rt: &rt,
+            };
+            opt.step(&ctx, &mut params, &grads).unwrap();
+            trace.push(opt.eigen_dispatches);
+        }
+        trace
+    }
+
+    #[test]
+    fn basis_refresh_happens_on_first_step_then_every_freq() {
+        // micro has 4 shape classes; S=1st dispatches eigen executables
+        // only on refresh steps. freq=3 over 7 steps must refresh at
+        // t = 1, 4, 7 — never t = 3 (the old `t % f == 0` off-by-one
+        // left the first f-1 steps on the identity basis).
+        let trace = eigen_dispatch_trace(3, 7);
+        assert_eq!(trace, vec![4, 4, 4, 8, 8, 8, 12]);
+        // freq=1 refreshes every step
+        let every = eigen_dispatch_trace(1, 3);
+        assert_eq!(every, vec![4, 8, 12]);
+    }
 
     #[test]
     fn overhead_matches_table2_formulas() {

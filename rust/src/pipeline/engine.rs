@@ -2,24 +2,41 @@
 //! mpsc channels carrying activations, deterministic 1F1B schedule with
 //! per-microbatch weight stashing and immediate updates on backward —
 //! PipeDream's execution model, end to end, on per-block executables
-//! (`embed_fwd` / `block_fwd` / `block_bwd` / `head_fwdbwd`).
+//! (`embed_fwd` / `block_fwd` / `block_bwd` / `head_fwdbwd`), for both
+//! dense and MoE block flavours.
 //!
-//! Each stage thread opens its own [`Runtime`] and thereby owns its own
-//! boxed [`crate::runtime::Backend`] (the PJRT client is not `Send`;
-//! the native backend is stateless either way), executes only the
-//! graphs it needs, and owns its blocks' parameters and optimizer
-//! state. Activations cross threads as plain `Vec<f32>`.
+//! Each stage thread opens its own [`Runtime`] (the PJRT client is not
+//! `Send`; the native backend is stateless either way), restricted to a
+//! **stage-local manifest** ([`crate::runtime::Manifest::restrict`]):
+//! only the stage's parameters, with the rotated shape classes and
+//! batched optimizer executables re-derived for the stage-resident
+//! matrices. On top of that view every stage owns its method's *real*
+//! optimizer — a `Box<dyn Optimizer>` from [`optim::build`] — so
+//! BasisRotation/SOAP batch only stage-resident matrices, Muon/Scion
+//! orthogonalize only local momentum, and DelayComp receives the
+//! stashed weight snapshot its gradient was computed at (the 1F1B stash
+//! doubles as the Taylor-correction reference even in no-stash mode).
 //!
 //! Schedule: stage k (0-indexed of P) performs `P-1-k` warmup forwards,
 //! then strictly alternates backward/forward. In steady state the
 //! forward of microbatch m therefore uses stage-k weights of version
 //! `m-(P-1-k)` — exactly the simulator's staleness model, which the
-//! `engine_matches_sim` integration test pins down.
+//! `engine_matches_simulator_trajectory` integration tests pin down for
+//! PipeDream, Nesterov and basis rotation.
+//!
+//! Divergence: the last stage checks every training loss; a non-finite
+//! loss sets the `diverged` flag, skips the update and stops the run
+//! (channel teardown winds down the other stages), mirroring
+//! `train_sim`. Validation: when `cfg.eval_every > 0`, stage 0 sources
+//! an extra eval-tagged forward through the pipeline after every
+//! `eval_every`-th update; the last stage scores it against the shared
+//! validation stream and reports `val_losses` like the simulator.
 //!
 //! Differences from the simulator (documented, not bugs): gradient-norm
 //! clipping is per-stage (a real distributed pipeline has no global
 //! norm without an extra collective), so equivalence tests disable
-//! clipping.
+//! clipping. `StashMode::Predict` is simulator-only and rejected
+//! loudly.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -27,11 +44,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Method, TrainCfg};
+use crate::config::{Method, StashMode, TrainCfg};
 use crate::data::{BatchIter, Corpus};
 use crate::metrics::RunResult;
 use crate::model::{init_params, StagePartition};
-use crate::optim::ElementAdam;
+use crate::optim::{self, Optimizer, StepCtx};
 use crate::runtime::{
     tensor_to_value, tokens_to_value, value_scalar_f32, value_to_tensor, Runtime,
     Value,
@@ -41,6 +58,9 @@ use crate::tensor::Tensor;
 struct FwdMsg {
     mb: u64,
     x: Vec<f32>,
+    /// Validation forward: pass through the blocks at current weights,
+    /// no stash, no backward; the last stage records the loss.
+    eval: bool,
 }
 
 struct BwdMsg {
@@ -52,31 +72,46 @@ struct BwdMsg {
 pub struct StageReport {
     pub stage: usize,
     pub losses: Vec<f32>,
+    pub val_losses: Vec<(u32, f32)>,
     pub compute_s: f64,
     pub idle_s: f64,
     pub updates: u64,
+    pub diverged: bool,
+    pub dispatches: u64,
+    pub state_elems: usize,
 }
 
 struct Worker {
     k: usize,
     stages: usize,
+    /// Stage-local runtime: manifest restricted to this stage's params.
     rt: Runtime,
-    /// manifest indices of this stage's params.
-    param_idx: Vec<usize>,
+    /// Stage-local partition (delays per local param index).
+    part: StagePartition,
     blocks: Vec<usize>,
+    /// This stage's parameters, in stage-local manifest order.
     params: Vec<Tensor>,
-    opt: ElementAdam,
+    /// The method's real optimizer over the stage-local parameter view.
+    opt: Box<dyn Optimizer>,
     cfg: TrainCfg,
-    delays: Vec<u32>,
     /// (mb, weight snapshot, per-block input activations)
     stash: std::collections::VecDeque<(u64, Vec<Tensor>, Vec<Tensor>)>,
     pending_tokens: std::collections::HashMap<u64, Vec<i32>>,
     pending_targets: std::collections::HashMap<u64, Vec<i32>>,
+    /// Backward runs at the stashed weight snapshot (PipeDream stashing).
     use_stash: bool,
+    /// Snapshot weights at forward even in no-stash mode (DelayComp
+    /// needs the stale view its gradient was computed at).
+    stash_weights: bool,
     updates: u64,
     compute_s: f64,
     idle_s: f64,
     losses: Vec<f32>,
+    val_losses: Vec<(u32, f32)>,
+    /// Validation batches (stage 0 sources tokens, the last stage
+    /// re-derives targets from the same deterministic stream).
+    val_iter: Option<BatchIter>,
+    diverged: bool,
 }
 
 impl Worker {
@@ -89,30 +124,182 @@ impl Worker {
     }
 
     fn local_index(&self, name: &str) -> usize {
-        self.param_idx
-            .iter()
-            .position(|&pi| self.rt.manifest.params[pi].name == name)
+        self.rt
+            .manifest
+            .param_index(name)
             .unwrap_or_else(|| panic!("stage {} missing {name}", self.k))
     }
 
     fn block_params(&self, b: usize, snapshot: &[Tensor]) -> Vec<Tensor> {
         let prefix = format!("b{b}.");
-        self.param_idx
+        self.rt
+            .manifest
+            .params
             .iter()
             .enumerate()
-            .filter(|(_, &pi)| self.rt.manifest.params[pi].name.starts_with(&prefix))
+            .filter(|(_, p)| p.name.starts_with(&prefix))
             .map(|(local, _)| snapshot[local].clone())
             .collect()
     }
 
+    fn eval_trigger(&self, mb: u64) -> bool {
+        self.cfg.eval_every > 0 && (mb + 1) % self.cfg.eval_every as u64 == 0
+    }
+
+    /// Receive the training activation for microbatch `mb`,
+    /// transparently relaying any eval forwards that arrive in between.
+    /// `None` means the neighbouring stage hung up (early stop).
+    fn recv_train(
+        &mut self,
+        mb: u64,
+        rx_fwd: &Receiver<FwdMsg>,
+        tx_fwd: Option<&Sender<FwdMsg>>,
+    ) -> Result<Option<Vec<f32>>> {
+        loop {
+            let t0 = Instant::now();
+            let msg = match rx_fwd.recv() {
+                Ok(m) => m,
+                Err(_) => return Ok(None),
+            };
+            self.idle_s += t0.elapsed().as_secs_f64();
+            if msg.eval {
+                self.eval_forward(msg.mb, msg.x, tx_fwd)?;
+                continue;
+            }
+            assert_eq!(msg.mb, mb, "stage {}: out-of-order microbatch", self.k);
+            return Ok(Some(msg.x));
+        }
+    }
+
+    /// Forward an activation through this stage's blocks at the
+    /// *current* weights (validation path: no stash, no cache).
+    fn eval_blocks(&mut self, x0: Vec<f32>) -> Result<Tensor> {
+        let mcfg = self.rt.cfg().clone();
+        let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
+        let t0 = Instant::now();
+        let mut x = Tensor::new(vec![b, s, d], x0);
+        for &blk in &self.blocks.clone() {
+            let bp = self.block_params(blk, &self.params);
+            let mut ins: Vec<Value> =
+                bp.iter().map(tensor_to_value).collect::<Result<_>>()?;
+            ins.push(tensor_to_value(&x)?);
+            let outs = self.rt.exec("block_fwd", &ins)?;
+            x = value_to_tensor(&outs[0], &[b, s, d])?;
+        }
+        self.compute_s += t0.elapsed().as_secs_f64();
+        Ok(x)
+    }
+
+    /// Score a validation activation on the loss-only head executable
+    /// (no backward) and record it under step label `mb + 1`. Falls
+    /// back to `head_fwdbwd`'s loss output on manifests that predate
+    /// `head_loss` (e.g. older PJRT artifact exports).
+    fn record_val(&mut self, mb: u64, x: &Tensor, vg: &[i32]) -> Result<()> {
+        let mcfg = self.rt.cfg().clone();
+        let (b, s) = (mcfg.batch, mcfg.seq);
+        let t0 = Instant::now();
+        let gf = &self.params[self.local_index("gf")];
+        let head = &self.params[self.local_index("head")];
+        let ins = [
+            tensor_to_value(gf)?,
+            tensor_to_value(head)?,
+            tensor_to_value(x)?,
+            tokens_to_value(vg, b, s)?,
+        ];
+        let exec_name = if self.rt.has_executable("head_loss") {
+            "head_loss"
+        } else {
+            "head_fwdbwd"
+        };
+        let outs = self.rt.exec(exec_name, &ins)?;
+        self.compute_s += t0.elapsed().as_secs_f64();
+        self.val_losses.push((mb as u32 + 1, value_scalar_f32(&outs[0])?));
+        Ok(())
+    }
+
+    /// Handle an eval activation arriving from upstream: forward through
+    /// the blocks, then record the loss (last stage) or pass it on.
+    fn eval_forward(
+        &mut self,
+        mb: u64,
+        x0: Vec<f32>,
+        tx_fwd: Option<&Sender<FwdMsg>>,
+    ) -> Result<()> {
+        let x = self.eval_blocks(x0)?;
+        if self.last() {
+            let (_vt, vg) =
+                self.val_iter.as_mut().expect("last stage has a val iter").next_batch();
+            self.record_val(mb, &x, &vg)?;
+        } else if let Some(tx) = tx_fwd {
+            // a dropped receiver means downstream already stopped; the
+            // training path notices on its own send/recv
+            tx.send(FwdMsg { mb, x: x.data, eval: true }).ok();
+        }
+        Ok(())
+    }
+
+    /// Stage 0 (or the single stage of P=1): source one validation
+    /// forward after the update of microbatch `mb`.
+    fn source_eval(&mut self, mb: u64, tx_fwd: Option<&Sender<FwdMsg>>) -> Result<()> {
+        debug_assert!(self.first());
+        let (vt, vg) =
+            self.val_iter.as_mut().expect("first stage has a val iter").next_batch();
+        let mcfg = self.rt.cfg().clone();
+        let (b, s) = (mcfg.batch, mcfg.seq);
+        let t0 = Instant::now();
+        let te = &self.params[self.local_index("tok_emb")];
+        let pe = &self.params[self.local_index("pos_emb")];
+        let outs = self.rt.exec(
+            "embed_fwd",
+            &[
+                tensor_to_value(te)?,
+                tensor_to_value(pe)?,
+                tokens_to_value(&vt, b, s)?,
+            ],
+        )?;
+        self.compute_s += t0.elapsed().as_secs_f64();
+        let x = self.eval_blocks(outs[0].to_f32()?)?;
+        if self.last() {
+            // P = 1: post-update weights + shared val stream — exactly
+            // the simulator's evaluation
+            self.record_val(mb, &x, &vg)?;
+        } else if let Some(tx) = tx_fwd {
+            tx.send(FwdMsg { mb, x: x.data, eval: true }).ok();
+        }
+        Ok(())
+    }
+
+    /// After the training loop: keep relaying/recording eval forwards
+    /// until upstream hangs up (covers an eval triggered by the final
+    /// microbatch, still in flight when the loop ends).
+    fn drain_evals(
+        &mut self,
+        rx_fwd: Option<&Receiver<FwdMsg>>,
+        tx_fwd: Option<&Sender<FwdMsg>>,
+    ) -> Result<()> {
+        if self.cfg.eval_every == 0 {
+            return Ok(());
+        }
+        if let Some(rx) = rx_fwd {
+            while let Ok(msg) = rx.recv() {
+                if msg.eval {
+                    self.eval_forward(msg.mb, msg.x, tx_fwd)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Forward one microbatch through this stage; returns the output
-    /// activation (to send or, on the last stage, to feed the head).
+    /// activation (to send or, on the last stage, to feed the head), or
+    /// `None` when a neighbouring stage already stopped.
     fn forward(
         &mut self,
         mb: u64,
         data: &mut BatchIter,
         rx_fwd: Option<&Receiver<FwdMsg>>,
-    ) -> Result<Tensor> {
+        tx_fwd: Option<&Sender<FwdMsg>>,
+    ) -> Result<Option<Tensor>> {
         let mcfg = self.rt.cfg().clone();
         let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
         let x0: Vec<f32> = if self.first() {
@@ -141,12 +328,14 @@ impl Worker {
                 let (_toks, tgts) = data.next_batch();
                 self.pending_targets.insert(mb, tgts);
             }
-            let t0 = Instant::now();
-            let msg =
-                rx_fwd.unwrap().recv().map_err(|_| anyhow!("fwd channel closed"))?;
-            self.idle_s += t0.elapsed().as_secs_f64();
-            assert_eq!(msg.mb, mb, "stage {}: out-of-order microbatch", self.k);
-            msg.x
+            match self.recv_train(
+                mb,
+                rx_fwd.expect("non-first stage has rx_fwd"),
+                tx_fwd,
+            )? {
+                Some(x) => x,
+                None => return Ok(None),
+            }
         };
 
         let t0 = Instant::now();
@@ -163,21 +352,22 @@ impl Worker {
             x = value_to_tensor(&outs[0], &[b, s, d])?;
         }
         self.compute_s += t0.elapsed().as_secs_f64();
-        let stashed = if self.use_stash { snapshot } else { Vec::new() };
+        let stashed = if self.stash_weights { snapshot } else { Vec::new() };
         self.stash.push_back((mb, stashed, block_inputs));
-        Ok(x)
+        Ok(Some(x))
     }
 
     /// Backward for microbatch mb. On the last stage, `x_out` is the
     /// forward output and the head provides loss + dx; otherwise dx
-    /// comes from `rx_bwd`.
+    /// comes from `rx_bwd`. Returns `false` when the run should stop
+    /// (divergence detected, or a neighbouring stage hung up).
     fn backward(
         &mut self,
         mb: u64,
         x_out: Option<Tensor>,
         rx_bwd: Option<&Receiver<BwdMsg>>,
         tx_bwd: Option<&Sender<BwdMsg>>,
-    ) -> Result<()> {
+    ) -> Result<bool> {
         let mcfg = self.rt.cfg().clone();
         let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
         let pos = self
@@ -186,7 +376,13 @@ impl Worker {
             .position(|(m, _, _)| *m == mb)
             .ok_or_else(|| anyhow!("stage {}: no stash for mb {mb}", self.k))?;
         let (_, snapshot, block_inputs) = self.stash.remove(pos).unwrap();
-        let weights = if self.use_stash { snapshot } else { self.params.clone() };
+        let current_weights;
+        let weights: &[Tensor] = if self.use_stash {
+            &snapshot
+        } else {
+            current_weights = self.params.clone();
+            &current_weights
+        };
 
         let mut grads: Vec<Tensor> =
             self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
@@ -196,27 +392,25 @@ impl Worker {
             let tgts = self.pending_targets.remove(&mb).expect("targets");
             let x = x_out.expect("last stage forwards its own x");
             let t0 = Instant::now();
-            let gf = if self.use_stash {
-                weights[self.local_index("gf")].clone()
-            } else {
-                self.params[self.local_index("gf")].clone()
-            };
-            let head = if self.use_stash {
-                weights[self.local_index("head")].clone()
-            } else {
-                self.params[self.local_index("head")].clone()
-            };
+            let gf = &weights[self.local_index("gf")];
+            let head = &weights[self.local_index("head")];
             let outs = self.rt.exec(
                 "head_fwdbwd",
                 &[
-                    tensor_to_value(&gf)?,
-                    tensor_to_value(&head)?,
+                    tensor_to_value(gf)?,
+                    tensor_to_value(head)?,
                     tensor_to_value(&x)?,
                     tokens_to_value(&tgts, b, s)?,
                 ],
             )?;
             self.compute_s += t0.elapsed().as_secs_f64();
             let loss = value_scalar_f32(&outs[0])?;
+            if !loss.is_finite() {
+                // mirror train_sim: don't record the loss, skip the
+                // update, stop the run
+                self.diverged = true;
+                return Ok(false);
+            }
             self.losses.push(loss);
             let i_gf = self.local_index("gf");
             let i_head = self.local_index("head");
@@ -227,8 +421,10 @@ impl Worker {
             value_to_tensor(&outs[1], &[b, s, d])?
         } else {
             let t0 = Instant::now();
-            let msg =
-                rx_bwd.unwrap().recv().map_err(|_| anyhow!("bwd channel closed"))?;
+            let msg = match rx_bwd.expect("non-last stage has rx_bwd").recv() {
+                Ok(m) => m,
+                Err(_) => return Ok(false),
+            };
             self.idle_s += t0.elapsed().as_secs_f64();
             assert_eq!(msg.mb, mb, "stage {}: out-of-order backward", self.k);
             Tensor::new(vec![b, s, d], msg.dx)
@@ -237,7 +433,7 @@ impl Worker {
         // ---- backward through this stage's blocks ----
         let t0 = Instant::now();
         for (bi, &blk) in self.blocks.clone().iter().enumerate().rev() {
-            let bp = self.block_params(blk, &weights);
+            let bp = self.block_params(blk, weights);
             let mut ins: Vec<Value> =
                 bp.iter().map(tensor_to_value).collect::<Result<_>>()?;
             ins.push(tensor_to_value(&block_inputs[bi])?);
@@ -246,8 +442,8 @@ impl Worker {
             dx = value_to_tensor(&outs[0], &[b, s, d])?;
             let prefix = format!("b{blk}.");
             let mut gi = 1;
-            for (local, &pi) in self.param_idx.clone().iter().enumerate() {
-                if self.rt.manifest.params[pi].name.starts_with(&prefix) {
+            for local in 0..self.params.len() {
+                if self.rt.manifest.params[local].name.starts_with(&prefix) {
                     let shape = self.params[local].shape.clone();
                     grads[local] = value_to_tensor(&outs[gi], &shape)?;
                     gi += 1;
@@ -257,8 +453,9 @@ impl Worker {
         self.compute_s += t0.elapsed().as_secs_f64();
 
         if let Some(tx) = tx_bwd {
-            tx.send(BwdMsg { mb, dx: dx.data.clone() })
-                .map_err(|_| anyhow!("bwd send"))?;
+            if tx.send(BwdMsg { mb, dx: dx.data.clone() }).is_err() {
+                return Ok(false);
+            }
         }
 
         // ---- embedding backward on stage 0 ----
@@ -278,44 +475,36 @@ impl Worker {
             grads[i_pe] = value_to_tensor(&outs[1], &pe_shape)?;
         }
 
-        // ---- per-stage clip + immediate update (async semantics) ----
+        // ---- per-stage clip + the method's real update (async
+        //      semantics: immediately after this stage's backward) ----
         crate::optim::clip_global_norm(&mut grads, self.cfg.grad_clip);
         self.updates += 1;
-        let t = self.updates;
-        let lr = self.cfg.lr_at(t as u32);
-        let b1 = self.cfg.effective_beta1();
-        let nesterov = matches!(self.cfg.method, Method::Nesterov);
-        for local in 0..self.params.len() {
-            let pi = self.param_idx[local];
-            let scale = match self.cfg.method {
-                Method::PipeDreamLr => {
-                    crate::config::pipedream_lr_scale(self.delays[pi])
-                }
-                _ => 1.0,
-            };
-            self.opt.update(
-                local,
-                &mut self.params[local],
-                &grads[local],
-                lr * scale,
-                b1,
-                self.cfg.beta2,
-                self.cfg.eps,
-                self.cfg.weight_decay,
-                t,
-                nesterov,
-            );
-        }
-        Ok(())
+        let needs_stale = matches!(self.cfg.method, Method::DelayComp { .. });
+        let ctx = StepCtx {
+            t: self.updates,
+            lr: self.cfg.lr_at(self.updates as u32),
+            cfg: &self.cfg,
+            part: &self.part,
+            // the 1F1B stash is exactly the weight view the gradient
+            // was computed at — DelayComp's Taylor reference
+            stale: if needs_stale { Some(&snapshot) } else { None },
+            rt: &self.rt,
+        };
+        self.opt.step(&ctx, &mut self.params, &grads)?;
+        Ok(true)
     }
 
     fn report(self) -> StageReport {
         StageReport {
             stage: self.k,
             losses: self.losses,
+            val_losses: self.val_losses,
             compute_s: self.compute_s,
             idle_s: self.idle_s,
             updates: self.updates,
+            diverged: self.diverged,
+            dispatches: self.rt.total_dispatches(),
+            state_elems: self.opt.state_elems(),
         }
     }
 }
@@ -333,41 +522,79 @@ fn run_stage(
     if w.last() {
         // fused fwd+bwd per microbatch (no warmup, delay 0)
         for mb in 0..n_micro {
-            let x = w.forward(mb, &mut data, rx_fwd.as_ref())?;
-            w.backward(mb, Some(x), None, tx_bwd.as_ref())?;
+            let x = match w.forward(mb, &mut data, rx_fwd.as_ref(), tx_fwd.as_ref())? {
+                Some(x) => x,
+                None => return Ok(w.report()),
+            };
+            if !w.backward(mb, Some(x), None, tx_bwd.as_ref())? {
+                return Ok(w.report());
+            }
+            if w.first() && w.eval_trigger(mb) {
+                w.source_eval(mb, tx_fwd.as_ref())?; // P = 1: local eval
+            }
         }
+        w.drain_evals(rx_fwd.as_ref(), tx_fwd.as_ref())?;
         return Ok(w.report());
     }
     let mut next_fwd = 0u64;
     while next_fwd < warmup.min(n_micro) {
-        let x = w.forward(next_fwd, &mut data, rx_fwd.as_ref())?;
-        tx_fwd
+        let x = match w.forward(next_fwd, &mut data, rx_fwd.as_ref(), tx_fwd.as_ref())?
+        {
+            Some(x) => x,
+            None => return Ok(w.report()),
+        };
+        let sent = tx_fwd
             .as_ref()
             .unwrap()
-            .send(FwdMsg { mb: next_fwd, x: x.data })
-            .map_err(|_| anyhow!("fwd send"))?;
+            .send(FwdMsg { mb: next_fwd, x: x.data, eval: false });
+        if sent.is_err() {
+            return Ok(w.report());
+        }
         next_fwd += 1;
     }
     for mb_b in 0..n_micro {
         if next_fwd < n_micro {
-            let x = w.forward(next_fwd, &mut data, rx_fwd.as_ref())?;
-            tx_fwd
+            let x = match w.forward(
+                next_fwd,
+                &mut data,
+                rx_fwd.as_ref(),
+                tx_fwd.as_ref(),
+            )? {
+                Some(x) => x,
+                None => return Ok(w.report()),
+            };
+            let sent = tx_fwd
                 .as_ref()
                 .unwrap()
-                .send(FwdMsg { mb: next_fwd, x: x.data })
-                .map_err(|_| anyhow!("fwd send"))?;
+                .send(FwdMsg { mb: next_fwd, x: x.data, eval: false });
+            if sent.is_err() {
+                return Ok(w.report());
+            }
             next_fwd += 1;
         }
-        w.backward(mb_b, None, rx_bwd.as_ref(), tx_bwd.as_ref())?;
+        if !w.backward(mb_b, None, rx_bwd.as_ref(), tx_bwd.as_ref())? {
+            return Ok(w.report());
+        }
+        if w.first() && w.eval_trigger(mb_b) {
+            w.source_eval(mb_b, tx_fwd.as_ref())?;
+        }
     }
+    w.drain_evals(rx_fwd.as_ref(), tx_fwd.as_ref())?;
     Ok(w.report())
 }
 
 /// Train with the real threaded pipeline. `cfg.steps` = microbatches.
+///
+/// Supports every [`Method`] (each stage builds its own optimizer via
+/// [`optim::build`] over a stage-local manifest) on dense *and* MoE
+/// configs. `StashMode::Predict` is simulator-only and errors loudly.
 pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult> {
     let man0 = crate::runtime::Manifest::resolve(&artifacts_dir)?;
-    if man0.cfg.moe.is_some() {
-        anyhow::bail!("engine supports dense configs only");
+    if cfg.stash == StashMode::Predict {
+        anyhow::bail!(
+            "engine does not implement StashMode::Predict (PipeMare weight \
+             prediction is simulator-only); use train_sim or StashMode::Stash/NoStash"
+        );
     }
     let part = StagePartition::new(&man0, cfg.stages);
     let init = init_params(&man0, cfg.seed);
@@ -396,44 +623,50 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
     for k in (0..p).rev() {
         let dir = artifacts_dir.clone();
         let cfg_k = cfg.clone();
-        let part_k = part.clone();
-        let init_k: Vec<Tensor> = (0..man0.params.len())
-            .filter(|&i| part.stage_of[i] == k)
-            .map(|i| init[i].clone())
-            .collect();
+        let keep = part.params_of_stage(k);
+        let init_k: Vec<Tensor> = keep.iter().map(|&i| init[i].clone()).collect();
         let rx_fwd = fwd_rxs[k].take();
         let tx_fwd = fwd_txs[k].take();
         let rx_bwd = bwd_rxs[k].take();
         let tx_bwd = bwd_txs[k].take();
-        let use_stash = cfg.stash != crate::config::StashMode::NoStash;
         let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
-        let data = BatchIter::new(corpus, mcfg.batch, mcfg.seq, 1);
+        let data = BatchIter::new(corpus.clone(), mcfg.batch, mcfg.seq, 1);
+        // stage 0 sources validation tokens, the last stage re-derives
+        // the targets from the same stream (P = 1: one iterator, both)
+        let val_iter = if cfg.eval_every > 0 && (k == 0 || k == p - 1) {
+            Some(BatchIter::new(corpus, mcfg.batch, mcfg.seq, super::VAL_STREAM))
+        } else {
+            None
+        };
         handles.push((
             k,
             std::thread::spawn(move || -> Result<StageReport> {
-                let rt = Runtime::open(&dir)?;
-                let param_idx: Vec<usize> = (0..rt.manifest.params.len())
-                    .filter(|&i| part_k.stage_of[i] == k)
-                    .collect();
-                let shapes: Vec<Vec<usize>> =
-                    init_k.iter().map(|t| t.shape.clone()).collect();
+                let rt = Runtime::open(&dir)?.restricted(&keep);
+                let part_k = StagePartition::new(&rt.manifest, cfg_k.stages);
+                let opt = optim::build(&cfg_k.method, &rt, &cfg_k);
+                let use_stash = cfg_k.stash != StashMode::NoStash;
+                let stash_weights =
+                    use_stash || matches!(cfg_k.method, Method::DelayComp { .. });
                 let worker = Worker {
                     k,
-                    stages: part_k.stages,
+                    stages: cfg_k.stages,
                     blocks: part_k.blocks_of_stage[k].clone(),
-                    param_idx,
                     params: init_k,
-                    opt: ElementAdam::new(&shapes),
+                    opt,
+                    part: part_k,
                     cfg: cfg_k,
-                    delays: part_k.delay_of.clone(),
                     stash: Default::default(),
                     pending_tokens: Default::default(),
                     pending_targets: Default::default(),
                     use_stash,
+                    stash_weights,
                     updates: 0,
                     compute_s: 0.0,
                     idle_s: 0.0,
                     losses: Vec::new(),
+                    val_losses: Vec::new(),
+                    val_iter,
+                    diverged: false,
                     rt,
                 };
                 run_stage(worker, data, rx_fwd, tx_fwd, rx_bwd, tx_bwd, n_micro)
@@ -449,8 +682,12 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
         let rep = h.join().map_err(|_| anyhow!("stage {k} panicked"))??;
         total_compute += rep.compute_s;
         total_idle += rep.idle_s;
+        result.dispatches += rep.dispatches;
+        result.optimizer_state_elems += rep.state_elems;
+        result.diverged |= rep.diverged;
         if rep.stage == p - 1 {
             result.losses = rep.losses;
+            result.val_losses = rep.val_losses;
         }
     }
     result.wall_secs = t0.elapsed().as_secs_f64();
@@ -460,7 +697,8 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
         0.0
     };
     result.tokens_per_sec =
-        (n_micro as f64 * mcfg.batch as f64 * mcfg.seq as f64) / result.wall_secs;
+        (result.losses.len() as f64 * mcfg.batch as f64 * mcfg.seq as f64)
+            / result.wall_secs;
     Ok(result)
 }
 
@@ -490,5 +728,20 @@ mod tests {
     #[test]
     fn sync_bubbles_grow_with_depth() {
         assert!(sync_bubble_fraction(32, 8) > sync_bubble_fraction(4, 8));
+    }
+
+    #[test]
+    fn engine_rejects_predict_stash_mode() {
+        // silent fallback would corrupt experiments — reject loudly
+        let cfg = TrainCfg {
+            stash: StashMode::Predict,
+            stages: 2,
+            steps: 4,
+            ..Default::default()
+        };
+        let err = train_engine(PathBuf::from("artifacts/micro"), &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Predict"), "{err}");
     }
 }

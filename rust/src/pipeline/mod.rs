@@ -6,12 +6,19 @@
 //!   semantics exactly (DESIGN.md §3) at minimal dispatch overhead; used
 //!   by all loss-curve experiments.
 //! * `engine` — the real threaded 1F1B pipeline (one OS thread per
-//!   stage, per-block executables, weight stashing per microbatch).
-//!   An integration test pins its loss trajectory to the simulator's.
+//!   stage, per-block executables, weight stashing per microbatch, a
+//!   stage-local `Box<dyn Optimizer>` per stage, dense + MoE blocks).
+//!   Integration tests pin its loss trajectory to the simulator's for
+//!   PipeDream, Nesterov and basis rotation.
 
 pub mod engine;
 
 use anyhow::Result;
+
+/// Corpus stream label of the validation split — disjoint from the
+/// training stream (1); shared by the simulator and the engine so both
+/// sample the same validation batches.
+pub const VAL_STREAM: u64 = 999;
 
 use crate::config::{Method, StashMode, TrainCfg};
 use crate::data::{BatchIter, Corpus};
@@ -128,7 +135,7 @@ pub fn train_sim_observed(
     let mut opt = optim::build(&cfg.method, rt, cfg);
     let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
     let mut train_iter = BatchIter::new(corpus.clone(), mcfg.batch, mcfg.seq, 1);
-    let mut val_iter = BatchIter::new(corpus, mcfg.batch, mcfg.seq, 999);
+    let mut val_iter = BatchIter::new(corpus, mcfg.batch, mcfg.seq, VAL_STREAM);
 
     let mut result = RunResult::new(&cfg.method.name(), cfg.stages);
     result.param_count = man.total_params();

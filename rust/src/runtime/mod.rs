@@ -93,6 +93,25 @@ pub struct ParamSpec {
     pub rotated: bool,
 }
 
+impl ParamSpec {
+    /// Batched-optimizer slots this parameter contributes to shape
+    /// class `class` (0 if it is not a member): expert tensors fold
+    /// their expert axis into `shape[0]` slots, plain rotated matrices
+    /// contribute one. The single source of truth for the slot
+    /// convention shared by `model::class_maps`, [`Manifest::restrict`]
+    /// and the preset consistency tests.
+    pub fn slots_in_class(&self, class: &str) -> usize {
+        if !self.rotated || !self.name.ends_with(&format!(".{class}")) {
+            return 0;
+        }
+        if self.kind == "expert" {
+            self.shape[0]
+        } else {
+            1
+        }
+    }
+}
+
 /// A batch of same-shaped rotated matrices updated by one executable
 /// call (e.g. the 32 `wqkv` matrices of `tiny32`).
 #[derive(Clone, Debug)]
@@ -239,6 +258,50 @@ impl Manifest {
     /// Index of a parameter by name.
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Stage-local view: keep only the parameters at the given manifest
+    /// indices (order preserved), recompute the rotated shape classes
+    /// for the surviving parameters (classes with no stage-resident
+    /// slot are dropped), and regenerate the batched optimizer
+    /// executables with the restricted batch counts. Model-graph
+    /// executables (per-block engine graphs etc.) are kept as-is; the
+    /// whole-model graphs (`fwdbwd`, ...) keep their full-model arity
+    /// and must not be dispatched through a restricted manifest.
+    ///
+    /// This is how each engine stage builds its own optimizer over only
+    /// the parameters it owns (`pipeline::engine`).
+    ///
+    /// Backend note: the regenerated optimizer ExecSpecs have no HLO
+    /// artifact file, so they execute on the native backend only; a
+    /// PJRT-artifact runtime dispatching one of them errors loudly
+    /// ("no HLO artifact") rather than mis-executing a full-batch
+    /// graph. Running the engine's matrix optimizers on the PJRT path
+    /// would need per-stage-count artifacts from `aot.py`.
+    pub fn restrict(&self, keep: &[usize]) -> Manifest {
+        let params: Vec<ParamSpec> =
+            keep.iter().map(|&i| self.params[i].clone()).collect();
+        let shape_classes: Vec<ShapeClass> = self
+            .shape_classes
+            .iter()
+            .filter_map(|sc| {
+                let count: usize =
+                    params.iter().map(|p| p.slots_in_class(&sc.name)).sum();
+                if count == 0 {
+                    None
+                } else {
+                    Some(ShapeClass { count, ..sc.clone() })
+                }
+            })
+            .collect();
+        let mut executables = self.executables.clone();
+        for sc in &self.shape_classes {
+            for name in presets::class_exec_names(&sc.name) {
+                executables.remove(&name);
+            }
+        }
+        executables.extend(presets::optimizer_exec_table(&shape_classes));
+        Manifest { cfg: self.cfg.clone(), params, shape_classes, executables }
     }
 
     /// Total scalar parameter count.
@@ -414,6 +477,13 @@ impl Runtime {
         Runtime { manifest, backend, exec_count: RefCell::new(HashMap::new()) }
     }
 
+    /// Rewrap the same backend behind a stage-local manifest (see
+    /// [`Manifest::restrict`]); dispatch counters start fresh.
+    pub fn restricted(self, keep: &[usize]) -> Runtime {
+        let manifest = self.manifest.restrict(keep);
+        Runtime::from_parts(manifest, self.backend)
+    }
+
     /// The model config this runtime serves.
     pub fn cfg(&self) -> &ModelCfg {
         &self.manifest.cfg
@@ -551,6 +621,61 @@ mod tests {
     fn input_arity_checked() {
         let rt = Runtime::native("micro").unwrap();
         assert!(rt.exec("fwdbwd", &[]).is_err());
+    }
+
+    #[test]
+    fn restricted_manifest_has_stage_local_classes() {
+        // micro: 2 blocks; keep block 1 + gf/head (what stage 1 of a
+        // 2-stage pipeline owns).
+        let m = Manifest::builtin("micro").unwrap();
+        let keep: Vec<usize> = (0..m.params.len())
+            .filter(|&i| m.params[i].block == 1 || m.params[i].name == "gf"
+                || m.params[i].name == "head")
+            .collect();
+        let r = m.restrict(&keep);
+        assert_eq!(r.params.len(), 6 + 2);
+        // each rotated class keeps exactly block 1's slot
+        assert_eq!(r.shape_classes.len(), 4);
+        for sc in &r.shape_classes {
+            assert_eq!(sc.count, 1, "class {}", sc.name);
+        }
+        // optimizer executables regenerated with the local batch count
+        assert_eq!(r.executables["rot_adam_bi_wqkv"].inputs[0].shape[0], 1);
+        assert_eq!(r.executables["muon_wo"].inputs[0].shape[0], 1);
+        // per-block engine graphs survive untouched
+        assert!(r.executables.contains_key("block_fwd"));
+        // class maps over the restricted manifest are local + consistent
+        let maps = crate::model::class_maps(&r);
+        assert_eq!(maps.len(), 4);
+        for cm in &maps {
+            assert_eq!(cm.slots.len(), 1);
+            assert!(r.params[cm.slots[0].param].rotated);
+        }
+        // keeping only non-rotated params drops every class
+        let keep_gf: Vec<usize> = vec![m.param_index("gf").unwrap()];
+        let r2 = m.restrict(&keep_gf);
+        assert!(r2.shape_classes.is_empty());
+        assert!(!r2.executables.contains_key("rot_adam_bi_wqkv"));
+    }
+
+    #[test]
+    fn restricted_runtime_executes_local_optimizer_graphs() {
+        let rt = Runtime::native("micro").unwrap();
+        let keep: Vec<usize> = (0..rt.manifest.params.len())
+            .filter(|&i| rt.manifest.params[i].block == 0)
+            .collect();
+        let rt = rt.restricted(&keep);
+        assert_eq!(rt.cfg().name, "micro");
+        // muon on a 1-slot stack round-trips through the backend
+        let (m, n) = (16usize, 48usize);
+        let inputs = vec![
+            Value::F32(Tensor::zeros(&[1, m, n])),
+            Value::F32(Tensor::ones(&[1, m, n])),
+            Value::F32(Tensor::zeros(&[1, 8])),
+        ];
+        let outs = rt.exec_tensors("muon_wqkv", &inputs).unwrap();
+        assert_eq!(outs[0].shape, vec![1, m, n]);
+        assert!(outs[1].all_finite());
     }
 
     #[test]

@@ -87,19 +87,34 @@ impl Backend for NativeBackend {
                 Ok(vec![Value::F32(dtok), Value::F32(dpos)])
             }
             "block_fwd" => {
-                let bp: Vec<&Tensor> = collect_tensors(&inputs[..6])?;
-                let x = inputs[6].as_tensor()?;
-                let (x_out, _) = dense::block_fwd_cached(cfg, &bp, &x.data);
+                let nbp = if cfg.moe.is_some() { 7 } else { 6 };
+                let bp: Vec<&Tensor> = collect_tensors(&inputs[..nbp])?;
+                let x = inputs[nbp].as_tensor()?;
+                let x_out = if cfg.moe.is_some() {
+                    moe::block_fwd_cached(cfg, &bp, &x.data)?.0
+                } else {
+                    dense::block_fwd_cached(cfg, &bp, &x.data).0
+                };
                 Ok(vec![act(cfg, x_out)])
             }
             "block_bwd" => {
-                let bp: Vec<&Tensor> = collect_tensors(&inputs[..6])?;
-                let x = inputs[6].as_tensor()?;
-                let dy = inputs[7].as_tensor()?;
+                let nbp = if cfg.moe.is_some() { 7 } else { 6 };
+                let bp: Vec<&Tensor> = collect_tensors(&inputs[..nbp])?;
+                let x = inputs[nbp].as_tensor()?;
+                let dy = inputs[nbp + 1].as_tensor()?;
                 // checkpoint-style: recompute the forward, then run the
                 // backward off the recomputed cache
-                let (_, cache) = dense::block_fwd_cached(cfg, &bp, &x.data);
-                let (dx, grads) = dense::block_bwd_from_cache(cfg, &bp, &cache, &dy.data);
+                let (dx, grads) = if cfg.moe.is_some() {
+                    let (_, cache) = moe::block_fwd_cached(cfg, &bp, &x.data)?;
+                    // each block carries its share of the Switch
+                    // auxiliary loss, exactly as the monolithic MoE
+                    // fwdbwd distributes it
+                    let daux = moe::AUX_COEF / cfg.n_blocks as f32;
+                    moe::block_bwd_from_cache(cfg, &bp, &cache, &dy.data, daux)?
+                } else {
+                    let (_, cache) = dense::block_fwd_cached(cfg, &bp, &x.data);
+                    dense::block_bwd_from_cache(cfg, &bp, &cache, &dy.data)
+                };
                 let mut out = vec![act(cfg, dx)];
                 out.extend(grads.into_iter().map(Value::F32));
                 Ok(out)
@@ -112,6 +127,13 @@ impl Backend for NativeBackend {
                 let (loss, dx, dgf, dhead) =
                     dense::head_fwdbwd(cfg, gf, head, &x.data, tgts);
                 Ok(vec![scalar(loss), act(cfg, dx), Value::F32(dgf), Value::F32(dhead)])
+            }
+            "head_loss" => {
+                let gf = inputs[0].as_tensor()?;
+                let head = inputs[1].as_tensor()?;
+                let x = inputs[2].as_tensor()?;
+                let tgts = inputs[3].as_tokens()?;
+                Ok(vec![scalar(dense::head_loss(cfg, gf, head, &x.data, tgts))])
             }
             _ => exec_optimizer(name, inputs),
         }
@@ -401,6 +423,56 @@ mod tests {
                 assert_eq!(
                     grads_mono[2 + b * 6 + j].data, g.data,
                     "block {b} grad {j} differs"
+                );
+            }
+        }
+        let (dtok, dpos) = dense::embed_bwd(&cfg, &toks, &dx);
+        assert_eq!(grads_mono[0].data, dtok.data);
+        assert_eq!(grads_mono[1].data, dpos.data);
+    }
+
+    #[test]
+    fn moe_engine_and_sim_graphs_compose_identically() {
+        // The per-block MoE composition (embed/block/head graphs, what
+        // the engine threads execute) must reproduce the monolithic MoE
+        // fwdbwd bit-for-bit, including the per-block share of the
+        // Switch auxiliary gradient.
+        let rt = Runtime::native("moe_micro").unwrap();
+        let cfg = rt.cfg().clone();
+        let man = &rt.manifest;
+        let params = crate::model::init_params(man, 3);
+        let t = cfg.batch * cfg.seq;
+        let toks: Vec<i32> = (0..t).map(|i| ((i * 7 + 2) % cfg.vocab) as i32).collect();
+        let tgts: Vec<i32> = (0..t).map(|i| ((i * 5 + 1) % cfg.vocab) as i32).collect();
+
+        let (loss_mono, grads_mono) = moe::fwdbwd(&cfg, &params, &toks, &tgts).unwrap();
+
+        let bp_of = |b: usize| -> Vec<&Tensor> {
+            params[2 + b * 7..2 + (b + 1) * 7].iter().collect()
+        };
+        let mut x = dense::embed_fwd(&cfg, &params[0], &params[1], &toks);
+        let mut xs = Vec::new();
+        for b in 0..cfg.n_blocks {
+            xs.push(x.clone());
+            let (x_out, _) = moe::block_fwd_cached(&cfg, &bp_of(b), &x).unwrap();
+            x = x_out;
+        }
+        let n = params.len();
+        let (loss_eng, mut dx, dgf, dhead) =
+            dense::head_fwdbwd(&cfg, &params[n - 2], &params[n - 1], &x, &tgts);
+        assert_eq!(loss_mono, loss_eng);
+        assert_eq!(grads_mono[n - 2].data, dgf.data);
+        assert_eq!(grads_mono[n - 1].data, dhead.data);
+        let daux = moe::AUX_COEF / cfg.n_blocks as f32;
+        for b in (0..cfg.n_blocks).rev() {
+            let (_, cache) = moe::block_fwd_cached(&cfg, &bp_of(b), &xs[b]).unwrap();
+            let (dx_new, grads) =
+                moe::block_bwd_from_cache(&cfg, &bp_of(b), &cache, &dx, daux).unwrap();
+            dx = dx_new;
+            for (j, g) in grads.iter().enumerate() {
+                assert_eq!(
+                    grads_mono[2 + b * 7 + j].data, g.data,
+                    "moe block {b} grad {j} differs"
                 );
             }
         }

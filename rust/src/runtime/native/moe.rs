@@ -20,10 +20,10 @@ use super::dense::{
     head_loss, mm, mm_at, mm_bt, rms_apply, rms_bwd, rms_r, AttnCache,
 };
 
-const AUX_COEF: f32 = 0.01;
+pub(super) const AUX_COEF: f32 = 0.01;
 const N_BLOCK_PARAMS: usize = 7; // g1, wqkv, wo, g2, router, w1e, w2e
 
-struct MoeBlockCache {
+pub(super) struct MoeBlockCache {
     x_in: Vec<f32>,
     r1: Vec<f32>,
     a: Vec<f32>,
@@ -56,7 +56,13 @@ fn moe_cfg(cfg: &ModelCfg) -> Result<(usize, usize)> {
 }
 
 /// One MoE block forward. `bp` = [g1, wqkv, wo, g2, router, w1e, w2e].
-fn block_fwd_cached(cfg: &ModelCfg, bp: &[&Tensor], x_in: &[f32]) -> Result<(Vec<f32>, MoeBlockCache)> {
+/// `pub(super)` so the backend serves it as the per-block `block_fwd`
+/// executable the threaded 1F1B engine dispatches on MoE configs.
+pub(super) fn block_fwd_cached(
+    cfg: &ModelCfg,
+    bp: &[&Tensor],
+    x_in: &[f32],
+) -> Result<(Vec<f32>, MoeBlockCache)> {
     let (b, s, d, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff);
     let t = b * s;
     let (e_n, top_k) = moe_cfg(cfg)?;
@@ -190,7 +196,7 @@ fn block_fwd_cached(cfg: &ModelCfg, bp: &[&Tensor], x_in: &[f32]) -> Result<(Vec
 /// Backward through one MoE block. `daux` is the coefficient the total
 /// loss puts on this block's auxiliary loss (AUX_COEF / n_blocks).
 /// Returns (dx, [dg1, dwqkv, dwo, dg2, drouter, dw1e, dw2e]).
-fn block_bwd_from_cache(
+pub(super) fn block_bwd_from_cache(
     cfg: &ModelCfg,
     bp: &[&Tensor],
     cache: &MoeBlockCache,

@@ -200,44 +200,88 @@ pub fn manifest_from_cfg(cfg: &ModelCfg) -> Manifest {
         hvp_in.push(toks.clone());
         hvp_in.push(toks.clone());
         ex.insert("hvp".into(), exec(hvp_in, param_specs.clone()));
+    }
 
-        // --- per-block engine graphs (dense only; the threaded 1F1B
-        //     engine bails on MoE configs) ---
-        ex.insert(
-            "embed_fwd".into(),
-            exec(vec![f32s(&[v, d]), f32s(&[s, d]), toks.clone()], vec![act.clone()]),
-        );
-        ex.insert(
-            "embed_bwd".into(),
-            exec(vec![toks.clone(), act.clone()], vec![f32s(&[v, d]), f32s(&[s, d])]),
-        );
-        let block_params = vec![
+    // --- per-block engine graphs (dense and MoE: the threaded 1F1B
+    //     engine executes both block flavours) ---
+    ex.insert(
+        "embed_fwd".into(),
+        exec(vec![f32s(&[v, d]), f32s(&[s, d]), toks.clone()], vec![act.clone()]),
+    );
+    ex.insert(
+        "embed_bwd".into(),
+        exec(vec![toks.clone(), act.clone()], vec![f32s(&[v, d]), f32s(&[s, d])]),
+    );
+    let block_params = match &cfg.moe {
+        None => vec![
             f32s(&[d]),
             f32s(&[d, 3 * d]),
             f32s(&[d, d]),
             f32s(&[d]),
             f32s(&[d, f]),
             f32s(&[f, d]),
-        ];
-        let mut bf_in = block_params.clone();
-        bf_in.push(act.clone());
-        ex.insert("block_fwd".into(), exec(bf_in.clone(), vec![act.clone()]));
-        let mut bb_in = bf_in;
-        bb_in.push(act.clone());
-        let mut bb_out = vec![act.clone()];
-        bb_out.extend(block_params);
-        ex.insert("block_bwd".into(), exec(bb_in, bb_out));
-        ex.insert(
-            "head_fwdbwd".into(),
-            exec(
-                vec![f32s(&[d]), f32s(&[d, v]), act.clone(), toks.clone()],
-                vec![scalar.clone(), act.clone(), f32s(&[d]), f32s(&[d, v])],
-            ),
-        );
-    }
+        ],
+        Some(moe) => {
+            let e = moe.n_experts;
+            vec![
+                f32s(&[d]),
+                f32s(&[d, 3 * d]),
+                f32s(&[d, d]),
+                f32s(&[d]),
+                f32s(&[d, e]),
+                f32s(&[e, d, f]),
+                f32s(&[e, f, d]),
+            ]
+        }
+    };
+    let mut bf_in = block_params.clone();
+    bf_in.push(act.clone());
+    ex.insert("block_fwd".into(), exec(bf_in.clone(), vec![act.clone()]));
+    let mut bb_in = bf_in;
+    bb_in.push(act.clone());
+    let mut bb_out = vec![act.clone()];
+    bb_out.extend(block_params);
+    ex.insert("block_bwd".into(), exec(bb_in, bb_out));
+    ex.insert(
+        "head_fwdbwd".into(),
+        exec(
+            vec![f32s(&[d]), f32s(&[d, v]), act.clone(), toks.clone()],
+            vec![scalar.clone(), act.clone(), f32s(&[d]), f32s(&[d, v])],
+        ),
+    );
+    // loss-only head (the engine's pipelined validation pass)
+    ex.insert(
+        "head_loss".into(),
+        exec(
+            vec![f32s(&[d]), f32s(&[d, v]), act.clone(), toks.clone()],
+            vec![scalar.clone()],
+        ),
+    );
 
-    // --- batched per-shape-class optimizer graphs ---
-    for sc in &classes {
+    ex.extend(optimizer_exec_table(&classes));
+
+    Manifest { cfg: cfg.clone(), params, shape_classes: classes, executables: ex }
+}
+
+/// Names of the batched optimizer executables serving one shape class.
+pub fn class_exec_names(class: &str) -> Vec<String> {
+    let mut names = Vec::with_capacity(9);
+    for tag in ["bi", "uni"] {
+        for kind in ["rot_adam", "soap", "eigen2nd", "eigen1st"] {
+            names.push(format!("{kind}_{tag}_{class}"));
+        }
+    }
+    names.push(format!("muon_{class}"));
+    names
+}
+
+/// The batched per-shape-class optimizer graphs (rot_adam / soap /
+/// eigen / muon) for a given class list. Factored out so stage-local
+/// manifests (`Manifest::restrict`) can regenerate them with
+/// stage-local batch counts.
+pub fn optimizer_exec_table(classes: &[ShapeClass]) -> HashMap<String, ExecSpec> {
+    let mut ex: HashMap<String, ExecSpec> = HashMap::new();
+    for sc in classes {
         let (nb, m, n) = (sc.count, sc.m, sc.n);
         let mat = f32s(&[nb, m, n]);
         let um = f32s(&[nb, m, m]);
@@ -284,8 +328,7 @@ pub fn manifest_from_cfg(cfg: &ModelCfg) -> Manifest {
             ),
         );
     }
-
-    Manifest { cfg: cfg.clone(), params, shape_classes: classes, executables: ex }
+    ex
 }
 
 #[cfg(test)]
@@ -302,19 +345,22 @@ mod tests {
             assert_eq!(m.params.len(), 2 + c.n_blocks * per_block + 2, "{}", c.name);
             // every rotated class slot count matches the schema
             for sc in &m.shape_classes {
-                let suffix = format!(".{}", sc.name);
-                let slots: usize = m
-                    .params
-                    .iter()
-                    .filter(|p| p.rotated && p.name.ends_with(&suffix))
-                    .map(|p| if p.kind == "expert" { p.shape[0] } else { 1 })
-                    .sum();
+                let slots: usize =
+                    m.params.iter().map(|p| p.slots_in_class(&sc.name)).sum();
                 assert_eq!(slots, sc.count, "{} class {}", c.name, sc.name);
             }
             assert!(m.executables.contains_key("fwdbwd"));
             assert!(m.executables.contains_key("eval_loss"));
+            // per-block engine graphs exist for dense AND MoE configs
+            for name in
+                ["embed_fwd", "embed_bwd", "block_fwd", "block_bwd", "head_fwdbwd", "head_loss"]
+            {
+                assert!(m.executables.contains_key(name), "{} missing {name}", c.name);
+            }
+            let n_bp = if c.moe.is_some() { 7 } else { 6 };
+            assert_eq!(m.executables["block_fwd"].inputs.len(), n_bp + 1, "{}", c.name);
+            assert_eq!(m.executables["block_bwd"].outputs.len(), n_bp + 1, "{}", c.name);
             if c.moe.is_none() {
-                assert!(m.executables.contains_key("block_bwd"));
                 assert!(m.executables.contains_key("fwdbwd_split"));
                 assert!(m.executables.contains_key("hvp"));
             }

@@ -252,21 +252,118 @@ fn engine_matches_simulator_trajectory() {
     // Same seeds + same staleness semantics => the threaded 1F1B engine
     // and the single-process simulator trace the same loss curve.
     // (Clipping disabled: the engine clips per-stage, the sim globally.)
+    // DelayComp additionally pins the stash-fed Taylor correction: the
+    // engine feeds the optimizer the per-microbatch weight snapshot the
+    // gradient was computed at, the sim its stash-ring view.
     let steps = 14;
+    for method in [Method::PipeDream, Method::DelayComp { lambda: 0.5 }] {
+        let mk = |_: ()| TrainCfg {
+            method,
+            stages: 2,
+            steps,
+            lr: 5e-3,
+            grad_clip: 1e9,
+            seed: 77,
+            ..Default::default()
+        };
+        let rt = Runtime::open(root().join("micro")).unwrap();
+        let sim = train_sim(&rt, &mk(())).unwrap();
+        let mut coord = Coordinator::new(root());
+        let eng = coord
+            .run_engine(&Experiment { model: "micro".into(), train: mk(()) })
+            .unwrap();
+        assert_eq!(sim.losses.len(), eng.losses.len(), "{}", method.name());
+        for (i, (a, b)) in sim.losses.iter().zip(&eng.losses).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3 * a.abs().max(1.0),
+                "{} step {i}: sim {a} vs engine {b}",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_matches_simulator_trajectory_br_and_nesterov() {
+    // Tentpole acceptance: every stage owns its method's *real*
+    // optimizer over a stage-local manifest, so the engine must trace
+    // the simulator's loss curve step-for-step for the paper's method
+    // (basis rotation, S=2nd/bilateral) and the Nesterov baseline on a
+    // P=4 dense preset (clipping disabled).
+    let steps = 10;
+    for method in [Method::br_default(), Method::Nesterov] {
+        let mk = |_: ()| TrainCfg {
+            method,
+            stages: 4,
+            steps,
+            lr: 5e-3,
+            grad_clip: 1e9,
+            seed: 123,
+            ..Default::default()
+        };
+        let rt = Runtime::open(root().join("pico4")).unwrap();
+        let sim = train_sim(&rt, &mk(())).unwrap();
+        let mut coord = Coordinator::new(root());
+        let eng = coord
+            .run_engine(&Experiment { model: "pico4".into(), train: mk(()) })
+            .unwrap();
+        assert_eq!(sim.losses.len(), eng.losses.len(), "{}", method.name());
+        for (i, (a, b)) in sim.losses.iter().zip(&eng.losses).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 * a.abs().max(1.0),
+                "{} step {i}: sim {a} vs engine {b}",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn moe_engine_trains_end_to_end() {
+    // Acceptance: an MoE preset trains on the real engine (per-block
+    // MoE executables in the per-stage forward/backward path) without
+    // bailing, for both a baseline and the paper's method.
+    let mut coord = Coordinator::new(root());
+    for method in [Method::PipeDream, Method::br_default()] {
+        let cfg = TrainCfg {
+            method,
+            stages: 2,
+            steps: 10,
+            lr: 5e-3,
+            seed: 7,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let r = coord
+            .run_engine(&Experiment { model: "moe_micro".into(), train: cfg })
+            .unwrap_or_else(|e| panic!("moe engine {}: {e}", method.name()));
+        assert_eq!(r.losses.len(), 10, "{}", method.name());
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(!r.diverged);
+        assert_eq!(r.val_losses.len(), 2, "{}", method.name());
+        assert!(r.val_losses.iter().all(|(_, v)| v.is_finite()));
+    }
+}
+
+#[test]
+fn moe_engine_matches_simulator_trajectory() {
+    // The per-block MoE composition (incl. the per-block share of the
+    // Switch auxiliary gradient) reproduces the monolithic MoE fwdbwd,
+    // so engine and simulator agree on MoE exactly as on dense.
     let mk = |_: ()| TrainCfg {
         method: Method::PipeDream,
         stages: 2,
-        steps,
+        steps: 8,
         lr: 5e-3,
         grad_clip: 1e9,
-        seed: 77,
+        seed: 19,
         ..Default::default()
     };
-    let rt = Runtime::open(root().join("micro")).unwrap();
+    let rt = Runtime::open(root().join("moe_micro")).unwrap();
     let sim = train_sim(&rt, &mk(())).unwrap();
     let mut coord = Coordinator::new(root());
     let eng = coord
-        .run_engine(&Experiment { model: "micro".into(), train: mk(()) })
+        .run_engine(&Experiment { model: "moe_micro".into(), train: mk(()) })
         .unwrap();
     assert_eq!(sim.losses.len(), eng.losses.len());
     for (i, (a, b)) in sim.losses.iter().zip(&eng.losses).enumerate() {
@@ -275,6 +372,115 @@ fn engine_matches_simulator_trajectory() {
             "step {i}: sim {a} vs engine {b}"
         );
     }
+}
+
+#[test]
+fn engine_runs_every_method_on_dense_and_moe() {
+    // No silent fallback: every Method constructs and steps its real
+    // per-stage optimizer on the engine, dense and MoE alike.
+    let methods = [
+        Method::PipeDream,
+        Method::PipeDreamLr,
+        Method::Nesterov,
+        Method::DelayComp { lambda: 0.1 },
+        Method::br_default(),
+        Method::Soap { freq: 5 },
+        Method::Muon,
+        Method::Scion,
+    ];
+    let mut coord = Coordinator::new(root());
+    for model in ["micro", "moe_micro"] {
+        for m in methods {
+            let cfg = TrainCfg {
+                method: m,
+                stages: 2,
+                steps: 4,
+                seed: 21,
+                ..Default::default()
+            };
+            let r = coord
+                .run_engine(&Experiment { model: model.into(), train: cfg })
+                .unwrap_or_else(|e| panic!("{model} {}: {e}", m.name()));
+            assert_eq!(r.losses.len(), 4, "{model} {}", m.name());
+            assert!(r.losses.iter().all(|l| l.is_finite()), "{model} {}", m.name());
+            assert!(r.optimizer_state_elems > 0, "{model} {}", m.name());
+        }
+    }
+}
+
+#[test]
+fn engine_detects_divergence_and_stops() {
+    // Unlike the old engine (which pushed non-finite losses forever),
+    // the last stage now mirrors train_sim: flag, skip the update, stop.
+    let mut coord = Coordinator::new(root());
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stages: 2,
+        steps: 12,
+        lr: 1e9, // guaranteed blow-up
+        grad_clip: 1e12,
+        warmup_frac: 0.0,
+        seed: 3,
+        ..Default::default()
+    };
+    let r = coord
+        .run_engine(&Experiment { model: "micro".into(), train: cfg })
+        .unwrap();
+    assert!(r.diverged, "expected divergence at lr=1e9");
+    assert!(r.losses.len() < 12, "run should stop early, got {}", r.losses.len());
+    assert!(r.losses.iter().all(|l| l.is_finite()), "non-finite loss recorded");
+}
+
+#[test]
+fn engine_val_losses_match_simulator_at_p1() {
+    // With one stage the engine's validation pass is the simulator's:
+    // post-update weights, same deterministic validation stream.
+    let mk = |_: ()| TrainCfg {
+        method: Method::PipeDream,
+        stages: 1,
+        steps: 12,
+        lr: 5e-3,
+        eval_every: 4,
+        seed: 31,
+        ..Default::default()
+    };
+    let rt = Runtime::open(root().join("micro")).unwrap();
+    let sim = train_sim(&rt, &mk(())).unwrap();
+    let mut coord = Coordinator::new(root());
+    let eng = coord
+        .run_engine(&Experiment { model: "micro".into(), train: mk(()) })
+        .unwrap();
+    assert_eq!(sim.val_losses.len(), 3);
+    assert_eq!(eng.val_losses.len(), 3);
+    for ((ts, vs), (te, ve)) in sim.val_losses.iter().zip(&eng.val_losses) {
+        assert_eq!(ts, te);
+        assert!(
+            (vs - ve).abs() < 1e-5 * vs.abs().max(1.0),
+            "val@{ts}: sim {vs} vs engine {ve}"
+        );
+    }
+}
+
+#[test]
+fn engine_samples_val_losses_through_the_pipeline() {
+    // P>1: stage 0 threads eval forwards through the pipeline, the last
+    // stage scores them — val_losses labelled by update step, in order.
+    let mut coord = Coordinator::new(root());
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stages: 2,
+        steps: 12,
+        lr: 5e-3,
+        eval_every: 3,
+        seed: 41,
+        ..Default::default()
+    };
+    let r = coord
+        .run_engine(&Experiment { model: "micro".into(), train: cfg })
+        .unwrap();
+    let labels: Vec<u32> = r.val_losses.iter().map(|(t, _)| *t).collect();
+    assert_eq!(labels, vec![3, 6, 9, 12]);
+    assert!(r.val_losses.iter().all(|(_, v)| v.is_finite()));
 }
 
 #[test]
