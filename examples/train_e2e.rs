@@ -11,8 +11,9 @@
 //! Default scale targets the single-core CPU testbed (see DESIGN.md §5
 //! for the substitution from the paper's 95M-3B GPU models):
 //!
-//!     cargo run --release --example train_e2e -- [steps] [model] [P]
+//!     cargo run --release --example train_e2e -- [steps] [model] [P] [--replicas R]
 //!     cargo run --release --example train_e2e -- 300 tiny32 32   # full
+//!     cargo run --release --example train_e2e -- 60 pico8 4 --replicas 2  # DP x PP
 //!     cargo run --release --example train_e2e                    # quick
 
 use abrot::config::{Method, TrainCfg};
@@ -20,7 +21,21 @@ use abrot::coordinator::{Coordinator, Experiment};
 use abrot::metrics::{iter_reduction_vs, write_losses};
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
+    let mut args: Vec<String> = std::env::args().collect();
+    // --replicas R (data-parallel pipeline replicas) can appear anywhere
+    let mut replicas: usize = 1;
+    if let Some(i) = args.iter().position(|a| a == "--replicas") {
+        match args.get(i + 1).and_then(|x| x.parse::<usize>().ok()) {
+            Some(r) => {
+                replicas = r.max(1);
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--replicas expects a number; running with R=1");
+                args.remove(i);
+            }
+        }
+    }
     let steps: u32 = args.get(1).and_then(|x| x.parse().ok()).unwrap_or(200);
     let model = args.get(2).cloned().unwrap_or_else(|| "pico32".to_string());
     let stages: usize = args.get(3).and_then(|x| x.parse().ok()).unwrap_or(32);
@@ -28,6 +43,7 @@ fn main() -> anyhow::Result<()> {
     let mut coord = Coordinator::new("artifacts");
     let base = TrainCfg {
         stages,
+        replicas,
         steps,
         lr: 1e-2,
         seed: 1234,
@@ -35,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    println!("=== e2e: {model}, P={stages}, {steps} steps/microbatches ===\n");
+    println!("=== e2e: {model}, P={stages}, R={replicas}, {steps} steps/microbatches ===\n");
 
     // 1. Real pipelined engine (async PipeDream execution model),
     //    sampling validation losses through the pipeline.

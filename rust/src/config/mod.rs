@@ -112,6 +112,12 @@ pub struct TrainCfg {
     pub method: Method,
     /// Number of pipeline stages P (delay at stage k is P-1-k).
     pub stages: usize,
+    /// Data-parallel pipeline replicas R (DP x PP). Each replica runs
+    /// the full P-stage pipeline on a disjoint data shard; gradients
+    /// are averaged across replicas at every optimizer step
+    /// (`pipeline::dp`), so `steps` counts optimizer steps and each
+    /// step consumes R microbatches. 0 is treated as 1.
+    pub replicas: usize,
     pub steps: u32,
     pub lr: f32,
     pub beta1: f32,
@@ -132,6 +138,7 @@ impl Default for TrainCfg {
         TrainCfg {
             method: Method::PipeDream,
             stages: 1,
+            replicas: 1,
             steps: 200,
             lr: 1e-3,
             beta1: 0.9,
@@ -159,6 +166,12 @@ impl TrainCfg {
         let prog = (t - warm) as f32 / (self.steps - warm).max(1) as f32;
         let cos = 0.5 * (1.0 + (std::f32::consts::PI * prog.min(1.0)).cos());
         self.lr * (0.1 + 0.9 * cos)
+    }
+
+    /// Effective data-parallel width: `replicas` with 0 treated as 1,
+    /// so configs predating the DP axis keep their meaning.
+    pub fn dp_replicas(&self) -> usize {
+        self.replicas.max(1)
     }
 
     /// The paper's β1 convention: 0.99 for Nesterov, 0.9 otherwise.
@@ -250,6 +263,17 @@ mod tests {
         let names: std::collections::HashSet<_> =
             ms.iter().map(|m| m.name()).collect();
         assert_eq!(names.len(), ms.len());
+    }
+
+    #[test]
+    fn dp_replicas_defaults_to_one() {
+        let cfg = TrainCfg::default();
+        assert_eq!(cfg.replicas, 1);
+        assert_eq!(cfg.dp_replicas(), 1);
+        let zero = TrainCfg { replicas: 0, ..Default::default() };
+        assert_eq!(zero.dp_replicas(), 1);
+        let four = TrainCfg { replicas: 4, ..Default::default() };
+        assert_eq!(four.dp_replicas(), 4);
     }
 
     #[test]

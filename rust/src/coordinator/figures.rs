@@ -45,7 +45,8 @@ impl Default for FigOpts {
     }
 }
 
-type RunKey = (String, String, usize, u32, u8);
+/// (model, method, stages, replicas, steps, stash/eval tag)
+type RunKey = (String, String, usize, usize, u32, u8);
 
 pub struct Harness<'a> {
     pub coord: &'a mut Coordinator,
@@ -83,6 +84,7 @@ impl<'a> Harness<'a> {
             model.to_string(),
             cfg.method.name(),
             cfg.stages,
+            cfg.dp_replicas(),
             cfg.steps,
             stash_tag(cfg.stash) + 10 * (cfg.eval_every > 0) as u8,
         );
@@ -91,9 +93,10 @@ impl<'a> Harness<'a> {
         }
         cfg.seed = self.opts.seed;
         eprintln!(
-            "  running {model} {} P={} steps={} ...",
+            "  running {model} {} P={} R={} steps={} ...",
             cfg.method.name(),
             cfg.stages,
+            cfg.dp_replicas(),
             cfg.steps
         );
         let t0 = std::time::Instant::now();
@@ -636,6 +639,34 @@ impl<'a> Harness<'a> {
         Ok(())
     }
 
+    /// DP x PP scenario matrix: methods x replica counts at fixed P,
+    /// through the simulator — the `replicas` axis added to the
+    /// {method x P x stash x MoE} grid.
+    pub fn dp(&mut self, model: &str, stages: usize, replicas: &[usize]) -> Result<()> {
+        println!("\n== DP x PP: method x R sweep on {model} at P={stages} ==");
+        println!("{:<16} {:>4} {:>4} {:>12} {:>9}",
+                 "method", "P", "R", "final_loss", "wall_s");
+        let mut rows = Csv::create(self.out("dp_summary.csv"),
+                                   "method,stages,replicas,final_loss,wall_secs")?;
+        for m in [Method::PipeDream, Method::Nesterov, Method::br_default()] {
+            for &r_count in replicas {
+                let mut cfg = self.cfg(m, stages);
+                cfg.replicas = r_count;
+                let r = self.run(model, cfg)?;
+                println!("{:<16} {:>4} {:>4} {:>12.4} {:>9.1}",
+                         r.method, stages, r_count, r.final_loss(), r.wall_secs);
+                rows.row(&[
+                    r.method.clone(),
+                    stages.to_string(),
+                    r_count.to_string(),
+                    format!("{:.4}", r.final_loss()),
+                    format!("{:.2}", r.wall_secs),
+                ])?;
+            }
+        }
+        Ok(())
+    }
+
     /// Engine demo: threaded 1F1B throughput/bubble + loss sanity.
     pub fn engine(&mut self, model: &str, stages: usize) -> Result<()> {
         println!("\n== Engine: threaded 1F1B pipeline on {model}, P={stages} ==");
@@ -687,6 +718,7 @@ impl<'a> Harness<'a> {
         self.table3(model)?;
         self.fig11("tiny8")?;
         self.engine("micro", 2)?;
+        self.dp("pico4", 4, &[1, 2])?;
         Ok(())
     }
 }

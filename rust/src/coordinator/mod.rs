@@ -110,6 +110,34 @@ mod tests {
     }
 
     #[test]
+    fn dp_sim_run_reports_replica_counters() {
+        let mut c = Coordinator::new(root());
+        let exp = Experiment {
+            model: "micro".into(),
+            train: TrainCfg {
+                method: Method::PipeDream,
+                stages: 2,
+                replicas: 2,
+                steps: 12,
+                lr: 5e-3,
+                ..Default::default()
+            },
+        };
+        let res = c.run(&exp).unwrap();
+        assert_eq!(res.replicas, 2);
+        assert_eq!(res.losses.len(), 12);
+        assert!(!res.diverged);
+        // one counter row per replica, each with one dispatch per step
+        assert_eq!(res.stage_counters.len(), 2);
+        for (r, sc) in res.stage_counters.iter().enumerate() {
+            assert_eq!(sc.replica, r);
+            assert_eq!(sc.dispatches, 12);
+            assert_eq!(sc.updates, 12);
+            assert!(sc.optimizer_state_elems > 0);
+        }
+    }
+
+    #[test]
     fn runtime_cache_reused() {
         let mut c = Coordinator::new(root());
         c.runtime("micro").unwrap();

@@ -11,6 +11,20 @@
 
 use crate::rngs::{Rng, Zipf};
 
+/// Corpus stream label of the training split (replica 0). Validation
+/// uses `pipeline::VAL_STREAM`; data-parallel replicas shard via
+/// [`replica_stream`].
+pub const TRAIN_STREAM: u64 = 1;
+
+/// Deterministic data-parallel sharding: the stream label replica `r`
+/// draws its batches from. Replica 0 keeps `base` unchanged (so R = 1
+/// reproduces pre-DP trajectories bit-for-bit); other replicas are
+/// offset far beyond the +0x1000 steps `BatchIter::refill` takes, so
+/// shards never collide however long the run is.
+pub fn replica_stream(base: u64, replica: usize) -> u64 {
+    base.wrapping_add((replica as u64) << 32)
+}
+
 #[derive(Clone)]
 pub struct Corpus {
     vocab: usize,
@@ -183,6 +197,25 @@ mod tests {
         let a = it.next_batch();
         let b = it.next_batch();
         assert_ne!(a.0, b.0);
+    }
+
+    #[test]
+    fn replica_streams_are_disjoint_and_stable() {
+        assert_eq!(replica_stream(TRAIN_STREAM, 0), TRAIN_STREAM);
+        let c = Corpus::new(64, 9);
+        let mut seen = Vec::new();
+        for r in 0..4 {
+            let mut it =
+                BatchIter::new(c.clone(), 2, 8, replica_stream(TRAIN_STREAM, r));
+            seen.push(it.next_batch().0);
+        }
+        for i in 0..seen.len() {
+            for j in i + 1..seen.len() {
+                assert_ne!(seen[i], seen[j], "shards {i} and {j} collide");
+            }
+        }
+        // far apart even after many refills: 2^32 >> 0x1000 * refills
+        assert!(replica_stream(TRAIN_STREAM, 1) - TRAIN_STREAM > 0x1000 * 1_000);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //!
 //! * **L3 (this crate)** — the pipeline-parallel training coordinator:
 //!   1F1B asynchronous schedule, weight stashing, stage-dependent delay,
-//!   per-stage optimizers (PipeDream / PipeDream-LR / Nesterov / DC /
-//!   Muon / Scion / SOAP / **basis rotation**), metrics and benchmarks.
+//!   hybrid data parallelism (`replicas = R` pipeline replicas with a
+//!   per-step gradient all-reduce, [`pipeline::dp`]), per-stage
+//!   optimizers (PipeDream / PipeDream-LR / Nesterov / DC / Muon /
+//!   Scion / SOAP / **basis rotation**), metrics and benchmarks.
 //! * **L2** — the model graphs (transformer fwd/bwd, batched optimizer
 //!   updates), served by one of two interchangeable backends behind
 //!   [`runtime::Backend`]:

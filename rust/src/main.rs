@@ -116,6 +116,7 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
     Ok(TrainCfg {
         method,
         stages: args.parse_num("stages", 1usize),
+        replicas: args.parse_num("replicas", 1usize).max(1),
         steps: args.parse_num("steps", 200u32),
         lr: args.parse_num("lr", 1e-3f32),
         seed: args.parse_num("seed", 1234u64),
@@ -155,8 +156,9 @@ fn main() -> Result<()> {
             let cfg_name = args.get_or("config", "micro");
             let tcfg = train_cfg_from(&args)?;
             let mut coord = Coordinator::new(&root);
-            println!("training {cfg_name} with {} (P={}, {} steps)",
-                     tcfg.method.name(), tcfg.stages, tcfg.steps);
+            println!("training {cfg_name} with {} (P={}, R={}, {} steps)",
+                     tcfg.method.name(), tcfg.stages, tcfg.dp_replicas(),
+                     tcfg.steps);
             let res = coord.run(&Experiment { model: cfg_name, train: tcfg })?;
             for (i, l) in res.losses.iter().enumerate() {
                 if (i + 1) % 10 == 0 || i == 0 {
@@ -177,9 +179,9 @@ fn main() -> Result<()> {
             let res =
                 coord.run_engine(&Experiment { model: cfg_name, train: tcfg })?;
             println!(
-                "engine: final {:.4}  tokens/s {:.0}  bubble {:.1}%  wall {:.1}s",
-                res.final_loss(), res.tokens_per_sec, res.bubble_frac * 100.0,
-                res.wall_secs
+                "engine: P={} R={} final {:.4}  tokens/s {:.0}  bubble {:.1}%  wall {:.1}s",
+                res.stages, res.replicas, res.final_loss(), res.tokens_per_sec,
+                res.bubble_frac * 100.0, res.wall_secs
             );
         }
         "repro" => {
@@ -225,6 +227,10 @@ fn main() -> Result<()> {
                         let p = args.parse_num("stages-engine", 2usize);
                         h.engine(&args.get_or("engine-model", "micro"), p)?
                     }
+                    "dp" => {
+                        let p = args.parse_num("dp-stages", 4usize);
+                        h.dp(&args.get_or("dp-model", "pico4"), p, &[1, 2, 4])?
+                    }
                     _ => bail!("unknown figure {f}"),
                     }
                 }
@@ -247,6 +253,7 @@ fn main() -> Result<()> {
             println!("abrot — asynchronous basis-rotation pipeline training");
             println!("usage: abrot <info|train|engine|repro|landscape|calc> [--flags]");
             println!("  e.g. abrot train --config tiny32 --method br --stages 32 --steps 300");
+            println!("       abrot engine --config micro --stages 2 --replicas 2 --steps 40");
             println!("       abrot repro --fig fig5 --steps 200 --out results");
             println!("backends: native reference kernels by default; with an");
             println!("  artifacts/<config>/ dir and a `pjrt`-feature build, the");

@@ -4,10 +4,34 @@
 use std::io::Write;
 use std::path::Path;
 
-#[derive(Clone, Debug, Default)]
+/// Per-(replica, stage) slice of a run's counters, so dispatch and
+/// optimizer-state accounting stays comparable as the data-parallel
+/// width R changes. On the engine the rows sum to the corresponding
+/// [`RunResult`] aggregates (each worker reports its own runtime and
+/// optimizer). The simulator's rows carry the per-replica *training*
+/// dispatches only — its aggregate `dispatches` additionally counts
+/// eval and optimizer-kernel executions, which are shared work with no
+/// per-replica attribution.
+#[derive(Clone, Debug, Default, serde::Serialize)]
+pub struct StageCounter {
+    /// Data-parallel replica id (0-based).
+    pub replica: usize,
+    /// Pipeline stage id (0-based; the simulator reports stage 0).
+    pub stage: usize,
+    /// Executable dispatches attributed to this replica x stage.
+    pub dispatches: u64,
+    /// Optimizer-state f32 elements held by this replica x stage.
+    pub optimizer_state_elems: usize,
+    /// Optimizer updates performed.
+    pub updates: u64,
+}
+
+#[derive(Clone, Debug, Default, serde::Serialize)]
 pub struct RunResult {
     pub method: String,
     pub stages: usize,
+    /// Data-parallel replicas R the run used (1 = no DP).
+    pub replicas: usize,
     pub losses: Vec<f32>,
     pub val_losses: Vec<(u32, f32)>,
     pub wall_secs: f64,
@@ -15,6 +39,8 @@ pub struct RunResult {
     pub diverged: bool,
     pub param_count: usize,
     pub optimizer_state_elems: usize,
+    /// Per-(replica, stage) counter breakdown (see [`StageCounter`]).
+    pub stage_counters: Vec<StageCounter>,
     /// engine-only counters
     pub bubble_frac: f64,
     pub tokens_per_sec: f64,
@@ -22,7 +48,12 @@ pub struct RunResult {
 
 impl RunResult {
     pub fn new(method: &str, stages: usize) -> Self {
-        RunResult { method: method.to_string(), stages, ..Default::default() }
+        RunResult {
+            method: method.to_string(),
+            stages,
+            replicas: 1,
+            ..Default::default()
+        }
     }
 
     pub fn final_loss(&self) -> f32 {
@@ -138,6 +169,31 @@ mod tests {
         let slow: Vec<f32> = (0..400).map(|i| 5.0 - 0.025 * i as f32).collect();
         let s = slowdown(&slow, &fast, 3.0).unwrap();
         assert!(s > 2.5 && s < 5.0, "{s}");
+    }
+
+    #[test]
+    fn run_result_serializes_to_json() {
+        use serde::Serialize;
+        let mut r = RunResult::new("adam", 4);
+        r.replicas = 2;
+        r.losses = vec![4.0, 3.5];
+        r.val_losses = vec![(2, 3.75)];
+        r.stage_counters.push(StageCounter {
+            replica: 1,
+            stage: 3,
+            dispatches: 7,
+            optimizer_state_elems: 10,
+            updates: 2,
+        });
+        let json = r.to_json();
+        let parsed = crate::jsonio::Json::parse(&json).unwrap();
+        assert_eq!(parsed.at("method").as_str(), "adam");
+        assert_eq!(parsed.at("replicas").as_usize(), 2);
+        assert_eq!(parsed.at("losses").as_arr().len(), 2);
+        let sc = &parsed.at("stage_counters").as_arr()[0];
+        assert_eq!(sc.at("replica").as_usize(), 1);
+        assert_eq!(sc.at("stage").as_usize(), 3);
+        assert_eq!(sc.at("dispatches").as_usize(), 7);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Data-parallel gradient reduction shared by the delay-accurate
+//! simulator and the threaded 1F1B engine.
+//!
+//! With `TrainCfg::replicas = R`, R pipeline replicas train on disjoint
+//! data shards and average their gradients at every optimizer step.
+//! The invariant both consumers rely on: the averaged gradient is a
+//! **deterministic fold in replica order** (`g = (((g_0 + g_1) + g_2)
+//! + ...) / R`), so the in-process reduction the simulator performs
+//! ([`average`]) and the channel-based tree reduction the engine's
+//! replica threads perform ([`Reducer::all_reduce`]) produce bit-
+//! identical f32 results — which is what lets `replicas = R` at `P = 1`
+//! reproduce the sequential large-batch trajectory *exactly* and keeps
+//! the engine pinned to the simulator on the DP axis.
+//!
+//! The engine-side topology is a binary tree over replica ids (node r
+//! has children 2r+1, 2r+2): gradient sets flow **up** the tree tagged
+//! with their replica id, the root folds them in id order and flows the
+//! average **down**. Tagging + sorting at the root (an R-entry sort)
+//! keeps the fold order independent of message arrival order, which a
+//! partial-sum tree would not.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+/// Average gradient sets in replica order: `out[i]` is the left fold
+/// `sets[0][i] + sets[1][i] + ...`, scaled by `1/R`. All sets must have
+/// the same parameter shapes.
+pub fn average(sets: &[Vec<Tensor>]) -> Vec<Tensor> {
+    assert!(!sets.is_empty(), "dp::average needs at least one gradient set");
+    let inv = 1.0 / sets.len() as f32;
+    let mut out = sets[0].clone();
+    for set in &sets[1..] {
+        for (acc, g) in out.iter_mut().zip(set) {
+            debug_assert_eq!(acc.shape, g.shape);
+            for (a, &b) in acc.data.iter_mut().zip(&g.data) {
+                *a += b;
+            }
+        }
+    }
+    for t in out.iter_mut() {
+        for a in t.data.iter_mut() {
+            *a *= inv;
+        }
+    }
+    out
+}
+
+/// Mean of per-replica losses, folded in replica order (the loss-side
+/// twin of [`average`], so recorded trajectories are deterministic too).
+pub fn mean_loss(losses: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &l in losses {
+        acc += l;
+    }
+    acc / losses.len().max(1) as f32
+}
+
+/// Scatter restricted per-stage tensor lists back into full-manifest
+/// order: `parts` pairs each stage's kept manifest indices with its
+/// tensors. Errors unless the index lists partition `0..total` exactly
+/// (the property the restrict/merge round-trip tests pin down).
+pub fn merge_restricted(
+    total: usize,
+    parts: &[(Vec<usize>, Vec<Tensor>)],
+) -> Result<Vec<Tensor>> {
+    let mut out: Vec<Option<Tensor>> = vec![None; total];
+    for (keep, tensors) in parts {
+        if keep.len() != tensors.len() {
+            return Err(anyhow!(
+                "merge_restricted: {} indices for {} tensors",
+                keep.len(),
+                tensors.len()
+            ));
+        }
+        for (&i, t) in keep.iter().zip(tensors) {
+            if i >= total {
+                return Err(anyhow!("merge_restricted: index {i} out of {total}"));
+            }
+            if out[i].is_some() {
+                return Err(anyhow!("merge_restricted: index {i} covered twice"));
+            }
+            out[i] = Some(t.clone());
+        }
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(i, t)| t.ok_or_else(|| anyhow!("merge_restricted: index {i} uncovered")))
+        .collect()
+}
+
+/// One gathered subtree: (replica id, that replica's gradient set).
+type Gathered = Vec<(usize, Vec<Tensor>)>;
+
+/// One replica's handle into an R-way all-reduce group (binary tree
+/// over replica ids). Every participant must call
+/// [`Reducer::all_reduce`] once per step, in step lockstep; a dropped
+/// handle (replica stopped early, e.g. on divergence) surfaces as an
+/// `Err` at its tree neighbours, which the engine treats as a wind-down
+/// signal exactly like a closed activation channel.
+pub struct Reducer {
+    /// Replica id of this handle (0-based, root of the tree is 0).
+    pub id: usize,
+    /// Group size R.
+    pub replicas: usize,
+    up_tx: Option<Sender<Gathered>>,
+    child_rx: Vec<Receiver<Gathered>>,
+    down_rx: Option<Receiver<Vec<Tensor>>>,
+    down_tx: Vec<Sender<Vec<Tensor>>>,
+}
+
+/// Build the handles of one all-reduce group (index = replica id).
+pub fn group(replicas: usize) -> Vec<Reducer> {
+    assert!(replicas >= 1, "dp::group needs at least one replica");
+    let mut nodes: Vec<Reducer> = (0..replicas)
+        .map(|id| Reducer {
+            id,
+            replicas,
+            up_tx: None,
+            child_rx: Vec::new(),
+            down_rx: None,
+            down_tx: Vec::new(),
+        })
+        .collect();
+    for child in 1..replicas {
+        let parent = (child - 1) / 2;
+        let (utx, urx) = channel::<Gathered>();
+        let (dtx, drx) = channel::<Vec<Tensor>>();
+        nodes[child].up_tx = Some(utx);
+        nodes[child].down_rx = Some(drx);
+        nodes[parent].child_rx.push(urx);
+        nodes[parent].down_tx.push(dtx);
+    }
+    nodes
+}
+
+impl Reducer {
+    /// Contribute this replica's gradients and return the group average
+    /// (fold in replica-id order, identical to [`average`]). `R = 1` is
+    /// a no-op passthrough. An `Err` means a peer replica hung up.
+    pub fn all_reduce(&self, grads: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        if self.replicas == 1 {
+            return Ok(grads);
+        }
+        let gone = || anyhow!("dp: replica peer hung up during all-reduce");
+        let mut gathered: Gathered = vec![(self.id, grads)];
+        for rx in &self.child_rx {
+            gathered.extend(rx.recv().map_err(|_| gone())?);
+        }
+        let avg = match &self.up_tx {
+            Some(up) => {
+                up.send(gathered).map_err(|_| gone())?;
+                self.down_rx.as_ref().unwrap().recv().map_err(|_| gone())?
+            }
+            None => {
+                gathered.sort_by_key(|(id, _)| *id);
+                let sets: Vec<Vec<Tensor>> =
+                    gathered.into_iter().map(|(_, g)| g).collect();
+                average(&sets)
+            }
+        };
+        for tx in &self.down_tx {
+            tx.send(avg.clone()).map_err(|_| gone())?;
+        }
+        Ok(avg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn average_folds_in_replica_order() {
+        let sets = vec![
+            vec![t(&[1.0, 2.0])],
+            vec![t(&[3.0, 4.0])],
+            vec![t(&[5.0, 6.0])],
+        ];
+        let avg = average(&sets);
+        assert_eq!(avg[0].data, vec![3.0, 4.0]);
+        assert!((mean_loss(&[1.0, 2.0, 6.0]) - 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn tree_all_reduce_matches_in_process_average() {
+        for r in [1usize, 2, 3, 4, 7, 8] {
+            let sets: Vec<Vec<Tensor>> = (0..r)
+                .map(|i| {
+                    vec![
+                        t(&[i as f32 + 0.25, -(i as f32)]),
+                        t(&[0.1 * i as f32, 1.0, 2.0]),
+                    ]
+                })
+                .collect();
+            let want = average(&sets);
+            let handles = group(r);
+            let mut threads = Vec::new();
+            for (h, set) in handles.into_iter().zip(sets.clone()) {
+                threads.push(std::thread::spawn(move || h.all_reduce(set).unwrap()));
+            }
+            for th in threads {
+                let got = th.join().unwrap();
+                for (a, b) in got.iter().zip(&want) {
+                    // bit-identical: same fold order as `average`
+                    assert_eq!(a.data, b.data, "R={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_repeats_across_steps() {
+        let handles = group(3);
+        let mut threads = Vec::new();
+        for h in handles {
+            threads.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for step in 0..5 {
+                    let g = vec![t(&[(h.id + step) as f32])];
+                    out.push(h.all_reduce(g).unwrap()[0].data[0]);
+                }
+                out
+            }));
+        }
+        let want: Vec<f32> =
+            (0..5).map(|s| (3 * s + 3) as f32 / 3.0).collect();
+        for th in threads {
+            assert_eq!(th.join().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_as_error() {
+        let mut handles = group(2);
+        let h1 = handles.pop().unwrap();
+        drop(handles); // replica 0 (the root) is gone
+        assert!(h1.all_reduce(vec![t(&[1.0])]).is_err());
+    }
+
+    #[test]
+    fn merge_restricted_round_trips_and_rejects_bad_covers() {
+        let full = vec![t(&[1.0]), t(&[2.0]), t(&[3.0])];
+        let parts = vec![
+            (vec![0usize, 2], vec![full[0].clone(), full[2].clone()]),
+            (vec![1usize], vec![full[1].clone()]),
+        ];
+        let merged = merge_restricted(3, &parts).unwrap();
+        for (a, b) in merged.iter().zip(&full) {
+            assert_eq!(a.data, b.data);
+        }
+        // overlap
+        let overlap = vec![
+            (vec![0usize, 1], vec![full[0].clone(), full[1].clone()]),
+            (vec![1usize], vec![full[1].clone()]),
+        ];
+        assert!(merge_restricted(3, &overlap).is_err());
+        // hole
+        let hole = vec![(vec![0usize], vec![full[0].clone()])];
+        assert!(merge_restricted(3, &hole).is_err());
+        // arity mismatch
+        let bad = vec![(vec![0usize, 1], vec![full[0].clone()])];
+        assert!(merge_restricted(3, &bad).is_err());
+    }
+}

@@ -32,6 +32,15 @@
 //! `eval_every`-th update; the last stage scores it against the shared
 //! validation stream and reports `val_losses` like the simulator.
 //!
+//! Data parallelism (`cfg.replicas = R`): R full pipeline chains run
+//! side by side, each on a disjoint data shard; the replicas of each
+//! stage share a channel-based all-reduce group ([`super::dp`]) that
+//! averages gradients right before every optimizer step. The 1F1B
+//! stash stays replica-local (each replica stashes its own in-flight
+//! weight snapshots), while the averaged gradient feeds each replica's
+//! optimizer identically — so all replicas hold bit-identical
+//! parameters at every step, and only replica 0 runs validation.
+//!
 //! Differences from the simulator (documented, not bugs): gradient-norm
 //! clipping is per-stage (a real distributed pipeline has no global
 //! norm without an extra collective), so equivalence tests disable
@@ -44,9 +53,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::dp;
 use crate::config::{Method, StashMode, TrainCfg};
-use crate::data::{BatchIter, Corpus};
-use crate::metrics::RunResult;
+use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
+use crate::metrics::{RunResult, StageCounter};
 use crate::model::{init_params, StagePartition};
 use crate::optim::{self, Optimizer, StepCtx};
 use crate::runtime::{
@@ -69,7 +79,9 @@ struct BwdMsg {
 }
 
 /// Loss + perf sample emitted by the last stage / each stage.
+#[derive(Clone, Debug, serde::Serialize)]
 pub struct StageReport {
+    pub replica: usize,
     pub stage: usize,
     pub losses: Vec<f32>,
     pub val_losses: Vec<(u32, f32)>,
@@ -84,6 +96,10 @@ pub struct StageReport {
 struct Worker {
     k: usize,
     stages: usize,
+    /// Data-parallel replica id this stage thread belongs to.
+    replica: usize,
+    /// All-reduce handle shared with stage `k` of the other replicas.
+    dp: dp::Reducer,
     /// Stage-local runtime: manifest restricted to this stage's params.
     rt: Runtime,
     /// Stage-local partition (delays per local param index).
@@ -143,7 +159,11 @@ impl Worker {
     }
 
     fn eval_trigger(&self, mb: u64) -> bool {
-        self.cfg.eval_every > 0 && (mb + 1) % self.cfg.eval_every as u64 == 0
+        // Replicas stay in parameter lockstep (all-reduced gradients),
+        // so one validation pass — replica 0's pipeline — covers all R.
+        self.replica == 0
+            && self.cfg.eval_every > 0
+            && (mb + 1) % self.cfg.eval_every as u64 == 0
     }
 
     /// Receive the training activation for microbatch `mb`,
@@ -475,8 +495,21 @@ impl Worker {
             grads[i_pe] = value_to_tensor(&outs[1], &pe_shape)?;
         }
 
-        // ---- per-stage clip + the method's real update (async
-        //      semantics: immediately after this stage's backward) ----
+        // ---- data-parallel all-reduce (averaging) barrier across the
+        //      replicas of this stage, then per-stage clip + the
+        //      method's real update (async semantics: immediately after
+        //      this stage's backward). R = 1 is a passthrough; a peer
+        //      replica hanging up (early stop / divergence) winds this
+        //      replica down like a closed activation channel. Time
+        //      spent blocked here is a synchronization stall and counts
+        //      as idle, keeping bubble_frac honest for DP runs. ----
+        let t_red = Instant::now();
+        let reduced = self.dp.all_reduce(grads);
+        self.idle_s += t_red.elapsed().as_secs_f64();
+        let mut grads = match reduced {
+            Ok(g) => g,
+            Err(_) => return Ok(false),
+        };
         crate::optim::clip_global_norm(&mut grads, self.cfg.grad_clip);
         self.updates += 1;
         let needs_stale = matches!(self.cfg.method, Method::DelayComp { .. });
@@ -496,6 +529,7 @@ impl Worker {
 
     fn report(self) -> StageReport {
         StageReport {
+            replica: self.replica,
             stage: self.k,
             losses: self.losses,
             val_losses: self.val_losses,
@@ -583,11 +617,19 @@ fn run_stage(
     Ok(w.report())
 }
 
-/// Train with the real threaded pipeline. `cfg.steps` = microbatches.
+/// Train with the real threaded pipeline. `cfg.steps` = microbatches
+/// per replica (= optimizer steps).
 ///
 /// Supports every [`Method`] (each stage builds its own optimizer via
 /// [`optim::build`] over a stage-local manifest) on dense *and* MoE
-/// configs. `StashMode::Predict` is simulator-only and errors loudly.
+/// configs, and data parallelism (`cfg.replicas = R`): R x P stage
+/// threads, one full pipeline per replica over a disjoint data shard
+/// (`data::replica_stream`), with a channel-based all-reduce across
+/// the replicas of each stage at every optimizer step (`pipeline::dp`).
+/// Per-replica 1F1B stashes stay replica-local; the averaged gradient
+/// feeds every replica's optimizer identically, so replicas remain in
+/// parameter lockstep. `StashMode::Predict` is simulator-only and
+/// errors loudly.
 pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult> {
     let man0 = crate::runtime::Manifest::resolve(&artifacts_dir)?;
     if cfg.stash == StashMode::Predict {
@@ -599,106 +641,155 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
     let part = StagePartition::new(&man0, cfg.stages);
     let init = init_params(&man0, cfg.seed);
     let p = cfg.stages;
+    let r_count = cfg.dp_replicas();
     let n_micro = cfg.steps as u64;
     let mcfg = man0.cfg.clone();
 
-    // channels between consecutive stages
-    let mut fwd_txs = Vec::new();
-    let mut fwd_rxs = vec![None];
-    let mut bwd_txs = vec![None];
-    let mut bwd_rxs = Vec::new();
-    for _ in 0..p.saturating_sub(1) {
-        let (ftx, frx) = channel::<FwdMsg>();
-        fwd_txs.push(Some(ftx));
-        fwd_rxs.push(Some(frx));
-        let (btx, brx) = channel::<BwdMsg>();
-        bwd_txs.push(Some(btx));
-        bwd_rxs.push(Some(brx));
-    }
-    fwd_txs.push(None);
-    bwd_rxs.push(None);
+    // one all-reduce group per stage, one handle per replica
+    let mut dp_groups: Vec<Vec<Option<dp::Reducer>>> = (0..p)
+        .map(|_| dp::group(r_count).into_iter().map(Some).collect())
+        .collect();
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for k in (0..p).rev() {
-        let dir = artifacts_dir.clone();
-        let cfg_k = cfg.clone();
-        let keep = part.params_of_stage(k);
-        let init_k: Vec<Tensor> = keep.iter().map(|&i| init[i].clone()).collect();
-        let rx_fwd = fwd_rxs[k].take();
-        let tx_fwd = fwd_txs[k].take();
-        let rx_bwd = bwd_rxs[k].take();
-        let tx_bwd = bwd_txs[k].take();
-        let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
-        let data = BatchIter::new(corpus.clone(), mcfg.batch, mcfg.seq, 1);
-        // stage 0 sources validation tokens, the last stage re-derives
-        // the targets from the same stream (P = 1: one iterator, both)
-        let val_iter = if cfg.eval_every > 0 && (k == 0 || k == p - 1) {
-            Some(BatchIter::new(corpus, mcfg.batch, mcfg.seq, super::VAL_STREAM))
-        } else {
-            None
-        };
-        handles.push((
-            k,
-            std::thread::spawn(move || -> Result<StageReport> {
-                let rt = Runtime::open(&dir)?.restricted(&keep);
-                let part_k = StagePartition::new(&rt.manifest, cfg_k.stages);
-                let opt = optim::build(&cfg_k.method, &rt, &cfg_k);
-                let use_stash = cfg_k.stash != StashMode::NoStash;
-                let stash_weights =
-                    use_stash || matches!(cfg_k.method, Method::DelayComp { .. });
-                let worker = Worker {
-                    k,
-                    stages: cfg_k.stages,
-                    blocks: part_k.blocks_of_stage[k].clone(),
-                    params: init_k,
-                    opt,
-                    part: part_k,
-                    cfg: cfg_k,
-                    stash: Default::default(),
-                    pending_tokens: Default::default(),
-                    pending_targets: Default::default(),
-                    use_stash,
-                    stash_weights,
-                    updates: 0,
-                    compute_s: 0.0,
-                    idle_s: 0.0,
-                    losses: Vec::new(),
-                    val_losses: Vec::new(),
-                    val_iter,
-                    diverged: false,
-                    rt,
+    for rep in 0..r_count {
+        // channels between consecutive stages of this replica's chain
+        let mut fwd_txs = Vec::new();
+        let mut fwd_rxs = vec![None];
+        let mut bwd_txs = vec![None];
+        let mut bwd_rxs = Vec::new();
+        for _ in 0..p.saturating_sub(1) {
+            let (ftx, frx) = channel::<FwdMsg>();
+            fwd_txs.push(Some(ftx));
+            fwd_rxs.push(Some(frx));
+            let (btx, brx) = channel::<BwdMsg>();
+            bwd_txs.push(Some(btx));
+            bwd_rxs.push(Some(brx));
+        }
+        fwd_txs.push(None);
+        bwd_rxs.push(None);
+
+        for k in (0..p).rev() {
+            let dir = artifacts_dir.clone();
+            let cfg_k = cfg.clone();
+            let keep = part.params_of_stage(k);
+            let init_k: Vec<Tensor> = keep.iter().map(|&i| init[i].clone()).collect();
+            let rx_fwd = fwd_rxs[k].take();
+            let tx_fwd = fwd_txs[k].take();
+            let rx_bwd = bwd_rxs[k].take();
+            let tx_bwd = bwd_txs[k].take();
+            let dp_handle = dp_groups[k][rep].take().unwrap();
+            let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
+            let data = BatchIter::new(
+                corpus.clone(),
+                mcfg.batch,
+                mcfg.seq,
+                replica_stream(TRAIN_STREAM, rep),
+            );
+            // replica 0's stage 0 sources validation tokens, its last
+            // stage re-derives the targets from the same stream (P = 1:
+            // one iterator, both roles); other replicas skip validation
+            let val_iter =
+                if cfg.eval_every > 0 && rep == 0 && (k == 0 || k == p - 1) {
+                    Some(BatchIter::new(
+                        corpus,
+                        mcfg.batch,
+                        mcfg.seq,
+                        super::VAL_STREAM,
+                    ))
+                } else {
+                    None
                 };
-                run_stage(worker, data, rx_fwd, tx_fwd, rx_bwd, tx_bwd, n_micro)
-            }),
-        ));
+            handles.push((
+                rep,
+                k,
+                std::thread::spawn(move || -> Result<StageReport> {
+                    let rt = Runtime::open_restricted(&dir, &keep)?;
+                    let part_k = StagePartition::new(&rt.manifest, cfg_k.stages);
+                    let opt = optim::build(&cfg_k.method, &rt, &cfg_k);
+                    let use_stash = cfg_k.stash != StashMode::NoStash;
+                    let stash_weights =
+                        use_stash || matches!(cfg_k.method, Method::DelayComp { .. });
+                    let worker = Worker {
+                        k,
+                        stages: cfg_k.stages,
+                        replica: rep,
+                        dp: dp_handle,
+                        blocks: part_k.blocks_of_stage[k].clone(),
+                        params: init_k,
+                        opt,
+                        part: part_k,
+                        cfg: cfg_k,
+                        stash: Default::default(),
+                        pending_tokens: Default::default(),
+                        pending_targets: Default::default(),
+                        use_stash,
+                        stash_weights,
+                        updates: 0,
+                        compute_s: 0.0,
+                        idle_s: 0.0,
+                        losses: Vec::new(),
+                        val_losses: Vec::new(),
+                        val_iter,
+                        diverged: false,
+                        rt,
+                    };
+                    run_stage(worker, data, rx_fwd, tx_fwd, rx_bwd, tx_bwd, n_micro)
+                }),
+            ));
+        }
     }
 
     let mut result = RunResult::new(&cfg.method.name(), p);
+    result.replicas = r_count;
     result.param_count = man0.total_params();
     let mut total_compute = 0.0;
     let mut total_idle = 0.0;
-    for (k, h) in handles {
-        let rep = h.join().map_err(|_| anyhow!("stage {k} panicked"))??;
-        total_compute += rep.compute_s;
-        total_idle += rep.idle_s;
-        result.dispatches += rep.dispatches;
-        result.optimizer_state_elems += rep.state_elems;
-        result.diverged |= rep.diverged;
-        if rep.stage == p - 1 {
-            result.losses = rep.losses;
-            result.val_losses = rep.val_losses;
+    let mut rep_losses: Vec<Vec<f32>> = vec![Vec::new(); r_count];
+    for (rep, k, h) in handles {
+        let sr = h
+            .join()
+            .map_err(|_| anyhow!("replica {rep} stage {k} panicked"))??;
+        total_compute += sr.compute_s;
+        total_idle += sr.idle_s;
+        result.dispatches += sr.dispatches;
+        result.optimizer_state_elems += sr.state_elems;
+        result.diverged |= sr.diverged;
+        result.stage_counters.push(StageCounter {
+            replica: rep,
+            stage: k,
+            dispatches: sr.dispatches,
+            optimizer_state_elems: sr.state_elems,
+            updates: sr.updates,
+        });
+        if sr.stage == p - 1 {
+            if rep == 0 {
+                result.val_losses = sr.val_losses;
+            }
+            rep_losses[rep] = sr.losses;
         }
     }
+    result.stage_counters.sort_by_key(|c| (c.replica, c.stage));
+    // Per-step replica mean, like the simulator (truncated to the
+    // shortest replica on early stop). R = 1 passes losses through.
+    let n_steps = rep_losses.iter().map(|l| l.len()).min().unwrap_or(0);
+    result.losses = (0..n_steps)
+        .map(|i| {
+            let at_step: Vec<f32> = rep_losses.iter().map(|l| l[i]).collect();
+            dp::mean_loss(&at_step)
+        })
+        .collect();
     result.wall_secs = t0.elapsed().as_secs_f64();
     result.bubble_frac = if total_compute + total_idle > 0.0 {
         total_idle / (total_compute + total_idle)
     } else {
         0.0
     };
-    result.tokens_per_sec =
-        (result.losses.len() as f64 * mcfg.batch as f64 * mcfg.seq as f64)
-            / result.wall_secs;
+    result.tokens_per_sec = (result.losses.len() as f64
+        * r_count as f64
+        * mcfg.batch as f64
+        * mcfg.seq as f64)
+        / result.wall_secs;
     Ok(result)
 }
 

@@ -10,7 +10,13 @@
 //!   stage-local `Box<dyn Optimizer>` per stage, dense + MoE blocks).
 //!   Integration tests pin its loss trajectory to the simulator's for
 //!   PipeDream, Nesterov and basis rotation.
+//! * `dp` — the data-parallel axis shared by both: `TrainCfg::replicas
+//!   = R` pipeline replicas over disjoint shards with a deterministic
+//!   replica-order gradient average at every optimizer step (in-process
+//!   for the sim, a channel tree-reduce across stage threads for the
+//!   engine).
 
+pub mod dp;
 pub mod engine;
 
 use anyhow::Result;
@@ -21,8 +27,8 @@ use anyhow::Result;
 pub const VAL_STREAM: u64 = 999;
 
 use crate::config::{Method, StashMode, TrainCfg};
-use crate::data::{BatchIter, Corpus};
-use crate::metrics::RunResult;
+use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
+use crate::metrics::{RunResult, StageCounter};
 use crate::model::{init_params, StagePartition};
 use crate::optim::{self, clip_global_norm, StepCtx};
 use crate::runtime::{
@@ -118,6 +124,15 @@ pub fn train_sim(rt: &Runtime, cfg: &TrainCfg) -> Result<RunResult> {
 /// `train_sim` with an observer called after every update with
 /// (step, current params), returning the final params — used by the
 /// Fig. 11 alignment analysis and by checkpoint-style consumers.
+///
+/// Data parallelism (`cfg.replicas = R > 1`): every step computes R
+/// gradients on disjoint data shards (`data::replica_stream`) against
+/// the **same** stale weight views — the replicas stay in parameter
+/// lockstep because each applies the identical averaged gradient
+/// (`dp::average`, deterministic replica-order fold) — then performs
+/// one optimizer update. The recorded loss is the replica mean; at
+/// P = 1 this reproduces the sequential large-batch (R x b) trajectory
+/// exactly, which the `dp_*` integration tests pin down.
 pub fn train_sim_observed(
     rt: &Runtime,
     cfg: &TrainCfg,
@@ -125,6 +140,7 @@ pub fn train_sim_observed(
 ) -> Result<(RunResult, Vec<Tensor>)> {
     let man = &rt.manifest;
     let mcfg = rt.cfg().clone();
+    let replicas = cfg.dp_replicas();
     let part = StagePartition::new(man, cfg.stages);
     let mut params = init_params(man, cfg.seed);
     let mut stash = StashRing::new(&params, &part.delay_of);
@@ -134,64 +150,89 @@ pub fn train_sim_observed(
     };
     let mut opt = optim::build(&cfg.method, rt, cfg);
     let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
-    let mut train_iter = BatchIter::new(corpus.clone(), mcfg.batch, mcfg.seq, 1);
+    let mut train_iters: Vec<BatchIter> = (0..replicas)
+        .map(|r| {
+            BatchIter::new(
+                corpus.clone(),
+                mcfg.batch,
+                mcfg.seq,
+                replica_stream(TRAIN_STREAM, r),
+            )
+        })
+        .collect();
     let mut val_iter = BatchIter::new(corpus, mcfg.batch, mcfg.seq, VAL_STREAM);
 
     let mut result = RunResult::new(&cfg.method.name(), cfg.stages);
+    result.replicas = replicas;
     result.param_count = man.total_params();
-    result.optimizer_state_elems = opt.state_elems();
+    let mut rep_dispatches = vec![0u64; replicas];
     let t0 = std::time::Instant::now();
 
     for t in 1..=cfg.steps as u64 {
-        let (toks, tgts) = train_iter.next_batch();
-        let tok_val = tokens_to_value(&toks, mcfg.batch, mcfg.seq)?;
-        let tgt_val = tokens_to_value(&tgts, mcfg.batch, mcfg.seq)?;
+        // One gradient per replica, all against the same stale views.
+        let mut grad_sets: Vec<Vec<Tensor>> = Vec::with_capacity(replicas);
+        let mut rep_losses: Vec<f32> = Vec::with_capacity(replicas);
+        for (r, train_iter) in train_iters.iter_mut().enumerate() {
+            let (toks, tgts) = train_iter.next_batch();
+            let tok_val = tokens_to_value(&toks, mcfg.batch, mcfg.seq)?;
+            let tgt_val = tokens_to_value(&tgts, mcfg.batch, mcfg.seq)?;
 
-        // Assemble forward weights per staleness mode.
-        let (exec_name, mut inputs): (&str, Vec<Value>) = match cfg.stash {
-            StashMode::Stash => {
-                let ins: Result<Vec<_>> = (0..params.len())
-                    .map(|i| tensor_to_value(stash.stale(i)))
-                    .collect();
-                ("fwdbwd", ins?)
-            }
-            StashMode::NoStash => {
-                // forward at stale weights, backward ops at current ones
-                let mut ins = Vec::with_capacity(2 * params.len() + 2);
-                for i in 0..params.len() {
-                    ins.push(tensor_to_value(stash.stale(i))?);
+            // Assemble forward weights per staleness mode.
+            let (exec_name, mut inputs): (&str, Vec<Value>) = match cfg.stash {
+                StashMode::Stash => {
+                    let ins: Result<Vec<_>> = (0..params.len())
+                        .map(|i| tensor_to_value(stash.stale(i)))
+                        .collect();
+                    ("fwdbwd", ins?)
                 }
-                for p in &params {
-                    ins.push(tensor_to_value(p)?);
+                StashMode::NoStash => {
+                    // forward at stale weights, backward ops at current
+                    let mut ins = Vec::with_capacity(2 * params.len() + 2);
+                    for i in 0..params.len() {
+                        ins.push(tensor_to_value(stash.stale(i))?);
+                    }
+                    for p in &params {
+                        ins.push(tensor_to_value(p)?);
+                    }
+                    ("fwdbwd_split", ins)
                 }
-                ("fwdbwd_split", ins)
-            }
-            StashMode::Predict => {
-                let pred = predictor.as_ref().unwrap();
-                let ins: Result<Vec<_>> = params
+                StashMode::Predict => {
+                    let pred = predictor.as_ref().unwrap();
+                    let ins: Result<Vec<_>> = params
+                        .iter()
+                        .enumerate()
+                        .map(|(i, w)| {
+                            tensor_to_value(&pred.predict(i, w, part.delay_of[i]))
+                        })
+                        .collect();
+                    ("fwdbwd", ins?)
+                }
+            };
+            inputs.push(tok_val);
+            inputs.push(tgt_val);
+
+            let outs = rt.exec(exec_name, &inputs)?;
+            rep_dispatches[r] += 1;
+            rep_losses.push(value_scalar_f32(&outs[0])?);
+            grad_sets.push(
+                outs[1..]
                     .iter()
-                    .enumerate()
-                    .map(|(i, w)| {
-                        tensor_to_value(&pred.predict(i, w, part.delay_of[i]))
-                    })
-                    .collect();
-                ("fwdbwd", ins?)
-            }
-        };
-        inputs.push(tok_val);
-        inputs.push(tgt_val);
-
-        let outs = rt.exec(exec_name, &inputs)?;
-        let loss = value_scalar_f32(&outs[0])?;
-        let mut grads: Vec<Tensor> = outs[1..]
-            .iter()
-            .zip(man.params.iter())
-            .map(|(val, p)| value_to_tensor(val, &p.shape))
-            .collect::<Result<_>>()?;
-        if !loss.is_finite() {
+                    .zip(man.params.iter())
+                    .map(|(val, p)| value_to_tensor(val, &p.shape))
+                    .collect::<Result<_>>()?,
+            );
+        }
+        let loss = dp::mean_loss(&rep_losses);
+        if rep_losses.iter().any(|l| !l.is_finite()) {
             result.diverged = true;
             break;
         }
+        // All-reduce (averaging) barrier, then clip the reduced grad.
+        let mut grads = if replicas == 1 {
+            grad_sets.pop().unwrap()
+        } else {
+            dp::average(&grad_sets)
+        };
         clip_global_norm(&mut grads, cfg.grad_clip);
 
         // Apply the (delayed) gradient to the *current* weights.
@@ -233,6 +274,23 @@ pub fn train_sim_observed(
     }
     result.wall_secs = t0.elapsed().as_secs_f64();
     result.dispatches = rt.total_dispatches();
+    // Per-replica breakdown (the sim is whole-model, so stage = 0).
+    // State accounting models the distributed system the sim stands in
+    // for — each replica owns a full optimizer-state copy, exactly as
+    // on the engine — so the per-replica rows carry the full state and
+    // the aggregate is scaled by R to match the engine's sum. (The sim
+    // process itself holds a single shared copy.)
+    result.optimizer_state_elems = opt.state_elems() * replicas;
+    let updates = result.losses.len() as u64;
+    for (r, &d) in rep_dispatches.iter().enumerate() {
+        result.stage_counters.push(StageCounter {
+            replica: r,
+            stage: 0,
+            dispatches: d,
+            optimizer_state_elems: opt.state_elems(),
+            updates,
+        });
+    }
     Ok((result, params))
 }
 

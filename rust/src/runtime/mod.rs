@@ -484,6 +484,13 @@ impl Runtime {
         Runtime::from_parts(manifest, self.backend)
     }
 
+    /// Open a model directory and immediately restrict it to the given
+    /// manifest indices — the per-(replica x stage) view every engine
+    /// worker thread builds its optimizer over.
+    pub fn open_restricted(dir: impl AsRef<Path>, keep: &[usize]) -> Result<Runtime> {
+        Ok(Runtime::open(dir)?.restricted(keep))
+    }
+
     /// The model config this runtime serves.
     pub fn cfg(&self) -> &ModelCfg {
         &self.manifest.cfg

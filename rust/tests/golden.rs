@@ -1,0 +1,148 @@
+//! Golden-trajectory fixtures: the first-20-step training losses of
+//! every method at P=4 (and at P=4 x R=2 on the DP axis) are pinned to
+//! JSON fixtures under `rust/tests/fixtures/`, diffed within 1e-10 —
+//! so a trajectory regression fails loudly instead of silently
+//! shifting every downstream figure.
+//!
+//! Regeneration: `BLESS=1 cargo test --test golden -- --ignored`
+//! rewrites the fixtures from the current code (a missing fixture is
+//! also blessed on first run, so a fresh checkout bootstraps itself).
+//! These runs are slow for a PR gate and are `#[ignore]`d; CI executes
+//! them in the nightly `cargo test -q -- --ignored` job.
+
+use std::path::PathBuf;
+
+use abrot::config::{Method, TrainCfg};
+use abrot::jsonio::{arr, num, obj, s, Json};
+use abrot::pipeline::train_sim;
+use abrot::runtime::Runtime;
+
+const MODEL: &str = "pico4";
+const STEPS: u32 = 20;
+const SEED: u64 = 2024;
+const LR: f32 = 5e-3;
+
+fn all_methods() -> [Method; 8] {
+    [
+        Method::PipeDream,
+        Method::PipeDreamLr,
+        Method::Nesterov,
+        Method::DelayComp { lambda: 0.1 },
+        Method::br_default(),
+        Method::Soap { freq: 5 },
+        Method::Muon,
+        Method::Scion,
+    ]
+}
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("fixtures")
+}
+
+fn run(method: Method, stages: usize, replicas: usize) -> Vec<f32> {
+    let rt = Runtime::open(
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(MODEL),
+    )
+    .unwrap();
+    let cfg = TrainCfg {
+        method,
+        stages,
+        replicas,
+        steps: STEPS,
+        lr: LR,
+        seed: SEED,
+        log_every: 0,
+        ..Default::default()
+    };
+    let res = train_sim(&rt, &cfg)
+        .unwrap_or_else(|e| panic!("{} P={stages} R={replicas}: {e}", method.name()));
+    assert_eq!(res.losses.len(), STEPS as usize, "{}", method.name());
+    res.losses
+}
+
+/// Diff `losses` against the named fixture within 1e-10, or (re)write
+/// it when `BLESS=1` is set or the fixture does not exist yet. In CI
+/// (the `CI` env var is set) a missing fixture is a hard failure, not
+/// an auto-bless — otherwise the nightly gate could never catch a
+/// regression: it would re-bless the regressed trajectory every run.
+fn check_or_bless(name: &str, losses: &[f32]) {
+    let path = fixture_dir().join(format!("{name}.json"));
+    let bless = std::env::var("BLESS").as_deref() == Ok("1");
+    if !path.exists() && !bless && std::env::var("CI").is_ok() {
+        panic!(
+            "{name}: fixture {} missing in CI; generate locally with \
+             `BLESS=1 cargo test --test golden -- --ignored` and commit it",
+            path.display()
+        );
+    }
+    if bless || !path.exists() {
+        let j = obj(vec![
+            ("model", s(MODEL)),
+            ("steps", num(STEPS as f64)),
+            ("seed", num(SEED as f64)),
+            ("lr", num(LR as f64)),
+            ("losses", arr(losses.iter().map(|&l| num(l as f64)).collect())),
+        ]);
+        std::fs::create_dir_all(fixture_dir()).unwrap();
+        std::fs::write(&path, j.to_string()).unwrap();
+        eprintln!("golden: blessed {}", path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{name}: bad fixture: {e}"));
+    let stored: Vec<f64> =
+        j.at("losses").as_arr().iter().map(|x| x.as_f64()).collect();
+    assert_eq!(
+        stored.len(),
+        losses.len(),
+        "{name}: trajectory length changed; rerun with BLESS=1 if intended"
+    );
+    for (i, (&want, &got)) in stored.iter().zip(losses).enumerate() {
+        assert!(
+            (want - got as f64).abs() < 1e-10,
+            "{name} step {}: fixture {want} vs current {got} \
+             (rerun with BLESS=1 if this change is intended)",
+            i + 1
+        );
+    }
+}
+
+#[test]
+#[ignore = "slow golden run; nightly job executes with -- --ignored"]
+fn golden_trajectories_every_method_p4() {
+    for m in all_methods() {
+        check_or_bless(&format!("p4_{}", m.name()), &run(m, 4, 1));
+    }
+}
+
+#[test]
+#[ignore = "slow golden run; nightly job executes with -- --ignored"]
+fn golden_trajectories_every_method_p4_r2() {
+    for m in all_methods() {
+        check_or_bless(&format!("p4_r2_{}", m.name()), &run(m, 4, 2));
+    }
+}
+
+#[test]
+fn blessing_round_trips_through_fixture_format() {
+    // Fast self-check of the fixture writer/reader pair (not ignored):
+    // a blessed file must read back bit-identically, including values
+    // that stress the f32 -> f64 -> text -> f64 path.
+    let dir = std::env::temp_dir().join(format!("abrot_golden_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let losses = [2.7182817f32, 1.0e-7, 3.25, 0.1];
+    let j = obj(vec![
+        ("model", s(MODEL)),
+        ("losses", arr(losses.iter().map(|&l| num(l as f64)).collect())),
+    ]);
+    let path = dir.join("roundtrip.json");
+    std::fs::write(&path, j.to_string()).unwrap();
+    let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    for (x, &l) in back.at("losses").as_arr().iter().zip(&losses) {
+        assert_eq!(x.as_f64(), l as f64);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

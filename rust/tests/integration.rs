@@ -12,11 +12,16 @@ use std::path::PathBuf;
 
 use abrot::config::{Method, StashMode, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
-use abrot::model::init_params;
+use abrot::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
+use abrot::model::{init_params, StagePartition};
+use abrot::optim::{self, clip_global_norm, StepCtx};
 use abrot::optim::reference::{self, Scalars};
 use abrot::pipeline::train_sim;
 use abrot::rngs::Rng;
-use abrot::runtime::{tensor_to_value, tokens_to_value, Runtime, Value};
+use abrot::runtime::{
+    tensor_to_value, tokens_to_value, value_scalar_f32, value_to_tensor, Runtime,
+    Value,
+};
 use abrot::tensor::{stack, unstack, Tensor};
 
 fn root() -> PathBuf {
@@ -578,6 +583,213 @@ fn all_methods_run_one_step_on_moe_and_dense() {
             assert!(r.losses.iter().all(|l| l.is_finite()), "{model} {}", m.name());
         }
     }
+}
+
+/// Independent sequential large-batch reference for the DP axis: at
+/// P = 1 (no staleness) compute the R shard gradients one after the
+/// other, fold them in replica order exactly like `pipeline::dp`
+/// (clone the first set, add the rest, scale by 1/R), clip, and take
+/// one optimizer step. `replicas = R` in the simulator must reproduce
+/// this trajectory *bit for bit* — DP at P=1 is just a bigger batch.
+fn seq_large_batch_ref(rt: &Runtime, cfg: &TrainCfg) -> Vec<f32> {
+    let man = &rt.manifest;
+    let mcfg = rt.cfg().clone();
+    let r_count = cfg.dp_replicas();
+    let part = StagePartition::new(man, 1);
+    let mut params = init_params(man, cfg.seed);
+    let mut opt = optim::build(&cfg.method, rt, cfg);
+    let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
+    let mut iters: Vec<BatchIter> = (0..r_count)
+        .map(|r| {
+            BatchIter::new(
+                corpus.clone(),
+                mcfg.batch,
+                mcfg.seq,
+                replica_stream(TRAIN_STREAM, r),
+            )
+        })
+        .collect();
+    let mut losses = Vec::new();
+    for t in 1..=cfg.steps as u64 {
+        let mut acc: Option<Vec<Tensor>> = None;
+        let mut loss_sum = 0.0f32;
+        for it in iters.iter_mut() {
+            let (toks, tgts) = it.next_batch();
+            let mut ins: Vec<Value> =
+                params.iter().map(|p| tensor_to_value(p).unwrap()).collect();
+            ins.push(tokens_to_value(&toks, mcfg.batch, mcfg.seq).unwrap());
+            ins.push(tokens_to_value(&tgts, mcfg.batch, mcfg.seq).unwrap());
+            let outs = rt.exec("fwdbwd", &ins).unwrap();
+            loss_sum += value_scalar_f32(&outs[0]).unwrap();
+            let grads: Vec<Tensor> = outs[1..]
+                .iter()
+                .zip(man.params.iter())
+                .map(|(v, p)| value_to_tensor(v, &p.shape).unwrap())
+                .collect();
+            if acc.is_none() {
+                acc = Some(grads);
+            } else {
+                let folded = acc.as_mut().unwrap();
+                for (a, g) in folded.iter_mut().zip(&grads) {
+                    for (x, &y) in a.data.iter_mut().zip(&g.data) {
+                        *x += y;
+                    }
+                }
+            }
+        }
+        let mut grads = acc.unwrap();
+        if r_count > 1 {
+            let inv = 1.0 / r_count as f32;
+            for g in grads.iter_mut() {
+                for x in g.data.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+        clip_global_norm(&mut grads, cfg.grad_clip);
+        // DelayComp's Taylor reference: at P=1 the "stale" view is the
+        // current weights (zero delay), like the simulator's stash.
+        let stale_view = params.clone();
+        let ctx = StepCtx {
+            t,
+            lr: cfg.lr_at(t as u32),
+            cfg,
+            part: &part,
+            stale: Some(&stale_view),
+            rt,
+        };
+        opt.step(&ctx, &mut params, &grads).unwrap();
+        losses.push(loss_sum / r_count as f32);
+    }
+    losses
+}
+
+#[test]
+fn dp_at_p1_exactly_reproduces_sequential_large_batch_every_method() {
+    // Tentpole acceptance: replicas = R at P = 1 is the sequential
+    // R x b large-batch run, bit for bit, for every optimizer method.
+    let methods = [
+        Method::PipeDream,
+        Method::PipeDreamLr,
+        Method::Nesterov,
+        Method::DelayComp { lambda: 0.1 },
+        Method::br_default(),
+        Method::Soap { freq: 3 },
+        Method::Muon,
+        Method::Scion,
+    ];
+    let rt = Runtime::open(root().join("micro")).unwrap();
+    for m in methods {
+        for replicas in [1usize, 2, 4] {
+            let cfg = TrainCfg {
+                method: m,
+                stages: 1,
+                replicas,
+                steps: 6,
+                lr: 5e-3,
+                seed: 55,
+                ..Default::default()
+            };
+            let sim = train_sim(&rt, &cfg).unwrap();
+            let want = seq_large_batch_ref(&rt, &cfg);
+            assert_eq!(sim.losses.len(), want.len(), "{} R={replicas}", m.name());
+            for (i, (a, b)) in sim.losses.iter().zip(&want).enumerate() {
+                assert!(
+                    a == b,
+                    "{} R={replicas} step {}: sim {a} vs sequential {b}",
+                    m.name(),
+                    i + 1
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dp_engine_matches_simulator_trajectory_p4_r2() {
+    // The DP axis composes with staleness on the real engine: at
+    // P=4 x R=2 the threaded pipelines (per-replica 1F1B stashes,
+    // channel-based all-reduce per stage) trace the simulator's
+    // replica-mean loss curve for the baseline and the paper's method.
+    // (Clipping disabled: the engine clips per-stage, the sim globally.)
+    let steps = 10;
+    for method in [Method::PipeDream, Method::br_default()] {
+        let mk = |_: ()| TrainCfg {
+            method,
+            stages: 4,
+            replicas: 2,
+            steps,
+            lr: 5e-3,
+            grad_clip: 1e9,
+            seed: 321,
+            ..Default::default()
+        };
+        let rt = Runtime::open(root().join("pico4")).unwrap();
+        let sim = train_sim(&rt, &mk(())).unwrap();
+        let mut coord = Coordinator::new(root());
+        let eng = coord
+            .run_engine(&Experiment { model: "pico4".into(), train: mk(()) })
+            .unwrap();
+        assert_eq!(eng.replicas, 2);
+        assert_eq!(sim.losses.len(), eng.losses.len(), "{}", method.name());
+        for (i, (a, b)) in sim.losses.iter().zip(&eng.losses).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 * a.abs().max(1.0),
+                "{} step {i}: sim {a} vs engine {b}",
+                method.name()
+            );
+        }
+        // per-(replica x stage) counters cover the whole R x P grid
+        let mut cells: Vec<(usize, usize)> =
+            eng.stage_counters.iter().map(|c| (c.replica, c.stage)).collect();
+        cells.sort_unstable();
+        cells.dedup();
+        assert_eq!(cells.len(), 2 * 4, "{}", method.name());
+        assert!(eng.stage_counters.iter().all(|c| c.updates == steps as u64));
+    }
+}
+
+#[test]
+fn dp_engine_replicas_share_validation_and_divergence_contracts() {
+    // R=2 engine run with validation: only replica 0 samples the val
+    // stream, labels match the R=1 behaviour; loss count unchanged.
+    let mut coord = Coordinator::new(root());
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stages: 2,
+        replicas: 2,
+        steps: 12,
+        lr: 5e-3,
+        eval_every: 3,
+        seed: 41,
+        ..Default::default()
+    };
+    let r = coord
+        .run_engine(&Experiment { model: "micro".into(), train: cfg })
+        .unwrap();
+    assert_eq!(r.losses.len(), 12);
+    let labels: Vec<u32> = r.val_losses.iter().map(|(t, _)| *t).collect();
+    assert_eq!(labels, vec![3, 6, 9, 12]);
+    assert!(!r.diverged);
+
+    // divergence in any replica stops the whole DP group
+    let blow_up = TrainCfg {
+        method: Method::PipeDream,
+        stages: 2,
+        replicas: 2,
+        steps: 12,
+        lr: 1e9,
+        grad_clip: 1e12,
+        warmup_frac: 0.0,
+        seed: 3,
+        ..Default::default()
+    };
+    let r = coord
+        .run_engine(&Experiment { model: "micro".into(), train: blow_up })
+        .unwrap();
+    assert!(r.diverged, "expected divergence at lr=1e9");
+    assert!(r.losses.len() < 12, "run should stop early, got {}", r.losses.len());
+    assert!(r.losses.iter().all(|l| l.is_finite()));
 }
 
 /// Property-style sweep: for random (P, seed) the stash ring always

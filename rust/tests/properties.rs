@@ -1,0 +1,174 @@
+//! Property-style randomized tests (seeded `rngs`, no external crates)
+//! for the manifest-restriction machinery every parallelism axis leans
+//! on (`Manifest::restrict` / `Runtime::restricted`):
+//!
+//! * for random stage partitions, the restricted parameter lists, shape
+//!   class slot counts and optimizer-state element counts must
+//!   partition the full manifest exactly;
+//! * restrict-then-merge gradient sets must round-trip bit-for-bit.
+
+use std::path::PathBuf;
+
+use abrot::config::{Method, TrainCfg};
+use abrot::model::{init_params, StagePartition};
+use abrot::optim;
+use abrot::pipeline::dp;
+use abrot::rngs::Rng;
+use abrot::runtime::{Manifest, Runtime};
+use abrot::tensor::Tensor;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+const MODELS: [&str; 3] = ["micro", "pico4", "moe_micro"];
+
+/// Random stage count in 1..=n_blocks.
+fn random_stages(rng: &mut Rng, man: &Manifest) -> usize {
+    1 + rng.below(man.cfg.n_blocks)
+}
+
+#[test]
+fn random_stage_partitions_cover_params_and_classes_exactly() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for model in MODELS {
+        let man = Manifest::builtin(model).unwrap();
+        for _case in 0..6 {
+            let p = random_stages(&mut rng, &man);
+            let part = StagePartition::new(&man, p);
+
+            // every parameter appears in exactly one stage
+            let mut covered = vec![0usize; man.params.len()];
+            for k in 0..p {
+                for i in part.params_of_stage(k) {
+                    covered[i] += 1;
+                }
+            }
+            assert!(
+                covered.iter().all(|&c| c == 1),
+                "{model} P={p}: {covered:?}"
+            );
+
+            // restricted shape-class slot counts partition the full
+            // class counts (classes with no resident slot disappear)
+            for sc in &man.shape_classes {
+                let total: usize = (0..p)
+                    .map(|k| {
+                        let r = man.restrict(&part.params_of_stage(k));
+                        r.shape_classes
+                            .iter()
+                            .find(|c| c.name == sc.name)
+                            .map_or(0, |c| c.count)
+                    })
+                    .sum();
+                assert_eq!(total, sc.count, "{model} P={p} class {}", sc.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn restricted_optimizer_state_partitions_full_state() {
+    let methods = [
+        Method::PipeDream,
+        Method::DelayComp { lambda: 0.1 },
+        Method::br_default(),
+        Method::Soap { freq: 5 },
+        Method::Muon,
+    ];
+    let mut rng = Rng::new(0xBA5E);
+    for model in MODELS {
+        let full_rt = Runtime::open(root().join(model)).unwrap();
+        for _case in 0..3 {
+            let p = random_stages(&mut rng, &full_rt.manifest);
+            let part = StagePartition::new(&full_rt.manifest, p);
+            let cfg = TrainCfg { stages: p, ..Default::default() };
+            for m in methods {
+                let full = optim::build(&m, &full_rt, &cfg).state_elems();
+                let split: usize = (0..p)
+                    .map(|k| {
+                        let rt = Runtime::open_restricted(
+                            root().join(model),
+                            &part.params_of_stage(k),
+                        )
+                        .unwrap();
+                        optim::build(&m, &rt, &cfg).state_elems()
+                    })
+                    .sum();
+                assert_eq!(
+                    split, full,
+                    "{model} P={p} {}: per-stage state must sum to full",
+                    m.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn restrict_then_merge_gradients_round_trip() {
+    let mut rng = Rng::new(0xD1CE);
+    for model in MODELS {
+        let man = Manifest::builtin(model).unwrap();
+        let full: Vec<Tensor> = init_params(&man, 17);
+        for _case in 0..4 {
+            let p = random_stages(&mut rng, &man);
+            let part = StagePartition::new(&man, p);
+            let parts: Vec<(Vec<usize>, Vec<Tensor>)> = (0..p)
+                .map(|k| {
+                    let keep = part.params_of_stage(k);
+                    let local: Vec<Tensor> =
+                        keep.iter().map(|&i| full[i].clone()).collect();
+                    // the restricted manifest sees the same shapes in
+                    // the same (preserved) order
+                    let r = man.restrict(&keep);
+                    for (spec, t) in r.params.iter().zip(&local) {
+                        assert_eq!(spec.shape, t.shape);
+                    }
+                    (keep, local)
+                })
+                .collect();
+            let merged = dp::merge_restricted(man.params.len(), &parts).unwrap();
+            for (a, b) in merged.iter().zip(&full) {
+                assert_eq!(a.data, b.data, "{model} P={p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn random_subset_restriction_keeps_slot_accounting() {
+    // Not just stage-contiguous cuts: restrict to arbitrary random
+    // subsets and check the regenerated classes/executables stay
+    // consistent with the surviving parameters.
+    let mut rng = Rng::new(0xFACE);
+    for model in MODELS {
+        let man = Manifest::builtin(model).unwrap();
+        for _case in 0..6 {
+            let keep: Vec<usize> = (0..man.params.len())
+                .filter(|_| rng.below(2) == 1)
+                .collect();
+            let r = man.restrict(&keep);
+            assert_eq!(r.params.len(), keep.len());
+            for sc in &r.shape_classes {
+                let slots: usize =
+                    r.params.iter().map(|p| p.slots_in_class(&sc.name)).sum();
+                assert_eq!(slots, sc.count, "{model} class {}", sc.name);
+                assert!(sc.count > 0, "empty classes must be dropped");
+                // regenerated batched executables sized to local counts
+                let exec = &r.executables[&format!("muon_{}", sc.name)];
+                assert_eq!(exec.inputs[0].shape[0], sc.count);
+            }
+            // dropped classes keep no stale optimizer executables
+            for sc in &man.shape_classes {
+                if !r.shape_classes.iter().any(|c| c.name == sc.name) {
+                    assert!(
+                        !r.executables.contains_key(&format!("muon_{}", sc.name)),
+                        "{model} stale exec for dropped class {}",
+                        sc.name
+                    );
+                }
+            }
+        }
+    }
+}

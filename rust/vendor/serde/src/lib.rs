@@ -1,0 +1,176 @@
+//! Minimal offline-vendored subset of the `serde` serialization API.
+//!
+//! Like the vendored `anyhow` subset, this keeps the default build
+//! fully offline: the real crates.io `serde` cannot be fetched in the
+//! sandboxed build environment. The subset covers exactly what this
+//! repo needs — `#[derive(serde::Serialize)]` on named-field structs,
+//! producing JSON text — and mirrors the real crate's shape (`serde`
+//! re-exporting the derive from `serde_derive`), so swapping in the
+//! real dependency later only widens the API.
+//!
+//! The single trait method is [`Serialize::to_json`]; the derive
+//! serializes every named field in declaration order. Non-finite
+//! floats serialize as `null` (standard JSON has no NaN/inf).
+
+// The derive emits `impl serde::Serialize for ...`; make that path
+// resolve inside this crate too (serde proper does the same).
+extern crate self as serde;
+
+pub use serde_derive::Serialize;
+
+/// A value serializable to JSON text (subset of serde's `Serialize`).
+pub trait Serialize {
+    /// Serialize `self` as a JSON value.
+    fn to_json(&self) -> String;
+}
+
+fn json_f64(x: f64) -> String {
+    if !x.is_finite() {
+        return "null".to_string();
+    }
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        // shortest round-trip representation
+        format!("{x}")
+    }
+}
+
+impl Serialize for f32 {
+    fn to_json(&self) -> String {
+        json_f64(f64::from(*self))
+    }
+}
+
+impl Serialize for f64 {
+    fn to_json(&self) -> String {
+        json_f64(*self)
+    }
+}
+
+macro_rules! impl_int {
+    ($($t:ty),*) => {$(
+        impl Serialize for $t {
+            fn to_json(&self) -> String {
+                format!("{}", self)
+            }
+        }
+    )*};
+}
+
+impl_int!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize);
+
+impl Serialize for bool {
+    fn to_json(&self) -> String {
+        if *self { "true".to_string() } else { "false".to_string() }
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+impl Serialize for String {
+    fn to_json(&self) -> String {
+        json_str(self)
+    }
+}
+
+impl Serialize for &str {
+    fn to_json(&self) -> String {
+        json_str(self)
+    }
+}
+
+impl<T: Serialize> Serialize for Vec<T> {
+    fn to_json(&self) -> String {
+        let cells: Vec<String> = self.iter().map(|x| x.to_json()).collect();
+        format!("[{}]", cells.join(","))
+    }
+}
+
+impl<T: Serialize> Serialize for Option<T> {
+    fn to_json(&self) -> String {
+        match self {
+            Some(x) => x.to_json(),
+            None => "null".to_string(),
+        }
+    }
+}
+
+impl<A: Serialize, B: Serialize> Serialize for (A, B) {
+    fn to_json(&self) -> String {
+        format!("[{},{}]", self.0.to_json(), self.1.to_json())
+    }
+}
+
+impl<A: Serialize, B: Serialize, C: Serialize> Serialize for (A, B, C) {
+    fn to_json(&self) -> String {
+        format!("[{},{},{}]", self.0.to_json(), self.1.to_json(), self.2.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_strings() {
+        assert_eq!(3u32.to_json(), "3");
+        assert_eq!(1.5f32.to_json(), "1.5");
+        assert_eq!(2.0f64.to_json(), "2");
+        assert_eq!(f32::NAN.to_json(), "null");
+        assert_eq!(true.to_json(), "true");
+        assert_eq!("a\"b".to_string().to_json(), "\"a\\\"b\"");
+    }
+
+    #[test]
+    fn containers() {
+        assert_eq!(vec![1u32, 2, 3].to_json(), "[1,2,3]");
+        assert_eq!((4u32, 0.5f32).to_json(), "[4,0.5]");
+        assert_eq!(Option::<u32>::None.to_json(), "null");
+        assert_eq!(Some(7u32).to_json(), "7");
+    }
+
+    #[derive(Serialize)]
+    struct Demo {
+        /// doc comments on fields must be skipped by the derive
+        pub steps: u32,
+        loss: f32,
+        tags: Vec<(u32, f32)>,
+        name: String,
+        ok: bool,
+    }
+
+    #[test]
+    fn derive_serializes_named_fields_in_order() {
+        let d = Demo {
+            steps: 20,
+            loss: 2.25,
+            tags: vec![(1, 0.5), (2, 0.25)],
+            name: "run".to_string(),
+            ok: true,
+        };
+        assert_eq!(
+            d.to_json(),
+            "{\"steps\":20,\"loss\":2.25,\"tags\":[[1,0.5],[2,0.25]],\
+             \"name\":\"run\",\"ok\":true}"
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! `#[derive(Serialize)]` for the vendored `serde` subset: serializes
+//! every named field of a struct to JSON, in declaration order, by
+//! delegating to `serde::Serialize::to_json` on each field value.
+//!
+//! No `syn`/`quote` (the build is offline): the input token stream is
+//! scanned directly. Supported shape: `struct Name { fields... }` with
+//! named fields; doc comments, attributes and `pub(...)` modifiers on
+//! fields are skipped. Tuple structs / enums / generics are out of
+//! scope and produce a compile error pointing here.
+
+use proc_macro::{Delimiter, TokenStream, TokenTree};
+
+/// Extract (struct name, named field idents in declaration order).
+fn parse_struct(input: TokenStream) -> Result<(String, Vec<String>), String> {
+    let mut name: Option<String> = None;
+    let mut saw_struct = false;
+    let mut body: Option<TokenStream> = None;
+    for tt in input {
+        match tt {
+            TokenTree::Ident(id) => {
+                let s = id.to_string();
+                if s == "struct" {
+                    saw_struct = true;
+                } else if saw_struct && name.is_none() {
+                    name = Some(s);
+                }
+            }
+            TokenTree::Group(g)
+                if g.delimiter() == Delimiter::Brace && name.is_some() =>
+            {
+                body = Some(g.stream());
+                break;
+            }
+            TokenTree::Punct(p) if p.as_char() == '<' && name.is_some() => {
+                return Err("generic structs are not supported".to_string());
+            }
+            _ => {}
+        }
+    }
+    let name = name.ok_or("expected a struct definition")?;
+    let body = body.ok_or("only structs with named fields are supported")?;
+
+    // Walk the brace body: a field is the first ident of each
+    // comma-separated entry (commas inside `<...>` belong to the type).
+    let mut fields = Vec::new();
+    let mut at_field_start = true;
+    let mut expect_colon = false;
+    let mut candidate = String::new();
+    let mut angle_depth = 0i32;
+    let mut toks = body.into_iter().peekable();
+    while let Some(tt) = toks.next() {
+        if at_field_start {
+            match tt {
+                // attribute / doc comment: `#` followed by `[...]`
+                TokenTree::Punct(p) if p.as_char() == '#' => {
+                    if matches!(toks.peek(), Some(TokenTree::Group(_))) {
+                        toks.next();
+                    }
+                }
+                TokenTree::Ident(id) if id.to_string() == "pub" => {
+                    // optional visibility scope: `pub(crate)` etc.
+                    if let Some(TokenTree::Group(g)) = toks.peek() {
+                        if g.delimiter() == Delimiter::Parenthesis {
+                            toks.next();
+                        }
+                    }
+                }
+                TokenTree::Ident(id) => {
+                    candidate = id.to_string();
+                    at_field_start = false;
+                    expect_colon = true;
+                }
+                _ => {}
+            }
+        } else if expect_colon {
+            match tt {
+                TokenTree::Punct(p) if p.as_char() == ':' => {
+                    fields.push(candidate.clone());
+                    expect_colon = false;
+                }
+                _ => return Err(format!("expected `:` after field {candidate}")),
+            }
+        } else {
+            // consuming the field type until a top-level comma
+            match tt {
+                TokenTree::Punct(p) => match p.as_char() {
+                    '<' => angle_depth += 1,
+                    '>' => angle_depth -= 1,
+                    ',' if angle_depth == 0 => at_field_start = true,
+                    _ => {}
+                },
+                _ => {}
+            }
+        }
+    }
+    Ok((name, fields))
+}
+
+#[proc_macro_derive(Serialize)]
+pub fn derive_serialize(input: TokenStream) -> TokenStream {
+    let (name, fields) = match parse_struct(input) {
+        Ok(x) => x,
+        Err(e) => {
+            let msg = format!(
+                "compile_error!(\"#[derive(serde::Serialize)] (vendored subset): {e}\");"
+            );
+            return msg.parse().unwrap();
+        }
+    };
+    let mut pushes = String::new();
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            pushes.push_str("out.push(',');\n");
+        }
+        pushes.push_str(&format!(
+            "out.push_str(\"\\\"{f}\\\":\");\n\
+             out.push_str(&serde::Serialize::to_json(&self.{f}));\n"
+        ));
+    }
+    let code = format!(
+        "impl serde::Serialize for {name} {{\n\
+             fn to_json(&self) -> String {{\n\
+                 let mut out = String::from(\"{{\");\n\
+                 {pushes}\
+                 out.push('}}');\n\
+                 out\n\
+             }}\n\
+         }}\n"
+    );
+    code.parse().unwrap()
+}
