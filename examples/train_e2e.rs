@@ -11,12 +11,13 @@
 //! Default scale targets the single-core CPU testbed (see DESIGN.md §5
 //! for the substitution from the paper's 95M-3B GPU models):
 //!
-//!     cargo run --release --example train_e2e -- [steps] [model] [P] [--replicas R]
+//!     cargo run --release --example train_e2e -- [steps] [model] [P] [--replicas R] [--schedule S]
 //!     cargo run --release --example train_e2e -- 300 tiny32 32   # full
 //!     cargo run --release --example train_e2e -- 60 pico8 4 --replicas 2  # DP x PP
+//!     cargo run --release --example train_e2e -- 60 pico8 4 --schedule interleaved:2
 //!     cargo run --release --example train_e2e                    # quick
 
-use abrot::config::{Method, TrainCfg};
+use abrot::config::{Method, ScheduleKind, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
 use abrot::metrics::{iter_reduction_vs, write_losses};
 
@@ -36,6 +37,20 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    // --schedule S (gpipe | 1f1b | interleaved[:V] | amdp)
+    let mut schedule = ScheduleKind::OneFOneB;
+    if let Some(i) = args.iter().position(|a| a == "--schedule") {
+        match args.get(i + 1).map(|x| x.as_str()).and_then(ScheduleKind::parse) {
+            Some(s) => {
+                schedule = s;
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--schedule expects gpipe|1f1b|interleaved[:V]|amdp; using 1f1b");
+                args.remove(i);
+            }
+        }
+    }
     let steps: u32 = args.get(1).and_then(|x| x.parse().ok()).unwrap_or(200);
     let model = args.get(2).cloned().unwrap_or_else(|| "pico32".to_string());
     let stages: usize = args.get(3).and_then(|x| x.parse().ok()).unwrap_or(32);
@@ -45,17 +60,21 @@ fn main() -> anyhow::Result<()> {
         stages,
         replicas,
         steps,
+        schedule,
         lr: 1e-2,
         seed: 1234,
         eval_every: (steps / 6).max(1),
         ..Default::default()
     };
 
-    println!("=== e2e: {model}, P={stages}, R={replicas}, {steps} steps/microbatches ===\n");
+    println!(
+        "=== e2e: {model}, P={stages}, R={replicas}, schedule={}, {steps} steps/microbatches ===\n",
+        schedule.name()
+    );
 
     // 1. Real pipelined engine (async PipeDream execution model),
     //    sampling validation losses through the pipeline.
-    println!("[1/3] threaded 1F1B engine (PipeDream)...");
+    println!("[1/3] threaded {} engine (PipeDream)...", schedule.name());
     let eng_steps = steps.min(60);
     let eng = coord.run_engine(&Experiment {
         model: model.clone(),

@@ -94,6 +94,65 @@ impl fmt::Display for Method {
     }
 }
 
+/// Which pipeline schedule drives the per-stage action streams
+/// (`pipeline::schedule`). The schedule decides warmup counts,
+/// fwd/bwd interleaving, how many microbatches feed one optimizer
+/// update, and the per-stage gradient-delay profile the staleness
+/// model (and the delay-aware optimizers) see.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Synchronous GPipe: M forwards, M backwards, one update. Delay 0
+    /// everywhere; bubble (P-1)/(M+P-1).
+    Gpipe,
+    /// Asynchronous 1F1B (PipeDream) — the repo's original hard-coded
+    /// schedule: stage k runs P-1-k warmup forwards then alternates
+    /// fwd/bwd with an update per microbatch. Delay P-1-k at stage k.
+    OneFOneB,
+    /// Synchronous interleaved 1F1B (Megatron): V virtual chunks per
+    /// worker shrink the fill bubble to (P-1)/(M·V+P-1). Delay 0.
+    Interleaved { v: usize },
+    /// Asynchronous bidirectional schedule (AMDP/Chimera-style): two
+    /// counter-flowing 1F1B streams over two full weight copies; each
+    /// update averages one microbatch per direction. Delay P-1-k,
+    /// requires even P.
+    Amdp,
+}
+
+impl ScheduleKind {
+    /// CLI name. `Interleaved` encodes V: `interleaved:2`.
+    pub fn name(&self) -> String {
+        match self {
+            ScheduleKind::Gpipe => "gpipe".into(),
+            ScheduleKind::OneFOneB => "1f1b".into(),
+            ScheduleKind::Interleaved { v } => format!("interleaved:{v}"),
+            ScheduleKind::Amdp => "amdp".into(),
+        }
+    }
+
+    /// Parse a `--schedule` value: `gpipe | 1f1b | interleaved[:V] | amdp`.
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        match s {
+            "gpipe" => Some(ScheduleKind::Gpipe),
+            "1f1b" | "pipedream" => Some(ScheduleKind::OneFOneB),
+            "amdp" => Some(ScheduleKind::Amdp),
+            _ => {
+                let rest = s.strip_prefix("interleaved")?;
+                if rest.is_empty() {
+                    return Some(ScheduleKind::Interleaved { v: 2 });
+                }
+                let v: usize = rest.strip_prefix(':')?.parse().ok()?;
+                (v >= 1).then_some(ScheduleKind::Interleaved { v })
+            }
+        }
+    }
+}
+
+impl fmt::Display for ScheduleKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 /// How stale weights are handled at the forward pass (paper §4.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StashMode {
@@ -128,6 +187,14 @@ pub struct TrainCfg {
     /// Linear warmup fraction followed by cosine decay (paper D.2).
     pub warmup_frac: f32,
     pub stash: StashMode,
+    /// Pipeline schedule (see [`ScheduleKind`]). `OneFOneB` is the
+    /// original behavior and keeps every pre-schedule config bit-exact.
+    pub schedule: ScheduleKind,
+    /// In-flight microbatches M for the synchronous schedules (GPipe /
+    /// interleaved): how many microbatches one optimizer update
+    /// averages over. 0 = auto (M = P). Ignored by `1f1b` (1 per
+    /// update) and `amdp` (2 per update, one per direction).
+    pub microbatches: u32,
     pub seed: u64,
     pub eval_every: u32,
     pub log_every: u32,
@@ -148,6 +215,8 @@ impl Default for TrainCfg {
             grad_clip: 1.0,
             warmup_frac: 0.012,
             stash: StashMode::Stash,
+            schedule: ScheduleKind::OneFOneB,
+            microbatches: 0,
             seed: 1234,
             eval_every: 0,
             log_every: 10,
@@ -274,6 +343,31 @@ mod tests {
         assert_eq!(zero.dp_replicas(), 1);
         let four = TrainCfg { replicas: 4, ..Default::default() };
         assert_eq!(four.dp_replicas(), 4);
+    }
+
+    #[test]
+    fn schedule_kind_parse_round_trips() {
+        let kinds = [
+            ScheduleKind::Gpipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved { v: 2 },
+            ScheduleKind::Interleaved { v: 4 },
+            ScheduleKind::Amdp,
+        ];
+        for k in kinds {
+            assert_eq!(ScheduleKind::parse(&k.name()), Some(k), "{k}");
+        }
+        // bare `interleaved` defaults to V=2; aliases and junk
+        assert_eq!(
+            ScheduleKind::parse("interleaved"),
+            Some(ScheduleKind::Interleaved { v: 2 })
+        );
+        assert_eq!(ScheduleKind::parse("pipedream"), Some(ScheduleKind::OneFOneB));
+        assert_eq!(ScheduleKind::parse("interleaved:0"), None);
+        assert_eq!(ScheduleKind::parse("gpipe2"), None);
+        // default config keeps the original schedule
+        assert_eq!(TrainCfg::default().schedule, ScheduleKind::OneFOneB);
+        assert_eq!(TrainCfg::default().microbatches, 0);
     }
 
     #[test]

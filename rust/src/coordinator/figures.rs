@@ -13,7 +13,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use crate::config::{FreqAlloc, Geometry, Method, Source, StashMode, TrainCfg};
+use crate::config::{FreqAlloc, Geometry, Method, ScheduleKind, Source, StashMode, TrainCfg};
 use crate::landscape;
 use crate::metrics::{
     iter_reduction_vs, iters_to_target, slowdown, write_losses, Csv, RunResult,
@@ -699,6 +699,59 @@ impl<'a> Harness<'a> {
         Ok(())
     }
 
+    /// Schedule comparison: the threaded engine under every pipeline
+    /// schedule at fixed P — wall-clock bubble vs the deterministic
+    /// schedule-model bubble vs the analytic formula, plus the loss
+    /// the staleness profile buys. The model needs P·V blocks for
+    /// interleaved:V (default caller: pico8 at P=4).
+    pub fn schedule(&mut self, model: &str, stages: usize) -> Result<()> {
+        println!("\n== Schedules: engine on {model} at P={stages} ==");
+        println!("{:<14} {:>12} {:>9} {:>9} {:>9} {:>8}",
+                 "schedule", "final_loss", "bubble%", "model%", "analytic%", "wall_s");
+        let mut csv = Csv::create(
+            self.out("schedule.csv"),
+            "schedule,stages,final_loss,bubble_frac,bubble_frac_model,bubble_frac_analytic,wall_secs",
+        )?;
+        let kinds = [
+            ScheduleKind::Gpipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved { v: 2 },
+            ScheduleKind::Amdp,
+        ];
+        for kind in kinds {
+            if kind == ScheduleKind::Amdp && stages % 2 != 0 {
+                println!("{:<14} skipped (amdp needs an even stage count)", kind.name());
+                continue;
+            }
+            let cfg = TrainCfg {
+                method: Method::PipeDream,
+                schedule: kind,
+                stages,
+                steps: self.opts.steps.min(40),
+                lr: self.opts.lr,
+                seed: self.opts.seed,
+                ..Default::default()
+            };
+            let r = self
+                .coord
+                .run_engine(&Experiment { model: model.into(), train: cfg })?;
+            println!("{:<14} {:>12.4} {:>9.1} {:>9.1} {:>9.1} {:>8.1}",
+                     r.schedule, r.final_loss(), r.bubble_frac * 100.0,
+                     r.bubble_frac_model * 100.0, r.bubble_frac_analytic * 100.0,
+                     r.wall_secs);
+            csv.row(&[
+                r.schedule.clone(),
+                stages.to_string(),
+                format!("{:.4}", r.final_loss()),
+                format!("{:.4}", r.bubble_frac),
+                format!("{:.4}", r.bubble_frac_model),
+                format!("{:.4}", r.bubble_frac_analytic),
+                format!("{:.2}", r.wall_secs),
+            ])?;
+        }
+        Ok(())
+    }
+
     /// Run everything.
     pub fn all(&mut self, model: &str) -> Result<()> {
         self.fig3()?;
@@ -719,6 +772,7 @@ impl<'a> Harness<'a> {
         self.fig11("tiny8")?;
         self.engine("micro", 2)?;
         self.dp("pico4", 4, &[1, 2])?;
+        self.schedule("pico8", 4)?;
         Ok(())
     }
 }

@@ -12,7 +12,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use abrot::config::{FreqAlloc, Geometry, Method, Source, StashMode, TrainCfg};
+use abrot::config::{FreqAlloc, Geometry, Method, ScheduleKind, Source, StashMode, TrainCfg};
 use abrot::coordinator::figures::{FigOpts, Harness};
 use abrot::coordinator::{Coordinator, Experiment};
 use abrot::metrics::write_losses;
@@ -113,6 +113,12 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
         "predict" => StashMode::Predict,
         s => bail!("bad --stash {s}"),
     };
+    let schedule = match args.get("schedule") {
+        None => ScheduleKind::OneFOneB,
+        Some(s) => ScheduleKind::parse(s).ok_or_else(|| {
+            anyhow!("bad --schedule {s:?}: use gpipe | 1f1b | interleaved[:V] | amdp")
+        })?,
+    };
     Ok(TrainCfg {
         method,
         stages: args.parse_num("stages", 1usize),
@@ -122,6 +128,8 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
         seed: args.parse_num("seed", 1234u64),
         eval_every: args.parse_num("eval-every", 0u32),
         stash,
+        schedule,
+        microbatches: args.parse_num("microbatches", 0u32),
         ..Default::default()
     })
 }
@@ -179,9 +187,12 @@ fn main() -> Result<()> {
             let res =
                 coord.run_engine(&Experiment { model: cfg_name, train: tcfg })?;
             println!(
-                "engine: P={} R={} final {:.4}  tokens/s {:.0}  bubble {:.1}%  wall {:.1}s",
-                res.stages, res.replicas, res.final_loss(), res.tokens_per_sec,
-                res.bubble_frac * 100.0, res.wall_secs
+                "engine: {} P={} R={} final {:.4}  tokens/s {:.0}  bubble {:.1}% \
+                 (model {:.1}%, analytic {:.1}%)  wall {:.1}s",
+                res.schedule, res.stages, res.replicas, res.final_loss(),
+                res.tokens_per_sec, res.bubble_frac * 100.0,
+                res.bubble_frac_model * 100.0, res.bubble_frac_analytic * 100.0,
+                res.wall_secs
             );
         }
         "repro" => {
@@ -230,6 +241,10 @@ fn main() -> Result<()> {
                     "dp" => {
                         let p = args.parse_num("dp-stages", 4usize);
                         h.dp(&args.get_or("dp-model", "pico4"), p, &[1, 2, 4])?
+                    }
+                    "schedule" => {
+                        let p = args.parse_num("schedule-stages", 4usize);
+                        h.schedule(&args.get_or("schedule-model", "pico8"), p)?
                     }
                     _ => bail!("unknown figure {f}"),
                     }

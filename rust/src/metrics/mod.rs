@@ -44,6 +44,24 @@ pub struct RunResult {
     /// engine-only counters
     pub bubble_frac: f64,
     pub tokens_per_sec: f64,
+    /// Pipeline schedule name ("1f1b", "gpipe", "interleaved:2", "amdp").
+    pub schedule: String,
+    /// Deterministic bubble fraction of the run's action streams on the
+    /// unit-cost virtual clock (`pipeline::schedule::simulate`) — the
+    /// engine replays the actions it executed; the simulator models the
+    /// engine's streams for the same (P, M, steps). Unlike the
+    /// wall-clock `bubble_frac`, this is noise-free and test-pinnable.
+    pub bubble_frac_model: f64,
+    /// The schedule's declared analytic bubble fraction for this run's
+    /// (P, M) — what the conformance tests check `bubble_frac_model`
+    /// against.
+    pub bubble_frac_analytic: f64,
+    /// Realized gradient-delay instrumentation, one row per chunk:
+    /// (chunk id, microbatches observed, max realized delay in
+    /// optimizer updates). Steady-state realized delay equals the
+    /// schedule's declared per-chunk delay; fill microbatches clamp
+    /// below it, so the max is the steady value once steps > P.
+    pub realized_delays: Vec<(usize, u64, u32)>,
 }
 
 impl RunResult {

@@ -1,60 +1,86 @@
-//! The real asynchronous pipeline engine: one OS thread per stage,
-//! mpsc channels carrying activations, deterministic 1F1B schedule with
-//! per-microbatch weight stashing and immediate updates on backward —
-//! PipeDream's execution model, end to end, on per-block executables
+//! The real asynchronous pipeline engine: one OS thread per (replica,
+//! worker), mpsc channels carrying activations, executing the action
+//! stream of a pluggable [`Schedule`](super::schedule::Schedule) —
+//! GPipe, 1F1B (PipeDream, the original hard-coded schedule),
+//! interleaved 1F1B with V virtual chunk-stages per worker, or the
+//! bidirectional AMDP schedule — on per-block executables
 //! (`embed_fwd` / `block_fwd` / `block_bwd` / `head_fwdbwd`), for both
 //! dense and MoE block flavours.
 //!
-//! Each stage thread opens its own [`Runtime`] (the PJRT client is not
-//! `Send`; the native backend is stateless either way), restricted to a
-//! **stage-local manifest** ([`crate::runtime::Manifest::restrict`]):
-//! only the stage's parameters, with the rotated shape classes and
-//! batched optimizer executables re-derived for the stage-resident
-//! matrices. On top of that view every stage owns its method's *real*
-//! optimizer — a `Box<dyn Optimizer>` from [`optim::build`] — so
-//! BasisRotation/SOAP batch only stage-resident matrices, Muon/Scion
-//! orthogonalize only local momentum, and DelayComp receives the
-//! stashed weight snapshot its gradient was computed at (the 1F1B stash
-//! doubles as the Taylor-correction reference even in no-stash mode).
+//! Each worker hosts one or more **chunks** (parameter partitions; one
+//! per worker for the linear schedules, V for interleaved, two — one
+//! per direction — for AMDP). Every chunk opens its own [`Runtime`]
+//! restricted to a chunk-local manifest ([`crate::runtime::Manifest::
+//! restrict`]) and owns its method's *real* optimizer from
+//! [`optim::build`], its own 1F1B weight/activation stash, gradient
+//! accumulator, batch feed and all-reduce handle.
 //!
-//! Schedule: stage k (0-indexed of P) performs `P-1-k` warmup forwards,
-//! then strictly alternates backward/forward. In steady state the
-//! forward of microbatch m therefore uses stage-k weights of version
-//! `m-(P-1-k)` — exactly the simulator's staleness model, which the
-//! `engine_matches_simulator_trajectory` integration tests pin down for
-//! PipeDream, Nesterov and basis rotation.
+//! The worker thread executes exactly the per-worker action stream the
+//! schedule emits (`Fwd`/`Bwd`/`Update` per chunk); the virtual-clock
+//! executor ([`super::schedule::simulate`]) validates that stream
+//! before any thread spawns, which both rejects malformed schedules
+//! and guarantees the blocking execution below is deadlock-free (the
+//! stream is feasible in virtual time, and actions are totally ordered
+//! by their virtual slots). Messages are tagged with their destination
+//! chunk; out-of-order arrivals are buffered, so the single inbox per
+//! worker serves any schedule topology (including AMDP's two
+//! counter-flowing streams and interleaved self-sends at P=1).
 //!
-//! Divergence: the last stage checks every training loss; a non-finite
-//! loss sets the `diverged` flag, skips the update and stops the run
-//! (channel teardown winds down the other stages), mirroring
-//! `train_sim`. Validation: when `cfg.eval_every > 0`, stage 0 sources
-//! an extra eval-tagged forward through the pipeline after every
-//! `eval_every`-th update; the last stage scores it against the shared
-//! validation stream and reports `val_losses` like the simulator.
+//! For the 1F1B schedule this reduces to the original engine bit for
+//! bit: stage k performs `P-1-k` warmup forwards then alternates
+//! fwd/bwd with an update per microbatch, so the forward of microbatch
+//! m uses stage-k weights of version `m-(P-1-k)` — exactly the
+//! simulator's staleness model, pinned by the
+//! `engine_matches_simulator_trajectory` integration tests.
 //!
-//! Data parallelism (`cfg.replicas = R`): R full pipeline chains run
-//! side by side, each on a disjoint data shard; the replicas of each
-//! stage share a channel-based all-reduce group ([`super::dp`]) that
-//! averages gradients right before every optimizer step. The 1F1B
-//! stash stays replica-local (each replica stashes its own in-flight
-//! weight snapshots), while the averaged gradient feeds each replica's
-//! optimizer identically — so all replicas hold bit-identical
-//! parameters at every step, and only replica 0 runs validation.
+//! Gradient accumulation (`micro_per_update > 1`, GPipe/interleaved):
+//! backwards accumulate into the chunk's gradient in microbatch order
+//! and the update scales by `1/M` — the same fold order as
+//! [`dp::average`], so engine and simulator trajectories stay
+//! bit-comparable. The single-microbatch path moves the gradient with
+//! zero float ops, preserving the original 1F1B arithmetic exactly.
 //!
-//! Differences from the simulator (documented, not bugs): gradient-norm
-//! clipping is per-stage (a real distributed pipeline has no global
-//! norm without an extra collective), so equivalence tests disable
-//! clipping. `StashMode::Predict` is simulator-only and rejected
-//! loudly.
+//! Divergence: the chunk hosting the loss head checks every training
+//! loss; a non-finite loss sets `diverged`, skips the update and stops
+//! the run — the worker broadcasts a `Stop` to its replica's peers
+//! (channel teardown alone cannot wind down the all-to-all topology)
+//! and the dropped all-reduce handles wind down the other replicas,
+//! mirroring `train_sim`. Validation: when `cfg.eval_every > 0`,
+//! replica 0's stream-0 source chunk emits an eval-tagged forward
+//! after every `eval_every`-th update; it rides the stream-0 chunk
+//! sequence at current weights and the head chunk scores it against
+//! the shared validation stream. Workers process eval messages only at
+//! forward-wait points (buffering them during backward waits), which
+//! keeps the legacy engine's deterministic evaluation timing for the
+//! single-stream schedules; AMDP's merged streams make eval *values*
+//! timing-dependent, so equivalence tests run AMDP with
+//! `eval_every = 0`.
+//!
+//! Data parallelism (`cfg.replicas = R`): R full pipelines on disjoint
+//! shards; the copies of each *part* share a channel all-reduce group
+//! ([`super::dp`]) averaging gradients right before every optimizer
+//! step. AMDP's two copies of part s join the same group (fold order:
+//! down before up within each replica — the simulator's draw order),
+//! which doubles as the cross-copy synchronization of the
+//! bidirectional schedule.
+//!
+//! Differences from the simulator (documented, not bugs): gradient
+//! clipping is per-chunk (no global norm without an extra collective),
+//! so equivalence tests disable clipping; AMDP at R > 1 folds all 2R
+//! copies flat while the simulator nests mean-of-means, so AMDP
+//! equivalence tests run at R = 1. `StashMode::Predict` is
+//! simulator-only and rejected loudly for every `--schedule`.
 
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::dp;
-use crate::config::{Method, StashMode, TrainCfg};
+use super::schedule::{self, Action, ChunkSpec, Schedule};
+use crate::config::{Method, ScheduleKind, StashMode, TrainCfg};
 use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
 use crate::metrics::{RunResult, StageCounter};
 use crate::model::{init_params, StagePartition};
@@ -65,85 +91,108 @@ use crate::runtime::{
 };
 use crate::tensor::Tensor;
 
-struct FwdMsg {
-    mb: u64,
-    x: Vec<f32>,
-    /// Validation forward: pass through the blocks at current weights,
-    /// no stash, no backward; the last stage records the loss.
-    eval: bool,
+/// Inter-worker message, tagged with its destination chunk.
+enum Msg {
+    /// Training activation entering `chunk` for microbatch `mb`.
+    Fwd { chunk: usize, mb: u64, x: Vec<f32> },
+    /// Output-side gradient entering `chunk` for microbatch `mb`.
+    Bwd { chunk: usize, mb: u64, dx: Vec<f32> },
+    /// Validation activation entering `chunk`, recorded under `label`
+    /// (the sourcing update index) at the head chunk.
+    Eval { chunk: usize, label: u32, x: Vec<f32> },
+    /// Early-stop broadcast (divergence or peer teardown).
+    Stop,
 }
 
-struct BwdMsg {
-    mb: u64,
-    dx: Vec<f32>,
-}
-
-/// Loss + perf sample emitted by the last stage / each stage.
+/// Per-chunk slice of a worker's report.
 #[derive(Clone, Debug, serde::Serialize)]
-pub struct StageReport {
-    pub replica: usize,
-    pub stage: usize,
-    pub losses: Vec<f32>,
+pub struct ChunkReport {
+    pub chunk: usize,
+    pub part: usize,
+    pub stream: usize,
+    /// Training losses recorded at the head chunk, per microbatch.
+    pub losses: Vec<(u64, f32)>,
     pub val_losses: Vec<(u32, f32)>,
-    pub compute_s: f64,
-    pub idle_s: f64,
     pub updates: u64,
     pub diverged: bool,
     pub dispatches: u64,
     pub state_elems: usize,
+    /// Realized-delay instrumentation: microbatches observed and the
+    /// max realized gradient delay (in updates) across them.
+    pub realized_mbs: u64,
+    pub realized_max_delay: u32,
+    pub is_head: bool,
 }
 
-struct Worker {
-    k: usize,
-    stages: usize,
-    /// Data-parallel replica id this stage thread belongs to.
-    replica: usize,
-    /// All-reduce handle shared with stage `k` of the other replicas.
-    dp: dp::Reducer,
-    /// Stage-local runtime: manifest restricted to this stage's params.
+/// One worker thread's report: per-chunk counters + wall-clock split.
+#[derive(Clone, Debug, serde::Serialize)]
+pub struct WorkerReport {
+    pub replica: usize,
+    pub worker: usize,
+    pub compute_s: f64,
+    pub idle_s: f64,
+    pub chunks: Vec<ChunkReport>,
+}
+
+/// Everything one chunk owns: restricted runtime, parameters, real
+/// optimizer, stash, gradient accumulator, data feed, all-reduce
+/// handle and instrumentation counters.
+struct ChunkState {
+    spec: ChunkSpec,
     rt: Runtime,
-    /// Stage-local partition (delays per local param index).
+    /// Chunk-local partition for StepCtx; `delay_of` overridden to the
+    /// chunk's declared delay (identical to the legacy `P-1-k` values
+    /// for 1F1B).
     part: StagePartition,
     blocks: Vec<usize>,
-    /// This stage's parameters, in stage-local manifest order.
     params: Vec<Tensor>,
-    /// The method's real optimizer over the stage-local parameter view.
     opt: Box<dyn Optimizer>,
+    dp: dp::Reducer,
     cfg: TrainCfg,
+    /// Deterministic per-chunk batch feed; advanced to each global
+    /// microbatch id (skipping the other stream's draws under AMDP).
+    feed: BatchIter,
+    feed_next: u64,
     /// (mb, weight snapshot, per-block input activations)
-    stash: std::collections::VecDeque<(u64, Vec<Tensor>, Vec<Tensor>)>,
-    pending_tokens: std::collections::HashMap<u64, Vec<i32>>,
-    pending_targets: std::collections::HashMap<u64, Vec<i32>>,
-    /// Backward runs at the stashed weight snapshot (PipeDream stashing).
+    stash: VecDeque<(u64, Vec<Tensor>, Vec<Tensor>)>,
+    /// Head-chunk forward outputs awaiting their backward.
+    head_x: HashMap<u64, Tensor>,
+    pending_tokens: HashMap<u64, Vec<i32>>,
+    pending_targets: HashMap<u64, Vec<i32>>,
+    /// Gradient accumulator: first backward moves its gradient in
+    /// (zero float ops at micro_per_update = 1), later backwards add
+    /// elementwise in microbatch order.
+    acc: Option<Vec<Tensor>>,
+    acc_n: usize,
+    /// Stale weight reference for DelayComp (last drained microbatch's
+    /// stashed snapshot — the view its gradient was computed at).
+    last_snapshot: Vec<Tensor>,
+    /// Backward runs at the stashed snapshot (PipeDream stashing).
     use_stash: bool,
-    /// Snapshot weights at forward even in no-stash mode (DelayComp
-    /// needs the stale view its gradient was computed at).
+    /// Snapshot weights at forward even in no-stash mode (DelayComp).
     stash_weights: bool,
     updates: u64,
     compute_s: f64,
-    idle_s: f64,
-    losses: Vec<f32>,
+    losses: Vec<(u64, f32)>,
     val_losses: Vec<(u32, f32)>,
-    /// Validation batches (stage 0 sources tokens, the last stage
-    /// re-derives targets from the same deterministic stream).
     val_iter: Option<BatchIter>,
+    evals_handled: u64,
+    evals_expected: u64,
+    /// Update counter at each in-flight microbatch's forward.
+    u_at_fwd: HashMap<u64, u64>,
+    /// Microbatches backwarded since the last update.
+    pending_mbs: Vec<u64>,
+    realized_mbs: u64,
+    realized_max: u32,
     diverged: bool,
 }
 
-impl Worker {
-    fn first(&self) -> bool {
-        self.k == 0
-    }
-
-    fn last(&self) -> bool {
-        self.k == self.stages - 1
-    }
-
+impl ChunkState {
     fn local_index(&self, name: &str) -> usize {
         self.rt
             .manifest
             .param_index(name)
-            .unwrap_or_else(|| panic!("stage {} missing {name}", self.k))
+            .unwrap_or_else(|| panic!("chunk {} missing {name}", self.spec.id))
     }
 
     fn block_params(&self, b: usize, snapshot: &[Tensor]) -> Vec<Tensor> {
@@ -158,41 +207,67 @@ impl Worker {
             .collect()
     }
 
-    fn eval_trigger(&self, mb: u64) -> bool {
-        // Replicas stay in parameter lockstep (all-reduced gradients),
-        // so one validation pass — replica 0's pipeline — covers all R.
-        self.replica == 0
-            && self.cfg.eval_every > 0
-            && (mb + 1) % self.cfg.eval_every as u64 == 0
-    }
-
-    /// Receive the training activation for microbatch `mb`,
-    /// transparently relaying any eval forwards that arrive in between.
-    /// `None` means the neighbouring stage hung up (early stop).
-    fn recv_train(
-        &mut self,
-        mb: u64,
-        rx_fwd: &Receiver<FwdMsg>,
-        tx_fwd: Option<&Sender<FwdMsg>>,
-    ) -> Result<Option<Vec<f32>>> {
-        loop {
-            let t0 = Instant::now();
-            let msg = match rx_fwd.recv() {
-                Ok(m) => m,
-                Err(_) => return Ok(None),
-            };
-            self.idle_s += t0.elapsed().as_secs_f64();
-            if msg.eval {
-                self.eval_forward(msg.mb, msg.x, tx_fwd)?;
-                continue;
-            }
-            assert_eq!(msg.mb, mb, "stage {}: out-of-order microbatch", self.k);
-            return Ok(Some(msg.x));
+    /// Advance this chunk's feed to global microbatch `mb` and draw
+    /// its batch (intermediate draws belong to other chunks' streams
+    /// and are discarded — every chunk derives the same deterministic
+    /// mb → batch mapping from its own iterator).
+    fn batch_for(&mut self, mb: u64) -> (Vec<i32>, Vec<i32>) {
+        debug_assert!(mb >= self.feed_next, "chunk feed must advance monotonically");
+        while self.feed_next < mb {
+            self.feed.next_batch();
+            self.feed_next += 1;
         }
+        self.feed_next = mb + 1;
+        self.feed.next_batch()
     }
 
-    /// Forward an activation through this stage's blocks at the
-    /// *current* weights (validation path: no stash, no cache).
+    /// Embed a token batch (source chunks only).
+    fn embed_fwd(&mut self, toks: &[i32]) -> Result<Vec<f32>> {
+        let mcfg = self.rt.cfg().clone();
+        let (b, s) = (mcfg.batch, mcfg.seq);
+        let t0 = Instant::now();
+        let te = &self.params[self.local_index("tok_emb")];
+        let pe = &self.params[self.local_index("pos_emb")];
+        let outs = self.rt.exec(
+            "embed_fwd",
+            &[
+                tensor_to_value(te)?,
+                tensor_to_value(pe)?,
+                tokens_to_value(toks, b, s)?,
+            ],
+        )?;
+        self.compute_s += t0.elapsed().as_secs_f64();
+        outs[0].to_f32()
+    }
+
+    /// Training forward through this chunk's blocks: snapshot weights,
+    /// record block inputs in the stash, note the update counter for
+    /// realized-delay instrumentation.
+    fn forward_blocks(&mut self, mb: u64, x0: Vec<f32>) -> Result<Tensor> {
+        let mcfg = self.rt.cfg().clone();
+        let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
+        let t0 = Instant::now();
+        let snapshot = self.params.clone();
+        let mut x = Tensor::new(vec![b, s, d], x0);
+        let mut block_inputs = Vec::with_capacity(self.blocks.len());
+        for &blk in &self.blocks.clone() {
+            block_inputs.push(x.clone());
+            let bp = self.block_params(blk, &snapshot);
+            let mut ins: Vec<Value> =
+                bp.iter().map(tensor_to_value).collect::<Result<_>>()?;
+            ins.push(tensor_to_value(&x)?);
+            let outs = self.rt.exec("block_fwd", &ins)?;
+            x = value_to_tensor(&outs[0], &[b, s, d])?;
+        }
+        self.compute_s += t0.elapsed().as_secs_f64();
+        let stashed = if self.stash_weights { snapshot } else { Vec::new() };
+        self.stash.push_back((mb, stashed, block_inputs));
+        self.u_at_fwd.insert(mb, self.updates);
+        Ok(x)
+    }
+
+    /// Validation forward through this chunk's blocks at *current*
+    /// weights (no stash, no cache).
     fn eval_blocks(&mut self, x0: Vec<f32>) -> Result<Tensor> {
         let mcfg = self.rt.cfg().clone();
         let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
@@ -211,10 +286,10 @@ impl Worker {
     }
 
     /// Score a validation activation on the loss-only head executable
-    /// (no backward) and record it under step label `mb + 1`. Falls
-    /// back to `head_fwdbwd`'s loss output on manifests that predate
-    /// `head_loss` (e.g. older PJRT artifact exports).
-    fn record_val(&mut self, mb: u64, x: &Tensor, vg: &[i32]) -> Result<()> {
+    /// and record it under the sourcing update's `label`. Falls back
+    /// to `head_fwdbwd`'s loss output on manifests that predate
+    /// `head_loss`.
+    fn record_val(&mut self, label: u32, x: &Tensor, vg: &[i32]) -> Result<()> {
         let mcfg = self.rt.cfg().clone();
         let (b, s) = (mcfg.batch, mcfg.seq);
         let t0 = Instant::now();
@@ -233,168 +308,27 @@ impl Worker {
         };
         let outs = self.rt.exec(exec_name, &ins)?;
         self.compute_s += t0.elapsed().as_secs_f64();
-        self.val_losses.push((mb as u32 + 1, value_scalar_f32(&outs[0])?));
+        self.val_losses.push((label, value_scalar_f32(&outs[0])?));
         Ok(())
     }
 
-    /// Handle an eval activation arriving from upstream: forward through
-    /// the blocks, then record the loss (last stage) or pass it on.
-    fn eval_forward(
+    /// Backward for microbatch `mb` through this chunk. `dx_in` is the
+    /// downstream gradient; `None` on the head chunk, which runs
+    /// `head_fwdbwd` on its stored forward output (recording the loss,
+    /// or detecting divergence). Returns the per-parameter gradients
+    /// and the input-side dx, or `None` on divergence.
+    fn backward_core(
         &mut self,
         mb: u64,
-        x0: Vec<f32>,
-        tx_fwd: Option<&Sender<FwdMsg>>,
-    ) -> Result<()> {
-        let x = self.eval_blocks(x0)?;
-        if self.last() {
-            let (_vt, vg) =
-                self.val_iter.as_mut().expect("last stage has a val iter").next_batch();
-            self.record_val(mb, &x, &vg)?;
-        } else if let Some(tx) = tx_fwd {
-            // a dropped receiver means downstream already stopped; the
-            // training path notices on its own send/recv
-            tx.send(FwdMsg { mb, x: x.data, eval: true }).ok();
-        }
-        Ok(())
-    }
-
-    /// Stage 0 (or the single stage of P=1): source one validation
-    /// forward after the update of microbatch `mb`.
-    fn source_eval(&mut self, mb: u64, tx_fwd: Option<&Sender<FwdMsg>>) -> Result<()> {
-        debug_assert!(self.first());
-        let (vt, vg) =
-            self.val_iter.as_mut().expect("first stage has a val iter").next_batch();
-        let mcfg = self.rt.cfg().clone();
-        let (b, s) = (mcfg.batch, mcfg.seq);
-        let t0 = Instant::now();
-        let te = &self.params[self.local_index("tok_emb")];
-        let pe = &self.params[self.local_index("pos_emb")];
-        let outs = self.rt.exec(
-            "embed_fwd",
-            &[
-                tensor_to_value(te)?,
-                tensor_to_value(pe)?,
-                tokens_to_value(&vt, b, s)?,
-            ],
-        )?;
-        self.compute_s += t0.elapsed().as_secs_f64();
-        let x = self.eval_blocks(outs[0].to_f32()?)?;
-        if self.last() {
-            // P = 1: post-update weights + shared val stream — exactly
-            // the simulator's evaluation
-            self.record_val(mb, &x, &vg)?;
-        } else if let Some(tx) = tx_fwd {
-            tx.send(FwdMsg { mb, x: x.data, eval: true }).ok();
-        }
-        Ok(())
-    }
-
-    /// After the training loop: keep relaying/recording eval forwards
-    /// until upstream hangs up (covers an eval triggered by the final
-    /// microbatch, still in flight when the loop ends).
-    fn drain_evals(
-        &mut self,
-        rx_fwd: Option<&Receiver<FwdMsg>>,
-        tx_fwd: Option<&Sender<FwdMsg>>,
-    ) -> Result<()> {
-        if self.cfg.eval_every == 0 {
-            return Ok(());
-        }
-        if let Some(rx) = rx_fwd {
-            while let Ok(msg) = rx.recv() {
-                if msg.eval {
-                    self.eval_forward(msg.mb, msg.x, tx_fwd)?;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Forward one microbatch through this stage; returns the output
-    /// activation (to send or, on the last stage, to feed the head), or
-    /// `None` when a neighbouring stage already stopped.
-    fn forward(
-        &mut self,
-        mb: u64,
-        data: &mut BatchIter,
-        rx_fwd: Option<&Receiver<FwdMsg>>,
-        tx_fwd: Option<&Sender<FwdMsg>>,
-    ) -> Result<Option<Tensor>> {
-        let mcfg = self.rt.cfg().clone();
-        let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
-        let x0: Vec<f32> = if self.first() {
-            let (toks, tgts) = data.next_batch();
-            if self.last() {
-                self.pending_targets.insert(mb, tgts);
-            }
-            let t0 = Instant::now();
-            let te = &self.params[self.local_index("tok_emb")];
-            let pe = &self.params[self.local_index("pos_emb")];
-            let outs = self.rt.exec(
-                "embed_fwd",
-                &[
-                    tensor_to_value(te)?,
-                    tensor_to_value(pe)?,
-                    tokens_to_value(&toks, b, s)?,
-                ],
-            )?;
-            self.compute_s += t0.elapsed().as_secs_f64();
-            self.pending_tokens.insert(mb, toks);
-            outs[0].to_f32()?
-        } else {
-            if self.last() {
-                // last stage needs this microbatch's targets; re-derive
-                // the deterministic batch stream locally.
-                let (_toks, tgts) = data.next_batch();
-                self.pending_targets.insert(mb, tgts);
-            }
-            match self.recv_train(
-                mb,
-                rx_fwd.expect("non-first stage has rx_fwd"),
-                tx_fwd,
-            )? {
-                Some(x) => x,
-                None => return Ok(None),
-            }
-        };
-
-        let t0 = Instant::now();
-        let snapshot = self.params.clone();
-        let mut x = Tensor::new(vec![b, s, d], x0);
-        let mut block_inputs = Vec::with_capacity(self.blocks.len());
-        for &blk in &self.blocks.clone() {
-            block_inputs.push(x.clone());
-            let bp = self.block_params(blk, &snapshot);
-            let mut ins: Vec<Value> =
-                bp.iter().map(tensor_to_value).collect::<Result<_>>()?;
-            ins.push(tensor_to_value(&x)?);
-            let outs = self.rt.exec("block_fwd", &ins)?;
-            x = value_to_tensor(&outs[0], &[b, s, d])?;
-        }
-        self.compute_s += t0.elapsed().as_secs_f64();
-        let stashed = if self.stash_weights { snapshot } else { Vec::new() };
-        self.stash.push_back((mb, stashed, block_inputs));
-        Ok(Some(x))
-    }
-
-    /// Backward for microbatch mb. On the last stage, `x_out` is the
-    /// forward output and the head provides loss + dx; otherwise dx
-    /// comes from `rx_bwd`. Returns `false` when the run should stop
-    /// (divergence detected, or a neighbouring stage hung up).
-    fn backward(
-        &mut self,
-        mb: u64,
-        x_out: Option<Tensor>,
-        rx_bwd: Option<&Receiver<BwdMsg>>,
-        tx_bwd: Option<&Sender<BwdMsg>>,
-    ) -> Result<bool> {
+        dx_in: Option<Vec<f32>>,
+    ) -> Result<Option<(Vec<Tensor>, Tensor)>> {
         let mcfg = self.rt.cfg().clone();
         let (b, s, d) = (mcfg.batch, mcfg.seq, mcfg.d_model);
         let pos = self
             .stash
             .iter()
             .position(|(m, _, _)| *m == mb)
-            .ok_or_else(|| anyhow!("stage {}: no stash for mb {mb}", self.k))?;
+            .ok_or_else(|| anyhow!("chunk {}: no stash for mb {mb}", self.spec.id))?;
         let (_, snapshot, block_inputs) = self.stash.remove(pos).unwrap();
         let current_weights;
         let weights: &[Tensor] = if self.use_stash {
@@ -407,50 +341,46 @@ impl Worker {
         let mut grads: Vec<Tensor> =
             self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
 
-        // ---- obtain dx at the stage output ----
-        let mut dx = if self.last() {
-            let tgts = self.pending_targets.remove(&mb).expect("targets");
-            let x = x_out.expect("last stage forwards its own x");
-            let t0 = Instant::now();
-            let gf = &weights[self.local_index("gf")];
-            let head = &weights[self.local_index("head")];
-            let outs = self.rt.exec(
-                "head_fwdbwd",
-                &[
-                    tensor_to_value(gf)?,
-                    tensor_to_value(head)?,
-                    tensor_to_value(&x)?,
-                    tokens_to_value(&tgts, b, s)?,
-                ],
-            )?;
-            self.compute_s += t0.elapsed().as_secs_f64();
-            let loss = value_scalar_f32(&outs[0])?;
-            if !loss.is_finite() {
-                // mirror train_sim: don't record the loss, skip the
-                // update, stop the run
-                self.diverged = true;
-                return Ok(false);
+        let mut dx = match dx_in {
+            Some(dx) => Tensor::new(vec![b, s, d], dx),
+            None => {
+                // head chunk: fused loss + output gradient
+                let tgts = self.pending_targets.remove(&mb).expect("targets");
+                let x = self
+                    .head_x
+                    .remove(&mb)
+                    .expect("head chunk stores its forward output");
+                let t0 = Instant::now();
+                let gf = &weights[self.local_index("gf")];
+                let head = &weights[self.local_index("head")];
+                let outs = self.rt.exec(
+                    "head_fwdbwd",
+                    &[
+                        tensor_to_value(gf)?,
+                        tensor_to_value(head)?,
+                        tensor_to_value(&x)?,
+                        tokens_to_value(&tgts, b, s)?,
+                    ],
+                )?;
+                self.compute_s += t0.elapsed().as_secs_f64();
+                let loss = value_scalar_f32(&outs[0])?;
+                if !loss.is_finite() {
+                    // mirror train_sim: don't record the loss, skip the
+                    // update, stop the run
+                    self.diverged = true;
+                    return Ok(None);
+                }
+                self.losses.push((mb, loss));
+                let i_gf = self.local_index("gf");
+                let i_head = self.local_index("head");
+                let gf_shape = self.params[i_gf].shape.clone();
+                let head_shape = self.params[i_head].shape.clone();
+                grads[i_gf] = value_to_tensor(&outs[2], &gf_shape)?;
+                grads[i_head] = value_to_tensor(&outs[3], &head_shape)?;
+                value_to_tensor(&outs[1], &[b, s, d])?
             }
-            self.losses.push(loss);
-            let i_gf = self.local_index("gf");
-            let i_head = self.local_index("head");
-            let gf_shape = self.params[i_gf].shape.clone();
-            let head_shape = self.params[i_head].shape.clone();
-            grads[i_gf] = value_to_tensor(&outs[2], &gf_shape)?;
-            grads[i_head] = value_to_tensor(&outs[3], &head_shape)?;
-            value_to_tensor(&outs[1], &[b, s, d])?
-        } else {
-            let t0 = Instant::now();
-            let msg = match rx_bwd.expect("non-last stage has rx_bwd").recv() {
-                Ok(m) => m,
-                Err(_) => return Ok(false),
-            };
-            self.idle_s += t0.elapsed().as_secs_f64();
-            assert_eq!(msg.mb, mb, "stage {}: out-of-order backward", self.k);
-            Tensor::new(vec![b, s, d], msg.dx)
         };
 
-        // ---- backward through this stage's blocks ----
         let t0 = Instant::now();
         for (bi, &blk) in self.blocks.clone().iter().enumerate().rev() {
             let bp = self.block_params(blk, weights);
@@ -471,22 +401,30 @@ impl Worker {
             }
         }
         self.compute_s += t0.elapsed().as_secs_f64();
-
-        if let Some(tx) = tx_bwd {
-            if tx.send(BwdMsg { mb, dx: dx.data.clone() }).is_err() {
-                return Ok(false);
-            }
+        if self.stash_weights {
+            self.last_snapshot = snapshot;
         }
+        Ok(Some((grads, dx)))
+    }
 
-        // ---- embedding backward on stage 0 ----
-        if self.first() {
+    /// Fold one backward's gradients into the accumulator (source
+    /// chunks first run the embedding backward with the final dx).
+    fn accumulate(
+        &mut self,
+        mb: u64,
+        mut grads: Vec<Tensor>,
+        embed_dx: Option<&Tensor>,
+    ) -> Result<()> {
+        if let Some(dx) = embed_dx {
+            let mcfg = self.rt.cfg().clone();
+            let (b, s) = (mcfg.batch, mcfg.seq);
             let toks = self.pending_tokens.remove(&mb).expect("tokens");
-            let t0e = Instant::now();
+            let t0 = Instant::now();
             let outs = self.rt.exec(
                 "embed_bwd",
-                &[tokens_to_value(&toks, b, s)?, tensor_to_value(&dx)?],
+                &[tokens_to_value(&toks, b, s)?, tensor_to_value(dx)?],
             )?;
-            self.compute_s += t0e.elapsed().as_secs_f64();
+            self.compute_s += t0.elapsed().as_secs_f64();
             let i_te = self.local_index("tok_emb");
             let i_pe = self.local_index("pos_emb");
             let te_shape = self.params[i_te].shape.clone();
@@ -494,23 +432,60 @@ impl Worker {
             grads[i_te] = value_to_tensor(&outs[0], &te_shape)?;
             grads[i_pe] = value_to_tensor(&outs[1], &pe_shape)?;
         }
+        self.pending_mbs.push(mb);
+        match &mut self.acc {
+            None => {
+                self.acc = Some(grads);
+                self.acc_n = 1;
+            }
+            Some(acc) => {
+                for (a, g) in acc.iter_mut().zip(&grads) {
+                    for (ai, &gi) in a.data.iter_mut().zip(&g.data) {
+                        *ai += gi;
+                    }
+                }
+                self.acc_n += 1;
+            }
+        }
+        Ok(())
+    }
 
-        // ---- data-parallel all-reduce (averaging) barrier across the
-        //      replicas of this stage, then per-stage clip + the
-        //      method's real update (async semantics: immediately after
-        //      this stage's backward). R = 1 is a passthrough; a peer
-        //      replica hanging up (early stop / divergence) winds this
-        //      replica down like a closed activation channel. Time
-        //      spent blocked here is a synchronization stall and counts
-        //      as idle, keeping bubble_frac honest for DP runs. ----
+    /// All-reduce the accumulated gradient, clip, and apply this
+    /// chunk's optimizer step (the legacy reduce → clip → step order).
+    /// Returns `(applied, idle_seconds)`; `applied = false` means a
+    /// peer hung up mid-reduce (wind-down).
+    fn apply_update(&mut self) -> Result<(bool, f64)> {
+        let mut grads = self.acc.take().ok_or_else(|| {
+            anyhow!("chunk {}: update with no accumulated gradient", self.spec.id)
+        })?;
+        let n = self.acc_n;
+        self.acc_n = 0;
+        if n > 1 {
+            // mean over the accumulated microbatches — same op order
+            // as dp::average (sum in order, then scale)
+            let inv = 1.0 / n as f32;
+            for t in grads.iter_mut() {
+                for a in t.data.iter_mut() {
+                    *a *= inv;
+                }
+            }
+        }
         let t_red = Instant::now();
         let reduced = self.dp.all_reduce(grads);
-        self.idle_s += t_red.elapsed().as_secs_f64();
+        let idle = t_red.elapsed().as_secs_f64();
         let mut grads = match reduced {
             Ok(g) => g,
-            Err(_) => return Ok(false),
+            Err(_) => return Ok((false, idle)),
         };
-        crate::optim::clip_global_norm(&mut grads, self.cfg.grad_clip);
+        optim::clip_global_norm(&mut grads, self.cfg.grad_clip);
+        // realized-delay instrumentation: updates seen between each
+        // microbatch's forward and this update (before the increment)
+        for mb in self.pending_mbs.drain(..) {
+            let seen = self.u_at_fwd.remove(&mb).unwrap_or(self.updates);
+            let delay = (self.updates - seen) as u32;
+            self.realized_mbs += 1;
+            self.realized_max = self.realized_max.max(delay);
+        }
         self.updates += 1;
         let needs_stale = matches!(self.cfg.method, Method::DelayComp { .. });
         let ctx = StepCtx {
@@ -518,179 +493,483 @@ impl Worker {
             lr: self.cfg.lr_at(self.updates as u32),
             cfg: &self.cfg,
             part: &self.part,
-            // the 1F1B stash is exactly the weight view the gradient
-            // was computed at — DelayComp's Taylor reference
-            stale: if needs_stale { Some(&snapshot) } else { None },
+            // the stash is exactly the weight view the gradient was
+            // computed at — DelayComp's Taylor reference
+            stale: if needs_stale { Some(&self.last_snapshot) } else { None },
             rt: &self.rt,
         };
         self.opt.step(&ctx, &mut self.params, &grads)?;
-        Ok(true)
+        Ok((true, idle))
     }
 
-    fn report(self) -> StageReport {
-        StageReport {
-            replica: self.replica,
-            stage: self.k,
-            losses: self.losses,
-            val_losses: self.val_losses,
-            compute_s: self.compute_s,
-            idle_s: self.idle_s,
+    fn report(&self, is_head: bool) -> ChunkReport {
+        ChunkReport {
+            chunk: self.spec.id,
+            part: self.spec.part,
+            stream: self.spec.stream,
+            losses: self.losses.clone(),
+            val_losses: self.val_losses.clone(),
             updates: self.updates,
             diverged: self.diverged,
             dispatches: self.rt.total_dispatches(),
             state_elems: self.opt.state_elems(),
+            realized_mbs: self.realized_mbs,
+            realized_max_delay: self.realized_max,
+            is_head,
         }
     }
 }
 
-fn run_stage(
-    mut w: Worker,
-    mut data: BatchIter,
-    rx_fwd: Option<Receiver<FwdMsg>>,
-    tx_fwd: Option<Sender<FwdMsg>>,
-    rx_bwd: Option<Receiver<BwdMsg>>,
-    tx_bwd: Option<Sender<BwdMsg>>,
-    n_micro: u64,
-) -> Result<StageReport> {
-    let warmup = (w.stages - 1 - w.k) as u64;
-    if w.last() {
-        // fused fwd+bwd per microbatch (no warmup, delay 0)
-        for mb in 0..n_micro {
-            let x = match w.forward(mb, &mut data, rx_fwd.as_ref(), tx_fwd.as_ref())? {
-                Some(x) => x,
-                None => return Ok(w.report()),
-            };
-            if !w.backward(mb, Some(x), None, tx_bwd.as_ref())? {
-                return Ok(w.report());
-            }
-            if w.first() && w.eval_trigger(mb) {
-                w.source_eval(mb, tx_fwd.as_ref())?; // P = 1: local eval
+/// One worker thread: executes its action stream over its chunks.
+struct Worker {
+    w: usize,
+    replica: usize,
+    cfg: TrainCfg,
+    chunks: Vec<ChunkState>,
+    /// chunk id → local index in `chunks`.
+    index: HashMap<usize, usize>,
+    /// Global layout tables (shared by every worker of the replica).
+    specs_by_id: HashMap<usize, ChunkSpec>,
+    by_pos: HashMap<(usize, usize), usize>,
+    depth: HashMap<usize, usize>,
+    inbox: Receiver<Msg>,
+    peers: Vec<Sender<Msg>>,
+    pending_fwd: HashMap<(usize, u64), Vec<f32>>,
+    pending_bwd: HashMap<(usize, u64), Vec<f32>>,
+    /// Evals dequeued during backward waits, replayed at the next
+    /// forward-wait point (legacy determinism).
+    pending_evals: VecDeque<(usize, u32, Vec<f32>)>,
+    sent_stop: bool,
+    idle_s: f64,
+}
+
+impl Worker {
+    fn is_head(&self, spec: &ChunkSpec) -> bool {
+        spec.seq + 1 == self.depth[&spec.stream]
+    }
+
+    /// Broadcast `Stop` to this replica's other workers (idempotent).
+    fn stop_all(&mut self) {
+        if self.sent_stop {
+            return;
+        }
+        self.sent_stop = true;
+        for (i, tx) in self.peers.iter().enumerate() {
+            if i != self.w {
+                tx.send(Msg::Stop).ok();
             }
         }
-        w.drain_evals(rx_fwd.as_ref(), tx_fwd.as_ref())?;
-        return Ok(w.report());
     }
-    let mut next_fwd = 0u64;
-    while next_fwd < warmup.min(n_micro) {
-        let x = match w.forward(next_fwd, &mut data, rx_fwd.as_ref(), tx_fwd.as_ref())?
-        {
-            Some(x) => x,
-            None => return Ok(w.report()),
+
+    /// Handle a validation activation for a local chunk: forward at
+    /// current weights, then record (head) or relay downstream.
+    fn handle_eval(&mut self, chunk: usize, label: u32, x: Vec<f32>) -> Result<()> {
+        let li = *self
+            .index
+            .get(&chunk)
+            .ok_or_else(|| anyhow!("worker {}: eval for foreign chunk {chunk}", self.w))?;
+        let spec = self.chunks[li].spec;
+        let xt = self.chunks[li].eval_blocks(x)?;
+        if self.is_head(&spec) {
+            let vg = {
+                let c = &mut self.chunks[li];
+                let (_vt, vg) = c
+                    .val_iter
+                    .as_mut()
+                    .expect("head chunk has a val iter")
+                    .next_batch();
+                vg
+            };
+            self.chunks[li].record_val(label, &xt, &vg)?;
+        } else {
+            let next = self.by_pos[&(spec.stream, spec.seq + 1)];
+            let nw = self.specs_by_id[&next].worker;
+            // a dropped receiver means downstream already stopped; the
+            // training path notices on its own send/recv
+            self.peers[nw].send(Msg::Eval { chunk: next, label, x: xt.data }).ok();
+        }
+        self.chunks[li].evals_handled += 1;
+        Ok(())
+    }
+
+    /// Replica 0's stream-0 source chunk: emit one validation forward
+    /// after an eval-triggering update.
+    fn source_eval(&mut self, li: usize) -> Result<()> {
+        let spec = self.chunks[li].spec;
+        let label = self.chunks[li].updates as u32;
+        let (vt, vg) = {
+            let c = &mut self.chunks[li];
+            c.val_iter
+                .as_mut()
+                .expect("source chunk has a val iter")
+                .next_batch()
         };
-        let sent = tx_fwd
-            .as_ref()
-            .unwrap()
-            .send(FwdMsg { mb: next_fwd, x: x.data, eval: false });
-        if sent.is_err() {
-            return Ok(w.report());
+        let x0 = self.chunks[li].embed_fwd(&vt)?;
+        let x = self.chunks[li].eval_blocks(x0)?;
+        if self.is_head(&spec) {
+            // P = 1: post-update weights + shared val stream — exactly
+            // the simulator's evaluation
+            self.chunks[li].record_val(label, &x, &vg)?;
+        } else {
+            let next = self.by_pos[&(spec.stream, spec.seq + 1)];
+            let nw = self.specs_by_id[&next].worker;
+            self.peers[nw].send(Msg::Eval { chunk: next, label, x: x.data }).ok();
         }
-        next_fwd += 1;
+        Ok(())
     }
-    for mb_b in 0..n_micro {
-        if next_fwd < n_micro {
-            let x = match w.forward(
-                next_fwd,
-                &mut data,
-                rx_fwd.as_ref(),
-                tx_fwd.as_ref(),
-            )? {
-                Some(x) => x,
-                None => return Ok(w.report()),
-            };
-            let sent = tx_fwd
-                .as_ref()
-                .unwrap()
-                .send(FwdMsg { mb: next_fwd, x: x.data, eval: false });
-            if sent.is_err() {
-                return Ok(w.report());
+
+    /// Receive the training activation for (chunk, mb). This is a
+    /// forward-wait point: buffered and incoming evals are processed
+    /// here. `None` means wind-down (Stop or closed inbox).
+    fn recv_fwd(&mut self, chunk: usize, mb: u64) -> Result<Option<Vec<f32>>> {
+        loop {
+            while let Some((c, label, x)) = self.pending_evals.pop_front() {
+                self.handle_eval(c, label, x)?;
             }
-            next_fwd += 1;
-        }
-        if !w.backward(mb_b, None, rx_bwd.as_ref(), tx_bwd.as_ref())? {
-            return Ok(w.report());
-        }
-        if w.first() && w.eval_trigger(mb_b) {
-            w.source_eval(mb_b, tx_fwd.as_ref())?;
+            if let Some(x) = self.pending_fwd.remove(&(chunk, mb)) {
+                return Ok(Some(x));
+            }
+            let t0 = Instant::now();
+            let msg = match self.inbox.recv() {
+                Ok(m) => m,
+                Err(_) => return Ok(None),
+            };
+            self.idle_s += t0.elapsed().as_secs_f64();
+            match msg {
+                Msg::Fwd { chunk: c, mb: m, x } => {
+                    self.pending_fwd.insert((c, m), x);
+                }
+                Msg::Bwd { chunk: c, mb: m, dx } => {
+                    self.pending_bwd.insert((c, m), dx);
+                }
+                Msg::Eval { chunk: c, label, x } => self.handle_eval(c, label, x)?,
+                Msg::Stop => return Ok(None),
+            }
         }
     }
-    w.drain_evals(rx_fwd.as_ref(), tx_fwd.as_ref())?;
-    Ok(w.report())
+
+    /// Receive the output-side gradient for (chunk, mb). Evals
+    /// arriving here are buffered, not processed (legacy determinism:
+    /// evaluation happens at forward-wait points only).
+    fn recv_bwd(&mut self, chunk: usize, mb: u64) -> Result<Option<Vec<f32>>> {
+        loop {
+            if let Some(dx) = self.pending_bwd.remove(&(chunk, mb)) {
+                return Ok(Some(dx));
+            }
+            let t0 = Instant::now();
+            let msg = match self.inbox.recv() {
+                Ok(m) => m,
+                Err(_) => return Ok(None),
+            };
+            self.idle_s += t0.elapsed().as_secs_f64();
+            match msg {
+                Msg::Fwd { chunk: c, mb: m, x } => {
+                    self.pending_fwd.insert((c, m), x);
+                }
+                Msg::Bwd { chunk: c, mb: m, dx } => {
+                    self.pending_bwd.insert((c, m), dx);
+                }
+                Msg::Eval { chunk: c, label, x } => {
+                    self.pending_evals.push_back((c, label, x));
+                }
+                Msg::Stop => return Ok(None),
+            }
+        }
+    }
+
+    /// Execute one Fwd action. `false` = wind down.
+    fn do_fwd(&mut self, chunk: usize, mb: u64) -> Result<bool> {
+        let li = self.index[&chunk];
+        let spec = self.chunks[li].spec;
+        let is_head = self.is_head(&spec);
+        let x0: Vec<f32> = if spec.seq == 0 {
+            let (toks, tgts) = self.chunks[li].batch_for(mb);
+            if is_head {
+                self.chunks[li].pending_targets.insert(mb, tgts);
+            }
+            let x = self.chunks[li].embed_fwd(&toks)?;
+            self.chunks[li].pending_tokens.insert(mb, toks);
+            x
+        } else {
+            if is_head {
+                // the head chunk needs this microbatch's targets;
+                // re-derive the deterministic batch stream locally
+                let (_toks, tgts) = self.chunks[li].batch_for(mb);
+                self.chunks[li].pending_targets.insert(mb, tgts);
+            }
+            match self.recv_fwd(chunk, mb)? {
+                Some(x) => x,
+                None => return Ok(false),
+            }
+        };
+        let x = self.chunks[li].forward_blocks(mb, x0)?;
+        if is_head {
+            self.chunks[li].head_x.insert(mb, x);
+        } else {
+            let next = self.by_pos[&(spec.stream, spec.seq + 1)];
+            let nw = self.specs_by_id[&next].worker;
+            if self.peers[nw]
+                .send(Msg::Fwd { chunk: next, mb, x: x.data })
+                .is_err()
+            {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Execute one Bwd action. `false` = wind down (including
+    /// divergence, which sets the chunk's flag first).
+    fn do_bwd(&mut self, chunk: usize, mb: u64) -> Result<bool> {
+        let li = self.index[&chunk];
+        let spec = self.chunks[li].spec;
+        let dx_in = if self.is_head(&spec) {
+            None
+        } else {
+            match self.recv_bwd(chunk, mb)? {
+                Some(dx) => Some(dx),
+                None => return Ok(false),
+            }
+        };
+        let (grads, dx) = match self.chunks[li].backward_core(mb, dx_in)? {
+            Some(out) => out,
+            None => return Ok(false), // diverged
+        };
+        if spec.seq > 0 {
+            let prev = self.by_pos[&(spec.stream, spec.seq - 1)];
+            let pw = self.specs_by_id[&prev].worker;
+            if self.peers[pw]
+                .send(Msg::Bwd { chunk: prev, mb, dx: dx.data.clone() })
+                .is_err()
+            {
+                return Ok(false);
+            }
+            self.chunks[li].accumulate(mb, grads, None)?;
+        } else {
+            self.chunks[li].accumulate(mb, grads, Some(&dx))?;
+        }
+        Ok(true)
+    }
+
+    /// Execute one Update action. `false` = wind down (peer hung up).
+    fn do_update(&mut self, chunk: usize) -> Result<bool> {
+        let li = self.index[&chunk];
+        let (applied, idle) = self.chunks[li].apply_update()?;
+        self.idle_s += idle;
+        if !applied {
+            return Ok(false);
+        }
+        let c = &self.chunks[li];
+        // Replicas stay in parameter lockstep (all-reduced gradients),
+        // so one validation pass — replica 0's stream-0 pipeline —
+        // covers all R.
+        if c.spec.stream == 0
+            && c.spec.seq == 0
+            && self.replica == 0
+            && self.cfg.eval_every > 0
+            && c.updates % self.cfg.eval_every as u64 == 0
+        {
+            self.source_eval(li)?;
+        }
+        Ok(true)
+    }
+
+    /// After the action stream: keep relaying/recording evals until
+    /// every local chunk has handled the evals the run owes it
+    /// (covers evals still in flight when the stream ends).
+    fn drain_evals(&mut self) -> Result<()> {
+        while self
+            .chunks
+            .iter()
+            .any(|c| c.evals_handled < c.evals_expected)
+        {
+            if let Some((c, label, x)) = self.pending_evals.pop_front() {
+                self.handle_eval(c, label, x)?;
+                continue;
+            }
+            let msg = match self.inbox.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            };
+            match msg {
+                Msg::Eval { chunk, label, x } => self.handle_eval(chunk, label, x)?,
+                Msg::Stop => break,
+                // stray late training messages: the stream is done
+                Msg::Fwd { .. } | Msg::Bwd { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn run_inner(&mut self, actions: &[Action]) -> Result<bool> {
+        for a in actions {
+            let cont = match *a {
+                Action::Fwd { mb, chunk } => self.do_fwd(chunk, mb)?,
+                Action::Bwd { mb, chunk } => self.do_bwd(chunk, mb)?,
+                Action::Update { chunk } => self.do_update(chunk)?,
+            };
+            if !cont {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    fn run(mut self, actions: Vec<Action>) -> Result<WorkerReport> {
+        let ran = self.run_inner(&actions);
+        match ran {
+            Ok(true) => {
+                if let Err(e) = self.drain_evals() {
+                    self.stop_all();
+                    return Err(e);
+                }
+            }
+            Ok(false) => self.stop_all(),
+            Err(e) => {
+                self.stop_all();
+                return Err(e);
+            }
+        }
+        let mut chunks: Vec<ChunkReport> = Vec::with_capacity(self.chunks.len());
+        for c in &self.chunks {
+            chunks.push(c.report(self.is_head(&c.spec)));
+        }
+        Ok(WorkerReport {
+            replica: self.replica,
+            worker: self.w,
+            compute_s: self.chunks.iter().map(|c| c.compute_s).sum(),
+            idle_s: self.idle_s,
+            chunks,
+        })
+    }
 }
 
-/// Train with the real threaded pipeline. `cfg.steps` = microbatches
-/// per replica (= optimizer steps).
+/// Train with the real threaded pipeline under `cfg.schedule`.
+/// `cfg.steps` = optimizer steps per replica; each step consumes the
+/// schedule's `micro_per_update` microbatches.
 ///
-/// Supports every [`Method`] (each stage builds its own optimizer via
-/// [`optim::build`] over a stage-local manifest) on dense *and* MoE
-/// configs, and data parallelism (`cfg.replicas = R`): R x P stage
-/// threads, one full pipeline per replica over a disjoint data shard
-/// (`data::replica_stream`), with a channel-based all-reduce across
-/// the replicas of each stage at every optimizer step (`pipeline::dp`).
-/// Per-replica 1F1B stashes stay replica-local; the averaged gradient
-/// feeds every replica's optimizer identically, so replicas remain in
-/// parameter lockstep. `StashMode::Predict` is simulator-only and
-/// errors loudly.
+/// Supports every [`Method`] (each chunk builds its own optimizer via
+/// [`optim::build`] over a chunk-local manifest) on dense *and* MoE
+/// configs, data parallelism (`cfg.replicas = R`), and the four
+/// schedules (gpipe / 1f1b / interleaved:V / amdp). The schedule's
+/// action streams are validated on the virtual-clock executor before
+/// any thread spawns; its deterministic bubble lands in
+/// `bubble_frac_model` next to the wall-clock `bubble_frac`, and the
+/// per-chunk realized gradient delays land in `realized_delays`.
+/// `StashMode::Predict` is simulator-only and errors loudly.
 pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult> {
     let man0 = crate::runtime::Manifest::resolve(&artifacts_dir)?;
     if cfg.stash == StashMode::Predict {
-        anyhow::bail!(
+        bail!(
             "engine does not implement StashMode::Predict (PipeMare weight \
-             prediction is simulator-only); use train_sim or StashMode::Stash/NoStash"
+             prediction is simulator-only): no engine schedule supports it — \
+             --schedule gpipe, 1f1b, interleaved:V and amdp all reject it; \
+             use train_sim, or StashMode::Stash/NoStash on the engine"
         );
     }
-    let part = StagePartition::new(&man0, cfg.stages);
-    let init = init_params(&man0, cfg.seed);
+    let sched: Box<dyn Schedule> = schedule::build(cfg.schedule);
     let p = cfg.stages;
+    let n_parts = sched.n_parts(p);
+    if cfg.schedule == ScheduleKind::Amdp && p % 2 != 0 {
+        bail!(
+            "--schedule amdp pairs worker k with worker P-1-k across its two \
+             streams and needs an even stage count; got P={p} (use an even \
+             --stages or another --schedule)"
+        );
+    }
+    if n_parts > man0.cfg.n_blocks {
+        bail!(
+            "--schedule {} needs {n_parts} model chunks but the model has \
+             only {} blocks; lower --stages or the interleave factor V",
+            cfg.schedule.name(),
+            man0.cfg.n_blocks
+        );
+    }
     let r_count = cfg.dp_replicas();
-    let n_micro = cfg.steps as u64;
+    let n_updates = cfg.steps as u64;
+    let m_eff = sched.effective_m(p, cfg.microbatches as usize);
+    let mpu = sched.micro_per_update(p, cfg.microbatches as usize).max(1) as u64;
     let mcfg = man0.cfg.clone();
+    let chunks = sched.chunks(p);
+    let specs_by_id: HashMap<usize, ChunkSpec> =
+        chunks.iter().map(|c| (c.id, *c)).collect();
+    let by_pos: HashMap<(usize, usize), usize> =
+        chunks.iter().map(|c| ((c.stream, c.seq), c.id)).collect();
+    let mut depth: HashMap<usize, usize> = HashMap::new();
+    for c in &chunks {
+        let e = depth.entry(c.stream).or_insert(0);
+        *e = (*e).max(c.seq + 1);
+    }
 
-    // one all-reduce group per stage, one handle per replica
-    let mut dp_groups: Vec<Vec<Option<dp::Reducer>>> = (0..p)
-        .map(|_| dp::group(r_count).into_iter().map(Some).collect())
+    // Validate the action streams on the virtual clock before spawning
+    // anything: a malformed or cyclic stream is an error here, not a
+    // deadlocked thread — and the feasible virtual-time order is what
+    // makes the blocking execution below deadlock-free. The measured
+    // bubble doubles as the run's deterministic schedule model.
+    let model_stats =
+        schedule::simulate(sched.as_ref(), p, cfg.microbatches as usize, n_updates)?;
+    let actions_by_worker: Vec<Vec<Action>> = (0..p)
+        .map(|w| sched.worker_actions(p, m_eff, n_updates, w))
+        .collect();
+
+    let part0 = StagePartition::new(&man0, n_parts);
+    let init = init_params(&man0, cfg.seed);
+
+    // one all-reduce group per part over R × copies handles; copies
+    // sorted by stream so the fold order is down-before-up per replica
+    // (the simulator's draw order)
+    let mut copies_of_part: Vec<Vec<usize>> = vec![Vec::new(); n_parts];
+    for c in &chunks {
+        copies_of_part[c.part].push(c.id);
+    }
+    for v in copies_of_part.iter_mut() {
+        v.sort_by_key(|id| specs_by_id[id].stream);
+    }
+    let mut dp_handles: Vec<Vec<Option<dp::Reducer>>> = copies_of_part
+        .iter()
+        .map(|v| {
+            dp::group(r_count * v.len()).into_iter().map(Some).collect()
+        })
         .collect();
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for rep in 0..r_count {
-        // channels between consecutive stages of this replica's chain
-        let mut fwd_txs = Vec::new();
-        let mut fwd_rxs = vec![None];
-        let mut bwd_txs = vec![None];
-        let mut bwd_rxs = Vec::new();
-        for _ in 0..p.saturating_sub(1) {
-            let (ftx, frx) = channel::<FwdMsg>();
-            fwd_txs.push(Some(ftx));
-            fwd_rxs.push(Some(frx));
-            let (btx, brx) = channel::<BwdMsg>();
-            bwd_txs.push(Some(btx));
-            bwd_rxs.push(Some(brx));
+        let mut txs: Vec<Sender<Msg>> = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..p {
+            let (tx, rx) = channel::<Msg>();
+            txs.push(tx);
+            rxs.push(rx);
         }
-        fwd_txs.push(None);
-        bwd_rxs.push(None);
-
-        for k in (0..p).rev() {
-            let dir = artifacts_dir.clone();
-            let cfg_k = cfg.clone();
-            let keep = part.params_of_stage(k);
-            let init_k: Vec<Tensor> = keep.iter().map(|&i| init[i].clone()).collect();
-            let rx_fwd = fwd_rxs[k].take();
-            let tx_fwd = fwd_txs[k].take();
-            let rx_bwd = bwd_rxs[k].take();
-            let tx_bwd = bwd_txs[k].take();
-            let dp_handle = dp_groups[k][rep].take().unwrap();
-            let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
-            let data = BatchIter::new(
-                corpus.clone(),
-                mcfg.batch,
-                mcfg.seq,
-                replica_stream(TRAIN_STREAM, rep),
-            );
-            // replica 0's stage 0 sources validation tokens, its last
-            // stage re-derives the targets from the same stream (P = 1:
-            // one iterator, both roles); other replicas skip validation
-            let val_iter =
-                if cfg.eval_every > 0 && rep == 0 && (k == 0 || k == p - 1) {
+        for (w, inbox) in rxs.into_iter().enumerate() {
+            let my_specs: Vec<ChunkSpec> =
+                chunks.iter().filter(|c| c.worker == w).copied().collect();
+            // per-chunk setup data prepared on the main thread
+            let mut setup = Vec::with_capacity(my_specs.len());
+            for spec in &my_specs {
+                let keep = part0.params_of_stage(spec.part);
+                let init_c: Vec<Tensor> =
+                    keep.iter().map(|&i| init[i].clone()).collect();
+                let copy_idx = copies_of_part[spec.part]
+                    .iter()
+                    .position(|&id| id == spec.id)
+                    .unwrap();
+                let copies = copies_of_part[spec.part].len();
+                let dp_h =
+                    dp_handles[spec.part][rep * copies + copy_idx].take().unwrap();
+                let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
+                let feed = BatchIter::new(
+                    corpus.clone(),
+                    mcfg.batch,
+                    mcfg.seq,
+                    replica_stream(TRAIN_STREAM, rep),
+                );
+                let needs_val = cfg.eval_every > 0
+                    && rep == 0
+                    && spec.stream == 0
+                    && (spec.seq == 0 || spec.seq + 1 == depth[&spec.stream]);
+                let val_iter = if needs_val {
                     Some(BatchIter::new(
                         corpus,
                         mcfg.batch,
@@ -700,41 +979,100 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
                 } else {
                     None
                 };
+                // chunks downstream of the eval source each receive
+                // (and relay or record) every sourced eval
+                let evals_expected = if cfg.eval_every > 0
+                    && rep == 0
+                    && spec.stream == 0
+                    && spec.seq > 0
+                {
+                    n_updates / cfg.eval_every as u64
+                } else {
+                    0
+                };
+                setup.push((*spec, keep, init_c, dp_h, feed, val_iter, evals_expected));
+            }
+            let dir = artifacts_dir.clone();
+            let cfg_w = cfg.clone();
+            let actions = actions_by_worker[w].clone();
+            let peers = txs.clone();
+            let specs_by_id = specs_by_id.clone();
+            let by_pos = by_pos.clone();
+            let depth = depth.clone();
             handles.push((
                 rep,
-                k,
-                std::thread::spawn(move || -> Result<StageReport> {
-                    let rt = Runtime::open_restricted(&dir, &keep)?;
-                    let part_k = StagePartition::new(&rt.manifest, cfg_k.stages);
-                    let opt = optim::build(&cfg_k.method, &rt, &cfg_k);
-                    let use_stash = cfg_k.stash != StashMode::NoStash;
-                    let stash_weights =
-                        use_stash || matches!(cfg_k.method, Method::DelayComp { .. });
+                w,
+                std::thread::spawn(move || -> Result<WorkerReport> {
+                    let mut states = Vec::with_capacity(setup.len());
+                    let mut index = HashMap::new();
+                    for (spec, keep, init_c, dp_h, feed, val_iter, evals_expected) in
+                        setup
+                    {
+                        let rt = Runtime::open_restricted(&dir, &keep)?;
+                        let mut part_c = StagePartition::new(&rt.manifest, n_parts);
+                        // uniform chunk delay — the schedule's declared
+                        // staleness (identical to the derived P-1-k
+                        // values for the 1F1B layout)
+                        for d in part_c.delay_of.iter_mut() {
+                            *d = spec.delay;
+                        }
+                        let opt = optim::build(&cfg_w.method, &rt, &cfg_w);
+                        let use_stash = cfg_w.stash != StashMode::NoStash;
+                        let stash_weights = use_stash
+                            || matches!(cfg_w.method, Method::DelayComp { .. });
+                        index.insert(spec.id, states.len());
+                        states.push(ChunkState {
+                            spec,
+                            blocks: part_c.blocks_of_stage[spec.part].clone(),
+                            part: part_c,
+                            params: init_c,
+                            opt,
+                            dp: dp_h,
+                            cfg: cfg_w.clone(),
+                            feed,
+                            feed_next: 0,
+                            stash: Default::default(),
+                            head_x: Default::default(),
+                            pending_tokens: Default::default(),
+                            pending_targets: Default::default(),
+                            acc: None,
+                            acc_n: 0,
+                            last_snapshot: Vec::new(),
+                            use_stash,
+                            stash_weights,
+                            updates: 0,
+                            compute_s: 0.0,
+                            losses: Vec::new(),
+                            val_losses: Vec::new(),
+                            val_iter,
+                            evals_handled: 0,
+                            evals_expected,
+                            u_at_fwd: Default::default(),
+                            pending_mbs: Vec::new(),
+                            realized_mbs: 0,
+                            realized_max: 0,
+                            diverged: false,
+                            rt,
+                        });
+                    }
                     let worker = Worker {
-                        k,
-                        stages: cfg_k.stages,
+                        w,
                         replica: rep,
-                        dp: dp_handle,
-                        blocks: part_k.blocks_of_stage[k].clone(),
-                        params: init_k,
-                        opt,
-                        part: part_k,
-                        cfg: cfg_k,
-                        stash: Default::default(),
-                        pending_tokens: Default::default(),
-                        pending_targets: Default::default(),
-                        use_stash,
-                        stash_weights,
-                        updates: 0,
-                        compute_s: 0.0,
+                        cfg: cfg_w,
+                        chunks: states,
+                        index,
+                        specs_by_id,
+                        by_pos,
+                        depth,
+                        inbox,
+                        peers,
+                        pending_fwd: Default::default(),
+                        pending_bwd: Default::default(),
+                        pending_evals: Default::default(),
+                        sent_stop: false,
                         idle_s: 0.0,
-                        losses: Vec::new(),
-                        val_losses: Vec::new(),
-                        val_iter,
-                        diverged: false,
-                        rt,
                     };
-                    run_stage(worker, data, rx_fwd, tx_fwd, rx_bwd, tx_bwd, n_micro)
+                    worker.run(actions)
                 }),
             ));
         }
@@ -743,40 +1081,78 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
     let mut result = RunResult::new(&cfg.method.name(), p);
     result.replicas = r_count;
     result.param_count = man0.total_params();
+    result.schedule = cfg.schedule.name();
     let mut total_compute = 0.0;
     let mut total_idle = 0.0;
-    let mut rep_losses: Vec<Vec<f32>> = vec![Vec::new(); r_count];
-    for (rep, k, h) in handles {
-        let sr = h
+    let mut rep_records: Vec<Vec<(u64, f32)>> = vec![Vec::new(); r_count];
+    let mut delay_rows: Vec<(usize, u64, u32)> = Vec::new();
+    for (rep, w, h) in handles {
+        let wr = h
             .join()
-            .map_err(|_| anyhow!("replica {rep} stage {k} panicked"))??;
-        total_compute += sr.compute_s;
-        total_idle += sr.idle_s;
-        result.dispatches += sr.dispatches;
-        result.optimizer_state_elems += sr.state_elems;
-        result.diverged |= sr.diverged;
-        result.stage_counters.push(StageCounter {
-            replica: rep,
-            stage: k,
-            dispatches: sr.dispatches,
-            optimizer_state_elems: sr.state_elems,
-            updates: sr.updates,
-        });
-        if sr.stage == p - 1 {
-            if rep == 0 {
-                result.val_losses = sr.val_losses;
+            .map_err(|_| anyhow!("replica {rep} worker {w} panicked"))??;
+        total_compute += wr.compute_s;
+        total_idle += wr.idle_s;
+        for cr in &wr.chunks {
+            result.dispatches += cr.dispatches;
+            result.optimizer_state_elems += cr.state_elems;
+            result.diverged |= cr.diverged;
+            result.stage_counters.push(StageCounter {
+                replica: rep,
+                stage: cr.chunk,
+                dispatches: cr.dispatches,
+                optimizer_state_elems: cr.state_elems,
+                updates: cr.updates,
+            });
+            if cr.is_head {
+                rep_records[rep].extend(cr.losses.iter().copied());
+                if rep == 0 && cr.stream == 0 {
+                    result.val_losses = cr.val_losses.clone();
+                }
             }
-            rep_losses[rep] = sr.losses;
+            if rep == 0 {
+                delay_rows.push((cr.chunk, cr.realized_mbs, cr.realized_max_delay));
+            }
         }
     }
     result.stage_counters.sort_by_key(|c| (c.replica, c.stage));
-    // Per-step replica mean, like the simulator (truncated to the
-    // shortest replica on early stop). R = 1 passes losses through.
+    delay_rows.sort_by_key(|&(c, _, _)| c);
+    result.realized_delays = delay_rows;
+
+    // Per-step losses: group each replica's head-chunk records by
+    // optimizer step (mb / mpu), keep complete groups only (early
+    // stop truncates), mean within the group in microbatch order and
+    // across replicas in replica order — the simulator's fold exactly.
+    let mut rep_losses: Vec<Vec<f32>> = Vec::with_capacity(r_count);
+    for records in rep_records.iter_mut() {
+        records.sort_by_key(|&(mb, _)| mb);
+        let mut per_step = Vec::new();
+        let mut i = 0usize;
+        let mut step = 0u64;
+        while i + (mpu as usize) <= records.len() {
+            let hi = (step + 1) * mpu;
+            let group: Vec<f32> = records[i..i + mpu as usize]
+                .iter()
+                .take_while(|&&(mb, _)| mb < hi)
+                .map(|&(_, l)| l)
+                .collect();
+            if group.len() != mpu as usize {
+                break;
+            }
+            per_step.push(if mpu == 1 { group[0] } else { dp::mean_loss(&group) });
+            i += mpu as usize;
+            step += 1;
+        }
+        rep_losses.push(per_step);
+    }
     let n_steps = rep_losses.iter().map(|l| l.len()).min().unwrap_or(0);
     result.losses = (0..n_steps)
         .map(|i| {
-            let at_step: Vec<f32> = rep_losses.iter().map(|l| l[i]).collect();
-            dp::mean_loss(&at_step)
+            if r_count == 1 {
+                rep_losses[0][i]
+            } else {
+                let at_step: Vec<f32> = rep_losses.iter().map(|l| l[i]).collect();
+                dp::mean_loss(&at_step)
+            }
         })
         .collect();
     result.wall_secs = t0.elapsed().as_secs_f64();
@@ -785,7 +1161,18 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
     } else {
         0.0
     };
+    result.bubble_frac_model = model_stats.bubble;
+    // Analytic bubble: per-update M for the synchronous schedules, the
+    // whole finite run's microbatch count for the asynchronous ones.
+    let m_run = match cfg.schedule {
+        ScheduleKind::OneFOneB | ScheduleKind::Amdp => {
+            cfg.steps as usize * mpu as usize
+        }
+        _ => m_eff,
+    };
+    result.bubble_frac_analytic = sched.bubble_frac(p, m_run);
     result.tokens_per_sec = (result.losses.len() as f64
+        * mpu as f64
         * r_count as f64
         * mcfg.batch as f64
         * mcfg.seq as f64)
@@ -793,11 +1180,13 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
     Ok(result)
 }
 
-/// Analytic schedule model (Fig. 1): bubble fraction of synchronous
-/// GPipe vs asynchronous PipeDream for P stages and M in-flight
-/// microbatches per step, with unit per-stage fwd+bwd cost.
+/// Analytic schedule model (Fig. 1): bubble fraction of a synchronous
+/// fill/drain schedule for P stages and M in-flight microbatches, unit
+/// per-stage fwd+bwd cost — `(P-1)/(M+P-1)`. Kept as the historical
+/// name; delegates to [`schedule::gpipe_bubble_fraction`], which the
+/// pluggable schedules and conformance tests use directly.
 pub fn sync_bubble_fraction(p: usize, m: usize) -> f64 {
-    (p as f64 - 1.0) / (m as f64 + p as f64 - 1.0)
+    schedule::gpipe_bubble_fraction(p, m)
 }
 
 pub fn async_bubble_fraction_steady() -> f64 {
@@ -822,8 +1211,36 @@ mod tests {
     }
 
     #[test]
+    fn snippets_bubble_formulas_pinned() {
+        // SNIPPETS.md snippet 1: GPipe bubble over *total* slots is
+        // (P-1)/(M+P-1); `sync_bubble_fraction` has always used this
+        // total-slot convention, so it keeps its name and now
+        // delegates to the schedule module's formula.
+        assert!((sync_bubble_fraction(4, 8) - 3.0 / 11.0).abs() < 1e-12);
+        assert_eq!(
+            sync_bubble_fraction(4, 8),
+            schedule::gpipe_bubble_fraction(4, 8)
+        );
+        // 1F1B warmup-drain variant quoted over *ideal* time: (P-1)/M
+        assert!(
+            (schedule::one_f_one_b_bubble_fraction_ideal(4, 8) - 3.0 / 8.0).abs()
+                < 1e-12
+        );
+        // interleaved: (P-1)/(M·V) over ideal time
+        assert!(
+            (schedule::interleaved_bubble_fraction_ideal(4, 8, 2) - 3.0 / 16.0)
+                .abs()
+                < 1e-12
+        );
+        // the two conventions agree via total = ideal/(1+ideal)
+        let x = schedule::one_f_one_b_bubble_fraction_ideal(4, 8);
+        assert!((sync_bubble_fraction(4, 8) - x / (1.0 + x)).abs() < 1e-12);
+    }
+
+    #[test]
     fn engine_rejects_predict_stash_mode() {
-        // silent fallback would corrupt experiments — reject loudly
+        // silent fallback would corrupt experiments — reject loudly,
+        // and say which schedules are affected (all of them)
         let cfg = TrainCfg {
             stash: StashMode::Predict,
             stages: 2,
@@ -834,5 +1251,36 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("Predict"), "{err}");
+        assert!(err.contains("--schedule"), "{err}");
+    }
+
+    #[test]
+    fn engine_rejects_odd_stage_amdp() {
+        let cfg = TrainCfg {
+            schedule: ScheduleKind::Amdp,
+            stages: 1,
+            steps: 4,
+            ..Default::default()
+        };
+        let err = train_engine(PathBuf::from("artifacts/micro"), &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("even"), "{err}");
+        assert!(err.contains("--schedule"), "{err}");
+    }
+
+    #[test]
+    fn engine_rejects_oversubscribed_interleaving() {
+        // micro has 2 blocks; P=2 × V=2 needs 4 chunks
+        let cfg = TrainCfg {
+            schedule: ScheduleKind::Interleaved { v: 2 },
+            stages: 2,
+            steps: 4,
+            ..Default::default()
+        };
+        let err = train_engine(PathBuf::from("artifacts/micro"), &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("blocks"), "{err}");
     }
 }

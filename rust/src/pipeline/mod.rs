@@ -18,15 +18,16 @@
 
 pub mod dp;
 pub mod engine;
+pub mod schedule;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Corpus stream label of the validation split — disjoint from the
 /// training stream (1); shared by the simulator and the engine so both
 /// sample the same validation batches.
 pub const VAL_STREAM: u64 = 999;
 
-use crate::config::{Method, StashMode, TrainCfg};
+use crate::config::{Method, ScheduleKind, StashMode, TrainCfg};
 use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
 use crate::metrics::{RunResult, StageCounter};
 use crate::model::{init_params, StagePartition};
@@ -141,7 +142,31 @@ pub fn train_sim_observed(
     let man = &rt.manifest;
     let mcfg = rt.cfg().clone();
     let replicas = cfg.dp_replicas();
-    let part = StagePartition::new(man, cfg.stages);
+    let sched = schedule::build(cfg.schedule);
+    if cfg.schedule == ScheduleKind::Amdp && cfg.stages % 2 != 0 {
+        bail!(
+            "schedule amdp pairs stage k with stage P-1-k across its two \
+             streams and needs an even stage count; got P={} (use an even \
+             --stages or another --schedule)",
+            cfg.stages
+        );
+    }
+    // Microbatches folded into each optimizer update (gpipe/interleaved
+    // accumulate M; 1f1b updates per microbatch; amdp averages one per
+    // direction). The per-update gradient is the mean over the draws.
+    let draws = sched
+        .micro_per_update(cfg.stages, cfg.microbatches as usize)
+        .max(1);
+    // The staleness model follows the schedule's declared delay
+    // profile, not the hard-coded 1F1B P-1-k (identical for 1f1b).
+    let part = {
+        let mut part = StagePartition::new(man, cfg.stages);
+        let prof = sched.delay_profile(cfg.stages);
+        for (d, &s) in part.delay_of.iter_mut().zip(&part.stage_of) {
+            *d = prof[s];
+        }
+        part
+    };
     let mut params = init_params(man, cfg.seed);
     let mut stash = StashRing::new(&params, &part.delay_of);
     let mut predictor = match cfg.stash {
@@ -170,57 +195,75 @@ pub fn train_sim_observed(
 
     for t in 1..=cfg.steps as u64 {
         // One gradient per replica, all against the same stale views.
+        // Schedules with micro_per_update > 1 draw that many
+        // consecutive microbatches per replica and average — the
+        // gradient-accumulation arity of the real action stream.
         let mut grad_sets: Vec<Vec<Tensor>> = Vec::with_capacity(replicas);
         let mut rep_losses: Vec<f32> = Vec::with_capacity(replicas);
         for (r, train_iter) in train_iters.iter_mut().enumerate() {
-            let (toks, tgts) = train_iter.next_batch();
-            let tok_val = tokens_to_value(&toks, mcfg.batch, mcfg.seq)?;
-            let tgt_val = tokens_to_value(&tgts, mcfg.batch, mcfg.seq)?;
+            let mut draw_sets: Vec<Vec<Tensor>> = Vec::with_capacity(draws);
+            let mut draw_losses: Vec<f32> = Vec::with_capacity(draws);
+            for _ in 0..draws {
+                let (toks, tgts) = train_iter.next_batch();
+                let tok_val = tokens_to_value(&toks, mcfg.batch, mcfg.seq)?;
+                let tgt_val = tokens_to_value(&tgts, mcfg.batch, mcfg.seq)?;
 
-            // Assemble forward weights per staleness mode.
-            let (exec_name, mut inputs): (&str, Vec<Value>) = match cfg.stash {
-                StashMode::Stash => {
-                    let ins: Result<Vec<_>> = (0..params.len())
-                        .map(|i| tensor_to_value(stash.stale(i)))
-                        .collect();
-                    ("fwdbwd", ins?)
-                }
-                StashMode::NoStash => {
-                    // forward at stale weights, backward ops at current
-                    let mut ins = Vec::with_capacity(2 * params.len() + 2);
-                    for i in 0..params.len() {
-                        ins.push(tensor_to_value(stash.stale(i))?);
+                // Assemble forward weights per staleness mode.
+                let (exec_name, mut inputs): (&str, Vec<Value>) = match cfg.stash
+                {
+                    StashMode::Stash => {
+                        let ins: Result<Vec<_>> = (0..params.len())
+                            .map(|i| tensor_to_value(stash.stale(i)))
+                            .collect();
+                        ("fwdbwd", ins?)
                     }
-                    for p in &params {
-                        ins.push(tensor_to_value(p)?);
+                    StashMode::NoStash => {
+                        // forward at stale weights, backward ops at current
+                        let mut ins = Vec::with_capacity(2 * params.len() + 2);
+                        for i in 0..params.len() {
+                            ins.push(tensor_to_value(stash.stale(i))?);
+                        }
+                        for p in &params {
+                            ins.push(tensor_to_value(p)?);
+                        }
+                        ("fwdbwd_split", ins)
                     }
-                    ("fwdbwd_split", ins)
-                }
-                StashMode::Predict => {
-                    let pred = predictor.as_ref().unwrap();
-                    let ins: Result<Vec<_>> = params
+                    StashMode::Predict => {
+                        let pred = predictor.as_ref().unwrap();
+                        let ins: Result<Vec<_>> = params
+                            .iter()
+                            .enumerate()
+                            .map(|(i, w)| {
+                                tensor_to_value(&pred.predict(
+                                    i,
+                                    w,
+                                    part.delay_of[i],
+                                ))
+                            })
+                            .collect();
+                        ("fwdbwd", ins?)
+                    }
+                };
+                inputs.push(tok_val);
+                inputs.push(tgt_val);
+
+                let outs = rt.exec(exec_name, &inputs)?;
+                rep_dispatches[r] += 1;
+                draw_losses.push(value_scalar_f32(&outs[0])?);
+                draw_sets.push(
+                    outs[1..]
                         .iter()
-                        .enumerate()
-                        .map(|(i, w)| {
-                            tensor_to_value(&pred.predict(i, w, part.delay_of[i]))
-                        })
-                        .collect();
-                    ("fwdbwd", ins?)
-                }
-            };
-            inputs.push(tok_val);
-            inputs.push(tgt_val);
-
-            let outs = rt.exec(exec_name, &inputs)?;
-            rep_dispatches[r] += 1;
-            rep_losses.push(value_scalar_f32(&outs[0])?);
-            grad_sets.push(
-                outs[1..]
-                    .iter()
-                    .zip(man.params.iter())
-                    .map(|(val, p)| value_to_tensor(val, &p.shape))
-                    .collect::<Result<_>>()?,
-            );
+                        .zip(man.params.iter())
+                        .map(|(val, p)| value_to_tensor(val, &p.shape))
+                        .collect::<Result<_>>()?,
+                );
+            }
+            rep_losses.push(dp::mean_loss(&draw_losses));
+            grad_sets.push(if draws == 1 {
+                draw_sets.pop().unwrap()
+            } else {
+                dp::average(&draw_sets)
+            });
         }
         let loss = dp::mean_loss(&rep_losses);
         if rep_losses.iter().any(|l| !l.is_finite()) {
@@ -274,6 +317,29 @@ pub fn train_sim_observed(
     }
     result.wall_secs = t0.elapsed().as_secs_f64();
     result.dispatches = rt.total_dispatches();
+    result.schedule = cfg.schedule.name();
+    // Analytic bubble: per-update M for the synchronous schedules, the
+    // whole finite run's microbatch count for the asynchronous ones
+    // (their fill/drain amortizes over the run).
+    let m_run = match cfg.schedule {
+        ScheduleKind::OneFOneB | ScheduleKind::Amdp => {
+            cfg.steps as usize * draws
+        }
+        _ => cfg.microbatches as usize,
+    };
+    result.bubble_frac_analytic = sched.bubble_frac(cfg.stages, m_run);
+    // Deterministic schedule model of this run's action streams: what
+    // the engine would execute for the same (P, M, steps), measured on
+    // the unit-cost virtual clock.
+    if let Ok(stats) = schedule::simulate(
+        sched.as_ref(),
+        cfg.stages,
+        cfg.microbatches as usize,
+        cfg.steps as u64,
+    ) {
+        result.bubble_frac_model = stats.bubble;
+        result.realized_delays = schedule::summarize_delays(&stats.delays);
+    }
     // Per-replica breakdown (the sim is whole-model, so stage = 0).
     // State accounting models the distributed system the sim stands in
     // for — each replica owns a full optimizer-state copy, exactly as

@@ -1,0 +1,1156 @@
+//! Pluggable pipeline schedules.
+//!
+//! A [`Schedule`] owns everything the execution layers previously
+//! hard-coded for 1F1B: how the model is cut into *chunks* (parameter
+//! partitions placed on workers), the per-worker **action stream**
+//! (warmup counts, fwd/bwd interleaving, update placement), how many
+//! microbatches feed one optimizer update, the per-stage gradient
+//! **delay profile** the staleness model sees, and the analytic
+//! **bubble fraction** the conformance tests pin the measured schedule
+//! against.
+//!
+//! Four schedules (paper Fig. 1 premise + PAPERS.md related work):
+//!
+//! * [`Gpipe`] — synchronous fill/drain: M forwards, M backwards, one
+//!   update. Delay 0 everywhere, bubble `(P-1)/(M+P-1)`.
+//! * [`OneFOneB`] — asynchronous PipeDream 1F1B, the repo's original
+//!   schedule: stage k warms up with `P-1-k` forwards then alternates
+//!   fwd/bwd with an update per microbatch. Delay `P-1-k`, and the
+//!   same fill/drain bubble `(P-1)/(M+P-1)` over a finite run of M
+//!   microbatches (steady state itself is bubble-free).
+//! * [`Interleaved`] — synchronous interleaved 1F1B (Megatron): each
+//!   worker hosts V *virtual* chunk-stages (chunk c on worker c mod P,
+//!   parameters re-restricted per chunk), so the fill shrinks to
+//!   `(P-1)/(M·V+P-1)`. Delay 0.
+//! * [`Amdp`] — asynchronous bidirectional schedule (AMDP / Chimera
+//!   family): two counter-flowing 1F1B streams over two full weight
+//!   copies; worker k hosts stage k of the "down" stream and stage
+//!   P-1-k of the "up" stream, and each update averages one microbatch
+//!   per direction across the paired copies. Delay `P-1-k` (in update
+//!   units), requires even P so no worker pairs with itself inside a
+//!   blocking all-reduce.
+//!
+//! The module also ships a deterministic **virtual-clock executor**
+//! ([`simulate`]): unit-cost fwd/bwd with real dependency tracking.
+//! It validates well-formedness (every microbatch exactly one fwd+bwd
+//! per chunk, bwd never before its fwd, stash bounded), measures the
+//! realized bubble fraction and per-chunk gradient delays, and is what
+//! the schedule-conformance tests (and the engine's deterministic
+//! `bubble_frac_model`) run against — wall-clock bubble measurements
+//! stay as a separate, noisier metric.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use crate::config::ScheduleKind;
+
+/// One chunk: a parameter partition placed on a worker at a position
+/// in a stream's forward order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Chunk id (index into [`Schedule::chunks`]).
+    pub id: usize,
+    /// Worker (OS thread) hosting this chunk.
+    pub worker: usize,
+    /// Parameter partition index (stage-local manifest). Distinct
+    /// chunks may share a `part` (AMDP's two copies of each stage).
+    pub part: usize,
+    /// Stream this chunk serves (0 = down; AMDP adds 1 = up).
+    pub stream: usize,
+    /// Position in the stream's forward order (0 = embeddings side).
+    pub seq: usize,
+    /// Declared steady-state gradient delay, in optimizer updates.
+    pub delay: u32,
+}
+
+/// One entry of a worker's action stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Forward microbatch `mb` through chunk `chunk`.
+    Fwd { mb: u64, chunk: usize },
+    /// Backward microbatch `mb` through chunk `chunk`.
+    Bwd { mb: u64, chunk: usize },
+    /// Apply chunk `chunk`'s accumulated gradient (mean over the
+    /// microbatches accumulated since its previous update).
+    Update { chunk: usize },
+}
+
+/// A pipeline schedule: chunk layout + per-worker action streams +
+/// the analytic delay/bubble model they realize.
+pub trait Schedule: Send + Sync {
+    fn kind(&self) -> ScheduleKind;
+
+    fn name(&self) -> String {
+        self.kind().name()
+    }
+
+    /// Number of parameter partitions (`P`, or `P·V` interleaved).
+    fn n_parts(&self, p: usize) -> usize {
+        p
+    }
+
+    /// Number of counter-flowing streams (1, or 2 for AMDP). Global
+    /// microbatch `mb` belongs to stream `mb % n_streams()`.
+    fn n_streams(&self) -> usize {
+        1
+    }
+
+    /// Chunk layout for P workers.
+    fn chunks(&self, p: usize) -> Vec<ChunkSpec>;
+
+    /// Effective in-flight microbatch count M from the config knob
+    /// (0 = auto). Schedules with a fixed per-update arity ignore it.
+    fn effective_m(&self, p: usize, cfg_m: usize) -> usize;
+
+    /// Microbatches consumed by one optimizer update.
+    fn micro_per_update(&self, p: usize, cfg_m: usize) -> usize;
+
+    /// The action stream worker `w` executes for `n_updates` optimizer
+    /// updates with `m = effective_m(...)` microbatches in flight.
+    fn worker_actions(&self, p: usize, m: usize, n_updates: u64, w: usize)
+        -> Vec<Action>;
+
+    /// Declared gradient delay per model stage under the P-way
+    /// partition (len P), in optimizer updates — what the simulator's
+    /// stash rings and the delay-aware optimizers consume.
+    fn delay_profile(&self, p: usize) -> Vec<u32>;
+
+    /// Analytic bubble fraction, idle/(idle+busy) over all workers,
+    /// for M in-flight microbatches (for `1f1b`/`amdp`, M = the total
+    /// microbatch count of the finite run).
+    fn bubble_frac(&self, p: usize, m: usize) -> f64;
+
+    /// Declared maximum in-flight forward stash depth per chunk.
+    fn max_stash(&self, p: usize, m: usize) -> usize;
+}
+
+/// Build the schedule implementation for a config kind.
+pub fn build(kind: ScheduleKind) -> Box<dyn Schedule> {
+    match kind {
+        ScheduleKind::Gpipe => Box::new(Gpipe),
+        ScheduleKind::OneFOneB => Box::new(OneFOneB),
+        ScheduleKind::Interleaved { v } => Box::new(Interleaved { v }),
+        ScheduleKind::Amdp => Box::new(Amdp),
+    }
+}
+
+/// Linear single-stream chunk layout: chunk k = stage k on worker k.
+fn linear_chunks(p: usize, delay_of: impl Fn(usize) -> u32) -> Vec<ChunkSpec> {
+    (0..p)
+        .map(|k| ChunkSpec {
+            id: k,
+            worker: k,
+            part: k,
+            stream: 0,
+            seq: k,
+            delay: delay_of(k),
+        })
+        .collect()
+}
+
+/// The per-chunk 1F1B pattern at stream depth `d`, seq position `q`,
+/// over `n` stream-local microbatches: `d-1-q` warmup forwards, then
+/// strict fwd-before-bwd alternation with an update per backward —
+/// exactly the stream the engine's original hard-coded loop executed.
+/// `mb_of` maps a stream-local index to its global microbatch id.
+fn one_f_one_b_chunk_stream(
+    d: usize,
+    q: usize,
+    n: u64,
+    chunk: usize,
+    mb_of: impl Fn(u64) -> u64,
+) -> Vec<Action> {
+    let warmup = ((d - 1 - q) as u64).min(n);
+    let mut out = Vec::with_capacity((2 * n + n) as usize);
+    for i in 0..warmup {
+        out.push(Action::Fwd { mb: mb_of(i), chunk });
+    }
+    for i in 0..n {
+        if warmup + i < n {
+            out.push(Action::Fwd { mb: mb_of(warmup + i), chunk });
+        }
+        out.push(Action::Bwd { mb: mb_of(i), chunk });
+        out.push(Action::Update { chunk });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// GPipe
+// ---------------------------------------------------------------------------
+
+pub struct Gpipe;
+
+impl Schedule for Gpipe {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Gpipe
+    }
+
+    fn chunks(&self, p: usize) -> Vec<ChunkSpec> {
+        linear_chunks(p, |_| 0)
+    }
+
+    fn effective_m(&self, p: usize, cfg_m: usize) -> usize {
+        if cfg_m == 0 { p } else { cfg_m }
+    }
+
+    fn micro_per_update(&self, p: usize, cfg_m: usize) -> usize {
+        self.effective_m(p, cfg_m)
+    }
+
+    fn worker_actions(&self, p: usize, m: usize, n_updates: u64, w: usize)
+        -> Vec<Action> {
+        let m = self.effective_m(p, m) as u64;
+        let mut out = Vec::new();
+        for u in 0..n_updates {
+            let base = u * m;
+            for j in 0..m {
+                out.push(Action::Fwd { mb: base + j, chunk: w });
+            }
+            for j in 0..m {
+                out.push(Action::Bwd { mb: base + j, chunk: w });
+            }
+            out.push(Action::Update { chunk: w });
+        }
+        out
+    }
+
+    fn delay_profile(&self, p: usize) -> Vec<u32> {
+        vec![0; p]
+    }
+
+    fn bubble_frac(&self, p: usize, m: usize) -> f64 {
+        gpipe_bubble_fraction(p, self.effective_m(p, m))
+    }
+
+    fn max_stash(&self, p: usize, m: usize) -> usize {
+        self.effective_m(p, m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1F1B (PipeDream) — the original hard-coded schedule
+// ---------------------------------------------------------------------------
+
+pub struct OneFOneB;
+
+impl Schedule for OneFOneB {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::OneFOneB
+    }
+
+    fn chunks(&self, p: usize) -> Vec<ChunkSpec> {
+        linear_chunks(p, |k| (p - 1 - k) as u32)
+    }
+
+    fn effective_m(&self, _p: usize, _cfg_m: usize) -> usize {
+        1
+    }
+
+    fn micro_per_update(&self, _p: usize, _cfg_m: usize) -> usize {
+        1
+    }
+
+    fn worker_actions(&self, p: usize, _m: usize, n_updates: u64, w: usize)
+        -> Vec<Action> {
+        one_f_one_b_chunk_stream(p, w, n_updates, w, |i| i)
+    }
+
+    fn delay_profile(&self, p: usize) -> Vec<u32> {
+        (0..p).map(|k| (p - 1 - k) as u32).collect()
+    }
+
+    fn bubble_frac(&self, p: usize, m: usize) -> f64 {
+        // Finite-run fill/drain bubble; the steady state itself is
+        // bubble-free (`async_bubble_fraction_steady`).
+        gpipe_bubble_fraction(p, m)
+    }
+
+    fn max_stash(&self, p: usize, _m: usize) -> usize {
+        p // stage k holds at most P-k in-flight forwards
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interleaved 1F1B (Megatron virtual stages), synchronous variant
+// ---------------------------------------------------------------------------
+
+pub struct Interleaved {
+    pub v: usize,
+}
+
+impl Schedule for Interleaved {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Interleaved { v: self.v }
+    }
+
+    fn n_parts(&self, p: usize) -> usize {
+        p * self.v
+    }
+
+    fn chunks(&self, p: usize) -> Vec<ChunkSpec> {
+        (0..p * self.v)
+            .map(|c| ChunkSpec {
+                id: c,
+                worker: c % p,
+                part: c,
+                stream: 0,
+                seq: c,
+                delay: 0,
+            })
+            .collect()
+    }
+
+    fn effective_m(&self, p: usize, cfg_m: usize) -> usize {
+        if cfg_m == 0 { p } else { cfg_m }
+    }
+
+    fn micro_per_update(&self, p: usize, cfg_m: usize) -> usize {
+        self.effective_m(p, cfg_m)
+    }
+
+    fn worker_actions(&self, p: usize, m: usize, n_updates: u64, w: usize)
+        -> Vec<Action> {
+        let m = self.effective_m(p, m) as u64;
+        let mut out = Vec::new();
+        for u in 0..n_updates {
+            let base = u * m;
+            // forward all M microbatches through each chunk level in
+            // turn (level lv = chunk w + lv·P), then backward in
+            // reverse level order — a dense interleaved wave whose
+            // fill is P-1 chunk-slots instead of P-1 microbatch-slots
+            for lv in 0..self.v {
+                for j in 0..m {
+                    out.push(Action::Fwd { mb: base + j, chunk: w + lv * p });
+                }
+            }
+            for lv in (0..self.v).rev() {
+                for j in 0..m {
+                    out.push(Action::Bwd { mb: base + j, chunk: w + lv * p });
+                }
+            }
+            for lv in 0..self.v {
+                out.push(Action::Update { chunk: w + lv * p });
+            }
+        }
+        out
+    }
+
+    fn delay_profile(&self, p: usize) -> Vec<u32> {
+        vec![0; p]
+    }
+
+    fn bubble_frac(&self, p: usize, m: usize) -> f64 {
+        interleaved_bubble_fraction_exact(p, self.effective_m(p, m), self.v)
+    }
+
+    fn max_stash(&self, p: usize, m: usize) -> usize {
+        self.effective_m(p, m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AMDP — asynchronous bidirectional (two counter-flowing 1F1B streams)
+// ---------------------------------------------------------------------------
+
+pub struct Amdp;
+
+impl Amdp {
+    /// The greedy worker merge below is deterministic; both copies of
+    /// stage s sit at the same stream depth, so their paired updates
+    /// align and the blocking cross-copy all-reduce cannot cycle.
+    fn merged_actions(&self, p: usize, n_updates: u64) -> Vec<Vec<Action>> {
+        let chunks = self.chunks(p);
+        let streams: Vec<Vec<Action>> = chunks
+            .iter()
+            .map(|c| {
+                let stream = c.stream as u64;
+                one_f_one_b_chunk_stream(p, c.seq, n_updates, c.id, move |i| {
+                    2 * i + stream
+                })
+            })
+            .collect();
+        merge_chunk_streams(p, &chunks, &streams)
+            .expect("amdp merge is deadlock-free for even P")
+    }
+}
+
+impl Schedule for Amdp {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Amdp
+    }
+
+    fn n_streams(&self) -> usize {
+        2
+    }
+
+    fn chunks(&self, p: usize) -> Vec<ChunkSpec> {
+        // down stream: stage s on worker s; up stream: stage s on
+        // worker p-1-s (both copies of stage s share part s and sit at
+        // seq s of their stream)
+        let mut out = linear_chunks(p, |k| (p - 1 - k) as u32);
+        for s in 0..p {
+            out.push(ChunkSpec {
+                id: p + s,
+                worker: p - 1 - s,
+                part: s,
+                stream: 1,
+                seq: s,
+                delay: (p - 1 - s) as u32,
+            });
+        }
+        out
+    }
+
+    fn effective_m(&self, _p: usize, _cfg_m: usize) -> usize {
+        2
+    }
+
+    fn micro_per_update(&self, _p: usize, _cfg_m: usize) -> usize {
+        2
+    }
+
+    fn worker_actions(&self, p: usize, _m: usize, n_updates: u64, w: usize)
+        -> Vec<Action> {
+        self.merged_actions(p, n_updates)[w].clone()
+    }
+
+    fn delay_profile(&self, p: usize) -> Vec<u32> {
+        (0..p).map(|k| (p - 1 - k) as u32).collect()
+    }
+
+    fn bubble_frac(&self, p: usize, m: usize) -> f64 {
+        // The merged bidirectional stream has no simple closed form;
+        // the declared analytic value is the exact unit-cost
+        // virtual-clock bubble of the schedule's own action streams
+        // (deterministic, data-independent). [`amdp_bubble_fraction`]
+        // stays as the closed-form estimate / odd-P fallback.
+        if p >= 2 && p % 2 == 0 && m >= 2 {
+            if let Ok(stats) = simulate(self, p, 0, (m as u64) / 2) {
+                return stats.bubble;
+            }
+        }
+        amdp_bubble_fraction(p, m)
+    }
+
+    fn max_stash(&self, p: usize, _m: usize) -> usize {
+        p // per chunk; a worker's two chunks stash ≤ P+1 together
+    }
+}
+
+/// Greedy deterministic list-scheduling merge of per-chunk logical
+/// streams into per-worker action sequences, under unit fwd/bwd costs
+/// and the real dependency rules (including cross-copy update
+/// pairing). Used by AMDP, whose two streams per worker have no
+/// closed-form interleaving; the produced order is feasible in virtual
+/// time, which makes the engine's blocking execution of it
+/// deadlock-free.
+/// Per chunk, per update index u: how many of the chunk's backwards
+/// precede update u in its logical stream (the last of them is the
+/// backward "feeding" that update).
+fn bwds_before_updates(stream: &[Action]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut bwds = 0usize;
+    for a in stream {
+        match a {
+            Action::Bwd { .. } => bwds += 1,
+            Action::Update { .. } => out.push(bwds),
+            Action::Fwd { .. } => {}
+        }
+    }
+    out
+}
+
+fn merge_chunk_streams(
+    p: usize,
+    chunks: &[ChunkSpec],
+    streams: &[Vec<Action>],
+) -> Result<Vec<Vec<Action>>> {
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let feeds: Vec<Vec<usize>> =
+        streams.iter().map(|s| bwds_before_updates(s)).collect();
+    let by_pos: HashMap<(usize, usize), usize> =
+        chunks.iter().map(|c| ((c.stream, c.seq), c.id)).collect();
+    let depth: HashMap<usize, usize> = {
+        let mut d = HashMap::new();
+        for c in chunks {
+            let e = d.entry(c.stream).or_insert(0usize);
+            *e = (*e).max(c.seq + 1);
+        }
+        d
+    };
+    let mut cursors = vec![0usize; chunks.len()];
+    let mut fwd_end: HashMap<(usize, u64), u64> = HashMap::new();
+    let mut bwd_end: HashMap<(usize, u64), u64> = HashMap::new();
+    // per chunk: end times of its executed backwards, in stream order
+    let mut bwd_ends: Vec<Vec<u64>> = vec![Vec::new(); chunks.len()];
+    let mut upd_done = vec![0usize; chunks.len()];
+    let mut worker_free = vec![0u64; p];
+    let mut out: Vec<Vec<Action>> = vec![Vec::new(); p];
+    let mut done = 0usize;
+    let mut t = 0u64;
+    let deadline = 4 * total as u64 + 64;
+
+    // update u of chunk c is admissible at slot t once *every* copy of
+    // its part has finished the backward feeding that copy's update u
+    let upd_ready = |c: &ChunkSpec,
+                     u: usize,
+                     t: u64,
+                     bwd_ends: &[Vec<u64>]|
+     -> bool {
+        chunks.iter().filter(|o| o.part == c.part).all(|o| {
+            let need = feeds[o.id][u];
+            need == 0
+                || bwd_ends[o.id].get(need - 1).map_or(false, |&e| e <= t)
+        })
+    };
+
+    while done < total {
+        if t > deadline {
+            bail!("schedule merge: no progress (deadlock) at t={t}, {done}/{total}");
+        }
+        let mut progressed = false;
+        for w in 0..p {
+            if worker_free[w] > t {
+                continue;
+            }
+            // this worker's chunks in (part, stream) priority order
+            let mut mine: Vec<&ChunkSpec> =
+                chunks.iter().filter(|c| c.worker == w).collect();
+            mine.sort_by_key(|c| (c.part, c.stream));
+            // any number of zero-cost updates, at most one unit action
+            loop {
+                let mut acted = None;
+                for &c in &mine {
+                    let cur = cursors[c.id];
+                    if cur >= streams[c.id].len() {
+                        continue;
+                    }
+                    let a = streams[c.id][cur];
+                    let ready = match a {
+                        Action::Fwd { mb, .. } => {
+                            c.seq == 0
+                                || fwd_end
+                                    .get(&(by_pos[&(c.stream, c.seq - 1)], mb))
+                                    .map_or(false, |&e| e <= t)
+                        }
+                        Action::Bwd { mb, .. } => {
+                            fwd_end.get(&(c.id, mb)).map_or(false, |&e| e <= t)
+                                && (c.seq + 1 >= depth[&c.stream]
+                                    || bwd_end
+                                        .get(&(by_pos[&(c.stream, c.seq + 1)], mb))
+                                        .map_or(false, |&e| e <= t))
+                        }
+                        Action::Update { .. } => {
+                            upd_ready(c, upd_done[c.id], t, &bwd_ends)
+                        }
+                    };
+                    if ready {
+                        acted = Some((c.id, a));
+                        break;
+                    }
+                }
+                let (cid, a) = match acted {
+                    Some(x) => x,
+                    None => break,
+                };
+                cursors[cid] += 1;
+                out[w].push(a);
+                done += 1;
+                progressed = true;
+                match a {
+                    Action::Fwd { mb, .. } => {
+                        fwd_end.insert((cid, mb), t + 1);
+                        worker_free[w] = t + 1;
+                        break;
+                    }
+                    Action::Bwd { mb, .. } => {
+                        bwd_end.insert((cid, mb), t + 1);
+                        bwd_ends[cid].push(t + 1);
+                        worker_free[w] = t + 1;
+                        break;
+                    }
+                    Action::Update { .. } => {
+                        upd_done[cid] += 1; // zero cost: keep scanning
+                    }
+                }
+            }
+        }
+        if !progressed {
+            t += 1;
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-clock executor
+// ---------------------------------------------------------------------------
+
+/// Deterministic measurements of a schedule's emitted action streams.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// Virtual makespan (unit fwd/bwd costs, zero-cost updates).
+    pub makespan: u64,
+    /// Busy worker-slots across all workers.
+    pub busy: u64,
+    /// Realized bubble: `1 - busy / (workers · makespan)`.
+    pub bubble: f64,
+    /// Max in-flight forward stash depth observed, per chunk.
+    pub max_stash: Vec<usize>,
+    /// Realized gradient delay per (chunk id, global mb), in updates.
+    pub delays: Vec<(usize, u64, u32)>,
+    /// Updates executed per chunk.
+    pub updates: Vec<u64>,
+}
+
+/// Execute a schedule's per-worker action streams on a virtual clock
+/// (unit-cost fwd/bwd, zero-cost updates, real dependency tracking)
+/// and validate well-formedness:
+///
+/// * every expected microbatch gets exactly one fwd and one bwd per
+///   chunk of its stream, and the bwd never precedes its fwd;
+/// * the in-flight stash depth never exceeds the declared
+///   [`Schedule::max_stash`];
+/// * dependencies admit an execution at all (a cyclic stream is
+///   reported as a deadlock, not an infinite loop);
+/// * every chunk performs exactly `n_updates` updates.
+pub fn simulate(
+    sched: &dyn Schedule,
+    p: usize,
+    cfg_m: usize,
+    n_updates: u64,
+) -> Result<ExecStats> {
+    let m = sched.effective_m(p, cfg_m);
+    let chunks = sched.chunks(p);
+    let n_streams = sched.n_streams() as u64;
+    let mpu = sched.micro_per_update(p, cfg_m) as u64;
+    let n_micro = n_updates * mpu;
+    let actions: Vec<Vec<Action>> =
+        (0..p).map(|w| sched.worker_actions(p, m, n_updates, w)).collect();
+
+    // chunk lookup tables
+    let by_id: HashMap<usize, ChunkSpec> = chunks.iter().map(|c| (c.id, *c)).collect();
+    let by_pos: HashMap<(usize, usize), usize> =
+        chunks.iter().map(|c| ((c.stream, c.seq), c.id)).collect();
+    let mut depth: HashMap<usize, usize> = HashMap::new();
+    for c in &chunks {
+        let e = depth.entry(c.stream).or_insert(0);
+        *e = (*e).max(c.seq + 1);
+    }
+    for (w, acts) in actions.iter().enumerate() {
+        for a in acts {
+            let id = match a {
+                Action::Fwd { chunk, .. }
+                | Action::Bwd { chunk, .. }
+                | Action::Update { chunk } => *chunk,
+            };
+            let c = by_id
+                .get(&id)
+                .ok_or_else(|| anyhow!("worker {w}: unknown chunk {id}"))?;
+            if c.worker != w {
+                bail!("worker {w} emits action for chunk {id} owned by {}", c.worker);
+            }
+        }
+    }
+
+    let mut fwd_end: HashMap<(usize, u64), u64> = HashMap::new();
+    let mut bwd_end: HashMap<(usize, u64), u64> = HashMap::new();
+    let mut cursors = vec![0usize; p];
+    let mut free = vec![0u64; p];
+    // per-chunk accounting
+    let n_chunks = chunks.iter().map(|c| c.id).max().map_or(0, |x| x + 1);
+    let mut inflight = vec![0isize; n_chunks];
+    let mut max_stash = vec![0usize; n_chunks];
+    let mut upd_done = vec![0u64; n_chunks];
+    let mut u_at_fwd: HashMap<(usize, u64), u64> = HashMap::new();
+    let mut pending_mbs: Vec<Vec<u64>> = vec![Vec::new(); n_chunks]; // since last update
+    // per chunk: end times of executed backwards, in stream order, plus
+    // how many backwards precede each update in each chunk's stream —
+    // the cross-copy all-reduce of update u waits on every copy's
+    // feeding backward
+    let mut bwd_ends: Vec<Vec<u64>> = vec![Vec::new(); n_chunks];
+    let feeds: Vec<Vec<usize>> = {
+        let mut per_chunk: Vec<Vec<Action>> = vec![Vec::new(); n_chunks];
+        for acts in &actions {
+            for a in acts {
+                match a {
+                    Action::Bwd { chunk, .. } | Action::Update { chunk } => {
+                        per_chunk[*chunk].push(*a)
+                    }
+                    Action::Fwd { .. } => {}
+                }
+            }
+        }
+        per_chunk.iter().map(|s| bwds_before_updates(s)).collect()
+    };
+    let mut delays = Vec::new();
+    let mut busy = 0u64;
+    let mut makespan = 0u64;
+
+    let total: usize = actions.iter().map(|a| a.len()).sum();
+    let mut done = 0usize;
+    while done < total {
+        let mut progressed = false;
+        for w in 0..p {
+            let cur = cursors[w];
+            if cur >= actions[w].len() {
+                continue;
+            }
+            let a = actions[w][cur];
+            match a {
+                Action::Fwd { mb, chunk } => {
+                    let c = by_id[&chunk];
+                    if mb % n_streams != c.stream as u64 || mb >= n_micro {
+                        bail!("chunk {chunk}: fwd of mb {mb} outside its stream");
+                    }
+                    let dep = if c.seq == 0 {
+                        Some(0)
+                    } else {
+                        fwd_end.get(&(by_pos[&(c.stream, c.seq - 1)], mb)).copied()
+                    };
+                    let dep = match dep {
+                        Some(d) => d,
+                        None => continue,
+                    };
+                    if fwd_end.contains_key(&(chunk, mb)) {
+                        bail!("chunk {chunk}: duplicate fwd of mb {mb}");
+                    }
+                    let start = free[w].max(dep);
+                    fwd_end.insert((chunk, mb), start + 1);
+                    free[w] = start + 1;
+                    busy += 1;
+                    makespan = makespan.max(start + 1);
+                    inflight[chunk] += 1;
+                    max_stash[chunk] = max_stash[chunk].max(inflight[chunk] as usize);
+                    u_at_fwd.insert((chunk, mb), upd_done[chunk]);
+                }
+                Action::Bwd { mb, chunk } => {
+                    let c = by_id[&chunk];
+                    let own = match fwd_end.get(&(chunk, mb)) {
+                        Some(&e) => e,
+                        None => {
+                            bail!("chunk {chunk}: bwd of mb {mb} precedes its fwd")
+                        }
+                    };
+                    let dn = if c.seq + 1 < depth[&c.stream] {
+                        bwd_end.get(&(by_pos[&(c.stream, c.seq + 1)], mb)).copied()
+                    } else {
+                        Some(0)
+                    };
+                    let dn = match dn {
+                        Some(d) => d,
+                        None => continue,
+                    };
+                    if bwd_end.contains_key(&(chunk, mb)) {
+                        bail!("chunk {chunk}: duplicate bwd of mb {mb}");
+                    }
+                    let start = free[w].max(own).max(dn);
+                    bwd_end.insert((chunk, mb), start + 1);
+                    free[w] = start + 1;
+                    busy += 1;
+                    makespan = makespan.max(start + 1);
+                    inflight[chunk] -= 1;
+                    pending_mbs[chunk].push(mb);
+                    bwd_ends[chunk].push(start + 1);
+                }
+                Action::Update { chunk } => {
+                    let c = by_id[&chunk];
+                    if pending_mbs[chunk].is_empty() {
+                        bail!("chunk {chunk}: update with no accumulated backward");
+                    }
+                    let u = upd_done[chunk] as usize;
+                    // all copies of this part must have scheduled the
+                    // backward feeding their update u (blocking
+                    // all-reduce sync); retry later otherwise
+                    let mut sync = 0u64;
+                    let mut pending_copy = false;
+                    for o in chunks.iter().filter(|o| o.part == c.part) {
+                        let need = feeds[o.id].get(u).copied().unwrap_or(0);
+                        if need == 0 {
+                            continue;
+                        }
+                        match bwd_ends[o.id].get(need - 1) {
+                            Some(&e) => sync = sync.max(e),
+                            None => {
+                                pending_copy = true;
+                                break;
+                            }
+                        }
+                    }
+                    if pending_copy {
+                        continue;
+                    }
+                    free[w] = free[w].max(sync);
+                    let u = upd_done[chunk];
+                    for mb in pending_mbs[chunk].drain(..) {
+                        let seen = u_at_fwd[&(chunk, mb)];
+                        delays.push((chunk, mb, (u - seen) as u32));
+                    }
+                    upd_done[chunk] += 1;
+                }
+            }
+            cursors[w] = cur + 1;
+            done += 1;
+            progressed = true;
+        }
+        if !progressed {
+            bail!(
+                "schedule deadlock: {} of {total} actions executed, cursors {:?}",
+                done,
+                cursors
+            );
+        }
+    }
+
+    // coverage: every chunk saw exactly its stream's microbatches
+    for c in &chunks {
+        let mine: Vec<u64> = (0..n_micro)
+            .filter(|mb| mb % n_streams == c.stream as u64)
+            .collect();
+        for &mb in &mine {
+            if !fwd_end.contains_key(&(c.id, mb)) {
+                bail!("chunk {}: mb {mb} never forwarded", c.id);
+            }
+            if !bwd_end.contains_key(&(c.id, mb)) {
+                bail!("chunk {}: mb {mb} never backwarded", c.id);
+            }
+        }
+        if fwd_end.keys().filter(|(id, _)| *id == c.id).count() != mine.len() {
+            bail!("chunk {}: extra forwards", c.id);
+        }
+        if upd_done[c.id] != n_updates {
+            bail!(
+                "chunk {}: {} updates, expected {n_updates}",
+                c.id,
+                upd_done[c.id]
+            );
+        }
+        let cap = sched.max_stash(p, m);
+        if max_stash[c.id] > cap {
+            bail!(
+                "chunk {}: stash depth {} exceeds declared {cap}",
+                c.id,
+                max_stash[c.id]
+            );
+        }
+    }
+
+    let slots = (p as u64 * makespan).max(1);
+    Ok(ExecStats {
+        makespan,
+        busy,
+        bubble: 1.0 - busy as f64 / slots as f64,
+        max_stash,
+        delays,
+        updates: upd_done,
+    })
+}
+
+/// Collapse per-(chunk, microbatch) realized delays into per-chunk
+/// rows (chunk id, microbatches observed, max realized delay) — the
+/// compact form [`crate::metrics::RunResult::realized_delays`] carries.
+pub fn summarize_delays(delays: &[(usize, u64, u32)]) -> Vec<(usize, u64, u32)> {
+    let mut map: std::collections::BTreeMap<usize, (u64, u32)> =
+        std::collections::BTreeMap::new();
+    for &(c, _mb, d) in delays {
+        let e = map.entry(c).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.max(d);
+    }
+    map.into_iter().map(|(c, (n, mx))| (c, n, mx)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Analytic bubble formulas (SNIPPETS.md snippets 1–2), pinned by unit
+// tests here and in `engine.rs`.
+// ---------------------------------------------------------------------------
+
+/// GPipe bubble as a fraction of *total* schedule slots:
+/// `(P-1)/(M+P-1)` (fill + drain of P-1 slots around M useful ones).
+/// A finite 1F1B run of M microbatches pays the same fill/drain.
+pub fn gpipe_bubble_fraction(p: usize, m: usize) -> f64 {
+    (p as f64 - 1.0) / (m as f64 + p as f64 - 1.0)
+}
+
+/// The warmup-drain 1F1B bubble as a fraction of *ideal* (busy) time:
+/// `(P-1)/M` — the same overhead as [`gpipe_bubble_fraction`] in the
+/// bubble/ideal convention (`total = x/(1+x)`).
+pub fn one_f_one_b_bubble_fraction_ideal(p: usize, m: usize) -> f64 {
+    (p as f64 - 1.0) / m as f64
+}
+
+/// Interleaved-1F1B bubble over ideal time: `(P-1)/(M·V)` — V virtual
+/// chunks per worker divide the fill cost (Megatron Fig. 4).
+pub fn interleaved_bubble_fraction_ideal(p: usize, m: usize, v: usize) -> f64 {
+    (p as f64 - 1.0) / (m as f64 * v as f64)
+}
+
+/// [`interleaved_bubble_fraction_ideal`] converted to the
+/// bubble/total convention the executor measures.
+pub fn interleaved_bubble_fraction_total(p: usize, m: usize, v: usize) -> f64 {
+    let x = interleaved_bubble_fraction_ideal(p, m, v);
+    x / (1.0 + x)
+}
+
+/// Exact interleaved bubble over total slots, valid for *all* M: with
+/// fewer microbatches than workers (M < P), each of the V-1 level
+/// transitions stalls every worker for `P-M` slots — the next level's
+/// first microbatch is still `P-M` ranks upstream when the current
+/// level's last one finishes — in both the forward and the backward
+/// phase of the wave:
+/// `(P-1 + (V-1)·max(P-M,0)) / (M·V + P-1 + (V-1)·max(P-M,0))`.
+/// Reduces to [`interleaved_bubble_fraction_total`] when M ≥ P and to
+/// [`gpipe_bubble_fraction`] when V = 1; pinned against the unit-cost
+/// executor by the conformance harness.
+pub fn interleaved_bubble_fraction_exact(p: usize, m: usize, v: usize) -> f64 {
+    let stall = (v as f64 - 1.0) * (p as f64 - m as f64).max(0.0);
+    let fill = p as f64 - 1.0 + stall;
+    fill / (m as f64 * v as f64 + fill)
+}
+
+/// Closed-form *estimate* of the AMDP bubble over total slots for a
+/// run of M total microbatches (M/2 per direction): the two
+/// counter-flowing fills overlap on every worker, so the exposed
+/// fill/drain shrinks to roughly `P-2` slots against `2M` useful ones
+/// per worker: `(P-2)/(2M+P-2)`. The schedule's declared
+/// [`Schedule::bubble_frac`] reports the exact unit-cost executor
+/// value instead (no simple closed form exists for the merged
+/// bidirectional stream); this estimate serves odd-P fallbacks and
+/// back-of-envelope comparisons.
+pub fn amdp_bubble_fraction(p: usize, m: usize) -> f64 {
+    let fill = (p as f64 - 2.0).max(0.0);
+    fill / (2.0 * m as f64 + fill)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds() -> Vec<ScheduleKind> {
+        vec![
+            ScheduleKind::Gpipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved { v: 2 },
+            ScheduleKind::Amdp,
+        ]
+    }
+
+    #[test]
+    fn chunk_layouts_cover_parts_and_workers() {
+        for kind in kinds() {
+            let s = build(kind);
+            for p in [2usize, 4, 8] {
+                let chunks = s.chunks(p);
+                // every part covered by ≥1 chunk, every chunk on a valid worker
+                let mut part_seen = vec![0usize; s.n_parts(p)];
+                for c in &chunks {
+                    assert!(c.worker < p, "{kind:?}");
+                    part_seen[c.part] += 1;
+                }
+                assert!(part_seen.iter().all(|&n| n >= 1), "{kind:?} P={p}");
+                // ids unique
+                let ids: std::collections::HashSet<_> =
+                    chunks.iter().map(|c| c.id).collect();
+                assert_eq!(ids.len(), chunks.len(), "{kind:?}");
+                // declared chunk delays agree with the stage profile
+                let prof = s.delay_profile(p);
+                assert_eq!(prof.len(), p);
+                for c in &chunks {
+                    if s.n_parts(p) == p {
+                        assert_eq!(c.delay, prof[c.part], "{kind:?} chunk {}", c.id);
+                    } else {
+                        assert_eq!(c.delay, 0, "interleaved chunks are sync");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_stream_matches_legacy_warmup_pattern() {
+        // stage k of P warms up with P-1-k forwards, then alternates
+        // fwd-before-bwd — the engine's original hard-coded loop
+        let s = OneFOneB;
+        let acts = s.worker_actions(4, 1, 6, 1);
+        let head: Vec<Action> = acts.iter().take(5).copied().collect();
+        assert_eq!(
+            head,
+            vec![
+                Action::Fwd { mb: 0, chunk: 1 },
+                Action::Fwd { mb: 1, chunk: 1 },
+                Action::Fwd { mb: 2, chunk: 1 },
+                Action::Bwd { mb: 0, chunk: 1 },
+                Action::Update { chunk: 1 },
+            ]
+        );
+        // last stage: no warmup, strictly F,B,U triples
+        let last = s.worker_actions(4, 1, 3, 3);
+        assert_eq!(
+            last,
+            vec![
+                Action::Fwd { mb: 0, chunk: 3 },
+                Action::Bwd { mb: 0, chunk: 3 },
+                Action::Update { chunk: 3 },
+                Action::Fwd { mb: 1, chunk: 3 },
+                Action::Bwd { mb: 1, chunk: 3 },
+                Action::Update { chunk: 3 },
+                Action::Fwd { mb: 2, chunk: 3 },
+                Action::Bwd { mb: 2, chunk: 3 },
+                Action::Update { chunk: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn executor_accepts_all_schedules_and_counts_updates() {
+        for kind in kinds() {
+            let s = build(kind);
+            let stats = simulate(s.as_ref(), 4, 8, 3).unwrap_or_else(|e| {
+                panic!("{kind:?}: {e}");
+            });
+            assert!(stats.updates.iter().all(|&u| u == 3), "{kind:?}");
+            assert!(stats.makespan > 0 && stats.busy > 0, "{kind:?}");
+            assert!(stats.bubble >= 0.0 && stats.bubble < 1.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn executor_measured_bubble_matches_analytic_small_grid() {
+        // tiny hand-checkable cases (P=2): gpipe/1f1b 1/3, interleaved
+        // v=2 m=2 → 1/5, amdp → 0 fill for P=2
+        let g = simulate(&Gpipe, 2, 2, 1).unwrap();
+        assert!((g.bubble - 1.0 / 3.0).abs() < 1e-12, "{}", g.bubble);
+        let f = simulate(&OneFOneB, 2, 0, 2).unwrap();
+        assert!((f.bubble - 1.0 / 3.0).abs() < 1e-12, "{}", f.bubble);
+        let i = simulate(&Interleaved { v: 2 }, 2, 2, 1).unwrap();
+        assert!((i.bubble - 0.2).abs() < 1e-12, "{}", i.bubble);
+    }
+
+    #[test]
+    fn executor_realized_delays_match_declared_profiles() {
+        for kind in kinds() {
+            let s = build(kind);
+            let p = 4;
+            let n_updates = 12;
+            let stats = simulate(s.as_ref(), p, 8, n_updates).unwrap();
+            let chunks = s.chunks(p);
+            let n_streams = s.n_streams() as u64;
+            for (chunk, mb, delay) in stats.delays {
+                let spec = chunks.iter().find(|c| c.id == chunk).unwrap();
+                let local = mb / n_streams; // stream-local index
+                if local >= (p - 1) as u64 && local < n_updates - (p as u64) {
+                    assert_eq!(
+                        delay, spec.delay,
+                        "{kind:?} chunk {chunk} mb {mb}: steady-state delay"
+                    );
+                } else {
+                    assert!(
+                        delay <= spec.delay,
+                        "{kind:?} chunk {chunk} mb {mb}: fill delay clamps"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn executor_rejects_malformed_streams() {
+        // a schedule whose worker stream drops one backward
+        struct Broken;
+        impl Schedule for Broken {
+            fn kind(&self) -> ScheduleKind {
+                ScheduleKind::Gpipe
+            }
+            fn chunks(&self, p: usize) -> Vec<ChunkSpec> {
+                linear_chunks(p, |_| 0)
+            }
+            fn effective_m(&self, _p: usize, m: usize) -> usize {
+                m.max(1)
+            }
+            fn micro_per_update(&self, _p: usize, m: usize) -> usize {
+                m.max(1)
+            }
+            fn worker_actions(
+                &self,
+                p: usize,
+                m: usize,
+                n: u64,
+                w: usize,
+            ) -> Vec<Action> {
+                let mut a = Gpipe.worker_actions(p, m, n, w);
+                if w == 0 {
+                    // drop the last backward before the update
+                    let i = a
+                        .iter()
+                        .rposition(|x| matches!(x, Action::Bwd { .. }))
+                        .unwrap();
+                    a.remove(i);
+                }
+                a
+            }
+            fn delay_profile(&self, p: usize) -> Vec<u32> {
+                vec![0; p]
+            }
+            fn bubble_frac(&self, _p: usize, _m: usize) -> f64 {
+                0.0
+            }
+            fn max_stash(&self, _p: usize, m: usize) -> usize {
+                m
+            }
+        }
+        assert!(simulate(&Broken, 2, 2, 1).is_err());
+    }
+
+    #[test]
+    fn amdp_requires_even_p_for_copy_pairing() {
+        // odd P puts both copies of the middle stage on one worker —
+        // the layout itself shows the collision the engine must reject
+        let chunks = Amdp.chunks(3);
+        let mid: Vec<_> = chunks.iter().filter(|c| c.part == 1).collect();
+        assert_eq!(mid.len(), 2);
+        assert_eq!(mid[0].worker, mid[1].worker, "middle stage self-pairs");
+        // even P never self-pairs
+        for p in [2usize, 4, 6, 8] {
+            let chunks = Amdp.chunks(p);
+            for s in 0..p {
+                let copies: Vec<_> =
+                    chunks.iter().filter(|c| c.part == s).collect();
+                assert_eq!(copies.len(), 2);
+                assert_ne!(copies[0].worker, copies[1].worker, "P={p} stage {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn bubble_formula_conventions_agree() {
+        // total = ideal/(1+ideal) links the two conventions
+        for (p, m) in [(4usize, 8usize), (8, 16), (2, 4)] {
+            let ideal = one_f_one_b_bubble_fraction_ideal(p, m);
+            let total = gpipe_bubble_fraction(p, m);
+            assert!((total - ideal / (1.0 + ideal)).abs() < 1e-12);
+        }
+        assert!((interleaved_bubble_fraction_ideal(4, 8, 2) - 3.0 / 16.0).abs() < 1e-12);
+        assert!((gpipe_bubble_fraction(4, 8) - 3.0 / 11.0).abs() < 1e-12);
+        assert!((amdp_bubble_fraction(4, 8) - 2.0 / 18.0).abs() < 1e-12);
+        assert_eq!(amdp_bubble_fraction(2, 8), 0.0);
+    }
+
+    #[test]
+    fn interleaved_exact_bubble_covers_m_below_p() {
+        // M ≥ P: the stall term vanishes, both forms agree
+        let a = interleaved_bubble_fraction_exact(4, 8, 2);
+        let b = interleaved_bubble_fraction_total(4, 8, 2);
+        assert!((a - b).abs() < 1e-12);
+        // V = 1 degenerates to gpipe
+        let a = interleaved_bubble_fraction_exact(6, 4, 1);
+        assert!((a - gpipe_bubble_fraction(6, 4)).abs() < 1e-12);
+        // M < P: each of the V-1 level transitions stalls P-M slots in
+        // each phase; P=6 M=4 V=2 measures exactly 14/30
+        let e = interleaved_bubble_fraction_exact(6, 4, 2);
+        assert!((e - 14.0 / 30.0).abs() < 1e-12, "{e}");
+        let s = simulate(&Interleaved { v: 2 }, 6, 4, 10).unwrap();
+        assert!((s.bubble - e).abs() < 1e-12, "{} vs {e}", s.bubble);
+    }
+}

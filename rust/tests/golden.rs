@@ -12,7 +12,7 @@
 
 use std::path::PathBuf;
 
-use abrot::config::{Method, TrainCfg};
+use abrot::config::{Method, ScheduleKind, TrainCfg};
 use abrot::jsonio::{arr, num, obj, s, Json};
 use abrot::pipeline::train_sim;
 use abrot::runtime::Runtime;
@@ -43,12 +43,22 @@ fn fixture_dir() -> PathBuf {
 }
 
 fn run(method: Method, stages: usize, replicas: usize) -> Vec<f32> {
+    run_sched(method, ScheduleKind::OneFOneB, stages, replicas)
+}
+
+fn run_sched(
+    method: Method,
+    schedule: ScheduleKind,
+    stages: usize,
+    replicas: usize,
+) -> Vec<f32> {
     let rt = Runtime::open(
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(MODEL),
     )
     .unwrap();
     let cfg = TrainCfg {
         method,
+        schedule,
         stages,
         replicas,
         steps: STEPS,
@@ -57,8 +67,9 @@ fn run(method: Method, stages: usize, replicas: usize) -> Vec<f32> {
         log_every: 0,
         ..Default::default()
     };
-    let res = train_sim(&rt, &cfg)
-        .unwrap_or_else(|e| panic!("{} P={stages} R={replicas}: {e}", method.name()));
+    let res = train_sim(&rt, &cfg).unwrap_or_else(|e| {
+        panic!("{} {} P={stages} R={replicas}: {e}", method.name(), schedule.name())
+    });
     assert_eq!(res.losses.len(), STEPS as usize, "{}", method.name());
     res.losses
 }
@@ -123,6 +134,29 @@ fn golden_trajectories_every_method_p4() {
 fn golden_trajectories_every_method_p4_r2() {
     for m in all_methods() {
         check_or_bless(&format!("p4_r2_{}", m.name()), &run(m, 4, 2));
+    }
+}
+
+#[test]
+#[ignore = "slow golden run; nightly job executes with -- --ignored"]
+fn golden_trajectories_schedules_p4() {
+    // Schedule axis: the zero-staleness gpipe baseline and the
+    // reduced-staleness interleaved(v=2) trajectories for plain Adam
+    // (PipeDream is vanilla async Adam; under gpipe its delay profile
+    // is zero, i.e. synchronous Adam) and the paper's method. The
+    // schedule name goes in the fixture name; `:` stays out of
+    // filenames.
+    let scheds = [
+        (ScheduleKind::Gpipe, "gpipe"),
+        (ScheduleKind::Interleaved { v: 2 }, "interleaved2"),
+    ];
+    for (kind, tag) in scheds {
+        for m in [Method::PipeDream, Method::br_default()] {
+            check_or_bless(
+                &format!("p4_{tag}_{}", m.name()),
+                &run_sched(m, kind, 4, 1),
+            );
+        }
     }
 }
 

@@ -1,0 +1,392 @@
+//! Schedule-conformance harness: the pluggable pipeline schedules
+//! (gpipe / 1f1b / interleaved:V / amdp) against their own analytic
+//! models and against the real engine.
+//!
+//! Fast tests (prefix `schedule_`, pure computation on the virtual
+//! clock — no engine threads) run on every push via the CI fast-path
+//! job; the `#[ignore]`d tests spawn the threaded engine and run in
+//! the nightly lane:
+//!
+//! * (a) measured bubble vs the declared analytic `bubble_frac`,
+//! * (b) realized per-chunk gradient delay vs the declared profile,
+//!   via the engine's instrumented update counters,
+//! * (c) engine-vs-simulator trajectory equivalence at P = 4 for all
+//!   four schedules.
+
+use std::path::PathBuf;
+
+use abrot::config::{Method, ScheduleKind, StashMode, TrainCfg};
+use abrot::pipeline::engine::train_engine;
+use abrot::pipeline::schedule::{self, Action, Schedule};
+use abrot::pipeline::train_sim;
+use abrot::rngs::Rng;
+use abrot::runtime::Runtime;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn all_kinds() -> Vec<ScheduleKind> {
+    vec![
+        ScheduleKind::Gpipe,
+        ScheduleKind::OneFOneB,
+        ScheduleKind::Interleaved { v: 2 },
+        ScheduleKind::Amdp,
+    ]
+}
+
+/// The M the declared analytic `bubble_frac(p, m)` expects: per-update
+/// M for the synchronous schedules, the whole finite run's microbatch
+/// count for the asynchronous ones (their fill/drain amortizes over
+/// the run, not over one update).
+fn analytic_m(
+    kind: ScheduleKind,
+    sched: &dyn Schedule,
+    p: usize,
+    cfg_m: usize,
+    n_updates: u64,
+) -> usize {
+    match kind {
+        ScheduleKind::OneFOneB | ScheduleKind::Amdp => {
+            n_updates as usize * sched.micro_per_update(p, cfg_m)
+        }
+        _ => sched.effective_m(p, cfg_m),
+    }
+}
+
+#[test]
+fn schedule_bubble_model_matches_analytic_p4_m8() {
+    // Acceptance: at P=4, M=8 the measured (virtual-clock) bubble of
+    // each schedule's emitted action streams matches its analytic
+    // formula within 10% relative tolerance.
+    let (p, cfg_m, n_updates) = (4usize, 8usize, 12u64);
+    for kind in all_kinds() {
+        let s = schedule::build(kind);
+        let stats = schedule::simulate(s.as_ref(), p, cfg_m, n_updates)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        let m = analytic_m(kind, s.as_ref(), p, cfg_m, n_updates);
+        let want = s.bubble_frac(p, m);
+        let denom = want.abs().max(1e-9);
+        assert!(
+            (stats.bubble - want).abs() / denom <= 0.10,
+            "{kind:?}: measured bubble {} vs analytic {} (>10% off)",
+            stats.bubble,
+            want
+        );
+    }
+}
+
+#[test]
+fn schedule_bubble_model_tracks_analytic_across_grid() {
+    // The same conformance over a (P, M) grid; the gpipe/1f1b/
+    // interleaved measurements are exact (fill+drain of P-1 slots per
+    // wave), amdp is self-consistent by construction.
+    for kind in all_kinds() {
+        for p in [2usize, 4, 6] {
+            for cfg_m in [4usize, 8] {
+                let n_updates = 10u64;
+                let s = schedule::build(kind);
+                let stats = schedule::simulate(s.as_ref(), p, cfg_m, n_updates)
+                    .unwrap_or_else(|e| panic!("{kind:?} P={p} M={cfg_m}: {e}"));
+                let m = analytic_m(kind, s.as_ref(), p, cfg_m, n_updates);
+                let want = s.bubble_frac(p, m);
+                let denom = want.abs().max(1e-9);
+                assert!(
+                    (stats.bubble - want).abs() / denom <= 0.10,
+                    "{kind:?} P={p} M={cfg_m}: measured {} vs analytic {}",
+                    stats.bubble,
+                    want
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn schedule_realized_delays_match_declared_profiles() {
+    // (b) on the virtual clock: in steady state every chunk's realized
+    // gradient delay equals its declared delay; fill microbatches only
+    // clamp below it.
+    let n_updates = 12u64;
+    for kind in all_kinds() {
+        for p in [2usize, 4] {
+            let s = schedule::build(kind);
+            let stats = schedule::simulate(s.as_ref(), p, 8, n_updates).unwrap();
+            let chunks = s.chunks(p);
+            let n_streams = s.n_streams() as u64;
+            for (chunk, mb, delay) in &stats.delays {
+                let spec = chunks.iter().find(|c| c.id == *chunk).unwrap();
+                let local = mb / n_streams;
+                if local >= (p - 1) as u64 && local < n_updates - p as u64 {
+                    assert_eq!(
+                        *delay, spec.delay,
+                        "{kind:?} P={p} chunk {chunk} mb {mb}: steady delay"
+                    );
+                } else {
+                    assert!(
+                        *delay <= spec.delay,
+                        "{kind:?} P={p} chunk {chunk} mb {mb}: fill delay clamps"
+                    );
+                }
+            }
+            // the per-stage profile the simulator consumes agrees with
+            // the per-chunk declarations
+            let prof = s.delay_profile(p);
+            for c in &chunks {
+                if s.n_parts(p) == p {
+                    assert_eq!(c.delay, prof[c.part], "{kind:?} chunk {}", c.id);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn schedule_property_random_streams_well_formed() {
+    // Property-style sweep over random (P ≤ 8, M ≤ 16, schedule, V):
+    // the emitted action streams are well-formed — every microbatch
+    // gets exactly one fwd and one bwd per chunk of its stream, the
+    // bwd never precedes the fwd, every chunk updates exactly
+    // n_updates times, and the in-flight stash never exceeds the
+    // declared max (the executor validates the stash cap and the
+    // cross-chunk dependencies; the counts are re-checked directly).
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..24 {
+        let kind = match rng.below(4) {
+            0 => ScheduleKind::Gpipe,
+            1 => ScheduleKind::OneFOneB,
+            2 => ScheduleKind::Interleaved { v: 1 + rng.below(3) },
+            _ => ScheduleKind::Amdp,
+        };
+        let p = match kind {
+            // amdp pairs stage k with P-1-k across streams: even P only
+            ScheduleKind::Amdp => 2 * (1 + rng.below(4)),
+            _ => 1 + rng.below(8),
+        };
+        let cfg_m = 1 + rng.below(16);
+        let n_updates = 1 + rng.below(3) as u64;
+        let s = schedule::build(kind);
+        if s.n_parts(p) > 64 {
+            continue; // keep the executor cheap
+        }
+
+        // executor validation: dependencies, duplicates, stash cap
+        schedule::simulate(s.as_ref(), p, cfg_m, n_updates)
+            .unwrap_or_else(|e| panic!("case {case} {kind:?} P={p} M={cfg_m}: {e}"));
+
+        // direct count check, independent of the executor
+        let m = s.effective_m(p, cfg_m);
+        let mpu = s.micro_per_update(p, cfg_m) as u64;
+        let n_streams = s.n_streams() as u64;
+        let total_micro = n_updates * mpu;
+        let chunks = s.chunks(p);
+        for w in 0..p {
+            let acts = s.worker_actions(p, m, n_updates, w);
+            for spec in chunks.iter().filter(|c| c.worker == w) {
+                let mut fwd_pos = std::collections::HashMap::new();
+                let mut bwd_pos = std::collections::HashMap::new();
+                let mut updates = 0u64;
+                for (i, a) in acts.iter().enumerate() {
+                    match *a {
+                        Action::Fwd { mb, chunk } if chunk == spec.id => {
+                            assert!(
+                                fwd_pos.insert(mb, i).is_none(),
+                                "{kind:?} chunk {} mb {mb}: duplicate fwd",
+                                spec.id
+                            );
+                        }
+                        Action::Bwd { mb, chunk } if chunk == spec.id => {
+                            assert!(
+                                bwd_pos.insert(mb, i).is_none(),
+                                "{kind:?} chunk {} mb {mb}: duplicate bwd",
+                                spec.id
+                            );
+                        }
+                        Action::Update { chunk } if chunk == spec.id => updates += 1,
+                        _ => {}
+                    }
+                }
+                assert_eq!(updates, n_updates, "{kind:?} chunk {}", spec.id);
+                let expected: Vec<u64> = (0..total_micro)
+                    .filter(|mb| mb % n_streams == spec.stream as u64)
+                    .collect();
+                assert_eq!(fwd_pos.len(), expected.len(), "{kind:?} chunk {}", spec.id);
+                assert_eq!(bwd_pos.len(), expected.len(), "{kind:?} chunk {}", spec.id);
+                for mb in expected {
+                    let f = fwd_pos[&mb];
+                    let b = bwd_pos[&mb];
+                    assert!(
+                        f < b,
+                        "{kind:?} chunk {} mb {mb}: bwd precedes fwd",
+                        spec.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn schedule_kind_parses_and_roundtrips() {
+    for (txt, kind) in [
+        ("gpipe", ScheduleKind::Gpipe),
+        ("1f1b", ScheduleKind::OneFOneB),
+        ("pipedream", ScheduleKind::OneFOneB),
+        ("amdp", ScheduleKind::Amdp),
+        ("interleaved", ScheduleKind::Interleaved { v: 2 }),
+        ("interleaved:3", ScheduleKind::Interleaved { v: 3 }),
+    ] {
+        assert_eq!(ScheduleKind::parse(txt), Some(kind), "{txt}");
+    }
+    assert_eq!(ScheduleKind::parse("interleaved:0"), None);
+    assert_eq!(ScheduleKind::parse("zigzag"), None);
+    // name() → parse() roundtrip for every kind
+    for kind in all_kinds() {
+        assert_eq!(ScheduleKind::parse(&kind.name()), Some(kind));
+    }
+}
+
+#[test]
+fn schedule_predict_stash_error_names_the_schedule_flag() {
+    // StashMode::Predict is simulator-only; the engine's refusal must
+    // tell the user which schedules are affected (all of them) and
+    // point at --schedule.
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stash: StashMode::Predict,
+        stages: 2,
+        steps: 2,
+        ..Default::default()
+    };
+    let err = train_engine(root().join("micro"), &cfg).unwrap_err().to_string();
+    assert!(err.contains("Predict"), "{err}");
+    assert!(err.contains("--schedule"), "{err}");
+    for name in ["gpipe", "1f1b", "interleaved", "amdp"] {
+        assert!(err.contains(name), "error should enumerate {name}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine conformance (threaded runs — nightly lane)
+// ---------------------------------------------------------------------------
+
+/// Model preset per schedule at P = 4: interleaved v=2 needs P·V = 8
+/// blocks, the linear schedules partition pico4's 4 blocks 1:1.
+fn model_for(kind: ScheduleKind) -> &'static str {
+    match kind {
+        ScheduleKind::Interleaved { .. } => "pico8",
+        _ => "pico4",
+    }
+}
+
+fn engine_cfg(kind: ScheduleKind, steps: u32) -> TrainCfg {
+    TrainCfg {
+        method: Method::PipeDream,
+        schedule: kind,
+        stages: 4,
+        steps,
+        lr: 5e-3,
+        grad_clip: 1e9, // engine clips per-chunk, sim globally
+        seed: 2025,
+        ..Default::default()
+    }
+}
+
+#[test]
+#[ignore = "spawns engine threads; nightly lane"]
+fn schedule_engine_bubble_conformance_all_schedules() {
+    // (a) on the real engine: the run's deterministic schedule-model
+    // bubble must match the declared analytic value within 10%.
+    for kind in all_kinds() {
+        let cfg = engine_cfg(kind, 12);
+        let r = train_engine(root().join(model_for(kind)), &cfg)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert_eq!(r.schedule, kind.name(), "{kind:?}");
+        let denom = r.bubble_frac_analytic.abs().max(1e-9);
+        assert!(
+            (r.bubble_frac_model - r.bubble_frac_analytic).abs() / denom <= 0.10,
+            "{kind:?}: model bubble {} vs analytic {}",
+            r.bubble_frac_model,
+            r.bubble_frac_analytic
+        );
+    }
+}
+
+#[test]
+#[ignore = "spawns engine threads; nightly lane"]
+fn schedule_engine_realized_delays_match_declared() {
+    // (b) on the real engine: each chunk's instrumented update
+    // counters realize exactly the declared steady-state delay (steps
+    // comfortably past the P-deep fill, so the max realized delay is
+    // the steady value; it can never exceed the declaration).
+    for kind in all_kinds() {
+        let cfg = engine_cfg(kind, 12);
+        let r = train_engine(root().join(model_for(kind)), &cfg)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        let s = schedule::build(kind);
+        let chunks = s.chunks(4);
+        assert_eq!(r.realized_delays.len(), chunks.len(), "{kind:?}");
+        for (chunk, mbs, max_delay) in &r.realized_delays {
+            let spec = chunks.iter().find(|c| c.id == *chunk).unwrap();
+            assert!(*mbs > 0, "{kind:?} chunk {chunk}: no microbatches observed");
+            assert_eq!(
+                *max_delay, spec.delay,
+                "{kind:?} chunk {chunk}: realized max delay vs declared"
+            );
+        }
+    }
+}
+
+#[test]
+#[ignore = "spawns engine threads; nightly lane"]
+fn schedule_engine_matches_sim_trajectory_all_schedules_p4() {
+    // (c) engine vs simulator at P = 4 for every schedule: same seeds,
+    // same per-stage delay profile, same microbatch accumulation order
+    // => same loss trajectory (per-block vs monolithic executables
+    // leave a small numeric residue, same tolerance as the 1f1b
+    // equivalence tests).
+    for kind in all_kinds() {
+        let cfg = engine_cfg(kind, 8);
+        let model = model_for(kind);
+        let rt = Runtime::open(root().join(model)).unwrap();
+        let sim = train_sim(&rt, &cfg).unwrap();
+        let eng = train_engine(root().join(model), &cfg)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert_eq!(sim.losses.len(), eng.losses.len(), "{kind:?}");
+        assert!(!eng.diverged, "{kind:?}");
+        for (i, (a, b)) in sim.losses.iter().zip(&eng.losses).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 * a.abs().max(1.0),
+                "{kind:?} step {i}: sim {a} vs engine {b}"
+            );
+        }
+    }
+}
+
+#[test]
+#[ignore = "spawns engine threads; nightly lane"]
+fn schedule_engine_1f1b_reproduces_legacy_behaviour_bit_level() {
+    // The schedule-driven engine must be indistinguishable from the
+    // original hard-coded 1F1B loop: same losses, same eval labels,
+    // same per-stage counters. (The 20-step golden fixtures pin the
+    // trajectories across sessions; this pins the in-process run.)
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        schedule: ScheduleKind::OneFOneB,
+        stages: 4,
+        steps: 12,
+        lr: 5e-3,
+        eval_every: 3,
+        seed: 41,
+        ..Default::default()
+    };
+    let a = train_engine(root().join("pico4"), &cfg).unwrap();
+    let b = train_engine(root().join("pico4"), &cfg).unwrap();
+    // deterministic across runs
+    assert_eq!(a.losses, b.losses);
+    assert_eq!(a.losses.len(), 12);
+    let labels: Vec<u32> = a.val_losses.iter().map(|(t, _)| *t).collect();
+    assert_eq!(labels, vec![3, 6, 9, 12]);
+    assert!(a.stage_counters.iter().all(|c| c.updates == 12));
+    assert_eq!(a.stage_counters.len(), 4);
+}
