@@ -16,6 +16,13 @@
 //!     cargo run --release --example train_e2e -- 60 pico8 4 --replicas 2  # DP x PP
 //!     cargo run --release --example train_e2e -- 60 pico8 4 --schedule interleaved:2
 //!     cargo run --release --example train_e2e                    # quick
+//!
+//! Fault-tolerance knobs (engine phase only):
+//!
+//!     --checkpoint-every K   snapshot the engine run every K updates
+//!     --kill STEP:REPLICA[:WORKER]  deterministically kill that worker
+//!                            after update STEP; the driver re-shards the
+//!                            surviving replicas from the last checkpoint
 
 use abrot::config::{Method, ScheduleKind, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
@@ -33,6 +40,37 @@ fn main() -> anyhow::Result<()> {
             }
             None => {
                 eprintln!("--replicas expects a number; running with R=1");
+                args.remove(i);
+            }
+        }
+    }
+    // --checkpoint-every K (engine snapshots every K updates)
+    let mut checkpoint_every: u32 = 0;
+    if let Some(i) = args.iter().position(|a| a == "--checkpoint-every") {
+        match args.get(i + 1).and_then(|x| x.parse::<u32>().ok()) {
+            Some(k) => {
+                checkpoint_every = k;
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--checkpoint-every expects a number; checkpointing off");
+                args.remove(i);
+            }
+        }
+    }
+    // --kill STEP:REPLICA[:WORKER] (deterministic fault injection; repeatable)
+    let mut plan = abrot::checkpoint::FaultPlan::default();
+    while let Some(i) = args.iter().position(|a| a == "--kill") {
+        match args
+            .get(i + 1)
+            .and_then(|x| abrot::checkpoint::FaultPlan::parse_kill(x).ok())
+        {
+            Some(k) => {
+                plan.kills.push(k);
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--kill expects STEP:REPLICA[:WORKER]; ignoring");
                 args.remove(i);
             }
         }
@@ -76,15 +114,30 @@ fn main() -> anyhow::Result<()> {
     //    sampling validation losses through the pipeline.
     println!("[1/3] threaded {} engine (PipeDream)...", schedule.name());
     let eng_steps = steps.min(60);
-    let eng = coord.run_engine(&Experiment {
+    let eng_exp = Experiment {
         model: model.clone(),
         train: TrainCfg {
             method: Method::PipeDream,
             steps: eng_steps,
             eval_every: (eng_steps / 3).max(1),
+            checkpoint_every,
             ..base.clone()
         },
-    })?;
+    };
+    let eng = if checkpoint_every > 0 || !plan.is_empty() {
+        if checkpoint_every > 0 {
+            println!("  (checkpointing every {checkpoint_every} updates)");
+        }
+        for k in &plan.kills {
+            println!(
+                "  (will kill replica {} worker {} after update {})",
+                k.replica, k.worker, k.at_update
+            );
+        }
+        coord.run_engine_elastic(&eng_exp, &plan)?
+    } else {
+        coord.run_engine(&eng_exp)?
+    };
     println!(
         "  engine: {} microbatches, loss {:.3} -> {:.3}, {:.0} tokens/s, bubble {:.1}%",
         eng.losses.len(), eng.losses[0], eng.final_loss(),
@@ -92,6 +145,9 @@ fn main() -> anyhow::Result<()> {
     );
     for (t, v) in &eng.val_losses {
         println!("  engine val@{t}: {v:.4}");
+    }
+    if !plan.is_empty() {
+        println!("  engine survived the fault plan with {} replica(s)", eng.replicas);
     }
     println!();
 

@@ -1,0 +1,673 @@
+//! Crash-consistent checkpoint/resume with deterministic fault
+//! injection and elastic data-parallel replicas.
+//!
+//! A [`RunState`] snapshot captures everything a training loop needs to
+//! continue as if it had never stopped: per-stage parameters, the full
+//! optimizer state ([`crate::optim::OptState`] — Adam moments, rotation
+//! basis matrices and refresh counters, Muon/Scion momentum), the
+//! simulator's 1F1B stash rings, data-stream cursors per replica
+//! ([`crate::data::DataCursor`]), recorded loss trajectories and the
+//! step counter. Snapshots are JSON (the vendored serde subset, both
+//! directions) written with the classic crash-consistency idiom: write
+//! to `<path>.tmp`, then atomically `rename` into place, so a crash
+//! mid-write never leaves a torn snapshot under the live name.
+//!
+//! Two flavors share the format:
+//!
+//! * `"sim"` — written inside [`crate::pipeline::train_sim_observed`]
+//!   every `--checkpoint-every` steps. Resume is **bit-exact**: params,
+//!   optimizer tensors and stash rings restore exactly (f32 → JSON →
+//!   f32 round-trips through the shortest-f64 representation without
+//!   loss), data cursors regenerate the very next batch an
+//!   uninterrupted run would have drawn, and everything else the loop
+//!   reads is a pure function of (cfg, t). The `checkpoint_` tests pin
+//!   kill-at-step-k + resume against uninterrupted golden trajectories.
+//! * `"engine"` — written by [`run_engine_elastic`], which drives the
+//!   threaded engine in **segments** between checkpoint boundaries.
+//!   Each segment re-fills the pipeline from the snapshot weights, so
+//!   resumed trajectories of the asynchronous schedules are
+//!   drain-consistent (the snapshot is a fully-drained pipeline), not
+//!   bit-identical to an uninterrupted async run; the synchronous
+//!   schedules (gpipe / interleaved) drain at every update and stay
+//!   exact. AMDP is rejected: its two counter-flowing weight copies per
+//!   part make a single exported part state ambiguous.
+//!
+//! Fault injection ([`FaultPlan`]) is deterministic: worker w of
+//! replica r "dies" immediately after completing optimizer update k.
+//! The death propagates exactly like a real crash — the replica's
+//! peers wind down over their closed channels, and the other replicas
+//! observe the dropped all-reduce handles ([`crate::pipeline::dp`]) —
+//! after which the driver reloads the last checkpoint, drops the dead
+//! replica from the roster, re-partitions the data shards over the
+//! survivors (replica ids renumber, so `data::replica_stream` labels
+//! re-shard automatically and `dp::group` rebuilds the reduce tree one
+//! replica smaller) and re-runs the segment. Planned joins grow the
+//! roster at a segment boundary the same way, seeding the newcomers
+//! from the snapshot.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use serde::Serialize;
+
+use crate::config::{ScheduleKind, TrainCfg};
+use crate::data::{replica_stream, DataCursor, TRAIN_STREAM};
+use crate::metrics::RunResult;
+use crate::optim::OptState;
+use crate::pipeline::engine::{self, EngineCheckpoint, SegmentOpts};
+use crate::pipeline::schedule;
+use crate::tensor::Tensor;
+
+/// Bump on any incompatible change to the [`RunState`] layout; `load`
+/// rejects mismatches loudly instead of misreading old snapshots.
+pub const RUN_STATE_VERSION: u32 = 1;
+
+/// A shape-tagged tensor snapshot. f32 values survive the JSON round
+/// trip bit-exactly (widened to f64, printed shortest, narrowed back).
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct TensorState {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorState {
+    pub fn of(t: &Tensor) -> Self {
+        TensorState { shape: t.shape.clone(), data: t.data.clone() }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data.clone())
+    }
+
+    /// Copy into an existing tensor, validating the shape.
+    pub fn restore_into(&self, t: &mut Tensor) -> Result<()> {
+        if self.shape != t.shape {
+            bail!(
+                "checkpoint tensor shape {:?} does not match live {:?}",
+                self.shape,
+                t.shape
+            );
+        }
+        t.data.clone_from(&self.data);
+        Ok(())
+    }
+}
+
+/// The simulator's per-parameter stash rings, oldest version first —
+/// the in-flight weight versions of the modeled pipeline.
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct StashSnapshot {
+    pub rings: Vec<Vec<TensorState>>,
+}
+
+/// One versioned, self-describing snapshot of a training run.
+///
+/// The identity fields (`model` .. `steps_total`) are validated on
+/// resume ([`RunState::expect`]): silently resuming under a different
+/// configuration would produce a plausible-looking but meaningless
+/// trajectory. Caveats inherited from the JSON subset: integers ride
+/// f64, so `seed`/`step` above 2^53 are rejected at load time rather
+/// than rounded; that is far beyond any value this repo uses.
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct RunState {
+    pub version: u32,
+    /// `"sim"` (bit-exact resume) or `"engine"` (segment driver).
+    pub flavor: String,
+    pub model: String,
+    pub method: String,
+    pub schedule: String,
+    pub stages: usize,
+    /// Replica roster when the snapshot was taken (elastic runs shrink
+    /// and grow this between segments).
+    pub replicas: usize,
+    pub seed: u64,
+    pub steps_total: u32,
+    /// Optimizer updates completed; the run continues at `step + 1`.
+    pub step: u64,
+    pub params: Vec<TensorState>,
+    /// One entry for the sim (whole-model optimizer); one per model
+    /// part for the engine.
+    pub opts: Vec<OptState>,
+    /// Sim only; the engine snapshot is a drained pipeline.
+    pub stash: Option<StashSnapshot>,
+    pub train_cursors: Vec<DataCursor>,
+    pub val_cursor: Option<DataCursor>,
+    pub losses: Vec<f32>,
+    pub val_losses: Vec<(u32, f32)>,
+    /// Sim per-replica dispatch counters (informational).
+    pub dispatches: Vec<u64>,
+}
+
+impl RunState {
+    /// Validate the identity fields against the resuming run's
+    /// configuration. `replicas` is checked by the caller — the sim
+    /// requires an exact match, the elastic engine driver does not.
+    #[allow(clippy::too_many_arguments)]
+    pub fn expect(
+        &self,
+        flavor: &str,
+        model: &str,
+        method: &str,
+        schedule: &str,
+        stages: usize,
+        seed: u64,
+        steps: u32,
+    ) -> Result<()> {
+        fn chk<T: PartialEq + std::fmt::Display>(
+            what: &str,
+            saved: T,
+            run: T,
+        ) -> Result<()> {
+            if saved != run {
+                bail!("checkpoint {what} mismatch: snapshot has {saved}, this run has {run}");
+            }
+            Ok(())
+        }
+        if self.step > steps as u64 {
+            bail!(
+                "checkpoint is at step {} but this run only has {steps} steps",
+                self.step
+            );
+        }
+        chk("flavor", self.flavor.as_str(), flavor)?;
+        chk("model", self.model.as_str(), model)?;
+        chk("method", self.method.as_str(), method)?;
+        chk("schedule", self.schedule.as_str(), schedule)?;
+        chk("stages", self.stages, stages)?;
+        chk("seed", self.seed, seed)?;
+        // lr_at's warmup/decay shape depends on the total step budget,
+        // so resuming under a different budget silently changes the lr
+        // schedule — reject it.
+        chk("total steps", self.steps_total, steps)?;
+        Ok(())
+    }
+}
+
+/// Canonical snapshot filename for a step within a checkpoint dir.
+pub fn step_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step{step:06}.json"))
+}
+
+/// Newest `step*.json` snapshot in `dir` (by step number), if any —
+/// what "resume from the latest checkpoint" means after a crash.
+pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(None), // no dir yet: nothing to resume
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        let step: u64 = match name
+            .strip_prefix("step")
+            .and_then(|r| r.strip_suffix(".json"))
+            .and_then(|r| r.parse().ok())
+        {
+            Some(s) => s,
+            None => continue,
+        };
+        let newer = match &best {
+            Some((b, _)) => step > *b,
+            None => true,
+        };
+        if newer {
+            best = Some((step, path));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+/// Atomically write a snapshot: serialize, write `<path>.tmp`, fsync is
+/// elided (the rename gives crash consistency of the *name*: readers
+/// see the old snapshot or the new one, never a torn file).
+pub fn save(path: &Path, st: &RunState) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension("json.tmp");
+    fs::write(&tmp, st.to_json())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Load and version-check a snapshot.
+pub fn load(path: &Path) -> Result<RunState> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let st: RunState = serde::from_str(&text)
+        .map_err(|e| anyhow!("parsing checkpoint {}: {e}", path.display()))?;
+    if st.version != RUN_STATE_VERSION {
+        bail!(
+            "checkpoint {} has version {}, this binary reads {}",
+            path.display(),
+            st.version,
+            RUN_STATE_VERSION
+        );
+    }
+    Ok(st)
+}
+
+/// Worker w of replica `replica` dies immediately after completing
+/// optimizer update `at_update`. A kill landing exactly on a segment
+/// boundary is a clean departure (the replica leaves the roster with no
+/// work lost); one landing mid-segment crashes the run there and the
+/// driver re-runs the segment from the last checkpoint without it.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaKill {
+    pub at_update: u64,
+    pub replica: usize,
+    pub worker: usize,
+}
+
+/// `count` replicas join the roster at the `at_update` segment
+/// boundary, seeded from the snapshot (all replicas hold identical
+/// params/optimizer state under synchronous DP).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaJoin {
+    pub at_update: u64,
+    pub count: usize,
+}
+
+/// Worker w of replica r sleeps `millis` after completing update
+/// `at_update` — a timing perturbation that must not change any
+/// recorded value (the schedules are deterministic in message order,
+/// not arrival time), which the fault-injection tests assert.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerDelay {
+    pub at_update: u64,
+    pub replica: usize,
+    pub worker: usize,
+    pub millis: u64,
+}
+
+/// A deterministic fault schedule for [`run_engine_elastic`].
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub kills: Vec<ReplicaKill>,
+    pub joins: Vec<ReplicaJoin>,
+    pub delays: Vec<WorkerDelay>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.joins.is_empty() && self.delays.is_empty()
+    }
+
+    /// Parse a `--kill STEP:REPLICA[:WORKER]` CLI spec.
+    pub fn parse_kill(spec: &str) -> Result<ReplicaKill> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || anyhow!("--kill wants STEP:REPLICA[:WORKER], got {spec:?}");
+        if parts.len() < 2 || parts.len() > 3 {
+            return Err(bad());
+        }
+        Ok(ReplicaKill {
+            at_update: parts[0].parse().map_err(|_| bad())?,
+            replica: parts[1].parse().map_err(|_| bad())?,
+            worker: parts.get(2).map_or(Ok(0), |w| w.parse()).map_err(|_| bad())?,
+        })
+    }
+
+    /// Parse a `--join STEP[:COUNT]` CLI spec.
+    pub fn parse_join(spec: &str) -> Result<ReplicaJoin> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || anyhow!("--join wants STEP[:COUNT], got {spec:?}");
+        if parts.is_empty() || parts.len() > 2 {
+            return Err(bad());
+        }
+        Ok(ReplicaJoin {
+            at_update: parts[0].parse().map_err(|_| bad())?,
+            count: parts.get(1).map_or(Ok(1), |c| c.parse()).map_err(|_| bad())?,
+        })
+    }
+
+    /// Parse a `--delay STEP:REPLICA:WORKER:MILLIS` CLI spec.
+    pub fn parse_delay(spec: &str) -> Result<WorkerDelay> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || anyhow!("--delay wants STEP:REPLICA:WORKER:MILLIS, got {spec:?}");
+        if parts.len() != 4 {
+            return Err(bad());
+        }
+        Ok(WorkerDelay {
+            at_update: parts[0].parse().map_err(|_| bad())?,
+            replica: parts[1].parse().map_err(|_| bad())?,
+            worker: parts[2].parse().map_err(|_| bad())?,
+            millis: parts[3].parse().map_err(|_| bad())?,
+        })
+    }
+}
+
+/// Drive the threaded engine with checkpointing, resume, fault
+/// injection and an elastic replica roster.
+///
+/// With no checkpointing, no resume and an empty plan this is exactly
+/// [`engine::train_engine`]. Otherwise the run proceeds in segments
+/// between boundaries (checkpoint multiples, planned joins, the final
+/// step); each completed segment exports the drained weights and
+/// per-part optimizer states, which seed the next segment and the
+/// periodic [`RunState`] snapshots. A mid-segment replica death crashes
+/// the segment; the driver drops the dead replica, re-partitions the
+/// shards over the renumbered survivors and re-runs the segment from
+/// the last snapshot.
+pub fn run_engine_elastic(
+    artifacts_dir: &Path,
+    cfg: &TrainCfg,
+    plan: &FaultPlan,
+) -> Result<RunResult> {
+    if cfg.checkpoint_every == 0 && cfg.resume.is_none() && plan.is_empty() {
+        return engine::train_engine(artifacts_dir.to_path_buf(), cfg);
+    }
+    if cfg.schedule == ScheduleKind::Amdp {
+        bail!(
+            "engine checkpointing/fault injection does not support --schedule \
+             amdp: its two counter-flowing weight copies per part make a \
+             single exported part snapshot ambiguous"
+        );
+    }
+    let model = crate::runtime::Manifest::resolve(artifacts_dir)?.cfg.name.clone();
+    let sched = schedule::build(cfg.schedule);
+    let mpu = sched
+        .micro_per_update(cfg.stages, cfg.microbatches as usize)
+        .max(1) as u64;
+    let steps = cfg.steps as u64;
+    let every = cfg.checkpoint_every as u64;
+    let ckpt_dir: PathBuf = cfg
+        .checkpoint_dir
+        .clone()
+        .unwrap_or_else(|| "checkpoints".into())
+        .into();
+
+    let mut roster = cfg.dp_replicas();
+    let mut state: Option<EngineCheckpoint> = None;
+    let mut losses: Vec<f32> = Vec::new();
+    let mut val_losses: Vec<(u32, f32)> = Vec::new();
+    let mut start: u64 = 0;
+    if let Some(path) = &cfg.resume {
+        let st = load(Path::new(path))?;
+        st.expect(
+            "engine",
+            &model,
+            &cfg.method.name(),
+            &cfg.schedule.name(),
+            cfg.stages,
+            cfg.seed,
+            cfg.steps,
+        )?;
+        roster = st.replicas;
+        losses = st.losses.clone();
+        val_losses = st.val_losses.clone();
+        start = st.step;
+        state = Some(EngineCheckpoint {
+            step: st.step,
+            params: st.params.iter().map(|t| t.to_tensor()).collect(),
+            opts: st.opts.clone(),
+        });
+    }
+
+    let mut kills: Vec<ReplicaKill> =
+        plan.kills.iter().filter(|k| k.at_update > start).copied().collect();
+    let joins: Vec<ReplicaJoin> =
+        plan.joins.iter().filter(|j| j.at_update > start).copied().collect();
+
+    let mut last: Option<RunResult> = None;
+    let mut total_dispatches = 0u64;
+    let mut wall = 0.0f64;
+    while start < steps {
+        let mut end = steps;
+        if every > 0 {
+            end = end.min((start / every + 1) * every);
+        }
+        if let Some(j) =
+            joins.iter().map(|j| j.at_update).filter(|&u| u > start).min()
+        {
+            end = end.min(j);
+        }
+        let mut cfg_seg = cfg.clone();
+        cfg_seg.replicas = roster;
+        let opts = SegmentOpts {
+            start_update: start,
+            end_update: end,
+            export_state: every > 0 || end < steps,
+            kills: kills
+                .iter()
+                .filter(|k| k.at_update > start && k.at_update < end)
+                .map(|k| (k.replica, k.worker, k.at_update))
+                .collect(),
+            delays: plan
+                .delays
+                .iter()
+                .filter(|d| d.at_update > start && d.at_update <= end)
+                .map(|d| (d.replica, d.worker, d.at_update, d.millis))
+                .collect(),
+        };
+        let (res, export) =
+            engine::train_engine_segment(artifacts_dir.to_path_buf(), &cfg_seg, &opts, state.as_ref())?;
+        wall += res.wall_secs;
+        total_dispatches += res.dispatches;
+        if res.diverged {
+            let mut out = res;
+            losses.extend(out.losses.iter().copied());
+            val_losses.extend(out.val_losses.iter().copied());
+            out.losses = losses;
+            out.val_losses = val_losses;
+            out.dispatches = total_dispatches;
+            out.wall_secs = wall;
+            return Ok(out);
+        }
+        let done = res.losses.len() as u64 == end - start;
+        if !done {
+            // Mid-segment crash: only a planned kill explains it.
+            let dead: Vec<usize> = kills
+                .iter()
+                .filter(|k| k.at_update > start && k.at_update < end)
+                .map(|k| k.replica)
+                .collect();
+            if dead.is_empty() {
+                bail!(
+                    "engine segment [{start}, {end}) stopped after {} of {} \
+                     updates with no planned fault",
+                    res.losses.len(),
+                    end - start
+                );
+            }
+            kills.retain(|k| !(k.at_update > start && k.at_update < end));
+            let mut gone = dead.clone();
+            gone.sort_unstable();
+            gone.dedup();
+            if gone.len() >= roster {
+                bail!("fault plan kills every replica of the roster at step {start}");
+            }
+            roster -= gone.len();
+            println!(
+                "  [elastic] replica death mid-segment; re-sharding onto \
+                 R={roster} survivors and re-running from step {start}"
+            );
+            continue;
+        }
+        losses.extend(res.losses.iter().copied());
+        val_losses.extend(res.val_losses.iter().copied());
+        if opts.export_state {
+            state = Some(export.ok_or_else(|| {
+                anyhow!("completed engine segment returned no state export")
+            })?);
+        }
+        last = Some(res);
+        start = end;
+        // Boundary roster changes: clean departures and planned joins.
+        let leaving: Vec<usize> = kills
+            .iter()
+            .filter(|k| k.at_update == end)
+            .map(|k| k.replica)
+            .collect();
+        if !leaving.is_empty() {
+            let mut gone = leaving;
+            gone.sort_unstable();
+            gone.dedup();
+            if gone.len() >= roster {
+                bail!("fault plan kills every replica of the roster at step {end}");
+            }
+            roster -= gone.len();
+            kills.retain(|k| k.at_update != end);
+            println!("  [elastic] clean departure at step {end}; R={roster}");
+        }
+        let joining: usize =
+            joins.iter().filter(|j| j.at_update == end).map(|j| j.count).sum();
+        if joining > 0 {
+            roster += joining;
+            println!("  [elastic] {joining} replica(s) join at step {end}; R={roster}");
+        }
+        if every > 0 && start % every == 0 && start < steps {
+            let ck = state.as_ref().expect("export_state held a snapshot");
+            let st = RunState {
+                version: RUN_STATE_VERSION,
+                flavor: "engine".to_string(),
+                model: model.clone(),
+                method: cfg.method.name(),
+                schedule: cfg.schedule.name(),
+                stages: cfg.stages,
+                replicas: roster,
+                seed: cfg.seed,
+                steps_total: cfg.steps,
+                step: start,
+                params: ck.params.iter().map(TensorState::of).collect(),
+                opts: ck.opts.clone(),
+                stash: None,
+                train_cursors: (0..roster)
+                    .map(|r| DataCursor {
+                        stream0: replica_stream(TRAIN_STREAM, r),
+                        drawn: start * mpu,
+                    })
+                    .collect(),
+                val_cursor: None,
+                losses: losses.clone(),
+                val_losses: val_losses.clone(),
+                dispatches: Vec::new(),
+            };
+            let path = step_path(&ckpt_dir, start);
+            save(&path, &st)?;
+            if cfg.log_every > 0 {
+                println!("  [ckpt] step {start} -> {}", path.display());
+            }
+        }
+    }
+    let mut out = last.ok_or_else(|| anyhow!("elastic run executed no segment"))?;
+    out.losses = losses;
+    out.val_losses = val_losses;
+    out.replicas = roster;
+    out.dispatches = total_dispatches;
+    out.wall_secs = wall;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use serde::Serialize;
+
+    #[test]
+    fn fault_specs_parse_and_reject_garbage() {
+        let k = FaultPlan::parse_kill("10:1").unwrap();
+        assert_eq!((k.at_update, k.replica, k.worker), (10, 1, 0));
+        let k = FaultPlan::parse_kill("5:0:3").unwrap();
+        assert_eq!((k.at_update, k.replica, k.worker), (5, 0, 3));
+        assert!(FaultPlan::parse_kill("oops").is_err());
+        assert!(FaultPlan::parse_kill("1:2:3:4").is_err());
+        let j = FaultPlan::parse_join("10").unwrap();
+        assert_eq!((j.at_update, j.count), (10, 1));
+        let j = FaultPlan::parse_join("10:2").unwrap();
+        assert_eq!((j.at_update, j.count), (10, 2));
+        let d = FaultPlan::parse_delay("5:0:1:50").unwrap();
+        assert_eq!((d.at_update, d.replica, d.worker, d.millis), (5, 0, 1, 50));
+        assert!(FaultPlan::parse_delay("5:0:1").is_err());
+    }
+
+    fn tiny_state(step: u64) -> RunState {
+        RunState {
+            version: RUN_STATE_VERSION,
+            flavor: "sim".to_string(),
+            model: "pico4".to_string(),
+            method: "pipedream".to_string(),
+            schedule: "1f1b".to_string(),
+            stages: 4,
+            replicas: 1,
+            seed: 2024,
+            steps_total: 20,
+            step,
+            params: vec![TensorState { shape: vec![2], data: vec![0.5, -1.25] }],
+            opts: Vec::new(),
+            stash: Some(StashSnapshot {
+                rings: vec![vec![TensorState { shape: vec![2], data: vec![0.0, 0.0] }]],
+            }),
+            train_cursors: vec![DataCursor { stream0: 1, drawn: step }],
+            val_cursor: None,
+            losses: vec![3.5, 3.25],
+            val_losses: vec![(10, 3.125)],
+            dispatches: vec![step],
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_atomically() {
+        let dir = std::env::temp_dir().join("abrot_ckpt_test_roundtrip");
+        let path = step_path(&dir, 10);
+        save(&path, &tiny_state(10)).unwrap();
+        // the tmp file must not survive the rename
+        assert!(!path.with_extension("json.tmp").exists());
+        let st = load(&path).unwrap();
+        assert_eq!(st.step, 10);
+        assert_eq!(st.params[0].data, vec![0.5, -1.25]);
+        assert_eq!(st.losses, vec![3.5, 3.25]);
+        assert_eq!(st.val_losses, vec![(10, 3.125)]);
+        assert_eq!(st.train_cursors[0].drawn, 10);
+        save(&step_path(&dir, 15), &tiny_state(15)).unwrap();
+        let newest = latest(&dir).unwrap().unwrap();
+        assert_eq!(newest, step_path(&dir, 15));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn expect_rejects_mismatched_identity() {
+        let st = tiny_state(10);
+        st.expect("sim", "pico4", "pipedream", "1f1b", 4, 2024, 20).unwrap();
+        for (err_contains, res) in [
+            ("flavor", st.expect("engine", "pico4", "pipedream", "1f1b", 4, 2024, 20)),
+            ("model", st.expect("sim", "pico8", "pipedream", "1f1b", 4, 2024, 20)),
+            ("method", st.expect("sim", "pico4", "nesterov", "1f1b", 4, 2024, 20)),
+            ("schedule", st.expect("sim", "pico4", "pipedream", "gpipe", 4, 2024, 20)),
+            ("stages", st.expect("sim", "pico4", "pipedream", "1f1b", 2, 2024, 20)),
+            ("seed", st.expect("sim", "pico4", "pipedream", "1f1b", 4, 7, 20)),
+            ("total steps", st.expect("sim", "pico4", "pipedream", "1f1b", 4, 2024, 40)),
+            ("step", st.expect("sim", "pico4", "pipedream", "1f1b", 4, 2024, 5)),
+        ] {
+            let msg = res.unwrap_err().to_string();
+            assert!(msg.contains(err_contains), "{err_contains}: {msg}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_foreign_versions_and_torn_files() {
+        let dir = std::env::temp_dir().join("abrot_ckpt_test_versions");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut st = tiny_state(10);
+        st.version = RUN_STATE_VERSION + 1;
+        let path = dir.join("vnext.json");
+        std::fs::write(&path, st.to_json()).unwrap();
+        let msg = load(&path).unwrap_err().to_string();
+        assert!(msg.contains("version"), "{msg}");
+        // a torn write (truncated JSON) must fail to parse, loudly
+        let torn = dir.join("torn.json");
+        let full = tiny_state(10).to_json();
+        std::fs::write(&torn, &full[..full.len() / 2]).unwrap();
+        assert!(load(&torn).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -198,6 +198,16 @@ pub struct TrainCfg {
     pub seed: u64,
     pub eval_every: u32,
     pub log_every: u32,
+    /// Write a crash-consistent `checkpoint::RunState` snapshot every K
+    /// optimizer steps (0 = off). Snapshots land in `checkpoint_dir`.
+    pub checkpoint_every: u32,
+    /// Directory for periodic snapshots (default `checkpoints/`).
+    pub checkpoint_dir: Option<String>,
+    /// Resume from a snapshot file written by a previous run. The run
+    /// must be configured identically (model, method, schedule, P, R,
+    /// seed, total steps) — resume validates and then continues
+    /// bit-exactly where the snapshot left off.
+    pub resume: Option<String>,
 }
 
 impl Default for TrainCfg {
@@ -220,6 +230,9 @@ impl Default for TrainCfg {
             seed: 1234,
             eval_every: 0,
             log_every: 10,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: None,
         }
     }
 }

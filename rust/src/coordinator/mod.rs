@@ -56,6 +56,23 @@ impl Coordinator {
             &exp.train,
         )
     }
+
+    /// Run the engine under the elastic checkpoint driver: periodic
+    /// snapshots, resume, deterministic fault injection and replica
+    /// roster changes ([`crate::checkpoint::run_engine_elastic`]).
+    /// With checkpointing off, no resume and an empty plan this is
+    /// exactly [`run_engine`](Self::run_engine).
+    pub fn run_engine_elastic(
+        &mut self,
+        exp: &Experiment,
+        plan: &crate::checkpoint::FaultPlan,
+    ) -> Result<RunResult> {
+        crate::checkpoint::run_engine_elastic(
+            &self.artifacts_root.join(&exp.model),
+            &exp.train,
+            plan,
+        )
+    }
 }
 
 #[cfg(test)]

@@ -88,24 +88,51 @@ impl Corpus {
     }
 }
 
+/// Batches generated per refill chunk; each chunk draws its tokens
+/// from one stream label, so the pair (chunk index, offset) is an
+/// exact, resumable position in the stream.
+const BATCHES_PER_CHUNK: u64 = 64;
+
+/// Resumable position of a [`BatchIter`]: the base stream label plus
+/// the number of batches drawn so far. [`BatchIter::seek`] restores an
+/// identical iterator from it without replaying the consumed prefix.
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct DataCursor {
+    pub stream0: u64,
+    pub drawn: u64,
+}
+
 /// Batch iterator producing (tokens, targets) with targets shifted by 1.
 pub struct BatchIter {
     corpus: Corpus,
     batch: usize,
     seq: usize,
+    /// Base stream label this iterator was created with.
+    stream0: u64,
+    /// Stream label the *next* refill chunk will draw from.
     stream: u64,
+    /// Batches drawn since creation (or the last `seek`).
+    drawn: u64,
     cursor: usize,
     buf: Vec<i32>,
 }
 
 impl BatchIter {
     pub fn new(corpus: Corpus, batch: usize, seq: usize, stream: u64) -> Self {
-        BatchIter { corpus, batch, seq, stream, cursor: 0, buf: Vec::new() }
+        BatchIter {
+            corpus,
+            batch,
+            seq,
+            stream0: stream,
+            stream,
+            drawn: 0,
+            cursor: 0,
+            buf: Vec::new(),
+        }
     }
 
     fn refill(&mut self) {
-        // 64 batches worth of tokens per refill chunk.
-        let need = self.batch * (self.seq + 1) * 64;
+        let need = self.batch * (self.seq + 1) * BATCHES_PER_CHUNK as usize;
         self.buf = self.corpus.tokens(need, self.stream);
         self.stream = self.stream.wrapping_add(0x1000);
         self.cursor = 0;
@@ -126,7 +153,44 @@ impl BatchIter {
             tgts.extend_from_slice(&self.buf[s + 1..s + 1 + self.seq]);
         }
         self.cursor += need;
+        self.drawn += 1;
         (toks, tgts)
+    }
+
+    /// Current resumable position.
+    pub fn cursor(&self) -> DataCursor {
+        DataCursor { stream0: self.stream0, drawn: self.drawn }
+    }
+
+    /// Jump to the position after `drawn` batches, regenerating only
+    /// the refill chunk the position lands in — the iterator then
+    /// yields exactly the batches an uninterrupted one would.
+    pub fn seek(&mut self, drawn: u64) {
+        let chunk = drawn / BATCHES_PER_CHUNK;
+        let within = (drawn % BATCHES_PER_CHUNK) as usize;
+        self.stream = self.stream0.wrapping_add(0x1000u64.wrapping_mul(chunk));
+        if within == 0 {
+            // chunk boundary: the next draw triggers the refill itself
+            self.buf = Vec::new();
+            self.cursor = 0;
+        } else {
+            self.refill();
+            self.cursor = within * self.batch * (self.seq + 1);
+        }
+        self.drawn = drawn;
+    }
+
+    /// Restore from a saved cursor; errors if the cursor belongs to a
+    /// different stream (shard relabeling across a resume is a bug).
+    pub fn restore(&mut self, c: &DataCursor) -> anyhow::Result<()> {
+        if c.stream0 != self.stream0 {
+            anyhow::bail!(
+                "data cursor stream {} does not match iterator stream {}",
+                c.stream0, self.stream0
+            );
+        }
+        self.seek(c.drawn);
+        Ok(())
     }
 }
 
@@ -216,6 +280,34 @@ mod tests {
         }
         // far apart even after many refills: 2^32 >> 0x1000 * refills
         assert!(replica_stream(TRAIN_STREAM, 1) - TRAIN_STREAM > 0x1000 * 1_000);
+    }
+
+    #[test]
+    fn seek_matches_uninterrupted_iteration() {
+        // across chunk boundaries (64 batches/chunk) and within them
+        let c = Corpus::new(64, 9);
+        for n in [0u64, 1, 5, 63, 64, 65, 130] {
+            let mut full = BatchIter::new(c.clone(), 2, 8, 5);
+            for _ in 0..n {
+                full.next_batch();
+            }
+            let mut jumped = BatchIter::new(c.clone(), 2, 8, 5);
+            jumped.seek(n);
+            assert_eq!(jumped.cursor().drawn, n);
+            for _ in 0..70 {
+                assert_eq!(full.next_batch(), jumped.next_batch());
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_foreign_stream() {
+        let c = Corpus::new(64, 9);
+        let mut it = BatchIter::new(c, 2, 8, 5);
+        let bad = DataCursor { stream0: 6, drawn: 3 };
+        assert!(it.restore(&bad).is_err());
+        let good = DataCursor { stream0: 5, drawn: 3 };
+        assert!(it.restore(&good).is_ok());
     }
 
     #[test]

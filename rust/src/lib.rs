@@ -35,6 +35,7 @@
 
 pub mod analysis;
 pub mod bench;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -130,8 +130,33 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
         stash,
         schedule,
         microbatches: args.parse_num("microbatches", 0u32),
+        checkpoint_every: args.parse_num("checkpoint-every", 0u32),
+        checkpoint_dir: args.get("checkpoint-dir").map(|s| s.to_string()),
+        resume: args.get("resume").map(|s| s.to_string()),
         ..Default::default()
     })
+}
+
+/// Build a fault plan from the engine subcommand's `--kill`, `--join`
+/// and `--delay` flags; each takes a comma-separated list of specs.
+fn fault_plan_from(args: &Args) -> Result<abrot::checkpoint::FaultPlan> {
+    let mut plan = abrot::checkpoint::FaultPlan::default();
+    if let Some(specs) = args.get("kill") {
+        for s in specs.split(',') {
+            plan.kills.push(abrot::checkpoint::FaultPlan::parse_kill(s)?);
+        }
+    }
+    if let Some(specs) = args.get("join") {
+        for s in specs.split(',') {
+            plan.joins.push(abrot::checkpoint::FaultPlan::parse_join(s)?);
+        }
+    }
+    if let Some(specs) = args.get("delay") {
+        for s in specs.split(',') {
+            plan.delays.push(abrot::checkpoint::FaultPlan::parse_delay(s)?);
+        }
+    }
+    Ok(plan)
 }
 
 fn main() -> Result<()> {
@@ -183,9 +208,10 @@ fn main() -> Result<()> {
         "engine" => {
             let cfg_name = args.get_or("config", "micro");
             let tcfg = train_cfg_from(&args)?;
+            let plan = fault_plan_from(&args)?;
             let mut coord = Coordinator::new(&root);
-            let res =
-                coord.run_engine(&Experiment { model: cfg_name, train: tcfg })?;
+            let res = coord
+                .run_engine_elastic(&Experiment { model: cfg_name, train: tcfg }, &plan)?;
             println!(
                 "engine: {} P={} R={} final {:.4}  tokens/s {:.0}  bubble {:.1}% \
                  (model {:.1}%, analytic {:.1}%)  wall {:.1}s",
@@ -270,6 +296,11 @@ fn main() -> Result<()> {
             println!("  e.g. abrot train --config tiny32 --method br --stages 32 --steps 300");
             println!("       abrot engine --config micro --stages 2 --replicas 2 --steps 40");
             println!("       abrot repro --fig fig5 --steps 200 --out results");
+            println!("checkpointing: --checkpoint-every K [--checkpoint-dir D] writes");
+            println!("  atomic step snapshots; --resume PATH continues one bit-exactly");
+            println!("  (sim) or drain-consistently (engine). engine fault injection:");
+            println!("  --kill STEP:REPLICA[:WORKER] --join STEP[:COUNT]");
+            println!("  --delay STEP:REPLICA:WORKER:MILLIS (comma-separated lists)");
             println!("backends: native reference kernels by default; with an");
             println!("  artifacts/<config>/ dir and a `pjrt`-feature build, the");
             println!("  HLO/PJRT path is used instead (see README).");

@@ -12,7 +12,7 @@ pub mod muon;
 pub mod reference;
 pub mod rotation;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::{pipedream_lr_scale, Method, TrainCfg};
 use crate::model::StagePartition;
@@ -45,12 +45,88 @@ impl StepCtx<'_> {
     }
 }
 
+/// One named tensor of optimizer state (shape + flattened f32 data).
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct OptSlice {
+    pub key: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl OptSlice {
+    pub fn of(key: impl Into<String>, t: &Tensor) -> OptSlice {
+        OptSlice { key: key.into(), shape: t.shape.clone(), data: t.data.clone() }
+    }
+
+    /// Copy this slice's data into a live tensor of the same shape.
+    pub fn restore(&self, t: &mut Tensor) -> Result<()> {
+        if self.shape != t.shape {
+            bail!(
+                "state slice {:?}: snapshot shape {:?} does not match live {:?}",
+                self.key, self.shape, t.shape
+            );
+        }
+        t.data.clone_from(&self.data);
+        Ok(())
+    }
+}
+
+/// Portable snapshot of one optimizer's full internal state
+/// ([`Optimizer::state_export`] / [`Optimizer::state_import`]).
+///
+/// Keys are flat strings namespaced by the owning optimizer (e.g.
+/// `m:3` for ElementAdam moment of param 3, `cls:attn_qk:u` for a
+/// rotation-class basis, `fb:v:0` for a matrix method's fallback Adam).
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct OptState {
+    /// `Optimizer::name()` of the exporter; import validates it.
+    pub kind: String,
+    pub slices: Vec<OptSlice>,
+    /// Scalar counters (e.g. `eigen_dispatches`) carried alongside.
+    pub counters: Vec<(String, u64)>,
+}
+
+impl OptState {
+    pub fn slice(&self, key: &str) -> Result<&OptSlice> {
+        self.slices
+            .iter()
+            .find(|s| s.key == key)
+            .ok_or_else(|| anyhow!("missing optimizer state slice {key:?}"))
+    }
+
+    pub fn counter(&self, key: &str) -> Result<u64> {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| anyhow!("missing optimizer state counter {key:?}"))
+    }
+
+    /// Total f32 elements captured (cross-check against `state_elems`).
+    pub fn elems(&self) -> usize {
+        self.slices.iter().map(|s| s.data.len()).sum()
+    }
+}
+
 pub trait Optimizer {
     fn step(&mut self, ctx: &StepCtx, params: &mut [Tensor], grads: &[Tensor])
         -> Result<()>;
     fn name(&self) -> &'static str;
     /// Optimizer-state memory in f32 elements (Table 2 accounting).
     fn state_elems(&self) -> usize;
+
+    /// Export the full internal state as a portable snapshot
+    /// (checkpoint/resume). Defaults to a loud error so new optimizers
+    /// cannot silently checkpoint nothing.
+    fn state_export(&self) -> Result<OptState> {
+        Err(anyhow!("{}: optimizer state export not implemented", self.name()))
+    }
+
+    /// Restore internal state from a snapshot made by `state_export`
+    /// on an identically-configured optimizer.
+    fn state_import(&mut self, _state: &OptState) -> Result<()> {
+        Err(anyhow!("{}: optimizer state import not implemented", self.name()))
+    }
 }
 
 /// Manifest indices of the parameters *not* covered by any rotated
@@ -157,6 +233,29 @@ impl ElementAdam {
     pub fn state_elems(&self) -> usize {
         self.m.iter().map(|t| t.len()).sum::<usize>() * 2
     }
+
+    /// Append the moment tensors as `{prefix}m:{i}` / `{prefix}v:{i}`
+    /// slices (the namespacing used by every method's state export).
+    pub fn export_slices(&self, prefix: &str, out: &mut Vec<OptSlice>) {
+        for (i, t) in self.m.iter().enumerate() {
+            out.push(OptSlice::of(format!("{prefix}m:{i}"), t));
+        }
+        for (i, t) in self.v.iter().enumerate() {
+            out.push(OptSlice::of(format!("{prefix}v:{i}"), t));
+        }
+    }
+
+    /// Restore from slices written by [`Self::export_slices`] with the
+    /// same prefix.
+    pub fn import_slices(&mut self, prefix: &str, st: &OptState) -> Result<()> {
+        for (i, t) in self.m.iter_mut().enumerate() {
+            st.slice(&format!("{prefix}m:{i}"))?.restore(t)?;
+        }
+        for (i, t) in self.v.iter_mut().enumerate() {
+            st.slice(&format!("{prefix}v:{i}"))?.restore(t)?;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -203,6 +302,26 @@ impl Optimizer for Adam {
 
     fn state_elems(&self) -> usize {
         self.inner.state_elems()
+    }
+
+    fn state_export(&self) -> Result<OptState> {
+        let mut slices = Vec::new();
+        self.inner.export_slices("", &mut slices);
+        Ok(OptState {
+            kind: self.name().to_string(),
+            slices,
+            counters: Vec::new(),
+        })
+    }
+
+    fn state_import(&mut self, state: &OptState) -> Result<()> {
+        if state.kind != self.name() {
+            bail!(
+                "optimizer state kind {:?} does not match live {:?}",
+                state.kind, self.name()
+            );
+        }
+        self.inner.import_slices("", state)
     }
 }
 
@@ -266,6 +385,31 @@ impl Optimizer for DelayComp {
 
     fn state_elems(&self) -> usize {
         self.inner.state_elems()
+    }
+
+    // The Taylor reference (the stale weights the grads came from) is
+    // not optimizer-owned state — it arrives per step via
+    // `StepCtx::stale` from the stash ring, which checkpoints
+    // separately — so DelayComp's exportable state is exactly its
+    // inner Adam moments.
+    fn state_export(&self) -> Result<OptState> {
+        let mut slices = Vec::new();
+        self.inner.export_slices("", &mut slices);
+        Ok(OptState {
+            kind: self.name().to_string(),
+            slices,
+            counters: Vec::new(),
+        })
+    }
+
+    fn state_import(&mut self, state: &OptState) -> Result<()> {
+        if state.kind != self.name() {
+            bail!(
+                "optimizer state kind {:?} does not match live {:?}",
+                state.kind, self.name()
+            );
+        }
+        self.inner.import_slices("", state)
     }
 }
 

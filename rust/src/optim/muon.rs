@@ -8,13 +8,13 @@
 //! element-wise Adam (Muon's own convention) or sign-descent LMO
 //! (Scion's ℓ∞ ball for non-matrix params).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::model::{class_maps, set_slot_matrix, slot_matrix, ClassMap};
 use crate::runtime::{tensor_to_value, Runtime};
 use crate::tensor::{stack, unstack, Tensor};
 
-use super::{ElementAdam, Optimizer, StepCtx};
+use super::{ElementAdam, OptSlice, OptState, Optimizer, StepCtx};
 
 const MUON_BETA: f32 = 0.95;
 /// Keller Jordan's lr scale: 0.2·sqrt(max(m,n)) relative to the Adam lr.
@@ -143,5 +143,37 @@ impl Optimizer for Muon {
     fn state_elems(&self) -> usize {
         let mats: usize = self.classes.iter().map(|c| c.mom.len()).sum();
         mats + self.fallback.state_elems()
+    }
+
+    // Scion's fallback only uses the first-moment buffer (sign
+    // descent); exporting/restoring the untouched v tensors as well is
+    // harmless and keeps one code path for both modes.
+    fn state_export(&self) -> Result<OptState> {
+        let mut slices = Vec::new();
+        for cs in &self.classes {
+            slices
+                .push(OptSlice::of(format!("cls:{}:mom", cs.map.class.name), &cs.mom));
+        }
+        self.fallback.export_slices("fb:", &mut slices);
+        Ok(OptState {
+            kind: self.name().to_string(),
+            slices,
+            counters: Vec::new(),
+        })
+    }
+
+    fn state_import(&mut self, state: &OptState) -> Result<()> {
+        if state.kind != self.name() {
+            bail!(
+                "optimizer state kind {:?} does not match live {:?}",
+                state.kind, self.name()
+            );
+        }
+        for cs in self.classes.iter_mut() {
+            state
+                .slice(&format!("cls:{}:mom", cs.map.class.name))?
+                .restore(&mut cs.mom)?;
+        }
+        self.fallback.import_slices("fb:", state)
     }
 }

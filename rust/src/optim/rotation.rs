@@ -14,14 +14,14 @@
 //! the per-slot `mask` scalar: the eigen executables always advance the
 //! Fisher EMAs but refresh U/V only where mask = 1.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{stage_aware_freq, FreqAlloc, Geometry, Source, TrainCfg};
 use crate::model::{class_maps, set_slot_matrix, slot_matrix, ClassMap};
 use crate::runtime::{tensor_to_value, Runtime};
 use crate::tensor::{stack, unstack, Tensor};
 
-use super::{ElementAdam, Optimizer, StepCtx};
+use super::{ElementAdam, OptSlice, OptState, Optimizer, StepCtx};
 
 /// Per-class batched optimizer state.
 struct ClassState {
@@ -341,6 +341,58 @@ impl Optimizer for BasisRotation {
             }
         }
         total
+    }
+
+    // Everything live is exported: per-class moments, bases and Fisher
+    // EMAs, the fallback Adam moments, and the dispatch counter. The
+    // per-slot refresh periods (`freqs`) are *not* state — `new()`
+    // rebuilds them deterministically from the config.
+    fn state_export(&self) -> Result<OptState> {
+        let mut slices = Vec::new();
+        for cs in &self.classes {
+            let cls = &cs.map.class.name;
+            slices.push(OptSlice::of(format!("cls:{cls}:m"), &cs.m));
+            slices.push(OptSlice::of(format!("cls:{cls}:vt"), &cs.vt));
+            slices.push(OptSlice::of(format!("cls:{cls}:u"), &cs.u));
+            slices.push(OptSlice::of(format!("cls:{cls}:v"), &cs.v));
+            if let Some(l) = &cs.l {
+                slices.push(OptSlice::of(format!("cls:{cls}:l"), l));
+            }
+            if let Some(r) = &cs.r {
+                slices.push(OptSlice::of(format!("cls:{cls}:r"), r));
+            }
+        }
+        self.fallback.export_slices("fb:", &mut slices);
+        Ok(OptState {
+            kind: self.name().to_string(),
+            slices,
+            counters: vec![("eigen_dispatches".to_string(), self.eigen_dispatches)],
+        })
+    }
+
+    fn state_import(&mut self, state: &OptState) -> Result<()> {
+        if state.kind != self.name() {
+            bail!(
+                "optimizer state kind {:?} does not match live {:?}",
+                state.kind, self.name()
+            );
+        }
+        for cs in self.classes.iter_mut() {
+            let cls = cs.map.class.name.clone();
+            state.slice(&format!("cls:{cls}:m"))?.restore(&mut cs.m)?;
+            state.slice(&format!("cls:{cls}:vt"))?.restore(&mut cs.vt)?;
+            state.slice(&format!("cls:{cls}:u"))?.restore(&mut cs.u)?;
+            state.slice(&format!("cls:{cls}:v"))?.restore(&mut cs.v)?;
+            if let Some(l) = cs.l.as_mut() {
+                state.slice(&format!("cls:{cls}:l"))?.restore(l)?;
+            }
+            if let Some(r) = cs.r.as_mut() {
+                state.slice(&format!("cls:{cls}:r"))?.restore(r)?;
+            }
+        }
+        self.fallback.import_slices("fb:", state)?;
+        self.eigen_dispatches = state.counter("eigen_dispatches")?;
+        Ok(())
     }
 }
 

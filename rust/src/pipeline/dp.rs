@@ -27,9 +27,13 @@ use crate::tensor::Tensor;
 
 /// Average gradient sets in replica order: `out[i]` is the left fold
 /// `sets[0][i] + sets[1][i] + ...`, scaled by `1/R`. All sets must have
-/// the same parameter shapes.
-pub fn average(sets: &[Vec<Tensor>]) -> Vec<Tensor> {
-    assert!(!sets.is_empty(), "dp::average needs at least one gradient set");
+/// the same parameter shapes. An empty fold is a loud error rather
+/// than a panic: with elastic replicas a zero-member group is a
+/// reachable (mis)configuration, not a programming bug.
+pub fn average(sets: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    if sets.is_empty() {
+        return Err(anyhow!("dp::average needs at least one gradient set"));
+    }
     let inv = 1.0 / sets.len() as f32;
     let mut out = sets[0].clone();
     for set in &sets[1..] {
@@ -45,17 +49,21 @@ pub fn average(sets: &[Vec<Tensor>]) -> Vec<Tensor> {
             *a *= inv;
         }
     }
-    out
+    Ok(out)
 }
 
 /// Mean of per-replica losses, folded in replica order (the loss-side
-/// twin of [`average`], so recorded trajectories are deterministic too).
-pub fn mean_loss(losses: &[f32]) -> f32 {
+/// twin of [`average`], so recorded trajectories are deterministic
+/// too). Errors on an empty fold for the same reason `average` does.
+pub fn mean_loss(losses: &[f32]) -> Result<f32> {
+    if losses.is_empty() {
+        return Err(anyhow!("dp::mean_loss needs at least one loss"));
+    }
     let mut acc = 0.0f32;
     for &l in losses {
         acc += l;
     }
-    acc / losses.len().max(1) as f32
+    Ok(acc / losses.len() as f32)
 }
 
 /// Scatter restricted per-stage tensor lists back into full-manifest
@@ -158,7 +166,7 @@ impl Reducer {
                 gathered.sort_by_key(|(id, _)| *id);
                 let sets: Vec<Vec<Tensor>> =
                     gathered.into_iter().map(|(_, g)| g).collect();
-                average(&sets)
+                average(&sets)?
             }
         };
         for tx in &self.down_tx {
@@ -183,9 +191,15 @@ mod tests {
             vec![t(&[3.0, 4.0])],
             vec![t(&[5.0, 6.0])],
         ];
-        let avg = average(&sets);
+        let avg = average(&sets).unwrap();
         assert_eq!(avg[0].data, vec![3.0, 4.0]);
-        assert!((mean_loss(&[1.0, 2.0, 6.0]) - 3.0).abs() < 1e-7);
+        assert!((mean_loss(&[1.0, 2.0, 6.0]).unwrap() - 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn empty_folds_error_instead_of_panicking() {
+        assert!(average(&[]).is_err());
+        assert!(mean_loss(&[]).is_err());
     }
 
     #[test]
@@ -199,7 +213,7 @@ mod tests {
                     ]
                 })
                 .collect();
-            let want = average(&sets);
+            let want = average(&sets).unwrap();
             let handles = group(r);
             let mut threads = Vec::new();
             for (h, set) in handles.into_iter().zip(sets.clone()) {

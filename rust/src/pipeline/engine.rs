@@ -84,7 +84,7 @@ use crate::config::{Method, ScheduleKind, StashMode, TrainCfg};
 use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
 use crate::metrics::{RunResult, StageCounter};
 use crate::model::{init_params, StagePartition};
-use crate::optim::{self, Optimizer, StepCtx};
+use crate::optim::{self, OptState, Optimizer, StepCtx};
 use crate::runtime::{
     tensor_to_value, tokens_to_value, value_scalar_f32, value_to_tensor, Runtime,
     Value,
@@ -132,6 +132,39 @@ pub struct WorkerReport {
     pub compute_s: f64,
     pub idle_s: f64,
     pub chunks: Vec<ChunkReport>,
+}
+
+/// Drained weights and per-part optimizer states exported at the end
+/// of a completed engine segment (replica 0's copies; all replicas are
+/// in parameter lockstep under synchronous DP, so one copy suffices).
+pub struct EngineCheckpoint {
+    /// Global optimizer updates completed when the export was taken.
+    pub step: u64,
+    /// Full-manifest-order parameters, merged from the per-part chunks.
+    pub params: Vec<Tensor>,
+    /// One optimizer state per model part.
+    pub opts: Vec<OptState>,
+}
+
+/// One segment of a checkpointed/elastic engine run, driven by
+/// [`crate::checkpoint::run_engine_elastic`]. The segment performs the
+/// global optimizer updates `start_update+1 ..= end_update` with feeds,
+/// learning rate, eval cadence and update counters all offset to the
+/// global position, so consecutive segments chain into one run.
+#[derive(Clone, Debug, Default)]
+pub struct SegmentOpts {
+    /// Optimizer updates already completed before this segment.
+    pub start_update: u64,
+    /// Global update index the segment runs to; 0 means `cfg.steps`.
+    pub end_update: u64,
+    /// Export an [`EngineCheckpoint`] when the segment completes.
+    pub export_state: bool,
+    /// Planned faults `(replica, worker, at_update)`: the worker dies
+    /// immediately after completing that global update.
+    pub kills: Vec<(usize, usize, u64)>,
+    /// Timing perturbations `(replica, worker, at_update, millis)`:
+    /// the worker sleeps after completing that global update.
+    pub delays: Vec<(usize, usize, u64, u64)>,
 }
 
 /// Everything one chunk owns: restricted runtime, parameters, real
@@ -541,7 +574,16 @@ struct Worker {
     pending_evals: VecDeque<(usize, u32, Vec<f32>)>,
     sent_stop: bool,
     idle_s: f64,
+    /// Planned fault: die right after completing this global update.
+    kill_at: Option<u64>,
+    /// Planned perturbations: (global update, sleep millis).
+    inject_delays: Vec<(u64, u64)>,
+    /// Export chunk params + optimizer state after a completed stream.
+    export: bool,
 }
+
+/// One chunk's exported state: (part id, params, optimizer state).
+type ChunkExport = (usize, Vec<Tensor>, OptState);
 
 impl Worker {
     fn is_head(&self, spec: &ChunkSpec) -> bool {
@@ -771,6 +813,21 @@ impl Worker {
         {
             self.source_eval(li)?;
         }
+        // Deterministic fault injection, keyed on the global update
+        // counter. A delay is a pure timing perturbation (the schedules
+        // are deterministic in message order, not arrival time); a kill
+        // makes this worker wind down exactly like a crashed thread —
+        // its replica's peers stop over the closed channels and the
+        // other replicas observe the dropped all-reduce handle.
+        let u = self.chunks[li].updates;
+        for &(at, ms) in &self.inject_delays {
+            if at == u {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+        if self.kill_at == Some(u) {
+            return Ok(false);
+        }
         Ok(true)
     }
 
@@ -815,13 +872,26 @@ impl Worker {
         Ok(true)
     }
 
-    fn run(mut self, actions: Vec<Action>) -> Result<WorkerReport> {
+    fn run(mut self, actions: Vec<Action>) -> Result<(WorkerReport, Vec<ChunkExport>)> {
         let ran = self.run_inner(&actions);
+        let mut exports: Vec<ChunkExport> = Vec::new();
         match ran {
             Ok(true) => {
                 if let Err(e) = self.drain_evals() {
                     self.stop_all();
                     return Err(e);
+                }
+                // Export only after a fully-completed stream: a
+                // wound-down segment is recovered from the previous
+                // checkpoint, never from partial state.
+                if self.export {
+                    for c in &self.chunks {
+                        exports.push((
+                            c.spec.part,
+                            c.params.clone(),
+                            c.opt.state_export()?,
+                        ));
+                    }
                 }
             }
             Ok(false) => self.stop_all(),
@@ -834,13 +904,16 @@ impl Worker {
         for c in &self.chunks {
             chunks.push(c.report(self.is_head(&c.spec)));
         }
-        Ok(WorkerReport {
-            replica: self.replica,
-            worker: self.w,
-            compute_s: self.chunks.iter().map(|c| c.compute_s).sum(),
-            idle_s: self.idle_s,
-            chunks,
-        })
+        Ok((
+            WorkerReport {
+                replica: self.replica,
+                worker: self.w,
+                compute_s: self.chunks.iter().map(|c| c.compute_s).sum(),
+                idle_s: self.idle_s,
+                chunks,
+            },
+            exports,
+        ))
     }
 }
 
@@ -858,6 +931,23 @@ impl Worker {
 /// per-chunk realized gradient delays land in `realized_delays`.
 /// `StashMode::Predict` is simulator-only and errors loudly.
 pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult> {
+    train_engine_segment(artifacts_dir, cfg, &SegmentOpts::default(), None)
+        .map(|(r, _)| r)
+}
+
+/// One segment of a (possibly checkpointed/elastic) engine run. With
+/// default [`SegmentOpts`] and no seed this is the whole run and
+/// behaves exactly like the historical `train_engine`. A non-trivial
+/// segment starts from the `seed` checkpoint's weights and optimizer
+/// states, offsets every global counter (feeds, lr, eval cadence,
+/// update indices) to `start_update`, injects the planned faults, and
+/// on completion exports the drained state for the next segment.
+pub fn train_engine_segment(
+    artifacts_dir: PathBuf,
+    cfg: &TrainCfg,
+    seg: &SegmentOpts,
+    seed: Option<&EngineCheckpoint>,
+) -> Result<(RunResult, Option<EngineCheckpoint>)> {
     let man0 = crate::runtime::Manifest::resolve(&artifacts_dir)?;
     if cfg.stash == StashMode::Predict {
         bail!(
@@ -886,7 +976,23 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
         );
     }
     let r_count = cfg.dp_replicas();
-    let n_updates = cfg.steps as u64;
+    let start_u = seg.start_update;
+    let end_u = if seg.end_update == 0 { cfg.steps as u64 } else { seg.end_update };
+    if end_u > cfg.steps as u64 || start_u >= end_u {
+        bail!(
+            "engine segment [{start_u}, {end_u}) does not fit a {}-step run",
+            cfg.steps
+        );
+    }
+    let segmented = seg.export_state || seed.is_some() || start_u > 0;
+    if segmented && cfg.schedule == ScheduleKind::Amdp {
+        bail!(
+            "engine checkpointing does not support --schedule amdp: its two \
+             counter-flowing weight copies per part make a single exported \
+             part snapshot ambiguous"
+        );
+    }
+    let n_updates = end_u - start_u;
     let m_eff = sched.effective_m(p, cfg.microbatches as usize);
     let mpu = sched.micro_per_update(p, cfg.microbatches as usize).max(1) as u64;
     let mcfg = man0.cfg.clone();
@@ -914,6 +1020,27 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
 
     let part0 = StagePartition::new(&man0, n_parts);
     let init = init_params(&man0, cfg.seed);
+    if let Some(ck) = seed {
+        if ck.step != start_u {
+            bail!(
+                "seed checkpoint is at step {} but the segment starts at {start_u}",
+                ck.step
+            );
+        }
+        if ck.params.len() != init.len() {
+            bail!(
+                "seed checkpoint holds {} params, model has {}",
+                ck.params.len(),
+                init.len()
+            );
+        }
+        if ck.opts.len() != n_parts {
+            bail!(
+                "seed checkpoint holds {} optimizer states for {n_parts} parts",
+                ck.opts.len()
+            );
+        }
+    }
 
     // one all-reduce group per part over R × copies handles; copies
     // sorted by stream so the fold order is down-before-up per replica
@@ -949,8 +1076,14 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
             let mut setup = Vec::with_capacity(my_specs.len());
             for spec in &my_specs {
                 let keep = part0.params_of_stage(spec.part);
-                let init_c: Vec<Tensor> =
-                    keep.iter().map(|&i| init[i].clone()).collect();
+                // Seeded segments start from the checkpoint weights and
+                // optimizer state; a fresh run from the seeded init.
+                let init_c: Vec<Tensor> = match seed {
+                    Some(ck) => keep.iter().map(|&i| ck.params[i].clone()).collect(),
+                    None => keep.iter().map(|&i| init[i].clone()).collect(),
+                };
+                let opt_state: Option<OptState> =
+                    seed.map(|ck| ck.opts[spec.part].clone());
                 let copy_idx = copies_of_part[spec.part]
                     .iter()
                     .position(|&id| id == spec.id)
@@ -959,23 +1092,33 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
                 let dp_h =
                     dp_handles[spec.part][rep * copies + copy_idx].take().unwrap();
                 let corpus = Corpus::new(mcfg.vocab, cfg.seed ^ 0xDA7A);
-                let feed = BatchIter::new(
+                let mut feed = BatchIter::new(
                     corpus.clone(),
                     mcfg.batch,
                     mcfg.seq,
                     replica_stream(TRAIN_STREAM, rep),
                 );
+                if start_u > 0 {
+                    // global microbatches this replica consumed before
+                    // the segment; local mb m maps to global offset + m
+                    feed.seek(start_u * mpu);
+                }
                 let needs_val = cfg.eval_every > 0
                     && rep == 0
                     && spec.stream == 0
                     && (spec.seq == 0 || spec.seq + 1 == depth[&spec.stream]);
                 let val_iter = if needs_val {
-                    Some(BatchIter::new(
+                    let mut it = BatchIter::new(
                         corpus,
                         mcfg.batch,
                         mcfg.seq,
                         super::VAL_STREAM,
-                    ))
+                    );
+                    if start_u > 0 {
+                        // one validation batch per eval already sourced
+                        it.seek(start_u / cfg.eval_every as u64);
+                    }
+                    Some(it)
                 } else {
                     None
                 };
@@ -986,11 +1129,20 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
                     && spec.stream == 0
                     && spec.seq > 0
                 {
-                    n_updates / cfg.eval_every as u64
+                    end_u / cfg.eval_every as u64 - start_u / cfg.eval_every as u64
                 } else {
                     0
                 };
-                setup.push((*spec, keep, init_c, dp_h, feed, val_iter, evals_expected));
+                setup.push((
+                    *spec,
+                    keep,
+                    init_c,
+                    opt_state,
+                    dp_h,
+                    feed,
+                    val_iter,
+                    evals_expected,
+                ));
             }
             let dir = artifacts_dir.clone();
             let cfg_w = cfg.clone();
@@ -999,14 +1151,34 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
             let specs_by_id = specs_by_id.clone();
             let by_pos = by_pos.clone();
             let depth = depth.clone();
+            let kill_at = seg
+                .kills
+                .iter()
+                .find(|k| k.0 == rep && k.1 == w)
+                .map(|k| k.2);
+            let inject_delays: Vec<(u64, u64)> = seg
+                .delays
+                .iter()
+                .filter(|d| d.0 == rep && d.1 == w)
+                .map(|d| (d.2, d.3))
+                .collect();
+            let export = seg.export_state && rep == 0;
             handles.push((
                 rep,
                 w,
-                std::thread::spawn(move || -> Result<WorkerReport> {
+                std::thread::spawn(move || -> Result<(WorkerReport, Vec<ChunkExport>)> {
                     let mut states = Vec::with_capacity(setup.len());
                     let mut index = HashMap::new();
-                    for (spec, keep, init_c, dp_h, feed, val_iter, evals_expected) in
-                        setup
+                    for (
+                        spec,
+                        keep,
+                        init_c,
+                        opt_state,
+                        dp_h,
+                        feed,
+                        val_iter,
+                        evals_expected,
+                    ) in setup
                     {
                         let rt = Runtime::open_restricted(&dir, &keep)?;
                         let mut part_c = StagePartition::new(&rt.manifest, n_parts);
@@ -1016,7 +1188,10 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
                         for d in part_c.delay_of.iter_mut() {
                             *d = spec.delay;
                         }
-                        let opt = optim::build(&cfg_w.method, &rt, &cfg_w);
+                        let mut opt = optim::build(&cfg_w.method, &rt, &cfg_w);
+                        if let Some(st) = &opt_state {
+                            opt.state_import(st)?;
+                        }
                         let use_stash = cfg_w.stash != StashMode::NoStash;
                         let stash_weights = use_stash
                             || matches!(cfg_w.method, Method::DelayComp { .. });
@@ -1040,7 +1215,7 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
                             last_snapshot: Vec::new(),
                             use_stash,
                             stash_weights,
-                            updates: 0,
+                            updates: start_u,
                             compute_s: 0.0,
                             losses: Vec::new(),
                             val_losses: Vec::new(),
@@ -1071,6 +1246,9 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
                         pending_evals: Default::default(),
                         sent_stop: false,
                         idle_s: 0.0,
+                        kill_at,
+                        inject_delays,
+                        export,
                     };
                     worker.run(actions)
                 }),
@@ -1086,10 +1264,12 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
     let mut total_idle = 0.0;
     let mut rep_records: Vec<Vec<(u64, f32)>> = vec![Vec::new(); r_count];
     let mut delay_rows: Vec<(usize, u64, u32)> = Vec::new();
+    let mut chunk_exports: Vec<ChunkExport> = Vec::new();
     for (rep, w, h) in handles {
-        let wr = h
+        let (wr, ex) = h
             .join()
             .map_err(|_| anyhow!("replica {rep} worker {w} panicked"))??;
+        chunk_exports.extend(ex);
         total_compute += wr.compute_s;
         total_idle += wr.idle_s;
         for cr in &wr.chunks {
@@ -1138,23 +1318,23 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
             if group.len() != mpu as usize {
                 break;
             }
-            per_step.push(if mpu == 1 { group[0] } else { dp::mean_loss(&group) });
+            per_step.push(if mpu == 1 { group[0] } else { dp::mean_loss(&group)? });
             i += mpu as usize;
             step += 1;
         }
         rep_losses.push(per_step);
     }
     let n_steps = rep_losses.iter().map(|l| l.len()).min().unwrap_or(0);
-    result.losses = (0..n_steps)
-        .map(|i| {
-            if r_count == 1 {
-                rep_losses[0][i]
-            } else {
-                let at_step: Vec<f32> = rep_losses.iter().map(|l| l[i]).collect();
-                dp::mean_loss(&at_step)
-            }
-        })
-        .collect();
+    let mut step_losses = Vec::with_capacity(n_steps);
+    for i in 0..n_steps {
+        step_losses.push(if r_count == 1 {
+            rep_losses[0][i]
+        } else {
+            let at_step: Vec<f32> = rep_losses.iter().map(|l| l[i]).collect();
+            dp::mean_loss(&at_step)?
+        });
+    }
+    result.losses = step_losses;
     result.wall_secs = t0.elapsed().as_secs_f64();
     result.bubble_frac = if total_compute + total_idle > 0.0 {
         total_idle / (total_compute + total_idle)
@@ -1177,7 +1357,32 @@ pub fn train_engine(artifacts_dir: PathBuf, cfg: &TrainCfg) -> Result<RunResult>
         * mcfg.batch as f64
         * mcfg.seq as f64)
         / result.wall_secs;
-    Ok(result)
+
+    // Assemble the segment export: replica 0's chunks cover every part
+    // exactly once (AMDP, the only multi-copy schedule, was rejected
+    // above), so the merged params are the full drained model.
+    let completed = result.losses.len() as u64 == n_updates && !result.diverged;
+    let export = if seg.export_state && completed {
+        let mut opts_by_part: Vec<Option<OptState>> =
+            (0..n_parts).map(|_| None).collect();
+        let mut parts: Vec<(Vec<usize>, Vec<Tensor>)> = Vec::new();
+        for (part, params, ost) in chunk_exports {
+            parts.push((part0.params_of_stage(part), params));
+            opts_by_part[part] = Some(ost);
+        }
+        let params = dp::merge_restricted(init.len(), &parts)?;
+        let opts = opts_by_part
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| {
+                o.ok_or_else(|| anyhow!("no optimizer state exported for part {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Some(EngineCheckpoint { step: end_u, params, opts })
+    } else {
+        None
+    };
+    Ok((result, export))
 }
 
 /// Analytic schedule model (Fig. 1): bubble fraction of a synchronous

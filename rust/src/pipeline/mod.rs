@@ -81,6 +81,36 @@ impl StashRing {
     pub fn stashed_elems(&self) -> usize {
         self.rings.iter().map(|r| r.iter().map(|t| t.len()).sum::<usize>()).sum()
     }
+
+    /// Snapshot every ring, oldest version first (checkpointing).
+    pub fn export(&self) -> Vec<Vec<Tensor>> {
+        self.rings.iter().map(|r| r.iter().cloned().collect()).collect()
+    }
+
+    /// Replace the ring contents from an [`export`](Self::export)
+    /// snapshot of an identically-partitioned run. Each ring must hold
+    /// between 1 and delay+1 versions (the invariant `push` maintains).
+    pub fn restore(&mut self, rings: Vec<Vec<Tensor>>) -> Result<()> {
+        if rings.len() != self.rings.len() {
+            bail!(
+                "stash snapshot has {} rings, this run has {}",
+                rings.len(),
+                self.rings.len()
+            );
+        }
+        for ((ring, snap), &d) in self.rings.iter_mut().zip(rings).zip(&self.delays) {
+            if snap.is_empty() || snap.len() > d as usize + 1 {
+                bail!(
+                    "stash ring snapshot holds {} versions, valid range for \
+                     delay {d} is 1..={}",
+                    snap.len(),
+                    d + 1
+                );
+            }
+            *ring = snap.into_iter().collect();
+        }
+        Ok(())
+    }
 }
 
 /// PipeMare-style weight predictor: ŵ = w + τ·velocity, with velocity an
@@ -191,9 +221,92 @@ pub fn train_sim_observed(
     result.replicas = replicas;
     result.param_count = man.total_params();
     let mut rep_dispatches = vec![0u64; replicas];
+
+    // Crash-consistent resume: restore params, optimizer state, stash
+    // rings, data cursors and recorded losses from a snapshot, then
+    // continue the loop from the saved step. Everything the loop reads
+    // is either restored here or a pure function of (cfg, t), so the
+    // continued trajectory is bit-identical to an uninterrupted run.
+    if cfg.checkpoint_every > 0 && cfg.stash == StashMode::Predict {
+        bail!(
+            "checkpointing does not cover StashMode::Predict: the PipeMare \
+             predictor's velocity EMA is live state the snapshot omits; \
+             use --stash stash/nostash with --checkpoint-every"
+        );
+    }
+    let mut start_step: u64 = 0;
+    if let Some(path) = &cfg.resume {
+        if cfg.stash == StashMode::Predict {
+            bail!(
+                "cannot resume a StashMode::Predict run: the predictor's \
+                 velocity EMA is not checkpointed"
+            );
+        }
+        let st = crate::checkpoint::load(std::path::Path::new(path))?;
+        st.expect(
+            "sim",
+            &mcfg.name,
+            &cfg.method.name(),
+            &cfg.schedule.name(),
+            cfg.stages,
+            cfg.seed,
+            cfg.steps,
+        )?;
+        if st.replicas != replicas {
+            bail!(
+                "checkpoint replicas mismatch: saved {}, run wants {replicas} \
+                 (the simulator is not elastic; use the engine driver)",
+                st.replicas
+            );
+        }
+        if st.params.len() != params.len() {
+            bail!(
+                "checkpoint holds {} params, model has {}",
+                st.params.len(),
+                params.len()
+            );
+        }
+        for (p, ts) in params.iter_mut().zip(&st.params) {
+            ts.restore_into(p)?;
+        }
+        let snap = st.stash.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("sim checkpoint is missing its stash-ring snapshot")
+        })?;
+        stash.restore(
+            snap.rings
+                .iter()
+                .map(|ring| ring.iter().map(|ts| ts.to_tensor()).collect())
+                .collect(),
+        )?;
+        if st.opts.len() != 1 {
+            bail!(
+                "sim checkpoint holds {} optimizer states, expected 1",
+                st.opts.len()
+            );
+        }
+        opt.state_import(&st.opts[0])?;
+        if st.train_cursors.len() != replicas {
+            bail!(
+                "checkpoint holds {} data cursors for {replicas} replicas",
+                st.train_cursors.len()
+            );
+        }
+        for (it, c) in train_iters.iter_mut().zip(&st.train_cursors) {
+            it.restore(c)?;
+        }
+        if let Some(vc) = &st.val_cursor {
+            val_iter.restore(vc)?;
+        }
+        result.losses = st.losses.clone();
+        result.val_losses = st.val_losses.clone();
+        if st.dispatches.len() == replicas {
+            rep_dispatches.copy_from_slice(&st.dispatches);
+        }
+        start_step = st.step;
+    }
     let t0 = std::time::Instant::now();
 
-    for t in 1..=cfg.steps as u64 {
+    for t in (start_step + 1)..=cfg.steps as u64 {
         // One gradient per replica, all against the same stale views.
         // Schedules with micro_per_update > 1 draw that many
         // consecutive microbatches per replica and average — the
@@ -258,14 +371,14 @@ pub fn train_sim_observed(
                         .collect::<Result<_>>()?,
                 );
             }
-            rep_losses.push(dp::mean_loss(&draw_losses));
+            rep_losses.push(dp::mean_loss(&draw_losses)?);
             grad_sets.push(if draws == 1 {
                 draw_sets.pop().unwrap()
             } else {
-                dp::average(&draw_sets)
+                dp::average(&draw_sets)?
             });
         }
-        let loss = dp::mean_loss(&rep_losses);
+        let loss = dp::mean_loss(&rep_losses)?;
         if rep_losses.iter().any(|l| !l.is_finite()) {
             result.diverged = true;
             break;
@@ -274,7 +387,7 @@ pub fn train_sim_observed(
         let mut grads = if replicas == 1 {
             grad_sets.pop().unwrap()
         } else {
-            dp::average(&grad_sets)
+            dp::average(&grad_sets)?
         };
         clip_global_norm(&mut grads, cfg.grad_clip);
 
@@ -313,6 +426,48 @@ pub fn train_sim_observed(
             ins.push(tokens_to_value(&vg, mcfg.batch, mcfg.seq)?);
             let vouts = rt.exec("eval_loss", &ins)?;
             result.val_losses.push((t as u32, value_scalar_f32(&vouts[0])?));
+        }
+
+        // Periodic crash-consistent snapshot (atomic write-rename).
+        // Captured *after* the update, stash push and eval, so the
+        // snapshot is exactly the loop state entering step t+1.
+        if cfg.checkpoint_every > 0 && (t as u32) % cfg.checkpoint_every == 0 {
+            let st = crate::checkpoint::RunState {
+                version: crate::checkpoint::RUN_STATE_VERSION,
+                flavor: "sim".to_string(),
+                model: mcfg.name.clone(),
+                method: cfg.method.name(),
+                schedule: cfg.schedule.name(),
+                stages: cfg.stages,
+                replicas,
+                seed: cfg.seed,
+                steps_total: cfg.steps,
+                step: t,
+                params: params.iter().map(crate::checkpoint::TensorState::of).collect(),
+                opts: vec![opt.state_export()?],
+                stash: Some(crate::checkpoint::StashSnapshot {
+                    rings: stash
+                        .export()
+                        .iter()
+                        .map(|ring| {
+                            ring.iter()
+                                .map(crate::checkpoint::TensorState::of)
+                                .collect()
+                        })
+                        .collect(),
+                }),
+                train_cursors: train_iters.iter().map(|it| it.cursor()).collect(),
+                val_cursor: Some(val_iter.cursor()),
+                losses: result.losses.clone(),
+                val_losses: result.val_losses.clone(),
+                dispatches: rep_dispatches.clone(),
+            };
+            let dir = cfg.checkpoint_dir.clone().unwrap_or_else(|| "checkpoints".into());
+            let path = crate::checkpoint::step_path(std::path::Path::new(&dir), t);
+            crate::checkpoint::save(&path, &st)?;
+            if cfg.log_every > 0 {
+                println!("  [ckpt] step {t} -> {}", path.display());
+            }
         }
     }
     result.wall_secs = t0.elapsed().as_secs_f64();

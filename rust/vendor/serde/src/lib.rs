@@ -11,12 +11,25 @@
 //! The single trait method is [`Serialize::to_json`]; the derive
 //! serializes every named field in declaration order. Non-finite
 //! floats serialize as `null` (standard JSON has no NaN/inf).
+//!
+//! The inverse direction mirrors `serde_json`'s shape at subset scale:
+//! [`Value`] is a parsed JSON tree, [`Deserialize::from_json`] revives
+//! a value from it, and [`from_str`] composes the two. Pinned policy
+//! for the lossy corners:
+//!   - non-finite floats serialized as `null` revive as `NaN` on bare
+//!     `f32`/`f64` fields, while `Option<f32>` revives `null` as `None`
+//!     (so `Some(NaN)` cannot round-trip — it collapses to `None`);
+//!   - integers ride through an `f64`, so magnitudes above 2^53 lose
+//!     precision and fail the range check instead of rounding silently;
+//!   - a field missing from the object deserializes as `null` (errors
+//!     for ints/bool/string/containers, `None` for `Option`, `NaN` for
+//!     bare floats).
 
 // The derive emits `impl serde::Serialize for ...`; make that path
 // resolve inside this crate too (serde proper does the same).
 extern crate self as serde;
 
-pub use serde_derive::Serialize;
+pub use serde_derive::{Deserialize, Serialize};
 
 /// A value serializable to JSON text (subset of serde's `Serialize`).
 pub trait Serialize {
@@ -126,6 +139,330 @@ impl<A: Serialize, B: Serialize, C: Serialize> Serialize for (A, B, C) {
     }
 }
 
+/// A parsed JSON value (subset mirror of `serde_json::Value`).
+///
+/// Objects preserve key order as a `Vec` of pairs — the subset never
+/// needs hashed lookup, and ordered entries keep `to_json ∘ parse`
+/// reproducible for the round-trip tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Parse JSON text into a [`Value`] tree.
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let mut p = Parser { chars: text.chars().collect(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.chars.len() {
+            return Err(format!("trailing characters at offset {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Look up `key` in an object value (first match; `None` otherwise).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(entries) => {
+                entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Short type tag for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+}
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+impl Parser {
+    fn skip_ws(&mut self) {
+        while let Some(c) = self.chars.get(self.pos) {
+            if !c.is_ascii_whitespace() {
+                break;
+            }
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        for w in word.chars() {
+            if self.bump() != Some(w) {
+                return Err(format!("bad literal near offset {}", self.pos));
+            }
+        }
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some('n') => self.lit("null", Value::Null),
+            Some('t') => self.lit("true", Value::Bool(true)),
+            Some('f') => self.lit("false", Value::Bool(false)),
+            Some('"') => Ok(Value::Str(self.string()?)),
+            Some('[') => {
+                self.bump();
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(']') {
+                    self.bump();
+                    return Ok(Value::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(',') => {}
+                        Some(']') => break,
+                        _ => {
+                            return Err(format!(
+                                "expected ',' or ']' at offset {}",
+                                self.pos
+                            ));
+                        }
+                    }
+                }
+                Ok(Value::Arr(items))
+            }
+            Some('{') => {
+                self.bump();
+                let mut entries = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some('}') {
+                    self.bump();
+                    return Ok(Value::Obj(entries));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    if self.bump() != Some(':') {
+                        return Err(format!(
+                            "expected ':' at offset {}",
+                            self.pos
+                        ));
+                    }
+                    entries.push((key, self.value()?));
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(',') => {}
+                        Some('}') => break,
+                        _ => {
+                            return Err(format!(
+                                "expected ',' or '}}' at offset {}",
+                                self.pos
+                            ));
+                        }
+                    }
+                }
+                Ok(Value::Obj(entries))
+            }
+            Some(c) if c == '-' || c.is_ascii_digit() => {
+                let start = self.pos;
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_digit()
+                        || matches!(c, '-' | '+' | '.' | 'e' | 'E')
+                    {
+                        self.pos += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let text: String = self.chars[start..self.pos].iter().collect();
+                text.parse::<f64>()
+                    .map(Value::Num)
+                    .map_err(|_| format!("bad number {text:?}"))
+            }
+            Some(c) => {
+                Err(format!("unexpected character {c:?} at offset {}", self.pos))
+            }
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if self.bump() != Some('"') {
+            return Err(format!("expected '\"' at offset {}", self.pos));
+        }
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                Some('"') => return Ok(out),
+                Some('\\') => match self.bump() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('/') => out.push('/'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('r') => out.push('\r'),
+                    Some('b') => out.push('\u{0008}'),
+                    Some('f') => out.push('\u{000c}'),
+                    Some('u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self
+                                .bump()
+                                .ok_or_else(|| "truncated \\u escape".to_string())?;
+                            let d = c
+                                .to_digit(16)
+                                .ok_or_else(|| format!("bad hex digit {c:?}"))?;
+                            code = code * 16 + d;
+                        }
+                        out.push(char::from_u32(code).ok_or_else(|| {
+                            format!("bad \\u{code:04x} escape")
+                        })?);
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some(c) => out.push(c),
+                None => return Err("unterminated string".to_string()),
+            }
+        }
+    }
+}
+
+/// A value revivable from a parsed JSON [`Value`] (subset of serde's
+/// `Deserialize`).
+pub trait Deserialize: Sized {
+    /// Deserialize `Self` from a parsed JSON value.
+    fn from_json(v: &Value) -> Result<Self, String>;
+}
+
+/// Parse JSON text and deserialize a `T` from it.
+pub fn from_str<T: Deserialize>(s: &str) -> Result<T, String> {
+    T::from_json(&Value::parse(s)?)
+}
+
+impl Deserialize for f64 {
+    fn from_json(v: &Value) -> Result<f64, String> {
+        match v {
+            Value::Num(x) => Ok(*x),
+            // non-finite floats serialize as `null`; bare floats revive
+            // them as NaN (the sign/inf distinction is not preserved)
+            Value::Null => Ok(f64::NAN),
+            _ => Err(format!("expected number, got {}", v.kind())),
+        }
+    }
+}
+
+impl Deserialize for f32 {
+    fn from_json(v: &Value) -> Result<f32, String> {
+        // f32 -> f64 widening is exact and the serializer emits the
+        // shortest round-trip f64 text, so this narrowing is bit-exact.
+        f64::from_json(v).map(|x| x as f32)
+    }
+}
+
+macro_rules! impl_de_int {
+    ($($t:ty),*) => {$(
+        impl Deserialize for $t {
+            fn from_json(v: &Value) -> Result<$t, String> {
+                match v {
+                    Value::Num(x) if x.fract() == 0.0 => {
+                        <$t>::try_from(*x as i128)
+                            .map_err(|_| format!("number {x} out of range"))
+                    }
+                    _ => Err(format!("expected integer, got {}", v.kind())),
+                }
+            }
+        }
+    )*};
+}
+
+impl_de_int!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize);
+
+impl Deserialize for bool {
+    fn from_json(v: &Value) -> Result<bool, String> {
+        match v {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(format!("expected bool, got {}", v.kind())),
+        }
+    }
+}
+
+impl Deserialize for String {
+    fn from_json(v: &Value) -> Result<String, String> {
+        match v {
+            Value::Str(s) => Ok(s.clone()),
+            _ => Err(format!("expected string, got {}", v.kind())),
+        }
+    }
+}
+
+impl<T: Deserialize> Deserialize for Vec<T> {
+    fn from_json(v: &Value) -> Result<Vec<T>, String> {
+        match v {
+            Value::Arr(items) => items.iter().map(T::from_json).collect(),
+            _ => Err(format!("expected array, got {}", v.kind())),
+        }
+    }
+}
+
+impl<T: Deserialize> Deserialize for Option<T> {
+    fn from_json(v: &Value) -> Result<Option<T>, String> {
+        match v {
+            Value::Null => Ok(None),
+            other => T::from_json(other).map(Some),
+        }
+    }
+}
+
+impl<A: Deserialize, B: Deserialize> Deserialize for (A, B) {
+    fn from_json(v: &Value) -> Result<(A, B), String> {
+        match v {
+            Value::Arr(items) if items.len() == 2 => {
+                Ok((A::from_json(&items[0])?, B::from_json(&items[1])?))
+            }
+            _ => Err(format!("expected 2-element array, got {}", v.kind())),
+        }
+    }
+}
+
+impl<A: Deserialize, B: Deserialize, C: Deserialize> Deserialize for (A, B, C) {
+    fn from_json(v: &Value) -> Result<(A, B, C), String> {
+        match v {
+            Value::Arr(items) if items.len() == 3 => Ok((
+                A::from_json(&items[0])?,
+                B::from_json(&items[1])?,
+                C::from_json(&items[2])?,
+            )),
+            _ => Err(format!("expected 3-element array, got {}", v.kind())),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +509,72 @@ mod tests {
             "{\"steps\":20,\"loss\":2.25,\"tags\":[[1,0.5],[2,0.25]],\
              \"name\":\"run\",\"ok\":true}"
         );
+    }
+
+    #[test]
+    fn parse_scalars_and_containers() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse(" true ").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse("-2.5e1").unwrap(), Value::Num(-25.0));
+        assert_eq!(
+            Value::parse("\"a\\\"b\\u0041\"").unwrap(),
+            Value::Str("a\"bA".to_string())
+        );
+        assert_eq!(
+            Value::parse("[1, 2,3]").unwrap(),
+            Value::Arr(vec![Value::Num(1.0), Value::Num(2.0), Value::Num(3.0)])
+        );
+        let obj = Value::parse("{\"a\": 1, \"b\": [true, null]}").unwrap();
+        assert_eq!(obj.get("a"), Some(&Value::Num(1.0)));
+        assert_eq!(
+            obj.get("b"),
+            Some(&Value::Arr(vec![Value::Bool(true), Value::Null]))
+        );
+        assert!(Value::parse("[1,2").is_err());
+        assert!(Value::parse("{\"a\" 1}").is_err());
+        assert!(Value::parse("1 junk").is_err());
+    }
+
+    #[test]
+    fn deserialize_scalars() {
+        assert_eq!(from_str::<u32>("3").unwrap(), 3);
+        assert_eq!(from_str::<f32>("1.5").unwrap(), 1.5);
+        assert!(from_str::<f32>("null").unwrap().is_nan());
+        assert_eq!(from_str::<Option<f32>>("null").unwrap(), None);
+        assert!(from_str::<bool>("true").unwrap());
+        assert_eq!(from_str::<String>("\"hi\"").unwrap(), "hi");
+        assert_eq!(from_str::<Vec<u32>>("[1,2]").unwrap(), vec![1, 2]);
+        assert_eq!(from_str::<(u32, f64)>("[4,0.5]").unwrap(), (4, 0.5));
+        assert!(from_str::<u32>("1.5").is_err());
+        assert!(from_str::<u8>("300").is_err());
+        assert!(from_str::<i32>("-1e19").is_err());
+    }
+
+    #[derive(Serialize, Deserialize, Debug, PartialEq)]
+    struct DemoRt {
+        steps: u32,
+        loss: f32,
+        tags: Vec<(u32, f32)>,
+        label: Option<String>,
+        ok: bool,
+    }
+
+    #[test]
+    fn derive_round_trips_named_fields() {
+        let d = DemoRt {
+            steps: 20,
+            loss: 2.25,
+            tags: vec![(1, 0.5), (2, 0.25)],
+            label: None,
+            ok: true,
+        };
+        let j = d.to_json();
+        let back: DemoRt = from_str(&j).unwrap();
+        assert_eq!(back, d);
+        // to_json . from_str . to_json is the identity on the text too
+        assert_eq!(back.to_json(), j);
+        // missing non-optional field errors with a field path
+        let err = from_str::<DemoRt>("{\"steps\":1}").unwrap_err();
+        assert!(err.contains("DemoRt."), "{err}");
     }
 }

@@ -1,6 +1,11 @@
-//! `#[derive(Serialize)]` for the vendored `serde` subset: serializes
-//! every named field of a struct to JSON, in declaration order, by
-//! delegating to `serde::Serialize::to_json` on each field value.
+//! `#[derive(Serialize)]` / `#[derive(Deserialize)]` for the vendored
+//! `serde` subset: `Serialize` writes every named field of a struct to
+//! JSON in declaration order by delegating to
+//! `serde::Serialize::to_json` on each field value; `Deserialize`
+//! revives the struct from a parsed `serde::Value` object by looking
+//! each field up by name and delegating to
+//! `serde::Deserialize::from_json` (so extra keys are ignored and a
+//! missing key behaves like an explicit `null`).
 //!
 //! No `syn`/`quote` (the build is offline): the input token stream is
 //! scanned directly. Supported shape: `struct Name { fields... }` with
@@ -124,6 +129,41 @@ pub fn derive_serialize(input: TokenStream) -> TokenStream {
                  {pushes}\
                  out.push('}}');\n\
                  out\n\
+             }}\n\
+         }}\n"
+    );
+    code.parse().unwrap()
+}
+
+#[proc_macro_derive(Deserialize)]
+pub fn derive_deserialize(input: TokenStream) -> TokenStream {
+    let (name, fields) = match parse_struct(input) {
+        Ok(x) => x,
+        Err(e) => {
+            let msg = format!(
+                "compile_error!(\"#[derive(serde::Deserialize)] (vendored subset): {e}\");"
+            );
+            return msg.parse().unwrap();
+        }
+    };
+    let mut inits = String::new();
+    for f in &fields {
+        inits.push_str(&format!(
+            "{f}: serde::Deserialize::from_json(\
+                 v.get(\"{f}\").unwrap_or(&serde::Value::Null))\
+                 .map_err(|e| format!(\"{name}.{f}: {{e}}\"))?,\n"
+        ));
+    }
+    let code = format!(
+        "impl serde::Deserialize for {name} {{\n\
+             fn from_json(v: &serde::Value) -> Result<Self, String> {{\n\
+                 if !matches!(v, serde::Value::Obj(_)) {{\n\
+                     return Err(format!(\
+                         \"{name}: expected object, got {{}}\", v.kind()));\n\
+                 }}\n\
+                 Ok({name} {{\n\
+                     {inits}\
+                 }})\n\
              }}\n\
          }}\n"
     );
