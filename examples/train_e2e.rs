@@ -23,6 +23,12 @@
 //!     --kill STEP:REPLICA[:WORKER]  deterministically kill that worker
 //!                            after update STEP; the driver re-shards the
 //!                            surviving replicas from the last checkpoint
+//!
+//! Observability knobs (engine phase writes wall-clock spans; the sim
+//! phases write the virtual-clock schedule model):
+//!
+//!     --trace PATH           Chrome trace_event span timeline JSON
+//!     --metrics PATH         per-step run metrics JSONL
 
 use abrot::config::{Method, ScheduleKind, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
@@ -75,6 +81,33 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    // --trace PATH / --metrics PATH (observability outputs)
+    let mut trace: Option<String> = None;
+    if let Some(i) = args.iter().position(|a| a == "--trace") {
+        match args.get(i + 1) {
+            Some(p) => {
+                trace = Some(p.clone());
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--trace expects a path; tracing off");
+                args.remove(i);
+            }
+        }
+    }
+    let mut metrics: Option<String> = None;
+    if let Some(i) = args.iter().position(|a| a == "--metrics") {
+        match args.get(i + 1) {
+            Some(p) => {
+                metrics = Some(p.clone());
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--metrics expects a path; metrics off");
+                args.remove(i);
+            }
+        }
+    }
     // --schedule S (gpipe | 1f1b | interleaved[:V] | amdp)
     let mut schedule = ScheduleKind::OneFOneB;
     if let Some(i) = args.iter().position(|a| a == "--schedule") {
@@ -102,6 +135,8 @@ fn main() -> anyhow::Result<()> {
         lr: 1e-2,
         seed: 1234,
         eval_every: (steps / 6).max(1),
+        trace,
+        metrics,
         ..Default::default()
     };
 

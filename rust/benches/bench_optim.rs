@@ -3,8 +3,9 @@
 //! (native by default; HLO/Pallas with `--features pjrt` + artifacts).
 //!
 //!     cargo bench --bench bench_optim
+//!     cargo bench --bench bench_optim -- --json BENCH_optim.json
 
-use abrot::bench::bench;
+use abrot::bench::{bench, write_snapshot, BenchResult, BenchSnapshot};
 use abrot::optim::reference::{self, Scalars};
 use abrot::optim::ElementAdam;
 use abrot::rngs::Rng;
@@ -17,8 +18,14 @@ fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
     t
 }
 
+fn json_path() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned())
+}
+
 fn main() {
     println!("== bench_optim ==");
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::new(1);
 
     // element-wise Adam (1M params)
@@ -26,9 +33,9 @@ fn main() {
     let mut adam = ElementAdam::new(&shapes);
     let mut w = randn(&mut rng, &[1_000_000]);
     let g = randn(&mut rng, &[1_000_000]);
-    bench("element_adam 1M params", 2, 20, || {
+    results.push(bench("element_adam 1M params", 2, 20, || {
         adam.update(0, &mut w, &g, 1e-3, 0.9, 0.999, 1e-8, 0.01, 3, false);
-    });
+    }));
 
     // rust-reference rotated update (pico32 wqkv-sized: 32x96)
     let wr = randn(&mut rng, &[32, 96]);
@@ -38,12 +45,12 @@ fn main() {
     let u = reference::cgs2_qr(&randn(&mut rng, &[32, 32]));
     let v = reference::cgs2_qr(&randn(&mut rng, &[96, 96]));
     let sc = Scalars { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01, t: 3.0 };
-    bench("rust rotated_adam 32x96", 5, 100, || {
+    results.push(bench("rust rotated_adam 32x96", 5, 100, || {
         std::hint::black_box(reference::rotated_adam(&wr, &gr, &mr, &vr, &u, &v, sc, false));
-    });
-    bench("rust power_qr 96x96", 5, 50, || {
+    }));
+    results.push(bench("rust power_qr 96x96", 5, 50, || {
         std::hint::black_box(reference::power_qr(&v.matmul(&v.transpose()), &v));
-    });
+    }));
 
     // Backend-dispatched batched rotated update + eigen on micro
     // (NB=2, 16x48).
@@ -72,9 +79,9 @@ fn main() {
         .map(|t| tensor_to_value(t).unwrap())
         .collect();
     rt.exec("rot_adam_bi_wqkv", &inputs).unwrap();
-    bench("backend rot_adam dispatch", 3, 50, || {
+    results.push(bench("backend rot_adam dispatch", 3, 50, || {
         std::hint::black_box(rt.exec("rot_adam_bi_wqkv", &inputs).unwrap());
-    });
+    }));
     if rt.has_executable("rot_adam_bi_wqkv_pallas") {
         rt.exec("rot_adam_bi_wqkv_pallas", &inputs).unwrap();
         bench("HLO rot_adam (pallas interp)", 1, 10, || {
@@ -90,7 +97,13 @@ fn main() {
     .map(|t| tensor_to_value(t).unwrap())
     .collect();
     rt.exec("eigen2nd_bi_wqkv", &eig_inputs).unwrap();
-    bench("backend eigen2nd refresh", 3, 30, || {
+    results.push(bench("backend eigen2nd refresh", 3, 30, || {
         std::hint::black_box(rt.exec("eigen2nd_bi_wqkv", &eig_inputs).unwrap());
-    });
+    }));
+
+    if let Some(path) = json_path() {
+        let snap = BenchSnapshot::new("optim", results);
+        write_snapshot(&path, &snap).unwrap();
+        println!("snapshot -> {path}");
+    }
 }

@@ -3,8 +3,14 @@
 //! threaded engine's throughput/bubble at several depths.
 //!
 //!     cargo bench --bench bench_pipeline
+//!     cargo bench --bench bench_pipeline -- --json BENCH_engine.json
+//!
+//! With `--json PATH` the run additionally writes a `BenchSnapshot`
+//! (schema in `abrot::bench`); compare against the committed baseline
+//! with `abrot benchcmp --baseline benchmarks/BENCH_engine.json
+//! --current PATH`.
 
-use abrot::bench::{bench, time_once};
+use abrot::bench::{bench, time_once, write_snapshot, BenchResult, BenchSnapshot};
 use abrot::config::{Method, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
 use abrot::data::{BatchIter, Corpus};
@@ -12,23 +18,42 @@ use abrot::pipeline::{train_sim, StashRing};
 use abrot::runtime::Runtime;
 use abrot::tensor::Tensor;
 
+/// `--json PATH` from the post-`--` bench args.
+fn json_path() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned())
+}
+
+/// A single timed run folded into the snapshot schema (degenerate
+/// quantiles: one sample).
+fn once_result(name: &str, per_iter_us: f64, iters: usize) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_us: per_iter_us,
+        p10_us: per_iter_us,
+        p90_us: per_iter_us,
+    }
+}
+
 fn main() {
     println!("== bench_pipeline ==");
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // data pipeline
     let corpus = Corpus::new(256, 1);
     let mut it = BatchIter::new(corpus, 4, 48, 0);
-    bench("data next_batch 4x48", 10, 500, || {
+    results.push(bench("data next_batch 4x48", 10, 500, || {
         std::hint::black_box(it.next_batch());
-    });
+    }));
 
     // stash ring push (1M params across 8 tensors, delays 0..7)
     let params: Vec<Tensor> = (0..8).map(|_| Tensor::ones(&[125_000])).collect();
     let delays: Vec<u32> = (0..8).collect();
     let mut ring = StashRing::new(&params, &delays);
-    bench("stash_ring push 1M params", 3, 50, || {
+    results.push(bench("stash_ring push 1M params", 3, 50, || {
         ring.push(&params);
-    });
+    }));
 
     // simulator step latency per method (pico8, P=4)
     let rt = Runtime::open("artifacts/pico8").unwrap();
@@ -37,6 +62,11 @@ fn main() {
         let (r, secs) = time_once(&format!("sim 12 steps pico8 {}", cfg.method.name()),
                                   || train_sim(&rt, &cfg).unwrap());
         println!("  -> {:.1} ms/step, {} dispatches", secs * 1000.0 / 12.0, r.dispatches);
+        results.push(once_result(
+            &format!("sim step pico8 {}", r.method),
+            secs * 1e6 / 12.0,
+            12,
+        ));
     }
 
     // threaded engine throughput/bubble
@@ -57,6 +87,11 @@ fn main() {
             "engine {model} P={p}: {:.0} tokens/s, bubble {:.1}%, wall {:.2}s",
             r.tokens_per_sec, r.bubble_frac * 100.0, r.wall_secs
         );
+        results.push(once_result(
+            &format!("engine step {model} P={p}"),
+            r.wall_secs * 1e6 / 16.0,
+            16,
+        ));
     }
 
     // engine with per-stage optimizers beyond Adam: the paper's method
@@ -70,5 +105,16 @@ fn main() {
             "engine {model} P=4 {}: {:.0} tokens/s, bubble {:.1}%, {} dispatches",
             r.method, r.tokens_per_sec, r.bubble_frac * 100.0, r.dispatches
         );
+        results.push(once_result(
+            &format!("engine step {model} P=4 {}", r.method),
+            r.wall_secs * 1e6 / 16.0,
+            16,
+        ));
+    }
+
+    if let Some(path) = json_path() {
+        let snap = BenchSnapshot::new("engine", results);
+        write_snapshot(&path, &snap).unwrap();
+        println!("snapshot -> {path}");
     }
 }

@@ -2,27 +2,37 @@
 //! dispatch, whole-step fwdbwd latency per config.
 //!
 //!     cargo bench --bench bench_runtime
+//!     cargo bench --bench bench_runtime -- --json BENCH_kernels.json
+//!
+//! With `--json PATH` the run writes a `BenchSnapshot` comparable to
+//! the committed `benchmarks/BENCH_kernels.json` via `abrot benchcmp`.
 
-use abrot::bench::bench;
+use abrot::bench::{bench, write_snapshot, BenchResult, BenchSnapshot};
 use abrot::model::init_params;
 use abrot::runtime::{tensor_to_value, tokens_to_value, Runtime, Value};
 use abrot::tensor::Tensor;
 
+fn json_path() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned())
+}
+
 fn main() {
     println!("== bench_runtime ==");
+    let mut results: Vec<BenchResult> = Vec::new();
     let rt = Runtime::open("artifacts/micro").unwrap();
     println!("backend: {}", rt.backend_kind());
     let cfg = rt.cfg().clone();
     let params = init_params(&rt.manifest, 0);
 
     let big = Tensor::ones(&[256, 256]);
-    bench("tensor_to_value 256x256", 10, 200, || {
+    results.push(bench("tensor_to_value 256x256", 10, 200, || {
         std::hint::black_box(tensor_to_value(&big).unwrap());
-    });
+    }));
     let val = tensor_to_value(&big).unwrap();
-    bench("value_to_vec 256x256", 10, 200, || {
+    results.push(bench("value_to_vec 256x256", 10, 200, || {
         std::hint::black_box(val.to_f32().unwrap());
-    });
+    }));
 
     let toks: Vec<i32> = (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
     let mut inputs: Vec<Value> =
@@ -30,13 +40,13 @@ fn main() {
     inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
     inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
     rt.exec("fwdbwd", &inputs).unwrap(); // warm (compiles under pjrt)
-    bench("fwdbwd dispatch micro", 3, 50, || {
+    results.push(bench("fwdbwd dispatch micro", 3, 50, || {
         std::hint::black_box(rt.exec("fwdbwd", &inputs).unwrap());
-    });
+    }));
     // eval_loss takes params + tok + tgt (same arity as fwdbwd)
-    bench("eval_loss dispatch micro", 3, 50, || {
+    results.push(bench("eval_loss dispatch micro", 3, 50, || {
         std::hint::black_box(rt.exec("eval_loss", &inputs).unwrap());
-    });
+    }));
 
     for model in ["pico8", "pico32"] {
         let rt = Runtime::open(format!("artifacts/{model}")).unwrap();
@@ -49,8 +59,14 @@ fn main() {
         inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
         inputs.push(tokens_to_value(&toks, cfg.batch, cfg.seq).unwrap());
         rt.exec("fwdbwd", &inputs).unwrap();
-        bench(&format!("fwdbwd dispatch {model}"), 2, 20, || {
+        results.push(bench(&format!("fwdbwd dispatch {model}"), 2, 20, || {
             std::hint::black_box(rt.exec("fwdbwd", &inputs).unwrap());
-        });
+        }));
+    }
+
+    if let Some(path) = json_path() {
+        let snap = BenchSnapshot::new("kernels", results);
+        write_snapshot(&path, &snap).unwrap();
+        println!("snapshot -> {path}");
     }
 }

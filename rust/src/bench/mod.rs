@@ -1,9 +1,13 @@
 //! Tiny benchmarking framework for the `harness = false` cargo benches
 //! (criterion is unavailable in this offline environment): warmup,
-//! fixed-iteration timing, median/p10/p90 reporting.
+//! fixed-iteration timing, median/p10/p90 reporting, and JSON
+//! snapshots (`BENCH_*.json`) so the perf trajectory is recorded
+//! in-repo and regressions are visible across PRs.
 
+use std::path::Path;
 use std::time::Instant;
 
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -21,6 +25,17 @@ impl BenchResult {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample vector:
+/// the smallest value with at least `p * n` samples at or below it
+/// (`ceil(p * n)`-th order statistic). Unlike truncating `(n-1) * p`
+/// indexing, this never biases p50/p90 low on small n.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let rank = (p * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 /// Run `f` `iters` times after `warmup` calls; per-iteration timing.
 pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
     for _ in 0..warmup {
@@ -33,13 +48,12 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
     let r = BenchResult {
         name: name.to_string(),
         iters,
-        median_us: q(0.5),
-        p10_us: q(0.1),
-        p90_us: q(0.9),
+        median_us: percentile(&samples, 0.5),
+        p10_us: percentile(&samples, 0.1),
+        p90_us: percentile(&samples, 0.9),
     };
     r.print();
     r
@@ -54,6 +68,175 @@ pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
     (out, secs)
 }
 
+// ---------------------------------------------------------------------------
+// Snapshots (BENCH_<area>.json) + regression comparison
+// ---------------------------------------------------------------------------
+
+/// Where the snapshot was recorded; medians are only comparable on
+/// similar hosts, so the comparison helper reports fingerprint
+/// mismatches instead of flagging timing deltas across machines.
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
+pub struct HostInfo {
+    pub os: String,
+    pub arch: String,
+    pub cpus: usize,
+}
+
+pub fn host_fingerprint() -> HostInfo {
+    HostInfo {
+        os: std::env::consts::OS.to_string(),
+        arch: std::env::consts::ARCH.to_string(),
+        cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// A recorded bench run: host fingerprint + per-bench quantiles.
+/// `area` names the snapshot family ("engine", "kernels").
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
+pub struct BenchSnapshot {
+    pub schema_version: u32,
+    pub area: String,
+    pub host: HostInfo,
+    pub results: Vec<BenchResult>,
+}
+
+pub const SNAPSHOT_SCHEMA_VERSION: u32 = 1;
+
+impl BenchSnapshot {
+    pub fn new(area: &str, results: Vec<BenchResult>) -> BenchSnapshot {
+        BenchSnapshot {
+            schema_version: SNAPSHOT_SCHEMA_VERSION,
+            area: area.to_string(),
+            host: host_fingerprint(),
+            results,
+        }
+    }
+}
+
+pub fn write_snapshot(path: impl AsRef<Path>, snap: &BenchSnapshot) -> anyhow::Result<()> {
+    use serde::Serialize;
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, snap.to_json())?;
+    Ok(())
+}
+
+pub fn load_snapshot(path: impl AsRef<Path>) -> anyhow::Result<BenchSnapshot> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    serde::from_str(&text).map_err(anyhow::Error::msg)
+}
+
+/// Basic shape validation for a snapshot (used by the CI bench-smoke
+/// job): known schema version, non-empty results, finite ordered
+/// quantiles.
+pub fn validate_snapshot(snap: &BenchSnapshot) -> Result<(), String> {
+    if snap.schema_version != SNAPSHOT_SCHEMA_VERSION {
+        return Err(format!("unknown schema_version {}", snap.schema_version));
+    }
+    if snap.results.is_empty() {
+        return Err("snapshot has no results".to_string());
+    }
+    for r in &snap.results {
+        if r.name.is_empty() || r.iters == 0 {
+            return Err(format!("malformed result {:?}", r.name));
+        }
+        for v in [r.median_us, r.p10_us, r.p90_us] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("non-finite quantile in {:?}", r.name));
+            }
+        }
+        if !(r.p10_us <= r.median_us && r.median_us <= r.p90_us) {
+            return Err(format!("unordered quantiles in {:?}", r.name));
+        }
+    }
+    Ok(())
+}
+
+/// One comparison row between a current run and the committed baseline.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub baseline_us: f64,
+    pub current_us: f64,
+    /// current / baseline median; > 1 is slower.
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Comparison output: per-bench deltas plus benches present on only
+/// one side and whether the host fingerprints matched (timing deltas
+/// across differing hosts are informational, not regressions).
+#[derive(Debug, Default)]
+pub struct BenchComparison {
+    pub deltas: Vec<BenchDelta>,
+    pub only_baseline: Vec<String>,
+    pub only_current: Vec<String>,
+    pub host_match: bool,
+}
+
+impl BenchComparison {
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    pub fn print(&self) {
+        for d in &self.deltas {
+            println!(
+                "cmp   {:<40} {:>10.1} -> {:>10.1} us  ({:>5.2}x){}",
+                d.name,
+                d.baseline_us,
+                d.current_us,
+                d.ratio,
+                if d.regressed { "  REGRESSION" } else { "" }
+            );
+        }
+        for n in &self.only_baseline {
+            println!("cmp   {n:<40} missing from current run");
+        }
+        for n in &self.only_current {
+            println!("cmp   {n:<40} new (no baseline)");
+        }
+        if !self.host_match {
+            println!("cmp   (host fingerprint differs from baseline; ratios are informational)");
+        }
+    }
+}
+
+/// Flag current medians more than `tol` times the baseline median
+/// (e.g. `tol = 1.5` -> 50% slower). Regressions are only flagged when
+/// the host fingerprint matches the baseline's.
+pub fn compare_snapshots(current: &BenchSnapshot, baseline: &BenchSnapshot, tol: f64) -> BenchComparison {
+    let host_match = current.host.os == baseline.host.os
+        && current.host.arch == baseline.host.arch
+        && current.host.cpus == baseline.host.cpus;
+    let mut cmp = BenchComparison { host_match, ..Default::default() };
+    for b in &baseline.results {
+        match current.results.iter().find(|c| c.name == b.name) {
+            Some(c) => {
+                let ratio = if b.median_us > 0.0 { c.median_us / b.median_us } else { 1.0 };
+                cmp.deltas.push(BenchDelta {
+                    name: b.name.clone(),
+                    baseline_us: b.median_us,
+                    current_us: c.median_us,
+                    ratio,
+                    regressed: host_match && ratio > tol,
+                });
+            }
+            None => cmp.only_baseline.push(b.name.clone()),
+        }
+    }
+    for c in &current.results {
+        if !baseline.results.iter().any(|b| b.name == c.name) {
+            cmp.only_current.push(c.name.clone());
+        }
+    }
+    cmp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +247,70 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(r.p10_us <= r.median_us && r.median_us <= r.p90_us);
+    }
+
+    #[test]
+    fn bench_percentiles_nearest_rank_on_10_samples() {
+        let samples: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        // nearest-rank on n=10: p10 -> 1st, p50 -> 5th, p90 -> 9th
+        assert_eq!(percentile(&samples, 0.10), 1.0);
+        assert_eq!(percentile(&samples, 0.50), 5.0);
+        assert_eq!(percentile(&samples, 0.90), 9.0);
+        assert_eq!(percentile(&samples, 1.0), 10.0);
+        // the old truncating (n-1)*p indexing gave p90 -> samples[8]=9
+        // but p50 -> samples[4]=5 only by luck of odd offsets; pin the
+        // small-n case that exposed the bias:
+        let three = vec![1.0, 2.0, 3.0];
+        assert_eq!(percentile(&three, 0.5), 2.0);
+        assert_eq!(percentile(&three, 0.9), 3.0); // old code: index 1 -> 2.0
+    }
+
+    #[test]
+    fn bench_snapshot_roundtrip_and_compare() {
+        let mk = |name: &str, med: f64| BenchResult {
+            name: name.to_string(),
+            iters: 10,
+            median_us: med,
+            p10_us: med * 0.9,
+            p90_us: med * 1.2,
+        };
+        let base = BenchSnapshot::new("engine", vec![mk("a", 100.0), mk("b", 50.0), mk("gone", 1.0)]);
+        validate_snapshot(&base).unwrap();
+
+        let dir = std::env::temp_dir().join("abrot_bench_snap");
+        let p = dir.join("BENCH_test.json");
+        write_snapshot(&p, &base).unwrap();
+        let loaded = load_snapshot(&p).unwrap();
+        assert_eq!(loaded.area, "engine");
+        assert_eq!(loaded.results.len(), 3);
+        assert_eq!(loaded.results[0].name, "a");
+        assert!((loaded.results[1].median_us - 50.0).abs() < 1e-9);
+
+        let cur = BenchSnapshot::new("engine", vec![mk("a", 200.0), mk("b", 51.0), mk("new", 9.0)]);
+        let cmp = compare_snapshots(&cur, &loaded, 1.5);
+        let regs = cmp.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "a");
+        assert!(regs[0].ratio > 1.9);
+        assert_eq!(cmp.only_baseline, vec!["gone".to_string()]);
+        assert_eq!(cmp.only_current, vec!["new".to_string()]);
+
+        // identical snapshots never regress
+        let same = compare_snapshots(&loaded, &loaded, 1.5);
+        assert!(same.regressions().is_empty());
+    }
+
+    #[test]
+    fn bench_validate_rejects_malformed() {
+        let mut s = BenchSnapshot::new("x", vec![]);
+        assert!(validate_snapshot(&s).is_err());
+        s.results.push(BenchResult {
+            name: "a".into(),
+            iters: 5,
+            median_us: 1.0,
+            p10_us: 2.0, // unordered
+            p90_us: 3.0,
+        });
+        assert!(validate_snapshot(&s).is_err());
     }
 }

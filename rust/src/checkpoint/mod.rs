@@ -58,6 +58,7 @@ use crate::optim::OptState;
 use crate::pipeline::engine::{self, EngineCheckpoint, SegmentOpts};
 use crate::pipeline::schedule;
 use crate::tensor::Tensor;
+use crate::trace;
 
 /// Bump on any incompatible change to the [`RunState`] layout; `load`
 /// rejects mismatches loudly instead of misreading old snapshots.
@@ -421,6 +422,8 @@ pub fn run_engine_elastic(
     let mut last: Option<RunResult> = None;
     let mut total_dispatches = 0u64;
     let mut wall = 0.0f64;
+    let mut driver_spans: Vec<trace::Span> = Vec::new();
+    let mut driver_clock_us = 0.0f64;
     while start < steps {
         let mut end = steps;
         if every > 0 {
@@ -487,10 +490,10 @@ pub fn run_engine_elastic(
                 bail!("fault plan kills every replica of the roster at step {start}");
             }
             roster -= gone.len();
-            println!(
+            trace::progress(format!(
                 "  [elastic] replica death mid-segment; re-sharding onto \
                  R={roster} survivors and re-running from step {start}"
-            );
+            ));
             continue;
         }
         losses.extend(res.losses.iter().copied());
@@ -517,13 +520,17 @@ pub fn run_engine_elastic(
             }
             roster -= gone.len();
             kills.retain(|k| k.at_update != end);
-            println!("  [elastic] clean departure at step {end}; R={roster}");
+            trace::progress(format!(
+                "  [elastic] clean departure at step {end}; R={roster}"
+            ));
         }
         let joining: usize =
             joins.iter().filter(|j| j.at_update == end).map(|j| j.count).sum();
         if joining > 0 {
             roster += joining;
-            println!("  [elastic] {joining} replica(s) join at step {end}; R={roster}");
+            trace::progress(format!(
+                "  [elastic] {joining} replica(s) join at step {end}; R={roster}"
+            ));
         }
         if every > 0 && start % every == 0 && start < steps {
             let ck = state.as_ref().expect("export_state held a snapshot");
@@ -553,9 +560,31 @@ pub fn run_engine_elastic(
                 dispatches: Vec::new(),
             };
             let path = step_path(&ckpt_dir, start);
+            let t_save = std::time::Instant::now();
             save(&path, &st)?;
+            let save_us = t_save.elapsed().as_secs_f64() * 1e6;
+            // The driver writes checkpoints between segments; give those
+            // writes their own timeline row in the trace (the segment
+            // just rewrote the file with its worker spans, so append).
+            if let Some(tp) = &cfg.trace {
+                driver_spans.push(trace::Span {
+                    kind: trace::SpanKind::Checkpoint,
+                    chunk: -1,
+                    mb: -1,
+                    step: start as i64,
+                    ts_us: driver_clock_us,
+                    dur_us: save_us,
+                    n_disp: 0,
+                });
+                driver_clock_us += save_us;
+                trace::append_events(tp, 0, 999, "driver/ckpt", &driver_spans)?;
+            }
             if cfg.log_every > 0 {
-                println!("  [ckpt] step {start} -> {}", path.display());
+                trace::progress(format!(
+                    "  [ckpt] step {start} -> {} ({:.1} ms)",
+                    path.display(),
+                    save_us / 1e3
+                ));
             }
         }
     }

@@ -208,6 +208,15 @@ pub struct TrainCfg {
     /// seed, total steps) — resume validates and then continues
     /// bit-exactly where the snapshot left off.
     pub resume: Option<String>,
+    /// Write a Chrome `trace_event` JSON span timeline of the engine
+    /// run (one merged timeline per worker thread; open in
+    /// `chrome://tracing` or Perfetto). Segmented/elastic runs rewrite
+    /// the file per segment, so it holds the final segment's spans.
+    pub trace: Option<String>,
+    /// Write step-granularity run metrics as JSONL (one object per
+    /// optimizer step: loss, lr, staleness, queue depth; see
+    /// `metrics::Registry`).
+    pub metrics: Option<String>,
 }
 
 impl Default for TrainCfg {
@@ -233,6 +242,8 @@ impl Default for TrainCfg {
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: None,
+            trace: None,
+            metrics: None,
         }
     }
 }

@@ -752,6 +752,60 @@ impl<'a> Harness<'a> {
         Ok(())
     }
 
+    /// Per-stage utilization timeline: run the engine with span tracing
+    /// on, write the Chrome trace next to a per-worker busy/idle CSV
+    /// derived from `RunResult.stage_spans`, and cross-check the
+    /// span-derived split against the wall-clock bubble fraction.
+    pub fn timeline(&mut self, model: &str, stages: usize) -> Result<()> {
+        println!("\n== Timeline: engine span trace on {model} at P={stages} ==");
+        let trace_path = self.out("timeline_trace.json");
+        let cfg = TrainCfg {
+            method: Method::PipeDream,
+            stages,
+            steps: self.opts.steps.min(24),
+            lr: self.opts.lr,
+            seed: self.opts.seed,
+            trace: Some(trace_path.to_string_lossy().into_owned()),
+            metrics: Some(
+                self.out("timeline_metrics.jsonl").to_string_lossy().into_owned(),
+            ),
+            ..Default::default()
+        };
+        let r = self
+            .coord
+            .run_engine(&Experiment { model: model.into(), train: cfg })?;
+        println!("{:<8} {:>8} {:>9} {:>9} {:>10} {:>7}",
+                 "worker", "spans", "busy_s", "idle_s", "idle_frac", "");
+        let mut csv = Csv::create(
+            self.out("timeline.csv"),
+            "replica,worker,spans,busy_s,idle_s,idle_frac",
+        )?;
+        for sp in &r.stage_spans {
+            let tot = sp.busy_s + sp.idle_s;
+            let frac = if tot > 0.0 { sp.idle_s / tot } else { 0.0 };
+            println!("r{}/w{:<4} {:>8} {:>9.3} {:>9.3} {:>10.3}",
+                     sp.replica, sp.worker, sp.spans, sp.busy_s, sp.idle_s, frac);
+            csv.row(&[
+                sp.replica.to_string(),
+                sp.worker.to_string(),
+                sp.spans.to_string(),
+                format!("{:.4}", sp.busy_s),
+                format!("{:.4}", sp.idle_s),
+                format!("{:.4}", frac),
+            ])?;
+        }
+        let busy: f64 = r.stage_spans.iter().map(|s| s.busy_s).sum();
+        let idle: f64 = r.stage_spans.iter().map(|s| s.idle_s).sum();
+        let span_bubble = if busy + idle > 0.0 { idle / (busy + idle) } else { 0.0 };
+        println!(
+            "span bubble {:.1}% vs wall-clock bubble {:.1}%  (trace -> {})",
+            span_bubble * 100.0,
+            r.bubble_frac * 100.0,
+            trace_path.display()
+        );
+        Ok(())
+    }
+
     /// Run everything.
     pub fn all(&mut self, model: &str) -> Result<()> {
         self.fig3()?;

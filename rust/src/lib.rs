@@ -48,3 +48,4 @@ pub mod pipeline;
 pub mod rngs;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;

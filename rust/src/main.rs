@@ -133,6 +133,8 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
         checkpoint_every: args.parse_num("checkpoint-every", 0u32),
         checkpoint_dir: args.get("checkpoint-dir").map(|s| s.to_string()),
         resume: args.get("resume").map(|s| s.to_string()),
+        trace: args.get("trace").map(|s| s.to_string()),
+        metrics: args.get("metrics").map(|s| s.to_string()),
         ..Default::default()
     })
 }
@@ -272,11 +274,37 @@ fn main() -> Result<()> {
                         let p = args.parse_num("schedule-stages", 4usize);
                         h.schedule(&args.get_or("schedule-model", "pico8"), p)?
                     }
+                    "timeline" => {
+                        let p = args.parse_num("timeline-stages", 4usize);
+                        h.timeline(&args.get_or("timeline-model", "pico8"), p)?
+                    }
                     _ => bail!("unknown figure {f}"),
                     }
                 }
             } else {
                 bail!("repro needs --fig, --table or --all");
+            }
+        }
+        "benchcmp" => {
+            let baseline = args
+                .get("baseline")
+                .ok_or_else(|| anyhow!("benchcmp needs --baseline PATH"))?;
+            let current = args
+                .get("current")
+                .ok_or_else(|| anyhow!("benchcmp needs --current PATH"))?;
+            let tol = args.parse_num("tol", 1.5f64);
+            let base = abrot::bench::load_snapshot(baseline)?;
+            let cur = abrot::bench::load_snapshot(current)?;
+            abrot::bench::validate_snapshot(&base).map_err(anyhow::Error::msg)?;
+            abrot::bench::validate_snapshot(&cur).map_err(anyhow::Error::msg)?;
+            let cmp = abrot::bench::compare_snapshots(&cur, &base, tol);
+            cmp.print();
+            let regs = cmp.regressions();
+            if !regs.is_empty() {
+                if args.has("strict") {
+                    bail!("{} bench regression(s) above {tol}x", regs.len());
+                }
+                println!("{} regression(s) above {tol}x (non-strict; exit 0)", regs.len());
             }
         }
         "landscape" => {
@@ -292,10 +320,15 @@ fn main() -> Result<()> {
         }
         _ => {
             println!("abrot — asynchronous basis-rotation pipeline training");
-            println!("usage: abrot <info|train|engine|repro|landscape|calc> [--flags]");
+            println!("usage: abrot <info|train|engine|repro|benchcmp|landscape|calc> [--flags]");
             println!("  e.g. abrot train --config tiny32 --method br --stages 32 --steps 300");
             println!("       abrot engine --config micro --stages 2 --replicas 2 --steps 40");
             println!("       abrot repro --fig fig5 --steps 200 --out results");
+            println!("observability: --trace out.json writes a Chrome trace_event span");
+            println!("  timeline (engine: wall-clock per worker; train: virtual-clock");
+            println!("  schedule model); --metrics out.jsonl writes per-step run metrics.");
+            println!("  abrot benchcmp --baseline benchmarks/BENCH_engine.json \\");
+            println!("      --current BENCH_engine.json [--tol 1.5] [--strict]");
             println!("checkpointing: --checkpoint-every K [--checkpoint-dir D] writes");
             println!("  atomic step snapshots; --resume PATH continues one bit-exactly");
             println!("  (sim) or drain-consistently (engine). engine fault injection:");

@@ -4,6 +4,9 @@
 use std::io::Write;
 use std::path::Path;
 
+pub mod registry;
+pub use registry::{Hist, Registry};
+
 /// Per-(replica, stage) slice of a run's counters, so dispatch and
 /// optimizer-state accounting stays comparable as the data-parallel
 /// width R changes. On the engine the rows sum to the corresponding
@@ -62,6 +65,33 @@ pub struct RunResult {
     /// schedule's declared per-chunk delay; fill microbatches clamp
     /// below it, so the max is the steady value once steps > P.
     pub realized_delays: Vec<(usize, u64, u32)>,
+    /// Per-(replica, worker) busy/idle span summary from the trace
+    /// recorder (engine runs only; empty for the simulator). Busy sums
+    /// `Fwd/Bwd/Update/Checkpoint` span seconds, idle sums
+    /// `Idle/Reduce`; `sum(idle)/sum(busy+idle)` agrees with the
+    /// wall-clock `bubble_frac` because both are fed by the same
+    /// `Instant` measurements.
+    pub stage_spans: Vec<StageSpan>,
+    /// Realized staleness histogram, one row per chunk (replica 0):
+    /// `(chunk id, counts)` where `counts[d]` is how many microbatches
+    /// saw a gradient delay of exactly `d` optimizer updates. The
+    /// steady-state mode of each row equals the schedule's declared
+    /// per-chunk delay.
+    pub staleness_histogram: Vec<(usize, Vec<u64>)>,
+}
+
+/// Per-(replica, worker) span-derived timing summary (see
+/// [`RunResult::stage_spans`]).
+#[derive(Clone, Debug, Default, serde::Serialize)]
+pub struct StageSpan {
+    pub replica: usize,
+    pub worker: usize,
+    /// Seconds inside busy spans (`Fwd`/`Bwd`/`Update`/`Checkpoint`).
+    pub busy_s: f64,
+    /// Seconds inside wait spans (`Idle` recv waits + `Reduce`).
+    pub idle_s: f64,
+    /// Number of spans recorded on this worker's timeline.
+    pub spans: u64,
 }
 
 impl RunResult {
@@ -141,7 +171,19 @@ impl Csv {
     }
 
     pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
-        writeln!(self.file, "{}", cells.join(","))
+        let escaped: Vec<String> = cells.iter().map(|c| csv_escape(c)).collect();
+        writeln!(self.file, "{}", escaped.join(","))
+    }
+}
+
+/// RFC 4180 escaping: cells containing a comma, double quote, or line
+/// break are quoted, with embedded quotes doubled. Plain cells pass
+/// through unchanged so existing numeric/label output is byte-stable.
+pub fn csv_escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') || cell.contains('\r') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
     }
 }
 
@@ -222,5 +264,21 @@ mod tests {
         c.row(&["1".into(), "2".into()]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn csv_escapes_rfc4180() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("interleaved:2"), "interleaved:2");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("two\nlines"), "\"two\nlines\"");
+
+        let dir = std::env::temp_dir().join("abrot_csv_escape_test");
+        let p = dir.join("x.csv");
+        let mut c = Csv::create(&p, "label,value").unwrap();
+        c.row(&["Fwd,chunk=0".into(), "1".into()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "label,value\n\"Fwd,chunk=0\",1\n");
     }
 }

@@ -1,0 +1,244 @@
+//! Named counters / gauges / histograms plus step-granularity samples,
+//! emitted as JSONL (`--metrics out.jsonl`). Dependency-free: rows are
+//! built with the in-crate `jsonio` writer, one JSON object per line,
+//! each carrying a monotone `step` field.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::jsonio::{self, Json};
+
+/// Value-bucketed histogram for small non-negative quantities
+/// (staleness in updates, queue depths). Values `>= OVERFLOW` (e.g.
+/// checkpoint latencies in µs) land in the overflow bucket but still
+/// contribute to `sum`/`max`, so mean and max stay exact.
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    pub counts: Vec<u64>,
+    pub overflow: u64,
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+const OVERFLOW: usize = 256;
+
+impl Hist {
+    pub fn observe(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+        let bucket = if v < 0.0 { 0 } else { v.floor() as usize };
+        if bucket < OVERFLOW {
+            if self.counts.len() <= bucket {
+                self.counts.resize(bucket + 1, 0);
+            }
+            self.counts[bucket] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Most-populated integer bucket (steady-state mode); ties break
+    /// toward the smaller value.
+    pub fn mode(&self) -> Option<usize> {
+        self.counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, _)| i)
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.overflow += other.overflow;
+        self.n += other.n;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+}
+
+/// A run's metric state: named counters (monotone u64), gauges (last
+/// value wins), histograms, and an ordered list of per-step JSONL rows.
+#[derive(Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+    rows: Vec<Vec<(String, f64)>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Append one step-granularity sample row. `step` is stored as the
+    /// first field of the JSONL object.
+    pub fn sample_step(&mut self, step: u64, fields: &[(&str, f64)]) {
+        let mut row: Vec<(String, f64)> = Vec::with_capacity(fields.len() + 1);
+        row.push(("step".to_string(), step as f64));
+        for (k, v) in fields {
+            row.push((k.to_string(), *v));
+        }
+        self.rows.push(row);
+    }
+
+    /// One JSON object per sampled step, in insertion order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let pairs: Vec<(&str, Json)> = row.iter().map(|(k, v)| (k.as_str(), jsonio::num(*v))).collect();
+            out.push_str(&jsonio::obj(pairs).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_jsonl(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_jsonl().as_bytes())?;
+        Ok(())
+    }
+
+    /// Final summary: counters + gauges + per-histogram n/mean/max/mode,
+    /// as a single JSON object (folded into logs or printed on stderr).
+    pub fn summary_json(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        let counters: Vec<(&str, Json)> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), jsonio::num(*v as f64)))
+            .collect();
+        pairs.push(("counters", jsonio::obj(counters)));
+        let gauges: Vec<(&str, Json)> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.as_str(), jsonio::num(*v)))
+            .collect();
+        pairs.push(("gauges", jsonio::obj(gauges)));
+        let hists: Vec<(&str, Json)> = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.as_str(),
+                    jsonio::obj(vec![
+                        ("n", jsonio::num(h.n as f64)),
+                        ("mean", jsonio::num(h.mean())),
+                        ("max", jsonio::num(h.max)),
+                        ("mode", h.mode().map(|m| jsonio::num(m as f64)).unwrap_or(Json::Null)),
+                    ]),
+                )
+            })
+            .collect();
+        pairs.push(("histograms", jsonio::obj(hists)));
+        jsonio::obj(pairs).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_hist_mode_and_mean() {
+        let mut h = Hist::default();
+        for v in [1.0, 3.0, 3.0, 3.0, 2.0, 0.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.mode(), Some(3));
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.n, 6);
+        assert_eq!(h.max, 3.0);
+        // overflow values keep mean/max exact
+        h.observe(1e6);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.max, 1e6);
+    }
+
+    #[test]
+    fn registry_jsonl_rows_parse_and_are_ordered() {
+        let mut r = Registry::new();
+        r.inc("dispatches", 5);
+        r.gauge("tokens_per_sec", 123.0);
+        r.observe("staleness", 2.0);
+        r.sample_step(1, &[("loss", 4.0)]);
+        r.sample_step(2, &[("loss", 3.5), ("staleness_mean", 1.0)]);
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let mut prev = 0u64;
+        for line in &lines {
+            let p = Json::parse(line).unwrap();
+            let step = p.at("step").as_usize() as u64;
+            assert!(step > prev);
+            prev = step;
+        }
+        let summary = Json::parse(&r.summary_json()).unwrap();
+        assert_eq!(summary.at("counters").at("dispatches").as_usize(), 5);
+        assert_eq!(summary.at("histograms").at("staleness").at("mode").as_usize(), 2);
+    }
+
+    #[test]
+    fn registry_hist_merge() {
+        let mut a = Hist::default();
+        a.observe(1.0);
+        let mut b = Hist::default();
+        b.observe(1.0);
+        b.observe(4.0);
+        a.merge(&b);
+        assert_eq!(a.n, 3);
+        assert_eq!(a.mode(), Some(1));
+        assert_eq!(a.counts[4], 1);
+    }
+}

@@ -82,8 +82,9 @@ use super::dp;
 use super::schedule::{self, Action, ChunkSpec, Schedule};
 use crate::config::{Method, ScheduleKind, StashMode, TrainCfg};
 use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
-use crate::metrics::{RunResult, StageCounter};
+use crate::metrics::{RunResult, StageCounter, StageSpan};
 use crate::model::{init_params, StagePartition};
+use crate::trace::{self, SpanKind};
 use crate::optim::{self, OptState, Optimizer, StepCtx};
 use crate::runtime::{
     tensor_to_value, tokens_to_value, value_scalar_f32, value_to_tensor, Runtime,
@@ -122,6 +123,14 @@ pub struct ChunkReport {
     pub realized_mbs: u64,
     pub realized_max_delay: u32,
     pub is_head: bool,
+    /// Staleness histogram: `delay_hist[d]` = microbatches whose
+    /// gradient was applied exactly `d` optimizer updates after their
+    /// forward.
+    pub delay_hist: Vec<u64>,
+    /// Per-microbatch staleness samples `(global update index, delay)`,
+    /// in drain order — the step-granularity series behind the
+    /// `--metrics` JSONL staleness columns.
+    pub delay_samples: Vec<(u64, u32)>,
 }
 
 /// One worker thread's report: per-chunk counters + wall-clock split.
@@ -132,6 +141,12 @@ pub struct WorkerReport {
     pub compute_s: f64,
     pub idle_s: f64,
     pub chunks: Vec<ChunkReport>,
+    /// This worker thread's span timeline (all threads share the run
+    /// epoch, so timelines merge into one Chrome trace).
+    pub spans: Vec<trace::Span>,
+    /// `(global update index, pending fwd+bwd buffer depth)` sampled
+    /// at every Update action.
+    pub queue_samples: Vec<(u64, u32)>,
 }
 
 /// Drained weights and per-part optimizer states exported at the end
@@ -217,6 +232,8 @@ struct ChunkState {
     pending_mbs: Vec<u64>,
     realized_mbs: u64,
     realized_max: u32,
+    delay_hist: Vec<u64>,
+    delay_samples: Vec<(u64, u32)>,
     diverged: bool,
 }
 
@@ -486,8 +503,10 @@ impl ChunkState {
     /// All-reduce the accumulated gradient, clip, and apply this
     /// chunk's optimizer step (the legacy reduce → clip → step order).
     /// Returns `(applied, idle_seconds)`; `applied = false` means a
-    /// peer hung up mid-reduce (wind-down).
-    fn apply_update(&mut self) -> Result<(bool, f64)> {
+    /// peer hung up mid-reduce (wind-down). Records a `Reduce` span
+    /// over the all-reduce wait and an `Update` span over the
+    /// clip + optimizer step into the worker's recorder.
+    fn apply_update(&mut self, rec: &mut trace::Recorder) -> Result<(bool, f64)> {
         let mut grads = self.acc.take().ok_or_else(|| {
             anyhow!("chunk {}: update with no accumulated gradient", self.spec.id)
         })?;
@@ -506,10 +525,20 @@ impl ChunkState {
         let t_red = Instant::now();
         let reduced = self.dp.all_reduce(grads);
         let idle = t_red.elapsed().as_secs_f64();
+        rec.push(
+            SpanKind::Reduce,
+            self.spec.id as i64,
+            -1,
+            (self.updates + 1) as i64,
+            t_red,
+            0,
+        );
         let mut grads = match reduced {
             Ok(g) => g,
             Err(_) => return Ok((false, idle)),
         };
+        let t_upd = Instant::now();
+        let d0 = self.rt.total_dispatches();
         optim::clip_global_norm(&mut grads, self.cfg.grad_clip);
         // realized-delay instrumentation: updates seen between each
         // microbatch's forward and this update (before the increment)
@@ -518,6 +547,12 @@ impl ChunkState {
             let delay = (self.updates - seen) as u32;
             self.realized_mbs += 1;
             self.realized_max = self.realized_max.max(delay);
+            let d = delay as usize;
+            if self.delay_hist.len() <= d {
+                self.delay_hist.resize(d + 1, 0);
+            }
+            self.delay_hist[d] += 1;
+            self.delay_samples.push((self.updates + 1, delay));
         }
         self.updates += 1;
         let needs_stale = matches!(self.cfg.method, Method::DelayComp { .. });
@@ -532,6 +567,14 @@ impl ChunkState {
             rt: &self.rt,
         };
         self.opt.step(&ctx, &mut self.params, &grads)?;
+        rec.push(
+            SpanKind::Update,
+            self.spec.id as i64,
+            -1,
+            self.updates as i64,
+            t_upd,
+            self.rt.total_dispatches() - d0,
+        );
         Ok((true, idle))
     }
 
@@ -549,6 +592,8 @@ impl ChunkState {
             realized_mbs: self.realized_mbs,
             realized_max_delay: self.realized_max,
             is_head,
+            delay_hist: self.delay_hist.clone(),
+            delay_samples: self.delay_samples.clone(),
         }
     }
 }
@@ -574,6 +619,11 @@ struct Worker {
     pending_evals: VecDeque<(usize, u32, Vec<f32>)>,
     sent_stop: bool,
     idle_s: f64,
+    /// Per-thread span buffer (lock-free: owned by this thread only,
+    /// handed back through the [`WorkerReport`] at join).
+    rec: trace::Recorder,
+    /// `(global update, pending-buffer depth)` sampled at each Update.
+    queue_samples: Vec<(u64, u32)>,
     /// Planned fault: die right after completing this global update.
     kill_at: Option<u64>,
     /// Planned perturbations: (global update, sleep millis).
@@ -677,6 +727,7 @@ impl Worker {
                 Err(_) => return Ok(None),
             };
             self.idle_s += t0.elapsed().as_secs_f64();
+            self.rec.push(SpanKind::Idle, chunk as i64, mb as i64, -1, t0, 0);
             match msg {
                 Msg::Fwd { chunk: c, mb: m, x } => {
                     self.pending_fwd.insert((c, m), x);
@@ -704,6 +755,7 @@ impl Worker {
                 Err(_) => return Ok(None),
             };
             self.idle_s += t0.elapsed().as_secs_f64();
+            self.rec.push(SpanKind::Idle, chunk as i64, mb as i64, -1, t0, 0);
             match msg {
                 Msg::Fwd { chunk: c, mb: m, x } => {
                     self.pending_fwd.insert((c, m), x);
@@ -724,6 +776,13 @@ impl Worker {
         let li = self.index[&chunk];
         let spec = self.chunks[li].spec;
         let is_head = self.is_head(&spec);
+        let step = self.chunks[li].updates as i64;
+        // Fwd span: embed (source chunks) + block forwards. For
+        // non-source chunks the clock starts after the recv returns,
+        // so the recv wait stays in its own Idle spans and the
+        // timeline never overlaps.
+        let mut t_fwd = Instant::now();
+        let mut d0 = self.chunks[li].rt.total_dispatches();
         let x0: Vec<f32> = if spec.seq == 0 {
             let (toks, tgts) = self.chunks[li].batch_for(mb);
             if is_head {
@@ -739,12 +798,17 @@ impl Worker {
                 let (_toks, tgts) = self.chunks[li].batch_for(mb);
                 self.chunks[li].pending_targets.insert(mb, tgts);
             }
-            match self.recv_fwd(chunk, mb)? {
+            let x = match self.recv_fwd(chunk, mb)? {
                 Some(x) => x,
                 None => return Ok(false),
-            }
+            };
+            t_fwd = Instant::now();
+            d0 = self.chunks[li].rt.total_dispatches();
+            x
         };
         let x = self.chunks[li].forward_blocks(mb, x0)?;
+        let n_disp = self.chunks[li].rt.total_dispatches() - d0;
+        self.rec.push(SpanKind::Fwd, chunk as i64, mb as i64, step, t_fwd, n_disp);
         if is_head {
             self.chunks[li].head_x.insert(mb, x);
         } else {
@@ -773,6 +837,11 @@ impl Worker {
                 None => return Ok(false),
             }
         };
+        // Bwd span: head loss + block backwards + embedding backward
+        // (the recv wait above already landed in Idle spans).
+        let step = self.chunks[li].updates as i64;
+        let t_bwd = Instant::now();
+        let d0 = self.chunks[li].rt.total_dispatches();
         let (grads, dx) = match self.chunks[li].backward_core(mb, dx_in)? {
             Some(out) => out,
             None => return Ok(false), // diverged
@@ -790,13 +859,20 @@ impl Worker {
         } else {
             self.chunks[li].accumulate(mb, grads, Some(&dx))?;
         }
+        let n_disp = self.chunks[li].rt.total_dispatches() - d0;
+        self.rec.push(SpanKind::Bwd, chunk as i64, mb as i64, step, t_bwd, n_disp);
         Ok(true)
     }
 
     /// Execute one Update action. `false` = wind down (peer hung up).
     fn do_update(&mut self, chunk: usize) -> Result<bool> {
         let li = self.index[&chunk];
-        let (applied, idle) = self.chunks[li].apply_update()?;
+        let depth = (self.pending_fwd.len() + self.pending_bwd.len()) as u32;
+        self.queue_samples.push((self.chunks[li].updates + 1, depth));
+        let (applied, idle) = {
+            let c = &mut self.chunks[li];
+            c.apply_update(&mut self.rec)?
+        };
         self.idle_s += idle;
         if !applied {
             return Ok(false);
@@ -904,6 +980,8 @@ impl Worker {
         for c in &self.chunks {
             chunks.push(c.report(self.is_head(&c.spec)));
         }
+        let spans = self.rec.take_spans();
+        let queue_samples = std::mem::take(&mut self.queue_samples);
         Ok((
             WorkerReport {
                 replica: self.replica,
@@ -911,6 +989,8 @@ impl Worker {
                 compute_s: self.chunks.iter().map(|c| c.compute_s).sum(),
                 idle_s: self.idle_s,
                 chunks,
+                spans,
+                queue_samples,
             },
             exports,
         ))
@@ -1060,6 +1140,9 @@ pub fn train_engine_segment(
         .collect();
 
     let t0 = Instant::now();
+    // Shared span epoch: every worker thread stamps its spans against
+    // the same origin, so per-thread timelines merge into one trace.
+    let epoch = t0;
     let mut handles = Vec::new();
     for rep in 0..r_count {
         let mut txs: Vec<Sender<Msg>> = Vec::new();
@@ -1226,6 +1309,8 @@ pub fn train_engine_segment(
                             pending_mbs: Vec::new(),
                             realized_mbs: 0,
                             realized_max: 0,
+                            delay_hist: Vec::new(),
+                            delay_samples: Vec::new(),
                             diverged: false,
                             rt,
                         });
@@ -1246,6 +1331,8 @@ pub fn train_engine_segment(
                         pending_evals: Default::default(),
                         sent_stop: false,
                         idle_s: 0.0,
+                        rec: trace::Recorder::new(epoch),
+                        queue_samples: Vec::new(),
                         kill_at,
                         inject_delays,
                         export,
@@ -1265,6 +1352,10 @@ pub fn train_engine_segment(
     let mut rep_records: Vec<Vec<(u64, f32)>> = vec![Vec::new(); r_count];
     let mut delay_rows: Vec<(usize, u64, u32)> = Vec::new();
     let mut chunk_exports: Vec<ChunkExport> = Vec::new();
+    let mut stale_hist_rows: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut stale_samples: Vec<(u64, u32)> = Vec::new();
+    let mut queue_all: Vec<(u64, u32)> = Vec::new();
+    let mut run_trace = trace::Trace::default();
     for (rep, w, h) in handles {
         let (wr, ex) = h
             .join()
@@ -1272,6 +1363,23 @@ pub fn train_engine_segment(
         chunk_exports.extend(ex);
         total_compute += wr.compute_s;
         total_idle += wr.idle_s;
+        let mut busy_s = 0.0;
+        let mut widle_s = 0.0;
+        for s in &wr.spans {
+            if s.kind.is_busy() {
+                busy_s += s.dur_us / 1e6;
+            } else {
+                widle_s += s.dur_us / 1e6;
+            }
+        }
+        result.stage_spans.push(StageSpan {
+            replica: rep,
+            worker: w,
+            busy_s,
+            idle_s: widle_s,
+            spans: wr.spans.len() as u64,
+        });
+        queue_all.extend(wr.queue_samples.iter().copied());
         for cr in &wr.chunks {
             result.dispatches += cr.dispatches;
             result.optimizer_state_elems += cr.state_elems;
@@ -1291,12 +1399,18 @@ pub fn train_engine_segment(
             }
             if rep == 0 {
                 delay_rows.push((cr.chunk, cr.realized_mbs, cr.realized_max_delay));
+                stale_hist_rows.push((cr.chunk, cr.delay_hist.clone()));
+                stale_samples.extend(cr.delay_samples.iter().copied());
             }
         }
+        run_trace.push_thread(rep as u64, w as u64, format!("r{rep}/w{w}"), wr.spans);
     }
     result.stage_counters.sort_by_key(|c| (c.replica, c.stage));
+    result.stage_spans.sort_by_key(|s| (s.replica, s.worker));
     delay_rows.sort_by_key(|&(c, _, _)| c);
     result.realized_delays = delay_rows;
+    stale_hist_rows.sort_by_key(|&(c, _)| c);
+    result.staleness_histogram = stale_hist_rows;
 
     // Per-step losses: group each replica's head-chunk records by
     // optimizer step (mb / mpu), keep complete groups only (early
@@ -1357,6 +1471,49 @@ pub fn train_engine_segment(
         * mcfg.batch as f64
         * mcfg.seq as f64)
         / result.wall_secs;
+
+    if let Some(path) = &cfg.trace {
+        run_trace.write_chrome(path)?;
+    }
+    if let Some(path) = &cfg.metrics {
+        let mut reg = crate::metrics::Registry::new();
+        reg.inc("dispatches", result.dispatches);
+        reg.gauge("tokens_per_sec", result.tokens_per_sec);
+        reg.gauge("bubble_frac", result.bubble_frac);
+        for &(_, d) in &stale_samples {
+            reg.observe("staleness", d as f64);
+        }
+        for sp in &result.stage_spans {
+            let tot = sp.busy_s + sp.idle_s;
+            if tot > 0.0 {
+                reg.gauge(&format!("idle_frac/r{}w{}", sp.replica, sp.worker), sp.idle_s / tot);
+            }
+        }
+        let mut stale_by_step: HashMap<u64, Vec<u32>> = HashMap::new();
+        for &(u, d) in &stale_samples {
+            stale_by_step.entry(u).or_default().push(d);
+        }
+        let mut queue_by_step: HashMap<u64, u32> = HashMap::new();
+        for &(u, q) in &queue_all {
+            let e = queue_by_step.entry(u).or_insert(0);
+            *e = (*e).max(q);
+        }
+        for (i, &loss) in result.losses.iter().enumerate() {
+            let u = start_u + i as u64 + 1;
+            let mut fields: Vec<(&str, f64)> =
+                vec![("loss", loss as f64), ("lr", cfg.lr_at(u as u32) as f64)];
+            if let Some(ds) = stale_by_step.get(&u) {
+                let mean = ds.iter().map(|&d| d as f64).sum::<f64>() / ds.len() as f64;
+                fields.push(("staleness_mean", mean));
+                fields.push(("staleness_max", ds.iter().copied().max().unwrap_or(0) as f64));
+            }
+            if let Some(&q) = queue_by_step.get(&u) {
+                fields.push(("queue_depth_max", q as f64));
+            }
+            reg.sample_step(u, &fields);
+        }
+        reg.write_jsonl(path)?;
+    }
 
     // Assemble the segment export: replica 0's chunks cover every part
     // exactly once (AMDP, the only multi-copy schedule, was rejected

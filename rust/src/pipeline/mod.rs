@@ -305,6 +305,7 @@ pub fn train_sim_observed(
         start_step = st.step;
     }
     let t0 = std::time::Instant::now();
+    let mut ckpt_latencies: Vec<(u64, f64)> = Vec::new();
 
     for t in (start_step + 1)..=cfg.steps as u64 {
         // One gradient per replica, all against the same stale views.
@@ -464,9 +465,14 @@ pub fn train_sim_observed(
             };
             let dir = cfg.checkpoint_dir.clone().unwrap_or_else(|| "checkpoints".into());
             let path = crate::checkpoint::step_path(std::path::Path::new(&dir), t);
+            let t_save = std::time::Instant::now();
             crate::checkpoint::save(&path, &st)?;
+            ckpt_latencies.push((t, t_save.elapsed().as_secs_f64()));
             if cfg.log_every > 0 {
-                println!("  [ckpt] step {t} -> {}", path.display());
+                crate::trace::progress(format!(
+                    "  [ckpt] step {t} -> {}",
+                    path.display()
+                ));
             }
         }
     }
@@ -494,6 +500,46 @@ pub fn train_sim_observed(
     ) {
         result.bubble_frac_model = stats.bubble;
         result.realized_delays = schedule::summarize_delays(&stats.delays);
+        // Staleness histogram from the virtual-clock delays: the sim
+        // has no threaded workers, so the schedule model's realized
+        // per-microbatch delays stand in for the engine's measurements
+        // (they agree — the engine replays the same action streams).
+        let mut hist: std::collections::BTreeMap<usize, Vec<u64>> =
+            std::collections::BTreeMap::new();
+        for &(c, _mb, d) in &stats.delays {
+            let row = hist.entry(c).or_default();
+            let d = d as usize;
+            if row.len() <= d {
+                row.resize(d + 1, 0);
+            }
+            row[d] += 1;
+        }
+        result.staleness_histogram = hist.into_iter().collect();
+        // Virtual-clock span timeline (model trace): same Chrome span
+        // format as the engine's wall-clock trace, 1 ms per unit slot.
+        if let Some(path) = &cfg.trace {
+            schedule::stats_to_trace(&stats).write_chrome(path)?;
+        }
+    }
+    if let Some(path) = &cfg.metrics {
+        let mut reg = crate::metrics::Registry::new();
+        reg.inc("dispatches", result.dispatches);
+        reg.gauge("bubble_frac_model", result.bubble_frac_model);
+        for &(_, secs) in &ckpt_latencies {
+            reg.observe("checkpoint_write_s", secs);
+        }
+        let ckpt_by_step: std::collections::HashMap<u64, f64> =
+            ckpt_latencies.iter().copied().collect();
+        for (i, &loss) in result.losses.iter().enumerate() {
+            let t = i as u64 + 1;
+            let mut fields: Vec<(&str, f64)> =
+                vec![("loss", loss as f64), ("lr", cfg.lr_at(t as u32) as f64)];
+            if let Some(&secs) = ckpt_by_step.get(&t) {
+                fields.push(("checkpoint_write_s", secs));
+            }
+            reg.sample_step(t, &fields);
+        }
+        reg.write_jsonl(path)?;
     }
     // Per-replica breakdown (the sim is whole-model, so stage = 0).
     // State accounting models the distributed system the sim stands in

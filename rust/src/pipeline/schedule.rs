@@ -603,6 +603,51 @@ pub struct ExecStats {
     pub delays: Vec<(usize, u64, u32)>,
     /// Updates executed per chunk.
     pub updates: Vec<u64>,
+    /// Virtual-clock span timeline per worker, in the engine's span
+    /// format (1 unit-cost slot = 1 ms), so model and wall-clock
+    /// Chrome traces are diffable side by side. Gaps between actions
+    /// become `Idle` spans; the cross-copy all-reduce wait before an
+    /// update becomes a `Reduce` span.
+    pub spans_by_worker: Vec<Vec<crate::trace::Span>>,
+}
+
+/// One virtual slot rendered as 1000 µs (1 ms) in the span timeline.
+const VSLOT_US: f64 = 1000.0;
+
+/// Append a virtual-clock span to worker `w`'s timeline, inserting an
+/// `Idle` span over any gap since the worker's last recorded end.
+fn push_vspan(
+    buf: &mut Vec<crate::trace::Span>,
+    last_end: &mut u64,
+    kind: crate::trace::SpanKind,
+    chunk: usize,
+    mb: i64,
+    step: i64,
+    start: u64,
+    dur: u64,
+) {
+    use crate::trace::{Span, SpanKind};
+    if start > *last_end {
+        buf.push(Span {
+            kind: SpanKind::Idle,
+            chunk: -1,
+            mb: -1,
+            step: -1,
+            ts_us: *last_end as f64 * VSLOT_US,
+            dur_us: (start - *last_end) as f64 * VSLOT_US,
+            n_disp: 0,
+        });
+    }
+    buf.push(Span {
+        kind,
+        chunk: chunk as i64,
+        mb,
+        step,
+        ts_us: start as f64 * VSLOT_US,
+        dur_us: dur as f64 * VSLOT_US,
+        n_disp: 0,
+    });
+    *last_end = (*last_end).max(start + dur);
 }
 
 /// Execute a schedule's per-worker action streams on a virtual clock
@@ -688,6 +733,8 @@ pub fn simulate(
     let mut delays = Vec::new();
     let mut busy = 0u64;
     let mut makespan = 0u64;
+    let mut spans_by_worker: Vec<Vec<crate::trace::Span>> = vec![Vec::new(); p];
+    let mut span_last_end = vec![0u64; p];
 
     let total: usize = actions.iter().map(|a| a.len()).sum();
     let mut done = 0usize;
@@ -725,6 +772,16 @@ pub fn simulate(
                     inflight[chunk] += 1;
                     max_stash[chunk] = max_stash[chunk].max(inflight[chunk] as usize);
                     u_at_fwd.insert((chunk, mb), upd_done[chunk]);
+                    push_vspan(
+                        &mut spans_by_worker[w],
+                        &mut span_last_end[w],
+                        crate::trace::SpanKind::Fwd,
+                        chunk,
+                        mb as i64,
+                        upd_done[chunk] as i64,
+                        start,
+                        1,
+                    );
                 }
                 Action::Bwd { mb, chunk } => {
                     let c = by_id[&chunk];
@@ -754,6 +811,16 @@ pub fn simulate(
                     inflight[chunk] -= 1;
                     pending_mbs[chunk].push(mb);
                     bwd_ends[chunk].push(start + 1);
+                    push_vspan(
+                        &mut spans_by_worker[w],
+                        &mut span_last_end[w],
+                        crate::trace::SpanKind::Bwd,
+                        chunk,
+                        mb as i64,
+                        upd_done[chunk] as i64,
+                        start,
+                        1,
+                    );
                 }
                 Action::Update { chunk } => {
                     let c = by_id[&chunk];
@@ -782,7 +849,30 @@ pub fn simulate(
                     if pending_copy {
                         continue;
                     }
+                    if sync > free[w] {
+                        // blocking cross-copy all-reduce wait
+                        push_vspan(
+                            &mut spans_by_worker[w],
+                            &mut span_last_end[w],
+                            crate::trace::SpanKind::Reduce,
+                            chunk,
+                            -1,
+                            (upd_done[chunk] + 1) as i64,
+                            free[w],
+                            sync - free[w],
+                        );
+                    }
                     free[w] = free[w].max(sync);
+                    push_vspan(
+                        &mut spans_by_worker[w],
+                        &mut span_last_end[w],
+                        crate::trace::SpanKind::Update,
+                        chunk,
+                        -1,
+                        (upd_done[chunk] + 1) as i64,
+                        free[w],
+                        0,
+                    );
                     let u = upd_done[chunk];
                     for mb in pending_mbs[chunk].drain(..) {
                         let seen = u_at_fwd[&(chunk, mb)];
@@ -845,7 +935,19 @@ pub fn simulate(
         max_stash,
         delays,
         updates: upd_done,
+        spans_by_worker,
     })
+}
+
+/// Render an [`ExecStats`] span set as a [`crate::trace::Trace`]
+/// (pid 0, one tid per worker) — the model-side counterpart of the
+/// engine's wall-clock trace.
+pub fn stats_to_trace(stats: &ExecStats) -> crate::trace::Trace {
+    let mut tr = crate::trace::Trace::default();
+    for (w, spans) in stats.spans_by_worker.iter().enumerate() {
+        tr.push_thread(0, w as u64, format!("model/w{w}"), spans.clone());
+    }
+    tr
 }
 
 /// Collapse per-(chunk, microbatch) realized delays into per-chunk

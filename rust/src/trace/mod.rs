@@ -1,0 +1,352 @@
+//! Dependency-free observability: per-worker span timelines flushed to
+//! Chrome `trace_event` JSON (loadable in `chrome://tracing` or
+//! Perfetto), plus the stderr progress-log layer the CLI routes
+//! human-readable status lines through so stdout stays clean for
+//! piped CSV/JSON.
+//!
+//! Span model: every engine worker owns a [`Recorder`] — a per-thread
+//! buffer with no locks or atomics; spans are pushed by the owning
+//! thread only and handed back to the driver when the thread joins.
+//! The virtual-clock executor in `pipeline::schedule::simulate` emits
+//! the same [`Span`] type (1 unit-cost slot = 1 ms of virtual time),
+//! so model and wall-clock timelines are directly diffable.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// What a span measures. `Idle` covers blocking channel receives and
+/// the data-parallel all-reduce wait (`Reduce`), which is accounted
+/// separately so DP sync cost is visible; everything else is busy time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Fwd,
+    Bwd,
+    Update,
+    Reduce,
+    Idle,
+    Checkpoint,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Fwd => "Fwd",
+            SpanKind::Bwd => "Bwd",
+            SpanKind::Update => "Update",
+            SpanKind::Reduce => "Reduce",
+            SpanKind::Idle => "Idle",
+            SpanKind::Checkpoint => "Checkpoint",
+        }
+    }
+
+    pub fn is_busy(self) -> bool {
+        !matches!(self, SpanKind::Idle | SpanKind::Reduce)
+    }
+}
+
+/// One closed interval on a worker's timeline. `chunk`/`mb` are -1 when
+/// not applicable (e.g. idle waits), `step` is the optimizer update the
+/// work belongs to, and `n_disp` counts runtime executable dispatches
+/// performed inside the span (sums to `RunResult.dispatches` when eval
+/// is off, since every dispatch happens inside some span).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub chunk: i64,
+    pub mb: i64,
+    pub step: i64,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub n_disp: u64,
+}
+
+impl serde::Serialize for Span {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"kind\":\"{}\",\"chunk\":{},\"mb\":{},\"step\":{},\"ts_us\":{},\"dur_us\":{},\"n_disp\":{}}}",
+            self.kind.name(),
+            self.chunk,
+            self.mb,
+            self.step,
+            crate::jsonio::num(self.ts_us).to_string(),
+            crate::jsonio::num(self.dur_us).to_string(),
+            self.n_disp
+        )
+    }
+}
+
+/// Per-thread span buffer. Owned by exactly one thread; push is a plain
+/// `Vec::push` (no locks, no atomics). The shared `epoch` Instant is
+/// captured once by the driver before spawning so all threads' `ts_us`
+/// share an origin.
+pub struct Recorder {
+    epoch: Instant,
+    spans: Vec<Span>,
+}
+
+impl Recorder {
+    pub fn new(epoch: Instant) -> Recorder {
+        Recorder { epoch, spans: Vec::new() }
+    }
+
+    /// Timestamp helper: callers grab `Instant::now()` themselves when
+    /// they already measure (so span and metric share one clock read).
+    pub fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    /// Record a span that started at `t0` and ends now.
+    pub fn push(&mut self, kind: SpanKind, chunk: i64, mb: i64, step: i64, t0: Instant, n_disp: u64) {
+        let ts_us = t0.duration_since(self.epoch).as_secs_f64() * 1e6;
+        let dur_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.spans.push(Span { kind, chunk, mb, step, ts_us, dur_us, n_disp });
+    }
+
+    /// Record a span with explicit (virtual-clock) timestamps in µs.
+    pub fn push_virtual(&mut self, kind: SpanKind, chunk: i64, mb: i64, step: i64, ts_us: f64, dur_us: f64) {
+        self.spans.push(Span { kind, chunk, mb, step, ts_us, dur_us, n_disp: 0 });
+    }
+
+    pub fn into_spans(self) -> Vec<Span> {
+        self.spans
+    }
+
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        std::mem::take(&mut self.spans)
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+}
+
+/// One timeline row in the output: a (pid, tid) pair plus its spans.
+/// The engine maps replica -> pid and worker -> tid; the virtual-clock
+/// executor uses pid 0.
+pub struct ThreadTrace {
+    pub pid: u64,
+    pub tid: u64,
+    pub name: String,
+    pub spans: Vec<Span>,
+}
+
+/// A full run's trace: every thread's spans plus process metadata,
+/// writable as Chrome `trace_event` JSON.
+#[derive(Default)]
+pub struct Trace {
+    pub threads: Vec<ThreadTrace>,
+}
+
+/// One Chrome `trace_event` entry ("X" = complete event). Serialized
+/// with the vendored serde derive; field names match the trace_event
+/// spec (`ph`, `ts`, `dur` in µs).
+#[derive(serde::Serialize)]
+struct Event {
+    name: String,
+    cat: String,
+    ph: String,
+    ts: f64,
+    dur: f64,
+    pid: u64,
+    tid: u64,
+    args: EventArgs,
+}
+
+#[derive(serde::Serialize)]
+struct EventArgs {
+    chunk: i64,
+    mb: i64,
+    step: i64,
+    n_disp: u64,
+}
+
+impl Trace {
+    pub fn push_thread(&mut self, pid: u64, tid: u64, name: impl Into<String>, spans: Vec<Span>) {
+        self.threads.push(ThreadTrace { pid, tid, name: name.into(), spans });
+    }
+
+    /// Sum of busy (Fwd/Bwd/Update/Checkpoint) and idle (Idle/Reduce)
+    /// span seconds per thread, in `threads` order.
+    pub fn busy_idle(&self) -> Vec<(f64, f64)> {
+        self.threads
+            .iter()
+            .map(|t| {
+                let mut busy = 0.0;
+                let mut idle = 0.0;
+                for s in &t.spans {
+                    if s.kind.is_busy() {
+                        busy += s.dur_us / 1e6;
+                    } else {
+                        idle += s.dur_us / 1e6;
+                    }
+                }
+                (busy, idle)
+            })
+            .collect()
+    }
+
+    /// Serialize to Chrome `trace_event` JSON (object form with a
+    /// `traceEvents` array plus `thread_name` metadata events).
+    pub fn to_chrome_json(&self) -> String {
+        use serde::Serialize;
+        let mut events: Vec<String> = Vec::new();
+        for t in &self.threads {
+            // thread_name metadata event ("M" phase) labels the row.
+            events.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\"args\":{{\"name\":{}}}}}",
+                t.pid,
+                t.tid,
+                t.name.to_json()
+            ));
+            for s in &t.spans {
+                let ev = Event {
+                    name: s.kind.name().to_string(),
+                    cat: "abrot".to_string(),
+                    ph: "X".to_string(),
+                    ts: s.ts_us,
+                    dur: s.dur_us,
+                    pid: t.pid,
+                    tid: t.tid,
+                    args: EventArgs { chunk: s.chunk, mb: s.mb, step: s.step, n_disp: s.n_disp },
+                };
+                events.push(ev.to_json());
+            }
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}",
+            events.join(",")
+        )
+    }
+
+    pub fn write_chrome(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_chrome_json().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Append extra events (e.g. driver-side `Checkpoint` spans recorded
+/// after per-segment traces were flushed) to an existing Chrome trace
+/// file, re-parsing it with the in-crate JSON parser. Creates the file
+/// if it does not exist.
+pub fn append_events(path: impl AsRef<Path>, pid: u64, tid: u64, name: &str, spans: &[Span]) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let mut extra = Trace::default();
+    extra.push_thread(pid, tid, name, spans.to_vec());
+    if !path.exists() {
+        return extra.write_chrome(path);
+    }
+    let text = std::fs::read_to_string(path)?;
+    let parsed = crate::jsonio::Json::parse(&text).map_err(anyhow::Error::msg)?;
+    let existing = parsed.at("traceEvents");
+    let mut events: Vec<String> = existing.as_arr().iter().map(|e| e.to_string()).collect();
+    let extra_json = extra.to_chrome_json();
+    let extra_parsed = crate::jsonio::Json::parse(&extra_json).map_err(anyhow::Error::msg)?;
+    for e in extra_parsed.at("traceEvents").as_arr() {
+        events.push(e.to_string());
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(
+        format!("{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}", events.join(",")).as_bytes(),
+    )?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Progress log layer
+// ---------------------------------------------------------------------------
+
+/// Human-readable progress line on stderr. Everything that used to
+/// `println!` status mid-run (`[ckpt] step …`, `[elastic] …`) routes
+/// through here so stdout stays machine-parseable (piped CSV/JSON).
+pub fn progress(msg: impl AsRef<str>) {
+    eprintln!("{}", msg.as_ref());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, ts: f64, dur: f64) -> Span {
+        Span { kind, chunk: 0, mb: 1, step: 2, ts_us: ts, dur_us: dur, n_disp: 3 }
+    }
+
+    #[test]
+    fn trace_chrome_json_roundtrips_through_jsonio() {
+        let mut tr = Trace::default();
+        tr.push_thread(0, 1, "r0/w1", vec![span(SpanKind::Fwd, 10.0, 5.0), span(SpanKind::Idle, 15.0, 2.0)]);
+        let json = tr.to_chrome_json();
+        let parsed = crate::jsonio::Json::parse(&json).unwrap();
+        let evs = parsed.at("traceEvents").as_arr();
+        // 1 metadata + 2 spans
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].at("ph").as_str(), "M");
+        assert_eq!(evs[1].at("name").as_str(), "Fwd");
+        assert_eq!(evs[1].at("ph").as_str(), "X");
+        assert!((evs[1].at("ts").as_f64() - 10.0).abs() < 1e-9);
+        assert!((evs[1].at("dur").as_f64() - 5.0).abs() < 1e-9);
+        assert_eq!(evs[1].at("args").at("mb").as_i64(), 1);
+        assert_eq!(evs[1].at("args").at("n_disp").as_usize(), 3);
+        assert_eq!(evs[2].at("name").as_str(), "Idle");
+    }
+
+    #[test]
+    fn trace_busy_idle_split() {
+        let mut tr = Trace::default();
+        tr.push_thread(
+            0,
+            0,
+            "w0",
+            vec![
+                span(SpanKind::Fwd, 0.0, 3e6),
+                span(SpanKind::Idle, 3e6, 1e6),
+                span(SpanKind::Reduce, 4e6, 1e6),
+            ],
+        );
+        let bi = tr.busy_idle();
+        assert_eq!(bi.len(), 1);
+        assert!((bi[0].0 - 3.0).abs() < 1e-9);
+        assert!((bi[0].1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_append_events_merges() {
+        let dir = std::env::temp_dir().join("abrot_trace_append");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        std::fs::remove_file(&p).ok();
+        let mut tr = Trace::default();
+        tr.push_thread(0, 0, "w0", vec![span(SpanKind::Fwd, 0.0, 1.0)]);
+        tr.write_chrome(&p).unwrap();
+        append_events(&p, 9, 9, "ckpt", &[span(SpanKind::Checkpoint, 5.0, 1.0)]).unwrap();
+        let parsed = crate::jsonio::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let evs = parsed.at("traceEvents").as_arr();
+        // (meta + Fwd) + (meta + Checkpoint)
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[3].at("name").as_str(), "Checkpoint");
+        assert_eq!(evs[3].at("pid").as_usize(), 9);
+    }
+
+    #[test]
+    fn trace_recorder_spans_are_ordered() {
+        let epoch = Instant::now();
+        let mut rec = Recorder::new(epoch);
+        let t0 = rec.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        rec.push(SpanKind::Fwd, 0, 0, 1, t0, 4);
+        let t1 = rec.now();
+        rec.push(SpanKind::Idle, -1, -1, 1, t1, 0);
+        let spans = rec.into_spans();
+        assert_eq!(spans.len(), 2);
+        assert!(spans[0].dur_us >= 1000.0);
+        // second span starts at or after the first ends
+        assert!(spans[1].ts_us >= spans[0].ts_us + spans[0].dur_us - 1.0);
+    }
+}

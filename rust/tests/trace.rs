@@ -1,0 +1,284 @@
+//! Integration tests for the observability subsystem (`rust/src/trace/`,
+//! `rust/src/metrics/registry.rs`, `rust/src/bench/` snapshots):
+//!
+//! * Engine span timelines (`--trace`): the Chrome trace_event JSON
+//!   parses with the in-crate parser, spans never overlap within a
+//!   worker thread, per-span dispatch counts sum to the run's total,
+//!   and the busy/idle split agrees with the wall-clock `bubble_frac`.
+//! * Staleness accounting: the per-chunk realized-delay histogram's
+//!   steady-state mode equals the schedule's declared chunk delay.
+//! * Step metrics (`--metrics`): JSONL rows parse, carry monotone
+//!   1-based steps, and cover every optimizer step.
+//! * Virtual-clock traces: the schedule model executor emits the same
+//!   span format (slot-aligned timestamps, `model/w{w}` thread rows).
+//! * Committed perf baselines: `benchmarks/BENCH_*.json` load through
+//!   the vendored serde path, validate, and self-compare clean.
+//!
+//! All test names carry the `trace_` prefix so the CI fast-path job
+//! can run exactly this battery (`cargo test --release -q trace_`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use abrot::bench;
+use abrot::config::{Method, ScheduleKind, TrainCfg};
+use abrot::coordinator::{Coordinator, Experiment};
+use abrot::jsonio::Json;
+use abrot::metrics::RunResult;
+use abrot::pipeline::schedule;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Per-test scratch dir, wiped on entry so a crashed previous run
+/// cannot leak stale trace files into this one.
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("abrot_trace_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const STEPS: u32 = 12;
+const P: usize = 4;
+
+/// Run the threaded engine on pico8 with tracing + metrics enabled.
+/// `eval_every: 0` keeps every runtime dispatch inside some span, so
+/// the per-span `n_disp` counts must sum to `RunResult.dispatches`.
+fn engine_run(kind: ScheduleKind, dir: &std::path::Path) -> (RunResult, String, String) {
+    let trace_path = dir.join("trace.json").to_string_lossy().into_owned();
+    let metrics_path = dir.join("metrics.jsonl").to_string_lossy().into_owned();
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stages: P,
+        steps: STEPS,
+        lr: 1e-2,
+        seed: 7,
+        eval_every: 0,
+        log_every: 0,
+        schedule: kind,
+        trace: Some(trace_path.clone()),
+        metrics: Some(metrics_path.clone()),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(root());
+    let res = coord
+        .run_engine(&Experiment { model: "pico8".to_string(), train: cfg })
+        .unwrap();
+    (res, trace_path, metrics_path)
+}
+
+/// Shared assertion battery over an engine run's trace + metrics files.
+fn check_engine_observability(kind: ScheduleKind, tag: &str) {
+    let dir = tdir(tag);
+    let (res, trace_path, metrics_path) = engine_run(kind, &dir);
+    assert!(res.dispatches > 0);
+    assert_eq!(res.losses.len(), STEPS as usize);
+
+    // ---- trace file: parse with the in-crate parser ----------------
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.at("displayTimeUnit").as_str(), "ms");
+    let evs = parsed.at("traceEvents").as_arr();
+
+    let mut by_thread: HashMap<(usize, usize), Vec<(f64, f64)>> = HashMap::new();
+    let mut n_disp_sum = 0u64;
+    let (mut busy_us, mut idle_us) = (0.0f64, 0.0f64);
+    let mut names_seen: Vec<String> = Vec::new();
+    for e in evs.iter() {
+        if e.at("ph").as_str() != "X" {
+            continue;
+        }
+        let name = e.at("name").as_str();
+        if !names_seen.iter().any(|n| n == name) {
+            names_seen.push(name.to_string());
+        }
+        let ts = e.at("ts").as_f64();
+        let dur = e.at("dur").as_f64();
+        assert!(ts >= 0.0 && dur >= 0.0, "negative span geometry");
+        n_disp_sum += e.at("args").at("n_disp").as_usize() as u64;
+        if name == "Idle" || name == "Reduce" {
+            idle_us += dur;
+        } else {
+            busy_us += dur;
+        }
+        by_thread
+            .entry((e.at("pid").as_usize(), e.at("tid").as_usize()))
+            .or_default()
+            .push((ts, dur));
+    }
+    // R=1 => one timeline row per worker thread.
+    assert_eq!(by_thread.len(), P, "expected {P} worker timelines");
+    assert!(names_seen.iter().any(|n| n == "Fwd"));
+    assert!(names_seen.iter().any(|n| n == "Bwd"));
+    assert!(names_seen.iter().any(|n| n == "Update"));
+
+    // Spans on one thread never overlap (0.5 µs float slack).
+    for ((pid, tid), spans) in by_thread.iter_mut() {
+        spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in spans.windows(2) {
+            assert!(
+                w[1].0 >= w[0].0 + w[0].1 - 0.5,
+                "overlapping spans on r{pid}/w{tid}: [{} +{}] then [{}]",
+                w[0].0,
+                w[0].1,
+                w[1].0
+            );
+        }
+    }
+
+    // Every dispatch happened inside some span (eval is off).
+    assert_eq!(n_disp_sum, res.dispatches, "span n_disp must sum to RunResult.dispatches");
+
+    // The trace's busy/idle split is the same measurement the engine
+    // folds into bubble_frac; they agree within 5 points.
+    let span_bubble = idle_us / (busy_us + idle_us);
+    assert!(
+        (span_bubble - res.bubble_frac).abs() < 0.05,
+        "span bubble {span_bubble:.4} vs wall-clock bubble {:.4}",
+        res.bubble_frac
+    );
+
+    // RunResult.stage_spans is the same data aggregated per worker.
+    assert_eq!(res.stage_spans.len(), P);
+    let busy_rs: f64 = res.stage_spans.iter().map(|s| s.busy_s).sum();
+    let idle_rs: f64 = res.stage_spans.iter().map(|s| s.idle_s).sum();
+    assert!((busy_rs - busy_us / 1e6).abs() < 1e-6, "stage_spans busy != trace busy");
+    assert!((idle_rs - idle_us / 1e6).abs() < 1e-6, "stage_spans idle != trace idle");
+    for sp in &res.stage_spans {
+        assert!(sp.spans > 0, "worker {} recorded no spans", sp.worker);
+    }
+
+    // ---- staleness histogram: steady-state mode == declared delay --
+    let sched = schedule::build(kind);
+    let specs = sched.chunks(P);
+    assert_eq!(res.staleness_histogram.len(), specs.len());
+    for (chunk, hist) in &res.staleness_histogram {
+        let spec = specs.iter().find(|s| s.id == *chunk).unwrap();
+        assert!(hist.iter().sum::<u64>() > 0, "chunk {chunk} histogram is empty");
+        let mode = hist
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(
+            mode, spec.delay as usize,
+            "chunk {chunk}: histogram mode {mode} != declared delay {}",
+            spec.delay
+        );
+    }
+
+    // ---- metrics JSONL: monotone 1-based steps covering the run ----
+    let mtext = std::fs::read_to_string(&metrics_path).unwrap();
+    let mut prev = 0u64;
+    let mut rows = 0usize;
+    for line in mtext.lines() {
+        let row = Json::parse(line).unwrap();
+        let step = row.at("step").as_usize() as u64;
+        assert!(step > prev, "steps must be strictly monotone");
+        prev = step;
+        assert!(row.at("loss").as_f64().is_finite());
+        assert!(row.at("lr").as_f64() > 0.0);
+        rows += 1;
+    }
+    assert_eq!(rows, res.losses.len());
+    assert_eq!(prev, STEPS as u64);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_engine_1f1b_timeline_consistent() {
+    check_engine_observability(ScheduleKind::OneFOneB, "eng_1f1b");
+}
+
+#[test]
+fn trace_engine_interleaved_timeline_consistent() {
+    check_engine_observability(ScheduleKind::Interleaved { v: 2 }, "eng_il2");
+}
+
+#[test]
+fn trace_sim_virtual_clock_timeline() {
+    let dir = tdir("sim");
+    let trace_path = dir.join("trace.json").to_string_lossy().into_owned();
+    let metrics_path = dir.join("metrics.jsonl").to_string_lossy().into_owned();
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stages: P,
+        steps: STEPS,
+        lr: 1e-2,
+        seed: 7,
+        eval_every: 0,
+        log_every: 0,
+        trace: Some(trace_path.clone()),
+        metrics: Some(metrics_path.clone()),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(root());
+    let res = coord
+        .run(&Experiment { model: "pico8".to_string(), train: cfg })
+        .unwrap();
+    assert_eq!(res.losses.len(), STEPS as usize);
+
+    let parsed = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let evs = parsed.at("traceEvents").as_arr();
+    // One `model/w{w}` metadata row per worker.
+    let mut meta_names: Vec<String> = Vec::new();
+    let mut n_x = 0usize;
+    for e in evs.iter() {
+        match e.at("ph").as_str() {
+            "M" => meta_names.push(e.at("args").at("name").as_str().to_string()),
+            "X" => {
+                // virtual clock: 1 unit-cost slot = 1 ms, so every
+                // timestamp/duration is a whole number of 1000 µs slots
+                let ts = e.at("ts").as_f64();
+                let dur = e.at("dur").as_f64();
+                assert!((ts % 1000.0).abs() < 1e-9, "off-slot ts {ts}");
+                assert!((dur % 1000.0).abs() < 1e-9, "off-slot dur {dur}");
+                n_x += 1;
+            }
+            _ => {}
+        }
+    }
+    assert!(n_x > 0, "virtual-clock trace has no spans");
+    for w in 0..P {
+        let want = format!("model/w{w}");
+        assert!(meta_names.iter().any(|n| n == &want), "missing thread row {want}");
+    }
+
+    // Sim metrics rows: monotone steps with loss + lr.
+    let mut prev = 0u64;
+    let mut rows = 0usize;
+    for line in std::fs::read_to_string(&metrics_path).unwrap().lines() {
+        let row = Json::parse(line).unwrap();
+        let step = row.at("step").as_usize() as u64;
+        assert!(step > prev);
+        prev = step;
+        assert!(row.at("loss").as_f64().is_finite());
+        rows += 1;
+    }
+    assert_eq!(rows, STEPS as usize);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_bench_baselines_validate_and_self_compare() {
+    for name in ["BENCH_engine.json", "BENCH_kernels.json"] {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benchmarks").join(name);
+        let snap = bench::load_snapshot(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        bench::validate_snapshot(&snap).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!snap.results.is_empty());
+        // A snapshot compared against itself is regression-free and
+        // fully matched — pins the comparison helper's plumbing.
+        let cmp = bench::compare_snapshots(&snap, &snap, 1.5);
+        assert!(cmp.host_match);
+        assert!(cmp.regressions().is_empty());
+        assert!(cmp.only_baseline.is_empty());
+        assert!(cmp.only_current.is_empty());
+        for d in &cmp.deltas {
+            assert!((d.ratio - 1.0).abs() < 1e-12);
+        }
+    }
+}
