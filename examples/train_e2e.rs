@@ -29,6 +29,12 @@
 //!
 //!     --trace PATH           Chrome trace_event span timeline JSON
 //!     --metrics PATH         per-step run metrics JSONL
+//!
+//! Threading:
+//!
+//!     --threads N            kernel pool budget (default auto; the
+//!                            engine splits it across P x R stage
+//!                            workers; results are bit-identical)
 
 use abrot::config::{Method, ScheduleKind, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
@@ -108,6 +114,20 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    // --threads N (kernel pool budget; 0/absent = auto)
+    let mut threads: usize = 0;
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        match args.get(i + 1).and_then(|x| x.parse::<usize>().ok()) {
+            Some(n) => {
+                threads = n;
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--threads expects a number; using auto");
+                args.remove(i);
+            }
+        }
+    }
     // --schedule S (gpipe | 1f1b | interleaved[:V] | amdp)
     let mut schedule = ScheduleKind::OneFOneB;
     if let Some(i) = args.iter().position(|a| a == "--schedule") {
@@ -126,12 +146,15 @@ fn main() -> anyhow::Result<()> {
     let model = args.get(2).cloned().unwrap_or_else(|| "pico32".to_string());
     let stages: usize = args.get(3).and_then(|x| x.parse().ok()).unwrap_or(32);
 
+    abrot::runtime::pool::set_global_threads(abrot::runtime::pool::ThreadCfg::new(threads));
+
     let mut coord = Coordinator::new("artifacts");
     let base = TrainCfg {
         stages,
         replicas,
         steps,
         schedule,
+        threads,
         lr: 1e-2,
         seed: 1234,
         eval_every: (steps / 6).max(1),
@@ -141,8 +164,9 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!(
-        "=== e2e: {model}, P={stages}, R={replicas}, schedule={}, {steps} steps/microbatches ===\n",
-        schedule.name()
+        "=== e2e: {model}, P={stages}, R={replicas}, schedule={}, threads={}, {steps} steps/microbatches ===\n",
+        schedule.name(),
+        abrot::runtime::pool::kernel_threads()
     );
 
     // 1. Real pipelined engine (async PipeDream execution model),

@@ -15,13 +15,18 @@ use abrot::config::{Method, TrainCfg};
 use abrot::coordinator::{Coordinator, Experiment};
 use abrot::data::{BatchIter, Corpus};
 use abrot::pipeline::{train_sim, StashRing};
+use abrot::runtime::pool::{set_global_threads, ThreadCfg};
 use abrot::runtime::Runtime;
 use abrot::tensor::Tensor;
 
+fn arg_after(key: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1).cloned())
+}
+
 /// `--json PATH` from the post-`--` bench args.
 fn json_path() -> Option<String> {
-    let argv: Vec<String> = std::env::args().collect();
-    argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned())
+    arg_after("--json")
 }
 
 /// A single timed run folded into the snapshot schema (degenerate
@@ -38,6 +43,12 @@ fn once_result(name: &str, per_iter_us: f64, iters: usize) -> BenchResult {
 
 fn main() {
     println!("== bench_pipeline ==");
+    // `--threads N` pins the kernel pool budget (0/absent = auto); the
+    // resolved value is recorded in the snapshot for benchcmp's gate.
+    let bench_threads: usize =
+        arg_after("--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    set_global_threads(ThreadCfg::new(bench_threads));
+    println!("threads: {}", abrot::runtime::pool::kernel_threads());
     let mut results: Vec<BenchResult> = Vec::new();
 
     // data pipeline
@@ -58,7 +69,14 @@ fn main() {
     // simulator step latency per method (pico8, P=4)
     let rt = Runtime::open("artifacts/pico8").unwrap();
     for m in [Method::PipeDream, Method::br_default(), Method::Muon] {
-        let cfg = TrainCfg { method: m, stages: 4, steps: 12, seed: 3, ..Default::default() };
+        let cfg = TrainCfg {
+            method: m,
+            stages: 4,
+            steps: 12,
+            seed: 3,
+            threads: bench_threads,
+            ..Default::default()
+        };
         let (r, secs) = time_once(&format!("sim 12 steps pico8 {}", cfg.method.name()),
                                   || train_sim(&rt, &cfg).unwrap());
         println!("  -> {:.1} ms/step, {} dispatches", secs * 1000.0 / 12.0, r.dispatches);
@@ -77,6 +95,7 @@ fn main() {
             stages: p,
             steps: 16,
             seed: 3,
+            threads: bench_threads,
             ..Default::default()
         };
         let model = if p <= 2 { "micro" } else { "pico8" };
@@ -94,10 +113,38 @@ fn main() {
         ));
     }
 
+    // deep-pipeline throughput anchor: the repro preset (tiny32 at
+    // P=8) — the row the pooled-kernel acceptance target is measured on
+    {
+        let cfg = TrainCfg {
+            method: Method::PipeDream,
+            stages: 8,
+            steps: 8,
+            seed: 3,
+            threads: bench_threads,
+            ..Default::default()
+        };
+        let r = coord
+            .run_engine(&Experiment { model: "tiny32".into(), train: cfg })
+            .unwrap();
+        println!(
+            "engine tiny32 P=8: {:.0} tokens/s, bubble {:.1}%, wall {:.2}s",
+            r.tokens_per_sec, r.bubble_frac * 100.0, r.wall_secs
+        );
+        results.push(once_result("engine step tiny32 P=8", r.wall_secs * 1e6 / 8.0, 8));
+    }
+
     // engine with per-stage optimizers beyond Adam: the paper's method
     // (stage-local eigen dispatches) and an MoE config
     for (model, m) in [("pico8", Method::br_default()), ("moe_pico", Method::PipeDream)] {
-        let cfg = TrainCfg { method: m, stages: 4, steps: 16, seed: 3, ..Default::default() };
+        let cfg = TrainCfg {
+            method: m,
+            stages: 4,
+            steps: 16,
+            seed: 3,
+            threads: bench_threads,
+            ..Default::default()
+        };
         let r = coord
             .run_engine(&Experiment { model: model.into(), train: cfg })
             .unwrap();

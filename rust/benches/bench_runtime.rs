@@ -9,16 +9,26 @@
 
 use abrot::bench::{bench, write_snapshot, BenchResult, BenchSnapshot};
 use abrot::model::init_params;
+use abrot::runtime::pool::{set_global_threads, ThreadCfg};
 use abrot::runtime::{tensor_to_value, tokens_to_value, Runtime, Value};
 use abrot::tensor::Tensor;
 
-fn json_path() -> Option<String> {
+fn arg_after(key: &str) -> Option<String> {
     let argv: Vec<String> = std::env::args().collect();
-    argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned())
+    argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1).cloned())
+}
+
+fn json_path() -> Option<String> {
+    arg_after("--json")
 }
 
 fn main() {
     println!("== bench_runtime ==");
+    // `--threads N` pins the kernel pool budget (0/absent = auto); the
+    // resolved value is recorded in the snapshot for benchcmp's gate.
+    let threads: usize = arg_after("--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    set_global_threads(ThreadCfg::new(threads));
+    println!("threads: {}", abrot::runtime::pool::kernel_threads());
     let mut results: Vec<BenchResult> = Vec::new();
     let rt = Runtime::open("artifacts/micro").unwrap();
     println!("backend: {}", rt.backend_kind());

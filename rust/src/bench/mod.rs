@@ -97,6 +97,13 @@ pub struct BenchSnapshot {
     pub schema_version: u32,
     pub area: String,
     pub host: HostInfo,
+    /// Kernel thread budget the run was recorded at (`runtime::pool`
+    /// resolved value). `None` on snapshots predating the pooled kernel
+    /// layer; medians at different thread budgets are not comparable,
+    /// so the comparison helper treats a mismatch like a host-
+    /// fingerprint mismatch. (The vendored serde derive revives a
+    /// missing key as `None`, keeping pre-pool snapshots loadable.)
+    pub threads: Option<usize>,
     pub results: Vec<BenchResult>,
 }
 
@@ -108,6 +115,7 @@ impl BenchSnapshot {
             schema_version: SNAPSHOT_SCHEMA_VERSION,
             area: area.to_string(),
             host: host_fingerprint(),
+            threads: Some(crate::runtime::pool::kernel_threads()),
             results,
         }
     }
@@ -201,18 +209,25 @@ impl BenchComparison {
             println!("cmp   {n:<40} new (no baseline)");
         }
         if !self.host_match {
-            println!("cmp   (host fingerprint differs from baseline; ratios are informational)");
+            println!("cmp   (host fingerprint or thread budget differs from baseline; ratios are informational)");
         }
     }
 }
 
 /// Flag current medians more than `tol` times the baseline median
 /// (e.g. `tol = 1.5` -> 50% slower). Regressions are only flagged when
-/// the host fingerprint matches the baseline's.
+/// the host fingerprint matches the baseline's, including the kernel
+/// thread budget when both snapshots record one (a snapshot at
+/// `--threads 1` is not a regression oracle for a `--threads 4` run).
 pub fn compare_snapshots(current: &BenchSnapshot, baseline: &BenchSnapshot, tol: f64) -> BenchComparison {
+    let threads_match = match (current.threads, baseline.threads) {
+        (Some(a), Some(b)) => a == b,
+        _ => true, // pre-pool snapshot: no budget recorded, can't gate on it
+    };
     let host_match = current.host.os == baseline.host.os
         && current.host.arch == baseline.host.arch
-        && current.host.cpus == baseline.host.cpus;
+        && current.host.cpus == baseline.host.cpus
+        && threads_match;
     let mut cmp = BenchComparison { host_match, ..Default::default() };
     for b in &baseline.results {
         match current.results.iter().find(|c| c.name == b.name) {
@@ -298,6 +313,29 @@ mod tests {
         // identical snapshots never regress
         let same = compare_snapshots(&loaded, &loaded, 1.5);
         assert!(same.regressions().is_empty());
+    }
+
+    #[test]
+    fn bench_thread_budget_mismatch_suppresses_regressions() {
+        let mk = |name: &str, med: f64| BenchResult {
+            name: name.to_string(),
+            iters: 10,
+            median_us: med,
+            p10_us: med * 0.9,
+            p90_us: med * 1.2,
+        };
+        let mut base = BenchSnapshot::new("engine", vec![mk("a", 100.0)]);
+        base.threads = Some(1);
+        let mut cur = BenchSnapshot::new("engine", vec![mk("a", 500.0)]);
+        cur.threads = Some(4);
+        // different recorded budgets: informational only, never a regression
+        let cmp = compare_snapshots(&cur, &base, 1.5);
+        assert!(!cmp.host_match);
+        assert!(cmp.regressions().is_empty());
+        // a pre-pool baseline records no budget, so the host gate alone decides
+        base.threads = None;
+        let cmp2 = compare_snapshots(&cur, &base, 1.5);
+        assert_eq!(cmp2.regressions().len(), 1);
     }
 
     #[test]

@@ -217,6 +217,13 @@ pub struct TrainCfg {
     /// optimizer step: loss, lr, staleness, queue depth; see
     /// `metrics::Registry`).
     pub metrics: Option<String>,
+    /// Kernel thread budget for the pooled compute layer (`--threads`).
+    /// 0 = auto (`ABROT_THREADS` env override, else
+    /// `available_parallelism`). The engine divides this budget across
+    /// its P x R stage workers so workers x kernel threads never
+    /// oversubscribes the host; results are bit-identical at any
+    /// setting (see `runtime::pool`).
+    pub threads: usize,
 }
 
 impl Default for TrainCfg {
@@ -244,6 +251,7 @@ impl Default for TrainCfg {
             resume: None,
             trace: None,
             metrics: None,
+            threads: 0,
         }
     }
 }

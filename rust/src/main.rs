@@ -123,6 +123,7 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
         method,
         stages: args.parse_num("stages", 1usize),
         replicas: args.parse_num("replicas", 1usize).max(1),
+        threads: args.parse_num("threads", 0usize),
         steps: args.parse_num("steps", 200u32),
         lr: args.parse_num("lr", 1e-3f32),
         seed: args.parse_num("seed", 1234u64),
@@ -190,6 +191,9 @@ fn main() -> Result<()> {
         "train" => {
             let cfg_name = args.get_or("config", "micro");
             let tcfg = train_cfg_from(&args)?;
+            abrot::runtime::pool::set_global_threads(
+                abrot::runtime::pool::ThreadCfg::new(tcfg.threads),
+            );
             let mut coord = Coordinator::new(&root);
             println!("training {cfg_name} with {} (P={}, R={}, {} steps)",
                      tcfg.method.name(), tcfg.stages, tcfg.dp_replicas(),
@@ -210,6 +214,9 @@ fn main() -> Result<()> {
         "engine" => {
             let cfg_name = args.get_or("config", "micro");
             let tcfg = train_cfg_from(&args)?;
+            abrot::runtime::pool::set_global_threads(
+                abrot::runtime::pool::ThreadCfg::new(tcfg.threads),
+            );
             let plan = fault_plan_from(&args)?;
             let mut coord = Coordinator::new(&root);
             let res = coord
@@ -324,6 +331,10 @@ fn main() -> Result<()> {
             println!("  e.g. abrot train --config tiny32 --method br --stages 32 --steps 300");
             println!("       abrot engine --config micro --stages 2 --replicas 2 --steps 40");
             println!("       abrot repro --fig fig5 --steps 200 --out results");
+            println!("threading: --threads N sets the kernel pool budget (default:");
+            println!("  auto = ABROT_THREADS env or available cores). The engine splits");
+            println!("  the budget across its P x R stage workers; results are");
+            println!("  bit-identical at any --threads value.");
             println!("observability: --trace out.json writes a Chrome trace_event span");
             println!("  timeline (engine: wall-clock per worker; train: virtual-clock");
             println!("  schedule model); --metrics out.jsonl writes per-step run metrics.");

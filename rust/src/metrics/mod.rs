@@ -35,6 +35,10 @@ pub struct RunResult {
     pub stages: usize,
     /// Data-parallel replicas R the run used (1 = no DP).
     pub replicas: usize,
+    /// Resolved kernel thread budget the run executed with
+    /// (`runtime::pool`; 1 = fully serial). Bit-identical results at
+    /// any value — recorded so perf numbers stay attributable.
+    pub threads: usize,
     pub losses: Vec<f32>,
     pub val_losses: Vec<(u32, f32)>,
     pub wall_secs: f64,

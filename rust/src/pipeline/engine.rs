@@ -1143,6 +1143,12 @@ pub fn train_engine_segment(
     // Shared span epoch: every worker thread stamps its spans against
     // the same origin, so per-thread timelines merge into one trace.
     let epoch = t0;
+    // Divide the kernel thread budget across the P x R stage workers so
+    // stage workers x kernel threads never oversubscribes the host; each
+    // worker installs its share as a thread-local budget (runtime::pool)
+    // before touching any kernel. Results are bit-identical regardless.
+    let total_threads = crate::runtime::pool::ThreadCfg::new(cfg.threads).resolve();
+    let worker_budget = (total_threads / (p * r_count)).max(1);
     let mut handles = Vec::new();
     for rep in 0..r_count {
         let mut txs: Vec<Sender<Msg>> = Vec::new();
@@ -1250,6 +1256,7 @@ pub fn train_engine_segment(
                 rep,
                 w,
                 std::thread::spawn(move || -> Result<(WorkerReport, Vec<ChunkExport>)> {
+                    let _budget = crate::runtime::pool::install_budget(worker_budget);
                     let mut states = Vec::with_capacity(setup.len());
                     let mut index = HashMap::new();
                     for (
@@ -1345,6 +1352,7 @@ pub fn train_engine_segment(
 
     let mut result = RunResult::new(&cfg.method.name(), p);
     result.replicas = r_count;
+    result.threads = total_threads;
     result.param_count = man0.total_params();
     result.schedule = cfg.schedule.name();
     let mut total_compute = 0.0;

@@ -172,6 +172,10 @@ pub fn train_sim_observed(
     let man = &rt.manifest;
     let mcfg = rt.cfg().clone();
     let replicas = cfg.dp_replicas();
+    // The simulator runs every dispatch on this thread, so the whole
+    // kernel budget is available to each kernel in turn.
+    let threads = crate::runtime::pool::ThreadCfg::new(cfg.threads).resolve();
+    let _budget = crate::runtime::pool::install_budget(threads);
     let sched = schedule::build(cfg.schedule);
     if cfg.schedule == ScheduleKind::Amdp && cfg.stages % 2 != 0 {
         bail!(
@@ -219,6 +223,7 @@ pub fn train_sim_observed(
 
     let mut result = RunResult::new(&cfg.method.name(), cfg.stages);
     result.replicas = replicas;
+    result.threads = threads;
     result.param_count = man.total_params();
     let mut rep_dispatches = vec![0u64; replicas];
 

@@ -23,6 +23,7 @@
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 pub mod presets;
 
 use std::cell::RefCell;

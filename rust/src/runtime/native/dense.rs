@@ -19,6 +19,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::runtime::pool::Pool;
 use crate::runtime::ModelCfg;
 use crate::tensor::Tensor;
 
@@ -31,63 +32,53 @@ pub const N_BLOCK_PARAMS: usize = 6; // g1, wqkv, wo, g2, w1, w2
 // ---------------------------------------------------------------------------
 // Small matmul helpers on raw row-major slices
 // ---------------------------------------------------------------------------
+//
+// Thin wrappers over the shared cache-tiled, row-parallel kernels in
+// `crate::tensor` — the same kernels `Tensor::matmul` runs, so the
+// exact-equality cross-check `mm_variants_agree_with_tensor_matmul`
+// holds by construction. The old single-threaded loops (minus their
+// NaN-swallowing `av != 0.0` fast path, which is bit-neutral to drop
+// for finite data) survive as the `*_ref` oracles.
 
 /// C(m,n) = A(m,k) @ B(k,n).
 pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
+    crate::tensor::mm_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// Reference loop for [`mm`] (single-threaded, untiled).
+pub fn mm_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    crate::tensor::mm_ref_into(a, b, &mut out, m, k, n);
     out
 }
 
 /// C(m,n) = A(m,k) @ B(n,k)^T.
 pub fn mm_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                s += x * y;
-            }
-            out[i * n + j] = s;
-        }
-    }
+    crate::tensor::mm_bt_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// Reference loop for [`mm_bt`].
+pub fn mm_bt_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    crate::tensor::mm_bt_ref_into(a, b, &mut out, m, k, n);
     out
 }
 
 /// C(m,n) = A(k,m)^T @ B(k,n).
 pub fn mm_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
+    crate::tensor::mm_at_into(a, b, &mut out, k, m, n);
+    out
+}
+
+/// Reference loop for [`mm_at`].
+pub fn mm_at_ref(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    crate::tensor::mm_at_ref_into(a, b, &mut out, k, m, n);
     out
 }
 
@@ -182,10 +173,126 @@ pub struct AttnCache {
     pub p: Vec<f32>,
 }
 
+/// Per-head attention work is ~b·h·s²·hd multiply-adds; below the
+/// kernel-layer threshold (or with a single head) the heads run
+/// inline on the calling thread.
+fn attn_threads(bh: usize, s: usize, hd: usize) -> usize {
+    if bh > 1 && bh * s * s * hd >= 32 * 1024 {
+        crate::runtime::pool::kernel_threads()
+    } else {
+        1
+    }
+}
+
 /// Causal attention over a packed qkv projection. `qkv`: (T, 3*d_model)
 /// with T = batch*seq. Returns the head-concatenated context (T, d_model)
 /// plus the cache for backward.
+///
+/// Parallelized per (batch, head): each task owns disjoint `&mut`
+/// slices of the q/k/v/p cache plus a contiguous per-head output
+/// scratch, and the head-interleaved context rows are scattered
+/// serially afterwards (a pure copy). The per-head arithmetic is the
+/// reference sequence unchanged, so results are bit-identical to
+/// [`attention_fwd_ref`] at any thread count.
 pub fn attention_fwd(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let h = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let bh = b * h;
+    let mut q = vec![0.0f32; bh * s * hd];
+    let mut k = vec![0.0f32; bh * s * hd];
+    let mut v = vec![0.0f32; bh * s * hd];
+    let mut p = vec![0.0f32; bh * s * s];
+    let mut o_all = vec![0.0f32; bh * s * hd];
+    {
+        let threads = attn_threads(bh, s, hd);
+        let mut tasks = Vec::with_capacity(bh);
+        for ((((idx, qm), km), vm), (pm, om)) in q
+            .chunks_mut(s * hd)
+            .enumerate()
+            .zip(k.chunks_mut(s * hd))
+            .zip(v.chunks_mut(s * hd))
+            .zip(p.chunks_mut(s * s).zip(o_all.chunks_mut(s * hd)))
+        {
+            tasks.push(move || attn_head_fwd(qkv, qm, km, vm, pm, om, idx, s, d, h, hd, scale));
+        }
+        Pool::scope(threads, tasks);
+    }
+    // scatter the contiguous per-head outputs into the
+    // head-concatenated (T, d) layout — a pure copy
+    let mut oc = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for hi in 0..h {
+            let om = &o_all[(bi * h + hi) * s * hd..(bi * h + hi + 1) * s * hd];
+            for si in 0..s {
+                let row = (bi * s + si) * d + hi * hd;
+                oc[row..row + hd].copy_from_slice(&om[si * hd..(si + 1) * hd]);
+            }
+        }
+    }
+    (oc, AttnCache { q, k, v, p })
+}
+
+/// One (batch, head) slice of the attention forward: gather → scaled
+/// causal scores → softmax → context, written into the task's disjoint
+/// q/k/v/p/o scratch slices.
+#[allow(clippy::too_many_arguments)]
+fn attn_head_fwd(
+    qkv: &[f32],
+    qm: &mut [f32],
+    km: &mut [f32],
+    vm: &mut [f32],
+    pm: &mut [f32],
+    om: &mut [f32],
+    idx: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    hd: usize,
+    scale: f32,
+) {
+    let (bi, hi) = (idx / h, idx % h);
+    // gather per-head q/k/v from the packed (T, 3D) projection
+    for si in 0..s {
+        let row = (bi * s + si) * 3 * d;
+        for j in 0..hd {
+            qm[si * hd + j] = qkv[row + hi * hd + j];
+            km[si * hd + j] = qkv[row + d + hi * hd + j];
+            vm[si * hd + j] = qkv[row + 2 * d + hi * hd + j];
+        }
+    }
+    // att = q k^T * scale, causal mask, row softmax
+    let mut att = mm_bt(qm, km, s, hd, s);
+    for x in att.iter_mut() {
+        *x *= scale;
+    }
+    for qi in 0..s {
+        for ki in (qi + 1)..s {
+            att[qi * s + ki] = NEG_INF;
+        }
+    }
+    for qi in 0..s {
+        let row = &mut att[qi * s..(qi + 1) * s];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let prow = &mut pm[qi * s..(qi + 1) * s];
+        for (pv, &e) in prow.iter_mut().zip(row.iter()) {
+            *pv = e / sum;
+        }
+    }
+    // o = p @ v into the contiguous per-head scratch
+    crate::tensor::mm_into(pm, vm, om, s, s, hd);
+}
+
+/// Reference single-threaded attention forward (the pre-pool loop,
+/// running the `*_ref` matmul kernels): the equivalence oracle for
+/// [`attention_fwd`].
+pub fn attention_fwd_ref(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
     let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
     let h = cfg.n_heads;
     let hd = cfg.head_dim();
@@ -200,7 +307,6 @@ pub fn attention_fwd(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
     for bi in 0..b {
         for hi in 0..h {
             let base = (bi * h + hi) * s * hd;
-            // gather per-head q/k/v from the packed (T, 3D) projection
             for si in 0..s {
                 let row = (bi * s + si) * 3 * d;
                 for j in 0..hd {
@@ -212,8 +318,7 @@ pub fn attention_fwd(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
             let qm = &q[base..base + s * hd];
             let km = &k[base..base + s * hd];
             let vm = &v[base..base + s * hd];
-            // att = q k^T * scale, causal mask, row softmax
-            let mut att = mm_bt(qm, km, s, hd, s);
+            let mut att = mm_bt_ref(qm, km, s, hd, s);
             for x in att.iter_mut() {
                 *x *= scale;
             }
@@ -236,8 +341,7 @@ pub fn attention_fwd(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
                     *pv = e / sum;
                 }
             }
-            // o = p @ v, scattered back head-concatenated
-            let o = mm(&p[pbase..pbase + s * s], vm, s, s, hd);
+            let o = mm_ref(&p[pbase..pbase + s * s], vm, s, s, hd);
             for si in 0..s {
                 let row = (bi * s + si) * d;
                 for j in 0..hd {
@@ -252,7 +356,115 @@ pub fn attention_fwd(cfg: &ModelCfg, qkv: &[f32]) -> (Vec<f32>, AttnCache) {
 /// Backward of [`attention_fwd`]: `doc` is the gradient w.r.t. the
 /// head-concatenated context (T, d_model); returns the gradient w.r.t.
 /// the packed qkv projection (T, 3*d_model).
+///
+/// Parallelized like the forward: per-(batch, head) tasks write
+/// dq/dk/dv into contiguous disjoint scratch, then a serial pure-copy
+/// scatter interleaves them into the packed layout. Bit-identical to
+/// [`attention_bwd_ref`] at any thread count.
 pub fn attention_bwd(cfg: &ModelCfg, cache: &AttnCache, doc: &[f32]) -> Vec<f32> {
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let h = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let bh = b * h;
+    let mut dq_all = vec![0.0f32; bh * s * hd];
+    let mut dk_all = vec![0.0f32; bh * s * hd];
+    let mut dv_all = vec![0.0f32; bh * s * hd];
+    {
+        let threads = attn_threads(bh, s, hd);
+        let mut tasks = Vec::with_capacity(bh);
+        for (((idx, dqm), dkm), dvm) in dq_all
+            .chunks_mut(s * hd)
+            .enumerate()
+            .zip(dk_all.chunks_mut(s * hd))
+            .zip(dv_all.chunks_mut(s * hd))
+        {
+            tasks.push(move || attn_head_bwd(cache, doc, dqm, dkm, dvm, idx, s, d, h, hd, scale));
+        }
+        Pool::scope(threads, tasks);
+    }
+    // scatter into the packed (T, 3D) layout — a pure copy
+    let mut dqkv = vec![0.0f32; b * s * 3 * d];
+    for bi in 0..b {
+        for hi in 0..h {
+            let base = (bi * h + hi) * s * hd;
+            for si in 0..s {
+                let row = (bi * s + si) * 3 * d;
+                let src = base + si * hd;
+                dqkv[row + hi * hd..row + hi * hd + hd]
+                    .copy_from_slice(&dq_all[src..src + hd]);
+                dqkv[row + d + hi * hd..row + d + hi * hd + hd]
+                    .copy_from_slice(&dk_all[src..src + hd]);
+                dqkv[row + 2 * d + hi * hd..row + 2 * d + hi * hd + hd]
+                    .copy_from_slice(&dv_all[src..src + hd]);
+            }
+        }
+    }
+    dqkv
+}
+
+/// One (batch, head) slice of the attention backward, writing into the
+/// task's disjoint dq/dk/dv scratch slices.
+#[allow(clippy::too_many_arguments)]
+fn attn_head_bwd(
+    cache: &AttnCache,
+    doc: &[f32],
+    dqm: &mut [f32],
+    dkm: &mut [f32],
+    dvm: &mut [f32],
+    idx: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    hd: usize,
+    scale: f32,
+) {
+    let (bi, hi) = (idx / h, idx % h);
+    let base = idx * s * hd;
+    let pbase = idx * s * s;
+    let qm = &cache.q[base..base + s * hd];
+    let km = &cache.k[base..base + s * hd];
+    let vm = &cache.v[base..base + s * hd];
+    let pm = &cache.p[pbase..pbase + s * s];
+    // gather the per-head slice of doc
+    let mut do_h = vec![0.0f32; s * hd];
+    for si in 0..s {
+        let row = (bi * s + si) * d;
+        do_h[si * hd..(si + 1) * hd]
+            .copy_from_slice(&doc[row + hi * hd..row + (hi + 1) * hd]);
+    }
+    // dv = p^T @ do ; dp = do @ v^T
+    crate::tensor::mm_at_into(pm, &do_h, dvm, s, s, hd);
+    let dp = mm_bt(&do_h, vm, s, hd, s);
+    // softmax backward: datt = p * (dp - rowsum(dp * p))
+    let mut datt = vec![0.0f32; s * s];
+    for qi in 0..s {
+        let prow = &pm[qi * s..(qi + 1) * s];
+        let dprow = &dp[qi * s..(qi + 1) * s];
+        let mut dot = 0.0f32;
+        for (pv, dpv) in prow.iter().zip(dprow) {
+            dot += pv * dpv;
+        }
+        let drow = &mut datt[qi * s..(qi + 1) * s];
+        for ((dr, &pv), &dpv) in drow.iter_mut().zip(prow).zip(dprow) {
+            *dr = pv * (dpv - dot);
+        }
+    }
+    // dq = datt @ k * scale ; dk = datt^T @ q * scale
+    crate::tensor::mm_into(&datt, km, dqm, s, s, hd);
+    crate::tensor::mm_at_into(&datt, qm, dkm, s, s, hd);
+    for x in dqm.iter_mut() {
+        *x *= scale;
+    }
+    for x in dkm.iter_mut() {
+        *x *= scale;
+    }
+}
+
+/// Reference single-threaded attention backward (the pre-pool loop,
+/// running the `*_ref` matmul kernels): the equivalence oracle for
+/// [`attention_bwd`].
+pub fn attention_bwd_ref(cfg: &ModelCfg, cache: &AttnCache, doc: &[f32]) -> Vec<f32> {
     let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
     let h = cfg.n_heads;
     let hd = cfg.head_dim();
@@ -267,17 +479,14 @@ pub fn attention_bwd(cfg: &ModelCfg, cache: &AttnCache, doc: &[f32]) -> Vec<f32>
             let km = &cache.k[base..base + s * hd];
             let vm = &cache.v[base..base + s * hd];
             let pm = &cache.p[pbase..pbase + s * s];
-            // gather the per-head slice of doc
             let mut do_h = vec![0.0f32; s * hd];
             for si in 0..s {
                 let row = (bi * s + si) * d;
                 do_h[si * hd..(si + 1) * hd]
                     .copy_from_slice(&doc[row + hi * hd..row + (hi + 1) * hd]);
             }
-            // dv = p^T @ do ; dp = do @ v^T
-            let dv = mm_at(pm, &do_h, s, s, hd);
-            let dp = mm_bt(&do_h, vm, s, hd, s);
-            // softmax backward: datt = p * (dp - rowsum(dp * p))
+            let dv = mm_at_ref(pm, &do_h, s, s, hd);
+            let dp = mm_bt_ref(&do_h, vm, s, hd, s);
             let mut datt = vec![0.0f32; s * s];
             for qi in 0..s {
                 let prow = &pm[qi * s..(qi + 1) * s];
@@ -291,16 +500,14 @@ pub fn attention_bwd(cfg: &ModelCfg, cache: &AttnCache, doc: &[f32]) -> Vec<f32>
                     *dr = pv * (dpv - dot);
                 }
             }
-            // dq = datt @ k * scale ; dk = datt^T @ q * scale
-            let mut dq = mm(&datt, km, s, s, hd);
-            let mut dk = mm_at(&datt, qm, s, s, hd);
+            let mut dq = mm_ref(&datt, km, s, s, hd);
+            let mut dk = mm_at_ref(&datt, qm, s, s, hd);
             for x in dq.iter_mut() {
                 *x *= scale;
             }
             for x in dk.iter_mut() {
                 *x *= scale;
             }
-            // scatter into the packed layout
             for si in 0..s {
                 let row = (bi * s + si) * 3 * d;
                 for j in 0..hd {

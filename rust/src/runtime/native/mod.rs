@@ -7,18 +7,21 @@
 //!   the per-block engine graphs) — the `dense` / `moe` submodules,
 //!   ports of `python/compile/model.py` and `python/compile/moe.py`;
 //! * batched optimizer graphs (`rot_adam_*`, `soap_*`, `eigen1st_*`,
-//!   `eigen2nd_*`, `muon_*`) — thin stacking wrappers over the shared
-//!   single-matrix reference implementations in
-//!   [`crate::optim::reference`], the same functions the integration
-//!   tests cross-check the PJRT path against.
+//!   `eigen2nd_*`, `muon_*`) — fused single-pass loops over the stacked
+//!   parameter slots, parallelized per slot on the kernel pool, calling
+//!   the shared single-matrix reference implementations in
+//!   [`crate::optim::reference`] (the same functions the integration
+//!   tests cross-check the PJRT path against), so per-slot arithmetic
+//!   is bit-identical to the serial reference loop by construction.
 
-mod dense;
+pub mod dense;
 mod moe;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::optim::reference::{self, Scalars};
-use crate::tensor::{stack, unstack, Tensor};
+use crate::runtime::pool::Pool;
+use crate::tensor::Tensor;
 
 use super::{value_to_tensor, Backend, Manifest, Value};
 
@@ -181,7 +184,7 @@ fn loss_and_grads(loss: f32, grads: Vec<Tensor>) -> Vec<Value> {
 // Batched optimizer kernels (rot_adam / soap / eigen / muon)
 // ---------------------------------------------------------------------------
 
-fn exec_optimizer(name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+pub fn exec_optimizer(name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
     if let Some(rest) = name.strip_prefix("rot_adam_") {
         let (uni, _cls) = parse_geometry(name, rest)?;
         return rotated_update(inputs, uni, false);
@@ -223,40 +226,79 @@ fn scalars_row(sc: &Tensor, i: usize) -> (Scalars, f32) {
     )
 }
 
-fn stack_tensors(ts: &[Tensor]) -> Tensor {
-    let refs: Vec<&Tensor> = ts.iter().collect();
-    stack(&refs)
+/// Threads for a batched optimizer dispatch: one task per stacked slot,
+/// inline below the kernel-layer work threshold (micro configs) or for
+/// a single slot.
+fn opt_threads(nb: usize, slot: usize) -> usize {
+    if nb > 1 && nb * slot >= 8 * 1024 {
+        crate::runtime::pool::kernel_threads()
+    } else {
+        1
+    }
 }
 
 /// Batched rotated-Adam (Algorithm 1) / SOAP update.
+///
+/// Fused: reads the stacked inputs in place (no unstack copies), writes
+/// straight into preallocated stacked outputs through disjoint per-slot
+/// `chunks_mut`, and runs one pool task per slot. Each task calls the
+/// single-matrix reference update, so the result is bit-identical to
+/// the serial unstack/stack loop at any thread count.
 fn rotated_update(inputs: &[Value], unilateral: bool, soap: bool) -> Result<Vec<Value>> {
-    let w = unstack(inputs[0].as_tensor()?);
-    let g = unstack(inputs[1].as_tensor()?);
-    let m = unstack(inputs[2].as_tensor()?);
-    let vt = unstack(inputs[3].as_tensor()?);
-    let u = unstack(inputs[4].as_tensor()?);
-    let v = unstack(inputs[5].as_tensor()?);
+    let w = inputs[0].as_tensor()?;
+    let g = inputs[1].as_tensor()?;
+    let m = inputs[2].as_tensor()?;
+    let vt = inputs[3].as_tensor()?;
+    let u = inputs[4].as_tensor()?;
+    let v = inputs[5].as_tensor()?;
     let sc = inputs[6].as_tensor()?;
-    let nb = w.len();
-    let mut w_new = Vec::with_capacity(nb);
-    let mut m_new = Vec::with_capacity(nb);
-    let mut vt_new = Vec::with_capacity(nb);
-    for i in 0..nb {
-        let (s, _mask) = scalars_row(sc, i);
-        let (wi, mi, vi) = if soap {
-            reference::soap_update(&w[i], &g[i], &m[i], &vt[i], &u[i], &v[i], s, unilateral)
-        } else {
-            reference::rotated_adam(&w[i], &g[i], &m[i], &vt[i], &u[i], &v[i], s, unilateral)
-        };
-        w_new.push(wi);
-        m_new.push(mi);
-        vt_new.push(vi);
+    let nb = w.shape[0];
+    let slot = w.data.len() / nb;
+    let mut w_new = Tensor::zeros(&w.shape);
+    let mut m_new = Tensor::zeros(&m.shape);
+    let mut vt_new = Tensor::zeros(&vt.shape);
+    {
+        let threads = opt_threads(nb, slot);
+        let mut tasks = Vec::with_capacity(nb);
+        for ((i, wo), (mo, vo)) in w_new
+            .data
+            .chunks_mut(slot)
+            .enumerate()
+            .zip(m_new.data.chunks_mut(slot).zip(vt_new.data.chunks_mut(slot)))
+        {
+            tasks.push(move || {
+                let (s, _mask) = scalars_row(sc, i);
+                let (wi, mi, vi) = if soap {
+                    reference::soap_update(
+                        &w.index_axis0(i),
+                        &g.index_axis0(i),
+                        &m.index_axis0(i),
+                        &vt.index_axis0(i),
+                        &u.index_axis0(i),
+                        &v.index_axis0(i),
+                        s,
+                        unilateral,
+                    )
+                } else {
+                    reference::rotated_adam(
+                        &w.index_axis0(i),
+                        &g.index_axis0(i),
+                        &m.index_axis0(i),
+                        &vt.index_axis0(i),
+                        &u.index_axis0(i),
+                        &v.index_axis0(i),
+                        s,
+                        unilateral,
+                    )
+                };
+                wo.copy_from_slice(&wi.data);
+                mo.copy_from_slice(&mi.data);
+                vo.copy_from_slice(&vi.data);
+            });
+        }
+        Pool::scope(threads, tasks);
     }
-    Ok(vec![
-        Value::F32(stack_tensors(&w_new)),
-        Value::F32(stack_tensors(&m_new)),
-        Value::F32(stack_tensors(&vt_new)),
-    ])
+    Ok(vec![Value::F32(w_new), Value::F32(m_new), Value::F32(vt_new)])
 }
 
 /// Which sides rotate: bilateral rotates both, unilateral only the
@@ -272,104 +314,165 @@ fn sides(m: usize, n: usize, unilateral: bool) -> (bool, bool) {
 }
 
 /// Batched Algorithm 2, S=2nd: Fisher-factor EMAs always advance, bases
-/// refresh where mask = 1.
+/// refresh where mask = 1. Fused + per-slot parallel like
+/// [`rotated_update`].
 fn eigen2nd(inputs: &[Value], unilateral: bool) -> Result<Vec<Value>> {
-    let l = unstack(inputs[0].as_tensor()?);
-    let r = unstack(inputs[1].as_tensor()?);
-    let g = unstack(inputs[2].as_tensor()?);
-    let u = unstack(inputs[3].as_tensor()?);
-    let v = unstack(inputs[4].as_tensor()?);
+    let l = inputs[0].as_tensor()?;
+    let r = inputs[1].as_tensor()?;
+    let g = inputs[2].as_tensor()?;
+    let u = inputs[3].as_tensor()?;
+    let v = inputs[4].as_tensor()?;
     let sc = inputs[5].as_tensor()?;
-    let nb = g.len();
-    let mut l_new = Vec::with_capacity(nb);
-    let mut r_new = Vec::with_capacity(nb);
-    let mut u_new = Vec::with_capacity(nb);
-    let mut v_new = Vec::with_capacity(nb);
-    for i in 0..nb {
-        let (s, mask) = scalars_row(sc, i);
-        let (mm, nn) = g[i].dims2();
-        let (left, right) = sides(mm, nn, unilateral);
-        if left {
-            let li = l[i]
-                .scale(s.beta2)
-                .add(&g[i].matmul(&g[i].transpose()).scale(1.0 - s.beta2));
-            u_new.push(if mask >= 0.5 {
-                reference::power_qr(&li, &u[i])
-            } else {
-                u[i].clone()
+    let nb = g.shape[0];
+    let ls = l.data.len() / nb;
+    let rs = r.data.len() / nb;
+    let us = u.data.len() / nb;
+    let vs = v.data.len() / nb;
+    let mut l_new = Tensor::zeros(&l.shape);
+    let mut r_new = Tensor::zeros(&r.shape);
+    let mut u_new = Tensor::zeros(&u.shape);
+    let mut v_new = Tensor::zeros(&v.shape);
+    {
+        let threads = opt_threads(nb, g.data.len() / nb);
+        let mut tasks = Vec::with_capacity(nb);
+        for ((i, (lo, ro)), (uo, vo)) in l_new
+            .data
+            .chunks_mut(ls)
+            .zip(r_new.data.chunks_mut(rs))
+            .enumerate()
+            .zip(u_new.data.chunks_mut(us).zip(v_new.data.chunks_mut(vs)))
+        {
+            tasks.push(move || {
+                let (s, mask) = scalars_row(sc, i);
+                let gi = g.index_axis0(i);
+                let (mm, nn) = gi.dims2();
+                let (left, right) = sides(mm, nn, unilateral);
+                if left {
+                    let li = l
+                        .index_axis0(i)
+                        .scale(s.beta2)
+                        .add(&gi.matmul(&gi.transpose()).scale(1.0 - s.beta2));
+                    if mask >= 0.5 {
+                        uo.copy_from_slice(
+                            &reference::power_qr(&li, &u.index_axis0(i)).data,
+                        );
+                    } else {
+                        uo.copy_from_slice(&u.data[i * us..(i + 1) * us]);
+                    }
+                    lo.copy_from_slice(&li.data);
+                } else {
+                    lo.copy_from_slice(&l.data[i * ls..(i + 1) * ls]);
+                    uo.copy_from_slice(&u.data[i * us..(i + 1) * us]);
+                }
+                if right {
+                    let ri = r
+                        .index_axis0(i)
+                        .scale(s.beta2)
+                        .add(&gi.transpose().matmul(&gi).scale(1.0 - s.beta2));
+                    if mask >= 0.5 {
+                        vo.copy_from_slice(
+                            &reference::power_qr(&ri, &v.index_axis0(i)).data,
+                        );
+                    } else {
+                        vo.copy_from_slice(&v.data[i * vs..(i + 1) * vs]);
+                    }
+                    ro.copy_from_slice(&ri.data);
+                } else {
+                    ro.copy_from_slice(&r.data[i * rs..(i + 1) * rs]);
+                    vo.copy_from_slice(&v.data[i * vs..(i + 1) * vs]);
+                }
             });
-            l_new.push(li);
-        } else {
-            l_new.push(l[i].clone());
-            u_new.push(u[i].clone());
         }
-        if right {
-            let ri = r[i]
-                .scale(s.beta2)
-                .add(&g[i].transpose().matmul(&g[i]).scale(1.0 - s.beta2));
-            v_new.push(if mask >= 0.5 {
-                reference::power_qr(&ri, &v[i])
-            } else {
-                v[i].clone()
-            });
-            r_new.push(ri);
-        } else {
-            r_new.push(r[i].clone());
-            v_new.push(v[i].clone());
-        }
+        Pool::scope(threads, tasks);
     }
     Ok(vec![
-        Value::F32(stack_tensors(&l_new)),
-        Value::F32(stack_tensors(&r_new)),
-        Value::F32(stack_tensors(&u_new)),
-        Value::F32(stack_tensors(&v_new)),
+        Value::F32(l_new),
+        Value::F32(r_new),
+        Value::F32(u_new),
+        Value::F32(v_new),
     ])
 }
 
 /// Batched Algorithm 2, S=1st: momentum outer products, no EMA storage.
+/// Fused + per-slot parallel like [`rotated_update`].
 fn eigen1st(inputs: &[Value], unilateral: bool) -> Result<Vec<Value>> {
-    let m = unstack(inputs[0].as_tensor()?);
-    let u = unstack(inputs[1].as_tensor()?);
-    let v = unstack(inputs[2].as_tensor()?);
+    let m = inputs[0].as_tensor()?;
+    let u = inputs[1].as_tensor()?;
+    let v = inputs[2].as_tensor()?;
     let sc = inputs[3].as_tensor()?;
-    let nb = m.len();
-    let mut u_new = Vec::with_capacity(nb);
-    let mut v_new = Vec::with_capacity(nb);
-    for i in 0..nb {
-        let (_, mask) = scalars_row(sc, i);
-        let (mm, nn) = m[i].dims2();
-        let (left, right) = sides(mm, nn, unilateral);
-        if left && mask >= 0.5 {
-            u_new.push(reference::power_qr(&m[i].matmul(&m[i].transpose()), &u[i]));
-        } else {
-            u_new.push(u[i].clone());
+    let nb = m.shape[0];
+    let us = u.data.len() / nb;
+    let vs = v.data.len() / nb;
+    let mut u_new = Tensor::zeros(&u.shape);
+    let mut v_new = Tensor::zeros(&v.shape);
+    {
+        let threads = opt_threads(nb, m.data.len() / nb);
+        let mut tasks = Vec::with_capacity(nb);
+        for ((i, uo), vo) in u_new
+            .data
+            .chunks_mut(us)
+            .enumerate()
+            .zip(v_new.data.chunks_mut(vs))
+        {
+            tasks.push(move || {
+                let (_, mask) = scalars_row(sc, i);
+                let mi = m.index_axis0(i);
+                let (mm, nn) = mi.dims2();
+                let (left, right) = sides(mm, nn, unilateral);
+                if left && mask >= 0.5 {
+                    uo.copy_from_slice(
+                        &reference::power_qr(&mi.matmul(&mi.transpose()), &u.index_axis0(i))
+                            .data,
+                    );
+                } else {
+                    uo.copy_from_slice(&u.data[i * us..(i + 1) * us]);
+                }
+                if right && mask >= 0.5 {
+                    vo.copy_from_slice(
+                        &reference::power_qr(&mi.transpose().matmul(&mi), &v.index_axis0(i))
+                            .data,
+                    );
+                } else {
+                    vo.copy_from_slice(&v.data[i * vs..(i + 1) * vs]);
+                }
+            });
         }
-        if right && mask >= 0.5 {
-            v_new.push(reference::power_qr(&m[i].transpose().matmul(&m[i]), &v[i]));
-        } else {
-            v_new.push(v[i].clone());
-        }
+        Pool::scope(threads, tasks);
     }
-    Ok(vec![Value::F32(stack_tensors(&u_new)), Value::F32(stack_tensors(&v_new))])
+    Ok(vec![Value::F32(u_new), Value::F32(v_new)])
 }
 
 /// Batched Muon: momentum accumulation + Newton-Schulz
 /// orthogonalization. Returns (mom', O); the optimizer applies the
-/// spectral-scaled step.
+/// spectral-scaled step. Fused + per-slot parallel like
+/// [`rotated_update`].
 fn muon(inputs: &[Value]) -> Result<Vec<Value>> {
-    let mom = unstack(inputs[0].as_tensor()?);
-    let g = unstack(inputs[1].as_tensor()?);
+    let mom = inputs[0].as_tensor()?;
+    let g = inputs[1].as_tensor()?;
     let sc = inputs[2].as_tensor()?;
-    let nb = mom.len();
-    let mut mom_new = Vec::with_capacity(nb);
-    let mut orth = Vec::with_capacity(nb);
-    for i in 0..nb {
-        let beta = sc.data[i * 8 + 1];
-        let mi = mom[i].scale(beta).add(&g[i]);
-        orth.push(reference::ns_orthonormalize(&mi));
-        mom_new.push(mi);
+    let nb = mom.shape[0];
+    let slot = mom.data.len() / nb;
+    let mut mom_new = Tensor::zeros(&mom.shape);
+    let mut orth = Tensor::zeros(&mom.shape);
+    {
+        let threads = opt_threads(nb, slot);
+        let mut tasks = Vec::with_capacity(nb);
+        for ((i, mo), oo) in mom_new
+            .data
+            .chunks_mut(slot)
+            .enumerate()
+            .zip(orth.data.chunks_mut(slot))
+        {
+            tasks.push(move || {
+                let beta = sc.data[i * 8 + 1];
+                let mi = mom.index_axis0(i).scale(beta).add(&g.index_axis0(i));
+                oo.copy_from_slice(&reference::ns_orthonormalize(&mi).data);
+                mo.copy_from_slice(&mi.data);
+            });
+        }
+        Pool::scope(threads, tasks);
     }
-    Ok(vec![Value::F32(stack_tensors(&mom_new)), Value::F32(stack_tensors(&orth))])
+    Ok(vec![Value::F32(mom_new), Value::F32(orth)])
 }
 
 #[cfg(test)]
@@ -377,6 +480,12 @@ mod tests {
     use super::*;
     use crate::rngs::Rng;
     use crate::runtime::Runtime;
+    use crate::tensor::{stack, unstack};
+
+    fn stack_tensors(ts: &[Tensor]) -> Tensor {
+        let refs: Vec<&Tensor> = ts.iter().collect();
+        stack(&refs)
+    }
 
     fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
         let mut t = Tensor::zeros(shape);

@@ -1,0 +1,300 @@
+//! Scoped worker pool behind every parallel kernel.
+//!
+//! Design constraints (ARCHITECTURE §8):
+//!
+//! * **dependency-free** — `std::thread::scope` only; workers live for
+//!   one kernel dispatch and borrow directly from the caller's stack,
+//!   so there is no persistent pool state to poison or shut down;
+//! * **bit-exact** — the pool only ever splits work across *disjoint*
+//!   `&mut` output regions; the per-element accumulation order is owned
+//!   by the kernels and never depends on the thread count, so
+//!   `--threads 1` and `--threads N` produce identical bits;
+//! * **oversubscription-free** — every worker runs with a kernel
+//!   budget of 1 (nested kernels execute inline), and the engine
+//!   divides the process budget across its P×R stage workers, so
+//!   `workers × kernel threads` never exceeds the configured budget.
+//!
+//! Budget resolution for a kernel dispatched on the current thread:
+//! thread-local override ([`install_budget`], used by engine workers
+//! and pool workers) → process-wide setting ([`set_global_threads`],
+//! installed by the CLI entry points) → auto (`ABROT_THREADS` env
+//! override, else `std::thread::available_parallelism()`).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread-count knob threaded from the CLI / `TrainCfg` down to the
+/// kernel layer. `0` means auto: the `ABROT_THREADS` env override if
+/// set, otherwise `std::thread::available_parallelism()`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ThreadCfg {
+    /// Requested kernel threads; 0 = auto.
+    pub threads: usize,
+}
+
+impl ThreadCfg {
+    /// Wrap an explicit request (0 = auto).
+    pub fn new(threads: usize) -> Self {
+        ThreadCfg { threads }
+    }
+
+    /// The concrete thread count this config resolves to.
+    pub fn resolve(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            auto_threads()
+        }
+    }
+}
+
+/// The auto thread count: `ABROT_THREADS` (the CI matrix override) if
+/// set to a positive integer, else `available_parallelism()`, else 1.
+/// Cached after the first call — kernels consult this per dispatch.
+pub fn auto_threads() -> usize {
+    static CACHE: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHE.load(Ordering::Relaxed);
+    if cached > 0 {
+        return cached;
+    }
+    let n = std::env::var("ABROT_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    CACHE.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Process-wide kernel thread budget; 0 = unset (fall through to auto).
+static GLOBAL: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-wide kernel thread budget (CLI entry points and
+/// the bench binaries call this once at startup).
+pub fn set_global_threads(cfg: ThreadCfg) {
+    GLOBAL.store(cfg.resolve(), Ordering::Relaxed);
+}
+
+thread_local! {
+    /// Per-thread kernel budget override; 0 = unset.
+    static BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Scoped per-thread override of the kernel thread budget; restores
+/// the previous value on drop. Engine stage workers install
+/// `max(1, threads / (P·R))` so stage workers × kernel threads never
+/// oversubscribes the machine; pool workers install 1 so nested
+/// kernels run inline.
+pub struct BudgetGuard {
+    prev: usize,
+}
+
+/// Install a kernel budget of `n` (clamped to ≥ 1) on the current
+/// thread until the returned guard drops.
+pub fn install_budget(n: usize) -> BudgetGuard {
+    let prev = BUDGET.with(|b| b.replace(n.max(1)));
+    BudgetGuard { prev }
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        BUDGET.with(|b| b.set(prev));
+    }
+}
+
+/// Thread budget for a kernel dispatched on the current thread:
+/// worker-local override → process-wide setting → auto.
+pub fn kernel_threads() -> usize {
+    let local = BUDGET.with(|b| b.get());
+    if local > 0 {
+        return local;
+    }
+    let global = GLOBAL.load(Ordering::Relaxed);
+    if global > 0 {
+        return global;
+    }
+    auto_threads()
+}
+
+/// The scoped worker pool. Stateless: every [`Pool::scope`] call opens
+/// a fresh `std::thread::scope`, so worker lifetimes are bounded by
+/// the call and tasks may borrow from the caller's stack.
+pub struct Pool;
+
+impl Pool {
+    /// Run `tasks` to completion across at most `threads` scoped
+    /// workers. Tasks are split into contiguous near-equal groups, one
+    /// worker per group; the first group runs on the calling thread.
+    ///
+    /// With `threads <= 1` every task runs inline on the calling
+    /// thread — the exact `--threads 1` path, no scope, no spawns.
+    /// A single task also runs inline, but *without* clamping the
+    /// caller's kernel budget, so kernels nested under it may still
+    /// parallelize.
+    pub fn scope<F>(threads: usize, tasks: Vec<F>)
+    where
+        F: FnOnce() + Send,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let nt = threads.min(n).max(1);
+        if nt == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let per = n.div_ceil(nt);
+        let mut groups: Vec<Vec<F>> = Vec::with_capacity(nt);
+        let mut it = tasks.into_iter();
+        loop {
+            let g: Vec<F> = it.by_ref().take(per).collect();
+            if g.is_empty() {
+                break;
+            }
+            groups.push(g);
+        }
+        std::thread::scope(|s| {
+            let mut groups = groups.into_iter();
+            let first = groups.next().unwrap();
+            for g in groups {
+                s.spawn(move || {
+                    let _b = install_budget(1);
+                    for t in g {
+                        t();
+                    }
+                });
+            }
+            let _b = install_budget(1);
+            for t in first {
+                t();
+            }
+        });
+    }
+}
+
+/// Split `out` into whole-row groups (`row` elements each) across at
+/// most `threads` scoped workers and call `f(first_row, rows_slice)`
+/// on each group. The groups are disjoint `&mut` regions, so this is
+/// safe-Rust data parallelism with no synchronization beyond the scope
+/// join; `f` must not touch rows outside its slice.
+///
+/// With `threads <= 1` (or a single row) `f` is called once with the
+/// whole buffer on the calling thread — the exact `--threads 1` path.
+pub fn par_rows<F>(threads: usize, out: &mut [f32], row: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert!(row > 0 && out.len() % row == 0);
+    let m = out.len() / row;
+    if m == 0 {
+        return;
+    }
+    let nt = threads.min(m).max(1);
+    if nt == 1 {
+        f(0, out);
+        return;
+    }
+    let per = m.div_ceil(nt);
+    let fr = &f;
+    std::thread::scope(|s| {
+        for (g, piece) in out.chunks_mut(per * row).enumerate() {
+            s.spawn(move || {
+                let _b = install_budget(1);
+                fr(g * per, piece);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cfg_resolves_auto_and_explicit() {
+        assert_eq!(ThreadCfg::new(3).resolve(), 3);
+        assert!(ThreadCfg::new(0).resolve() >= 1);
+        assert_eq!(ThreadCfg::default().threads, 0);
+    }
+
+    #[test]
+    fn budget_guard_restores_previous_value() {
+        let outer = install_budget(5);
+        assert_eq!(kernel_threads(), 5);
+        {
+            let _inner = install_budget(2);
+            assert_eq!(kernel_threads(), 2);
+        }
+        assert_eq!(kernel_threads(), 5);
+        drop(outer);
+    }
+
+    #[test]
+    fn scope_runs_every_task_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        for threads in [1usize, 2, 3, 7, 16] {
+            let hits = AtomicU64::new(0);
+            let tasks: Vec<_> = (0..13)
+                .map(|i: u64| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1 << (i * 4 % 64), Ordering::Relaxed);
+                    }
+                })
+                .collect();
+            Pool::scope(threads, tasks);
+            // each task contributes a distinct nibble pattern; the sum
+            // is only right if every task ran exactly once
+            let want: u64 = (0..13u64).map(|i| 1u64 << (i * 4 % 64)).sum();
+            assert_eq!(hits.load(Ordering::Relaxed), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_rows_covers_disjoint_rows() {
+        for threads in [1usize, 2, 5, 8] {
+            let mut out = vec![0.0f32; 7 * 3];
+            par_rows(threads, &mut out, 3, |first_row, rows| {
+                for (r, row) in rows.chunks_mut(3).enumerate() {
+                    for (c, x) in row.iter_mut().enumerate() {
+                        *x = (first_row + r) as f32 * 10.0 + c as f32;
+                    }
+                }
+            });
+            for i in 0..7 {
+                for c in 0..3 {
+                    assert_eq!(out[i * 3 + c], i as f32 * 10.0 + c as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workers_run_nested_kernels_inline() {
+        // inside a pool worker the kernel budget is 1, so nested
+        // parallel regions fall back to the inline path
+        let seen = std::sync::Mutex::new(Vec::new());
+        let tasks: Vec<_> = (0..4)
+            .map(|_| {
+                let seen = &seen;
+                move || {
+                    seen.lock().unwrap().push(kernel_threads());
+                }
+            })
+            .collect();
+        Pool::scope(4, tasks);
+        assert!(seen.lock().unwrap().iter().all(|&n| n == 1));
+    }
+}

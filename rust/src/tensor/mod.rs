@@ -164,9 +164,14 @@ impl Tensor {
         self.data.iter().all(|x| x.is_finite())
     }
 
-    // ---- linear algebra (reference-grade, blocked for cache locality) ----
+    // ---- linear algebra (cache-tiled, row-parallel; see kernels below) ----
 
     /// C = A @ B for 2-D tensors.
+    ///
+    /// Runs the cache-tiled, row-parallel kernel [`mm_into`]; bit-exact
+    /// against the reference loop [`Self::matmul_ref`] at every thread
+    /// count (each output element sums k in ascending order either
+    /// way).
     ///
     /// ```
     /// use abrot::tensor::Tensor;
@@ -182,25 +187,36 @@ impl Tensor {
         let (k2, n) = b.dims2();
         assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
         let mut out = vec![0.0f32; m * n];
-        // i-k-j loop order: streams B rows, accumulates into C rows.
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let crow = &mut out[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                for (c, &bv) in crow.iter_mut().zip(brow) {
-                    *c += a * bv;
-                }
-            }
-        }
+        mm_into(&self.data, &b.data, &mut out, m, k, n);
         Tensor::new(vec![m, n], out)
     }
 
-    /// Matrix transpose of a 2-D tensor.
+    /// Reference i-k-j matmul: the pristine single-threaded loop the
+    /// tiled/parallel kernel behind [`Self::matmul`] is tested
+    /// bit-exact against.
+    pub fn matmul_ref(&self, b: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        mm_ref_into(&self.data, &b.data, &mut out, m, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Matrix transpose of a 2-D tensor (blocked kernel
+    /// [`transpose_into`]; the naive column-stride loop is kept as
+    /// [`Self::transpose_ref`]).
     pub fn transpose(&self) -> Tensor {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; m * n];
+        transpose_into(&self.data, &mut out, m, n);
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Reference transpose: the naive column-stride loop (thrashes on
+    /// large matrices; kept as the equivalence oracle for
+    /// [`Self::transpose`]).
+    pub fn transpose_ref(&self) -> Tensor {
         let (m, n) = self.dims2();
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
@@ -224,6 +240,206 @@ impl Tensor {
         assert_eq!(t.data.len(), sub);
         self.data[idx * sub..(idx + 1) * sub].copy_from_slice(&t.data);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Row-major matmul/transpose kernels (shared with runtime::native::dense)
+// ---------------------------------------------------------------------------
+//
+// Bit-exactness contract: every kernel accumulates each output element
+// in a single f32 accumulator visiting k in ascending order — exactly
+// like its `*_ref` loop — so cache tiling and row-parallelism only
+// change *which thread* computes an element, never its bits. The
+// `*_ref` loops deliberately have no `a == 0.0` fast path: skipping
+// zero terms swallows `0.0 * NaN` / `0.0 * inf` (masking divergence the
+// engine's non-finite-loss detector must see), and for finite operands
+// adding the `±0.0` product to an accumulator that starts at `+0.0`
+// cannot change its bits (IEEE 754: a sum is `-0.0` only when both
+// addends are `-0.0`), so dropping the skip is itself bit-neutral.
+
+/// Multiply-add count below which a kernel stays on the calling thread
+/// (spawning scoped workers costs more than the loop at test-scale
+/// shapes).
+const PAR_MIN_WORK: usize = 32 * 1024;
+/// k-tile depth: one K_TILE-row block of B is streamed over all of a
+/// task's C rows before moving to the next block.
+const K_TILE: usize = 256;
+/// Transpose tile edge (T_TILE² f32 = 16 KiB, comfortably L1).
+const T_TILE: usize = 64;
+
+fn par_threads(work: usize) -> usize {
+    if work >= PAR_MIN_WORK {
+        crate::runtime::pool::kernel_threads()
+    } else {
+        1
+    }
+}
+
+/// out(m,n) += A(m,k) @ B(k,n) — cache-tiled, parallel over C rows.
+/// Callers pass a zeroed `out`.
+pub fn mm_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    crate::runtime::pool::par_rows(par_threads(m * k * n), out, n, |i0, crows| {
+        let rows = crows.len() / n;
+        for kb in (0..k).step_by(K_TILE) {
+            let kend = (kb + K_TILE).min(k);
+            for r in 0..rows {
+                let arow = &a[(i0 + r) * k + kb..(i0 + r) * k + kend];
+                let crow = &mut crows[r * n..(r + 1) * n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &b[(kb + kk) * n..(kb + kk + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Reference i-k-j loop for [`mm_into`] (single-threaded, untiled).
+pub fn mm_ref_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// out(m,n) = A(m,k) @ B(n,k)^T — parallel over C rows, 4-wide
+/// j-blocking (four independent per-element accumulators reuse the A
+/// row and break the FP-add latency chain; each element still sums k
+/// ascending, so the bits match [`mm_bt_ref_into`]).
+pub fn mm_bt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    crate::runtime::pool::par_rows(par_threads(m * k * n), out, n, |i0, crows| {
+        let rows = crows.len() / n;
+        let jend = n - n % 4;
+        for r in 0..rows {
+            let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+            let crow = &mut crows[r * n..(r + 1) * n];
+            for j in (0..jend).step_by(4) {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let b2 = &b[(j + 2) * k..(j + 3) * k];
+                let b3 = &b[(j + 3) * k..(j + 4) * k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for (kk, &x) in arow.iter().enumerate() {
+                    s0 += x * b0[kk];
+                    s1 += x * b1[kk];
+                    s2 += x * b2[kk];
+                    s3 += x * b3[kk];
+                }
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+            }
+            for j in jend..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                crow[j] = s;
+            }
+        }
+    });
+}
+
+/// Reference per-(i,j) dot-product loop for [`mm_bt_into`].
+pub fn mm_bt_ref_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            out[i * n + j] = s;
+        }
+    }
+}
+
+/// out(m,n) = A(k,m)^T @ B(k,n) — parallel over C rows (columns of A),
+/// k-tiled so each task re-streams one B block across its rows.
+pub fn mm_at_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    crate::runtime::pool::par_rows(par_threads(m * k * n), out, n, |i0, crows| {
+        let rows = crows.len() / n;
+        for kb in (0..k).step_by(K_TILE) {
+            let kend = (kb + K_TILE).min(k);
+            for r in 0..rows {
+                let crow = &mut crows[r * n..(r + 1) * n];
+                for kk in kb..kend {
+                    let av = a[kk * m + i0 + r];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Reference k-outer loop for [`mm_at_into`].
+pub fn mm_at_ref_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// out(n,m) = x(m,n)^T — T_TILE² blocked (both the read and the write
+/// side of a tile stay cache-resident), parallel over output rows.
+/// A pure permutation: trivially bit-exact at any tiling/thread count.
+pub fn transpose_into(x: &[f32], out: &mut [f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(out.len(), m * n);
+    crate::runtime::pool::par_rows(par_threads(m * n), out, m, |j0, orows| {
+        let jrows = orows.len() / m;
+        for ib in (0..m).step_by(T_TILE) {
+            let iend = (ib + T_TILE).min(m);
+            for jb in (0..jrows).step_by(T_TILE) {
+                let jend = (jb + T_TILE).min(jrows);
+                for jr in jb..jend {
+                    let j = j0 + jr;
+                    let orow = &mut orows[jr * m..(jr + 1) * m];
+                    for i in ib..iend {
+                        orow[i] = x[i * n + j];
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// Stack equally-shaped tensors along a new leading axis.
@@ -272,6 +488,60 @@ mod tests {
         assert_eq!(a.transpose().transpose(), a);
         assert_eq!(a.transpose().shape, vec![3, 2]);
         assert_eq!(a.transpose().data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn transpose_involution_odd_and_rectangular_shapes() {
+        // shapes straddling the T_TILE edge and the parallel threshold
+        for (m, n) in [
+            (1, 1),
+            (3, 7),
+            (7, 3),
+            (63, 65),
+            (64, 64),
+            (65, 129),
+            (1, 300),
+            (300, 1),
+            (257, 131),
+        ] {
+            let mut t = Tensor::zeros(&[m, n]);
+            for (i, x) in t.data.iter_mut().enumerate() {
+                *x = i as f32 * 0.5 - 3.0;
+            }
+            assert_eq!(t.transpose().transpose(), t, "{m}x{n}");
+            assert_eq!(t.transpose(), t.transpose_ref(), "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_propagates_nan_and_inf_through_zero_terms() {
+        // 0.0 * NaN = NaN and 0.0 * inf = NaN must reach the output —
+        // the removed `a == 0.0` fast path swallowed them, masking
+        // divergence the engine's non-finite-loss detector watches for.
+        let a = Tensor::new(vec![1, 2], vec![0.0, 1.0]);
+        let b = Tensor::new(vec![2, 2], vec![f32::NAN, f32::INFINITY, 1.0, 2.0]);
+        let c = a.matmul(&b);
+        assert!(c.data[0].is_nan(), "0*NaN + 1*1 must be NaN, got {}", c.data[0]);
+        assert!(c.data[1].is_nan(), "0*inf + 1*2 must be NaN, got {}", c.data[1]);
+        let r = a.matmul_ref(&b);
+        assert!(r.data[0].is_nan() && r.data[1].is_nan());
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_exact_vs_ref() {
+        let mut rng = crate::rngs::Rng::new(11);
+        for (m, k, n) in [(1, 1, 1), (5, 3, 4), (33, 129, 65), (130, 70, 96)] {
+            let mut a = Tensor::zeros(&[m, k]);
+            rng.fill_normal(&mut a.data, 1.0);
+            let mut b = Tensor::zeros(&[k, n]);
+            rng.fill_normal(&mut b.data, 1.0);
+            let want = a.matmul_ref(&b);
+            for threads in [1usize, 2, 7] {
+                let _g = crate::runtime::pool::install_budget(threads);
+                assert_eq!(a.matmul(&b).data, want.data, "{m}x{k}x{n} threads={threads}");
+                assert_eq!(a.transpose().data, a.transpose_ref().data);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Randomized equivalence suite for the pooled, cache-tiled kernel
+//! layer (`runtime::pool` + the shared `tensor` kernels): the parallel
+//! kernels must be **bit-identical** to their single-threaded `*_ref`
+//! oracles at every thread budget, for matmul/transpose, attention
+//! forward/backward, and the fused batched optimizer dispatches — plus
+//! an engine-vs-simulator trajectory check at `--threads 4`.
+//!
+//! Thread budgets are exercised through `pool::install_budget`, the
+//! same thread-local override the engine's stage workers use, so the
+//! suite covers the exact dispatch path of `--threads N` without
+//! spawning a CLI.
+
+use std::path::PathBuf;
+
+use abrot::config::{Method, TrainCfg};
+use abrot::coordinator::{Coordinator, Experiment};
+use abrot::optim::reference::{self, Scalars};
+use abrot::pipeline::train_sim;
+use abrot::rngs::Rng;
+use abrot::runtime::native::{dense, exec_optimizer};
+use abrot::runtime::pool::{auto_threads, install_budget};
+use abrot::runtime::{ModelCfg, Runtime, Value};
+use abrot::tensor::{stack, Tensor};
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The thread budgets every equivalence check runs under: serial, the
+/// smallest parallel split, a prime that never divides the row counts
+/// evenly, and whatever this host resolves to.
+fn budgets() -> Vec<usize> {
+    let mut b = vec![1usize, 2, 7];
+    let auto = auto_threads();
+    if !b.contains(&auto) {
+        b.push(auto);
+    }
+    b
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 1.0);
+    t
+}
+
+#[test]
+fn matmul_variants_bit_exact_vs_ref_across_shapes_and_threads() {
+    // Shapes straddle the parallel threshold and include degenerate,
+    // odd, and tile-boundary-crossing sizes.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 5, 4),
+        (17, 31, 13),
+        (33, 129, 65),
+        (64, 64, 64),
+        (130, 300, 96),
+    ];
+    let mut rng = Rng::new(0xbead);
+    for &(m, k, n) in &shapes {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bt = randv(&mut rng, n * k); // B stored (n, k) for mm_bt
+        let at = randv(&mut rng, k * m); // A stored (k, m) for mm_at
+        let want_mm = dense::mm_ref(&a, &b, m, k, n);
+        let want_bt = dense::mm_bt_ref(&a, &bt, m, k, n);
+        let want_at = dense::mm_at_ref(&at, &b, k, m, n);
+        for threads in budgets() {
+            let _b = install_budget(threads);
+            assert_eq!(dense::mm(&a, &b, m, k, n), want_mm, "mm {m}x{k}x{n} t={threads}");
+            assert_eq!(
+                dense::mm_bt(&a, &bt, m, k, n),
+                want_bt,
+                "mm_bt {m}x{k}x{n} t={threads}"
+            );
+            assert_eq!(
+                dense::mm_at(&at, &b, k, m, n),
+                want_at,
+                "mm_at {m}x{k}x{n} t={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tensor_matmul_and_transpose_bit_exact_across_threads() {
+    let mut rng = Rng::new(0x7a11);
+    for &(m, k, n) in &[(5usize, 3usize, 4usize), (65, 130, 48), (128, 64, 128)] {
+        let a = randn(&mut rng, &[m, k]);
+        let b = randn(&mut rng, &[k, n]);
+        let want = a.matmul_ref(&b);
+        let want_t = a.transpose_ref();
+        for threads in budgets() {
+            let _g = install_budget(threads);
+            assert_eq!(a.matmul(&b).data, want.data, "matmul {m}x{k}x{n} t={threads}");
+            assert_eq!(a.transpose().data, want_t.data, "transpose {m}x{k} t={threads}");
+        }
+    }
+}
+
+fn attn_cfg(batch: usize, seq: usize, d_model: usize, n_heads: usize) -> ModelCfg {
+    ModelCfg {
+        name: "kernels-test".into(),
+        vocab: 64,
+        seq,
+        d_model,
+        n_heads,
+        n_blocks: 1,
+        d_ff: 4 * d_model,
+        batch,
+        moe: None,
+    }
+}
+
+#[test]
+fn attention_fwd_bwd_bit_exact_vs_ref_across_threads() {
+    // (4, 32, 32, 4): b*h*s^2*hd = 131072 — well above the parallel
+    // threshold. (1, 9, 12, 3): stays on the inline path. Both must be
+    // bit-identical to the reference either way.
+    let configs = [attn_cfg(4, 32, 32, 4), attn_cfg(1, 9, 12, 3)];
+    let mut rng = Rng::new(0xa77e);
+    for cfg in &configs {
+        let t = cfg.batch * cfg.seq;
+        let qkv = randv(&mut rng, t * 3 * cfg.d_model);
+        let doc = randv(&mut rng, t * cfg.d_model);
+        let (oc_ref, cache_ref) = dense::attention_fwd_ref(cfg, &qkv);
+        let dqkv_ref = dense::attention_bwd_ref(cfg, &cache_ref, &doc);
+        for threads in budgets() {
+            let _g = install_budget(threads);
+            let (oc, cache) = dense::attention_fwd(cfg, &qkv);
+            assert_eq!(oc, oc_ref, "{} attention_fwd t={threads}", cfg.name);
+            assert_eq!(cache.q, cache_ref.q, "cache.q t={threads}");
+            assert_eq!(cache.k, cache_ref.k, "cache.k t={threads}");
+            assert_eq!(cache.v, cache_ref.v, "cache.v t={threads}");
+            assert_eq!(cache.p, cache_ref.p, "cache.p t={threads}");
+            let dqkv = dense::attention_bwd(cfg, &cache, &doc);
+            assert_eq!(dqkv, dqkv_ref, "{} attention_bwd t={threads}", cfg.name);
+        }
+    }
+}
+
+fn stack_tensors(ts: &[Tensor]) -> Tensor {
+    let refs: Vec<&Tensor> = ts.iter().collect();
+    stack(&refs)
+}
+
+fn scalars() -> Scalars {
+    Scalars { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01, t: 3.0 }
+}
+
+fn scalar_rows(nb: usize, mask_of: impl Fn(usize) -> f32) -> Tensor {
+    let mut sc = Tensor::zeros(&[nb, 8]);
+    for i in 0..nb {
+        sc.data[i * 8..(i + 1) * 8].copy_from_slice(&scalars().to_row(mask_of(i)));
+    }
+    sc
+}
+
+/// Stacked (w, g, m, vt, u, v, sc) inputs for the rotated-Adam / SOAP
+/// executables: `nb` slots of (m x n), big enough to cross the fused
+/// dispatch's parallel threshold.
+fn rot_inputs(rng: &mut Rng, nb: usize, m: usize, n: usize) -> Vec<Value> {
+    let mk = |rng: &mut Rng| -> Vec<Tensor> { (0..nb).map(|_| randn(rng, &[m, n])).collect() };
+    let w = mk(rng);
+    let g = mk(rng);
+    let mo = mk(rng);
+    let vt: Vec<Tensor> = mk(rng).iter().map(|t| t.map(f32::abs)).collect();
+    let u: Vec<Tensor> = (0..nb).map(|_| reference::cgs2_qr(&randn(rng, &[m, m]))).collect();
+    let v: Vec<Tensor> = (0..nb).map(|_| reference::cgs2_qr(&randn(rng, &[n, n]))).collect();
+    vec![
+        Value::F32(stack_tensors(&w)),
+        Value::F32(stack_tensors(&g)),
+        Value::F32(stack_tensors(&mo)),
+        Value::F32(stack_tensors(&vt)),
+        Value::F32(stack_tensors(&u)),
+        Value::F32(stack_tensors(&v)),
+        Value::F32(scalar_rows(nb, |i| (i % 2) as f32)),
+    ]
+}
+
+#[test]
+fn fused_rot_adam_matches_serial_reference_loop() {
+    // The fused dispatch vs a hand-rolled serial loop over the shared
+    // single-matrix reference — exact equality, every output.
+    let mut rng = Rng::new(0x0ad3);
+    let (nb, m, n) = (8usize, 32usize, 40usize);
+    let inputs = rot_inputs(&mut rng, nb, m, n);
+    let outs = {
+        let _g = install_budget(7);
+        exec_optimizer("rot_adam_bi_2d", &inputs).unwrap()
+    };
+    let s = scalars();
+    for i in 0..nb {
+        let slot = |j: usize| inputs[j].as_tensor().unwrap().index_axis0(i);
+        let (wr, mr, vr) = reference::rotated_adam(
+            &slot(0),
+            &slot(1),
+            &slot(2),
+            &slot(3),
+            &slot(4),
+            &slot(5),
+            s,
+            false,
+        );
+        assert_eq!(outs[0].as_tensor().unwrap().index_axis0(i).data, wr.data, "w slot {i}");
+        assert_eq!(outs[1].as_tensor().unwrap().index_axis0(i).data, mr.data, "m slot {i}");
+        assert_eq!(outs[2].as_tensor().unwrap().index_axis0(i).data, vr.data, "vt slot {i}");
+    }
+}
+
+#[test]
+fn fused_optimizer_dispatches_bit_exact_across_threads() {
+    // Every batched optimizer executable must produce identical bits at
+    // every thread budget (serial baseline = budget 1).
+    let mut rng = Rng::new(0x50a9);
+    let (nb, m, n) = (8usize, 32usize, 40usize);
+    let rot = rot_inputs(&mut rng, nb, m, n);
+    let mk = |rng: &mut Rng| -> Vec<Tensor> { (0..nb).map(|_| randn(rng, &[m, n])).collect() };
+    let g = mk(&mut rng);
+    let l: Vec<Tensor> = (0..nb).map(|_| randn(&mut rng, &[m, m])).collect();
+    let r: Vec<Tensor> = (0..nb).map(|_| randn(&mut rng, &[n, n])).collect();
+    let u: Vec<Tensor> =
+        (0..nb).map(|_| reference::cgs2_qr(&randn(&mut rng, &[m, m]))).collect();
+    let v: Vec<Tensor> =
+        (0..nb).map(|_| reference::cgs2_qr(&randn(&mut rng, &[n, n]))).collect();
+    let sc = scalar_rows(nb, |i| (i % 2) as f32);
+    let eigen2 = vec![
+        Value::F32(stack_tensors(&l)),
+        Value::F32(stack_tensors(&r)),
+        Value::F32(stack_tensors(&g)),
+        Value::F32(stack_tensors(&u)),
+        Value::F32(stack_tensors(&v)),
+        Value::F32(sc.clone()),
+    ];
+    let eigen1 = vec![
+        Value::F32(stack_tensors(&g)),
+        Value::F32(stack_tensors(&u)),
+        Value::F32(stack_tensors(&v)),
+        Value::F32(sc.clone()),
+    ];
+    let muon = vec![
+        Value::F32(stack_tensors(&mk(&mut rng))),
+        Value::F32(stack_tensors(&g)),
+        Value::F32(sc),
+    ];
+    let cases: Vec<(&str, &[Value])> = vec![
+        ("rot_adam_bi_2d", &rot),
+        ("soap_uni_2d", &rot),
+        ("eigen2nd_bi_2d", &eigen2),
+        ("eigen1st_uni_2d", &eigen1),
+        ("muon_2d", &muon),
+    ];
+    for (name, inputs) in cases {
+        let baseline = {
+            let _g = install_budget(1);
+            exec_optimizer(name, inputs).unwrap()
+        };
+        for threads in budgets() {
+            let _g = install_budget(threads);
+            let outs = exec_optimizer(name, inputs).unwrap();
+            assert_eq!(outs.len(), baseline.len(), "{name} arity t={threads}");
+            for (o, b) in outs.iter().zip(&baseline) {
+                assert_eq!(
+                    o.as_tensor().unwrap().data,
+                    b.as_tensor().unwrap().data,
+                    "{name} t={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simulator_trajectory_bit_exact_across_thread_budgets() {
+    // The whole training loop — not just individual kernels — must not
+    // move a single bit when the kernel budget changes.
+    let rt = Runtime::open(root().join("micro")).unwrap();
+    let mk = |threads: usize| TrainCfg {
+        method: Method::br_default(),
+        stages: 2,
+        steps: 8,
+        lr: 5e-3,
+        seed: 99,
+        threads,
+        ..Default::default()
+    };
+    let base = train_sim(&rt, &mk(1)).unwrap();
+    for threads in [2usize, 4, 7] {
+        let run = train_sim(&rt, &mk(threads)).unwrap();
+        assert_eq!(base.losses, run.losses, "threads={threads}");
+        assert_eq!(run.threads, threads);
+    }
+}
+
+#[test]
+fn engine_matches_simulator_trajectory_at_threads_4() {
+    // The parallel-kernel engine at --threads 4 traces the same loss
+    // curve as the simulator at --threads 4 (which itself is bit-equal
+    // to --threads 1 by the test above). Same shape as the existing
+    // engine-vs-sim checks: clipping disabled, relative tolerance.
+    let steps = 12;
+    let mk = |_: ()| TrainCfg {
+        method: Method::PipeDream,
+        stages: 2,
+        steps,
+        lr: 5e-3,
+        grad_clip: 1e9,
+        seed: 77,
+        threads: 4,
+        ..Default::default()
+    };
+    let rt = Runtime::open(root().join("micro")).unwrap();
+    let sim = train_sim(&rt, &mk(())).unwrap();
+    let mut coord = Coordinator::new(root());
+    let eng = coord
+        .run_engine(&Experiment { model: "micro".into(), train: mk(()) })
+        .unwrap();
+    assert_eq!(sim.losses.len(), eng.losses.len());
+    assert_eq!(eng.threads, 4);
+    for (i, (a, b)) in sim.losses.iter().zip(&eng.losses).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-3 * a.abs().max(1.0),
+            "step {i}: sim {a} vs engine {b}"
+        );
+    }
+}

@@ -265,11 +265,20 @@ fn trace_sim_virtual_clock_timeline() {
 
 #[test]
 fn trace_bench_baselines_validate_and_self_compare() {
-    for name in ["BENCH_engine.json", "BENCH_kernels.json"] {
+    for name in [
+        "BENCH_engine.json",
+        "BENCH_kernels.json",
+        "BENCH_engine_pr8_baseline.json",
+        "BENCH_kernels_pr8_baseline.json",
+    ] {
         let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benchmarks").join(name);
         let snap = bench::load_snapshot(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
         bench::validate_snapshot(&snap).unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(!snap.results.is_empty());
+        // Current snapshots record the thread budget they were taken
+        // at; the frozen pre-pool baselines predate the field and must
+        // keep loading as `threads: None` through the vendored serde.
+        assert_eq!(snap.threads.is_some(), !name.contains("pr8"));
         // A snapshot compared against itself is regression-free and
         // fully matched — pins the comparison helper's plumbing.
         let cmp = bench::compare_snapshots(&snap, &snap, 1.5);
@@ -281,4 +290,40 @@ fn trace_bench_baselines_validate_and_self_compare() {
             assert!((d.ratio - 1.0).abs() < 1e-12);
         }
     }
+}
+
+/// The committed perf trajectory itself: the pooled-kernel snapshots
+/// must stay at least 4x faster than the frozen PR 8 serial baseline
+/// on the deep-pipeline anchor (tiny32 at P=8) and at least 3x faster
+/// on every fwdbwd kernel microbench — the refactor's acceptance bar,
+/// pinned so a future "refresh" cannot silently erase the speedup.
+#[test]
+fn trace_bench_trajectory_records_pooled_kernel_speedup() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benchmarks");
+    let load = |name: &str| bench::load_snapshot(dir.join(name)).unwrap();
+    let ratio = |old: &bench::BenchSnapshot, new: &bench::BenchSnapshot, row: &str| -> f64 {
+        let find = |s: &bench::BenchSnapshot| {
+            s.results
+                .iter()
+                .find(|r| r.name == row)
+                .unwrap_or_else(|| panic!("missing bench row {row}"))
+                .median_us
+        };
+        find(old) / find(new)
+    };
+
+    let (eng_old, eng_new) = (load("BENCH_engine_pr8_baseline.json"), load("BENCH_engine.json"));
+    assert!(ratio(&eng_old, &eng_new, "engine step tiny32 P=8") >= 4.0);
+
+    let (ker_old, ker_new) =
+        (load("BENCH_kernels_pr8_baseline.json"), load("BENCH_kernels.json"));
+    for row in ["fwdbwd dispatch micro", "fwdbwd dispatch pico8", "fwdbwd dispatch pico32"] {
+        assert!(ratio(&ker_old, &ker_new, row) >= 3.0, "{row} below 3x");
+    }
+
+    // Cross-era comparison is informational only: the old snapshot has
+    // no recorded thread budget, so the host gate alone applies, and
+    // the faster current rows are improvements, never regressions.
+    let cmp = bench::compare_snapshots(&eng_old, &eng_new, 1.5);
+    assert!(cmp.regressions().is_empty());
 }
