@@ -23,6 +23,12 @@
 //!     --kill STEP:REPLICA[:WORKER]  deterministically kill that worker
 //!                            after update STEP; the driver re-shards the
 //!                            surviving replicas from the last checkpoint
+//!     --delay STEP:REPLICA:WORKER:MILLIS  inject a straggler sleep
+//!     --dp-async --max-skew K  bounded-skew asynchronous DP: replicas
+//!                            fold peer gradients up to K steps stale
+//!                            and stall only at the bound, so a --delay
+//!                            straggler no longer stalls the group
+//!                            (K=0 is bit-exact with synchronous DP)
 //!
 //! Observability knobs (engine phase writes wall-clock spans; the sim
 //! phases write the virtual-clock schedule model):
@@ -83,6 +89,41 @@ fn main() -> anyhow::Result<()> {
             }
             None => {
                 eprintln!("--kill expects STEP:REPLICA[:WORKER]; ignoring");
+                args.remove(i);
+            }
+        }
+    }
+    // --delay STEP:REPLICA:WORKER:MILLIS (straggler injection; repeatable)
+    while let Some(i) = args.iter().position(|a| a == "--delay") {
+        match args
+            .get(i + 1)
+            .and_then(|x| abrot::checkpoint::FaultPlan::parse_delay(x).ok())
+        {
+            Some(d) => {
+                plan.delays.push(d);
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--delay expects STEP:REPLICA:WORKER:MILLIS; ignoring");
+                args.remove(i);
+            }
+        }
+    }
+    // --dp-async [--max-skew K] (bounded-skew asynchronous DP)
+    let mut dp_async = false;
+    if let Some(i) = args.iter().position(|a| a == "--dp-async") {
+        dp_async = true;
+        args.remove(i);
+    }
+    let mut max_skew: u32 = 0;
+    if let Some(i) = args.iter().position(|a| a == "--max-skew") {
+        match args.get(i + 1).and_then(|x| x.parse::<u32>().ok()) {
+            Some(k) => {
+                max_skew = k;
+                args.drain(i..i + 2);
+            }
+            None => {
+                eprintln!("--max-skew expects a number; using 0");
                 args.remove(i);
             }
         }
@@ -160,6 +201,8 @@ fn main() -> anyhow::Result<()> {
         eval_every: (steps / 6).max(1),
         trace,
         metrics,
+        dp_async,
+        max_skew,
         ..Default::default()
     };
 
@@ -192,6 +235,15 @@ fn main() -> anyhow::Result<()> {
                 "  (will kill replica {} worker {} after update {})",
                 k.replica, k.worker, k.at_update
             );
+        }
+        for d in &plan.delays {
+            println!(
+                "  (will delay replica {} worker {} by {} ms after update {})",
+                d.replica, d.worker, d.millis, d.at_update
+            );
+        }
+        if dp_async {
+            println!("  (bounded-skew async DP, max skew {max_skew})");
         }
         coord.run_engine_elastic(&eng_exp, &plan)?
     } else {

@@ -1,0 +1,132 @@
+//! Sync-vs-async DP under a straggler: the wall-clock case for
+//! `--dp-async` (bounded-skew asynchronous data parallelism).
+//!
+//!     cargo bench --bench bench_dp_async
+//!     cargo bench --bench bench_dp_async -- --json BENCH_dp_async.json
+//!
+//! Scenario: P = 4 × R = 2 on pico4 with *alternating* injected sleeps
+//! on both replicas. Under synchronous DP every sleep stalls the whole
+//! group at the next all-reduce, so the run pays the **sum** of all
+//! delays; under `--dp-async --max-skew 2` each replica folds its
+//! peer's slightly stale gradients and keeps stepping, so the run pays
+//! roughly the **max** of the per-replica delay sums. (A single
+//! one-sided delay would not separate the two modes — both would pay it
+//! once — which is why the plan alternates sides.)
+//!
+//! Compare against the committed baseline with
+//! `abrot benchcmp --baseline benchmarks/BENCH_dp_async.json --current PATH`.
+
+use abrot::bench::{time_once, write_snapshot, BenchResult, BenchSnapshot};
+use abrot::checkpoint::{self, FaultPlan, WorkerDelay};
+use abrot::config::{Method, TrainCfg};
+use abrot::runtime::pool::{set_global_threads, ThreadCfg};
+
+fn arg_after(key: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == key).and_then(|i| argv.get(i + 1).cloned())
+}
+
+fn json_path() -> Option<String> {
+    arg_after("--json")
+}
+
+fn once_result(name: &str, per_iter_us: f64, iters: usize) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_us: per_iter_us,
+        p10_us: per_iter_us,
+        p90_us: per_iter_us,
+    }
+}
+
+const STEPS: u32 = 12;
+
+fn cfg(dp_async: bool, max_skew: u32, threads: usize) -> TrainCfg {
+    TrainCfg {
+        method: Method::PipeDream,
+        stages: 4,
+        replicas: 2,
+        steps: STEPS,
+        lr: 5e-3,
+        seed: 3,
+        threads,
+        dp_async,
+        max_skew,
+        ..Default::default()
+    }
+}
+
+/// Alternating straggler plan: each replica sleeps twice, interleaved,
+/// so sync DP serializes 4 × 60 ms while async DP overlaps each sleep
+/// with the other replica's compute.
+fn straggler_plan() -> FaultPlan {
+    FaultPlan {
+        delays: vec![
+            WorkerDelay { at_update: 2, replica: 0, worker: 0, millis: 60 },
+            WorkerDelay { at_update: 4, replica: 1, worker: 0, millis: 60 },
+            WorkerDelay { at_update: 6, replica: 0, worker: 0, millis: 60 },
+            WorkerDelay { at_update: 8, replica: 1, worker: 0, millis: 60 },
+        ],
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("== bench_dp_async ==");
+    let bench_threads: usize =
+        arg_after("--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    set_global_threads(ThreadCfg::new(bench_threads));
+    println!("threads: {}", abrot::runtime::pool::kernel_threads());
+    let artifacts = std::path::PathBuf::from("artifacts/pico4");
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for (tag, dp_async, k, plan) in [
+        ("sync P=4 R=2", false, 0u32, FaultPlan::default()),
+        ("async K=2 P=4 R=2", true, 2, FaultPlan::default()),
+        ("sync P=4 R=2 straggler", false, 0, straggler_plan()),
+        ("async K=2 P=4 R=2 straggler", true, 2, straggler_plan()),
+    ] {
+        let c = cfg(dp_async, k, bench_threads);
+        let (r, secs) = time_once(&format!("engine dp {tag}"), || {
+            checkpoint::run_engine_elastic(&artifacts, &c, &plan).unwrap()
+        });
+        let skew = r
+            .replica_counters
+            .iter()
+            .map(|rc| rc.dp_max_skew)
+            .max()
+            .unwrap_or(0);
+        println!(
+            "  -> {:.1} ms/step, bubble {:.1}%, realized max skew {}",
+            secs * 1000.0 / STEPS as f64,
+            r.bubble_frac * 100.0,
+            skew
+        );
+        assert!(skew <= k, "{tag}: realized skew {skew} exceeds the bound {k}");
+        results.push(once_result(
+            &format!("engine dp {tag}"),
+            secs * 1e6 / STEPS as f64,
+            STEPS as usize,
+        ));
+    }
+
+    // The headline: the async straggler row must beat the sync one.
+    let median = |results: &[BenchResult], name: &str| -> f64 {
+        results.iter().find(|r| r.name == name).unwrap().median_us
+    };
+    let sync_s = median(&results, "engine dp sync P=4 R=2 straggler");
+    let async_s = median(&results, "engine dp async K=2 P=4 R=2 straggler");
+    println!(
+        "straggler speedup (sync/async): {:.2}x ({:.1} -> {:.1} ms/step)",
+        sync_s / async_s,
+        sync_s / 1e3,
+        async_s / 1e3
+    );
+
+    if let Some(path) = json_path() {
+        let snap = BenchSnapshot::new("dp_async", results);
+        write_snapshot(&path, &snap).unwrap();
+        println!("snapshot -> {path}");
+    }
+}

@@ -138,6 +138,26 @@ pub struct RunState {
     pub val_losses: Vec<(u32, f32)>,
     /// Sim per-replica dispatch counters (informational).
     pub dispatches: Vec<u64>,
+    /// DP reduce-mode identity: `None` (or the historical absent key —
+    /// `Option` revives as `None`) for synchronous DP, `"async:K"` for
+    /// bounded-skew async DP. Validated on resume: the skew bound is
+    /// part of the delay model, so crossing modes mid-run would
+    /// silently change the trajectory.
+    pub dp_mode: Option<String>,
+    /// Engine snapshots under `--dp-async` at K > 0: every replica's
+    /// drained `(params, per-part opts)` copy — the in-flight skew
+    /// state, so a resumed segment restarts each replica from exactly
+    /// where it drained. Absent when replicas are in lockstep.
+    pub dp_replica_states: Option<Vec<DpReplicaState>>,
+}
+
+/// One replica's drained copy under bounded-skew async DP (see
+/// [`RunState::dp_replica_states`]).
+#[derive(Clone, serde::Serialize, serde::Deserialize)]
+pub struct DpReplicaState {
+    pub replica: usize,
+    pub params: Vec<TensorState>,
+    pub opts: Vec<OptState>,
 }
 
 impl RunState {
@@ -403,14 +423,41 @@ pub fn run_engine_elastic(
             cfg.seed,
             cfg.steps,
         )?;
+        if st.dp_mode != cfg.dp_mode() {
+            bail!(
+                "checkpoint DP mode mismatch: snapshot was taken under {}, \
+                 this run uses {} (the skew bound is part of the delay model; \
+                 resume with the original --dp-async/--max-skew flags)",
+                st.dp_mode.as_deref().unwrap_or("sync"),
+                cfg.dp_mode().as_deref().unwrap_or("sync")
+            );
+        }
         roster = st.replicas;
         losses = st.losses.clone();
         val_losses = st.val_losses.clone();
         start = st.step;
+        // Per-replica skew state (async DP at K > 0) rides along so
+        // each replica restarts from exactly where it drained.
+        let replica_states = st
+            .dp_replica_states
+            .as_ref()
+            .map(|rs| {
+                rs.iter()
+                    .map(|r| {
+                        (
+                            r.replica,
+                            r.params.iter().map(|t| t.to_tensor()).collect(),
+                            r.opts.clone(),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         state = Some(EngineCheckpoint {
             step: st.step,
             params: st.params.iter().map(|t| t.to_tensor()).collect(),
             opts: st.opts.clone(),
+            replica_states,
         });
     }
 
@@ -490,6 +537,7 @@ pub fn run_engine_elastic(
                 bail!("fault plan kills every replica of the roster at step {start}");
             }
             roster -= gone.len();
+            collapse_skew_state(&mut state);
             trace::progress(format!(
                 "  [elastic] replica death mid-segment; re-sharding onto \
                  R={roster} survivors and re-running from step {start}"
@@ -520,6 +568,7 @@ pub fn run_engine_elastic(
             }
             roster -= gone.len();
             kills.retain(|k| k.at_update != end);
+            collapse_skew_state(&mut state);
             trace::progress(format!(
                 "  [elastic] clean departure at step {end}; R={roster}"
             ));
@@ -528,6 +577,7 @@ pub fn run_engine_elastic(
             joins.iter().filter(|j| j.at_update == end).map(|j| j.count).sum();
         if joining > 0 {
             roster += joining;
+            collapse_skew_state(&mut state);
             trace::progress(format!(
                 "  [elastic] {joining} replica(s) join at step {end}; R={roster}"
             ));
@@ -558,6 +608,21 @@ pub fn run_engine_elastic(
                 losses: losses.clone(),
                 val_losses: val_losses.clone(),
                 dispatches: Vec::new(),
+                dp_mode: cfg.dp_mode(),
+                dp_replica_states: if ck.replica_states.is_empty() {
+                    None
+                } else {
+                    Some(
+                        ck.replica_states
+                            .iter()
+                            .map(|(rep, ps, os)| DpReplicaState {
+                                replica: *rep,
+                                params: ps.iter().map(TensorState::of).collect(),
+                                opts: os.clone(),
+                            })
+                            .collect(),
+                    )
+                },
             };
             let path = step_path(&ckpt_dir, start);
             let t_save = std::time::Instant::now();
@@ -595,6 +660,21 @@ pub fn run_engine_elastic(
     out.dispatches = total_dispatches;
     out.wall_secs = wall;
     Ok(out)
+}
+
+/// A roster change renumbers the survivors, so per-replica async-DP
+/// skew state saved under the old numbering no longer applies: drop it
+/// and re-seed every replica from the canonical replica-0 copy.
+fn collapse_skew_state(state: &mut Option<EngineCheckpoint>) {
+    if let Some(ck) = state.as_mut() {
+        if !ck.replica_states.is_empty() {
+            ck.replica_states.clear();
+            trace::progress(
+                "  [elastic] roster changed; collapsing async-DP skew state \
+                 onto the replica-0 snapshot",
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -641,6 +721,8 @@ mod tests {
             losses: vec![3.5, 3.25],
             val_losses: vec![(10, 3.125)],
             dispatches: vec![step],
+            dp_mode: None,
+            dp_replica_states: None,
         }
     }
 

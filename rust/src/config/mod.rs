@@ -224,6 +224,20 @@ pub struct TrainCfg {
     /// oversubscribes the host; results are bit-identical at any
     /// setting (see `runtime::pool`).
     pub threads: usize,
+    /// Bounded-staleness asynchronous DP (`--dp-async`): replicas stop
+    /// barriering at every optimizer step and instead fold whatever
+    /// peer gradients have arrived within `max_skew` steps
+    /// (`pipeline::dp_async`). A replica stalls only when it would run
+    /// more than `max_skew` steps ahead of the slowest peer. With
+    /// `max_skew = 0` this reduces bit-exactly to the synchronous path.
+    pub dp_async: bool,
+    /// Skew bound K for `dp_async`: the maximum number of optimizer
+    /// steps any replica may run ahead of the slowest peer.
+    pub max_skew: u32,
+    /// Reduce timeout in milliseconds: how long a replica waits on a
+    /// peer inside an all-reduce (sync or async) before erroring loudly
+    /// naming the unresponsive peer. 0 = the 120 s default.
+    pub reduce_timeout_ms: u64,
 }
 
 impl Default for TrainCfg {
@@ -252,6 +266,9 @@ impl Default for TrainCfg {
             trace: None,
             metrics: None,
             threads: 0,
+            dp_async: false,
+            max_skew: 0,
+            reduce_timeout_ms: 0,
         }
     }
 }
@@ -273,6 +290,27 @@ impl TrainCfg {
     /// so configs predating the DP axis keep their meaning.
     pub fn dp_replicas(&self) -> usize {
         self.replicas.max(1)
+    }
+
+    /// Resolved reduce timeout: `reduce_timeout_ms` with 0 meaning the
+    /// 120 s default — long enough that only a genuinely wedged peer
+    /// (not an injected straggler sleep) ever trips it.
+    pub fn reduce_timeout(&self) -> std::time::Duration {
+        let ms = if self.reduce_timeout_ms == 0 { 120_000 } else { self.reduce_timeout_ms };
+        std::time::Duration::from_millis(ms)
+    }
+
+    /// DP reduce-mode identity for checkpoints: `None` for the
+    /// synchronous barrier, `"async:K"` under `--dp-async`. Snapshots
+    /// record it and resume validates it — the skew bound is part of
+    /// the delay model, so crossing modes mid-run would silently change
+    /// the trajectory.
+    pub fn dp_mode(&self) -> Option<String> {
+        if self.dp_async {
+            Some(format!("async:{}", self.max_skew))
+        } else {
+            None
+        }
     }
 
     /// The paper's β1 convention: 0.99 for Nesterov, 0.9 otherwise.

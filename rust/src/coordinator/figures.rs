@@ -45,8 +45,10 @@ impl Default for FigOpts {
     }
 }
 
-/// (model, method, stages, replicas, steps, stash/eval tag)
-type RunKey = (String, String, usize, usize, u32, u8);
+/// (model, method, stages, replicas, steps, stash/eval tag, DP tag)
+/// — DP tag is 0 for synchronous DP, 1+K for `dp_async` at skew K, so
+/// async runs never collide with sync ones in the cache.
+type RunKey = (String, String, usize, usize, u32, u8, u32);
 
 pub struct Harness<'a> {
     pub coord: &'a mut Coordinator,
@@ -87,6 +89,7 @@ impl<'a> Harness<'a> {
             cfg.dp_replicas(),
             cfg.steps,
             stash_tag(cfg.stash) + 10 * (cfg.eval_every > 0) as u8,
+            if cfg.dp_async { 1 + cfg.max_skew } else { 0 },
         );
         if let Some(r) = self.cache.get(&key) {
             return Ok(r.clone());
@@ -667,6 +670,46 @@ impl<'a> Harness<'a> {
         Ok(())
     }
 
+    /// Skew-vs-convergence matrix for bounded-skew async DP: methods x
+    /// skew bound K at fixed P and R=2, through the simulator's
+    /// composed delay model (PP delay + K). K=0 is the synchronous DP
+    /// trajectory; the K axis shows what the relaxed barrier costs in
+    /// convergence — the throughput side lives in BENCH_dp_async.json.
+    pub fn dp_async(
+        &mut self,
+        model: &str,
+        stages: usize,
+        skews: &[u32],
+    ) -> Result<()> {
+        println!("\n== Async DP: method x max-skew sweep on {model} at P={stages}, R=2 ==");
+        println!("{:<16} {:>4} {:>5} {:>12} {:>9}",
+                 "method", "P", "K", "final_loss", "wall_s");
+        let mut rows = Csv::create(
+            self.out("dp_async.csv"),
+            "method,stages,replicas,max_skew,final_loss,wall_secs",
+        )?;
+        for m in [Method::PipeDream, Method::Nesterov, Method::br_default()] {
+            for &k in skews {
+                let mut cfg = self.cfg(m, stages);
+                cfg.replicas = 2;
+                cfg.dp_async = true;
+                cfg.max_skew = k;
+                let r = self.run(model, cfg)?;
+                println!("{:<16} {:>4} {:>5} {:>12.4} {:>9.1}",
+                         r.method, stages, k, r.final_loss(), r.wall_secs);
+                rows.row(&[
+                    r.method.clone(),
+                    stages.to_string(),
+                    "2".to_string(),
+                    k.to_string(),
+                    format!("{:.4}", r.final_loss()),
+                    format!("{:.2}", r.wall_secs),
+                ])?;
+            }
+        }
+        Ok(())
+    }
+
     /// Engine demo: threaded 1F1B throughput/bubble + loss sanity.
     pub fn engine(&mut self, model: &str, stages: usize) -> Result<()> {
         println!("\n== Engine: threaded 1F1B pipeline on {model}, P={stages} ==");
@@ -826,6 +869,7 @@ impl<'a> Harness<'a> {
         self.fig11("tiny8")?;
         self.engine("micro", 2)?;
         self.dp("pico4", 4, &[1, 2])?;
+        self.dp_async("pico4", 4, &[0, 1, 2])?;
         self.schedule("pico8", 4)?;
         Ok(())
     }

@@ -136,6 +136,9 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
         resume: args.get("resume").map(|s| s.to_string()),
         trace: args.get("trace").map(|s| s.to_string()),
         metrics: args.get("metrics").map(|s| s.to_string()),
+        dp_async: args.has("dp-async"),
+        max_skew: args.parse_num("max-skew", 0u32),
+        reduce_timeout_ms: args.parse_num("reduce-timeout-ms", 0u64),
         ..Default::default()
     })
 }
@@ -277,6 +280,10 @@ fn main() -> Result<()> {
                         let p = args.parse_num("dp-stages", 4usize);
                         h.dp(&args.get_or("dp-model", "pico4"), p, &[1, 2, 4])?
                     }
+                    "dp_async" => {
+                        let p = args.parse_num("dp-stages", 4usize);
+                        h.dp_async(&args.get_or("dp-model", "pico4"), p, &[0, 1, 2, 4])?
+                    }
                     "schedule" => {
                         let p = args.parse_num("schedule-stages", 4usize);
                         h.schedule(&args.get_or("schedule-model", "pico8"), p)?
@@ -345,6 +352,14 @@ fn main() -> Result<()> {
             println!("  (sim) or drain-consistently (engine). engine fault injection:");
             println!("  --kill STEP:REPLICA[:WORKER] --join STEP[:COUNT]");
             println!("  --delay STEP:REPLICA:WORKER:MILLIS (comma-separated lists)");
+            println!("data parallelism: --replicas R runs R sharded pipelines with a");
+            println!("  synchronous gradient average per step. --dp-async --max-skew K");
+            println!("  relaxes the barrier to bounded step skew: replicas fold peer");
+            println!("  gradients up to K steps stale and stall only at the bound, so");
+            println!("  a straggler (--delay) no longer stalls the group; K=0 is");
+            println!("  bit-exact with the synchronous path. --reduce-timeout-ms M");
+            println!("  bounds any all-reduce wait (default 120000); an unresponsive");
+            println!("  peer is a loud error naming the replica, never a silent hang.");
             println!("backends: native reference kernels by default; with an");
             println!("  artifacts/<config>/ dir and a `pjrt`-feature build, the");
             println!("  HLO/PJRT path is used instead (see README).");

@@ -76,12 +76,56 @@ pub struct RunResult {
     /// wall-clock `bubble_frac` because both are fed by the same
     /// `Instant` measurements.
     pub stage_spans: Vec<StageSpan>,
-    /// Realized staleness histogram, one row per chunk (replica 0):
-    /// `(chunk id, counts)` where `counts[d]` is how many microbatches
-    /// saw a gradient delay of exactly `d` optimizer updates. The
-    /// steady-state mode of each row equals the schedule's declared
-    /// per-chunk delay.
+    /// Realized staleness histogram, one row per chunk, merged across
+    /// all replicas via [`Hist::merge`]: `(chunk id, counts)` where
+    /// `counts[d]` is how many microbatches saw a gradient delay of
+    /// exactly `d` optimizer updates. The steady-state mode of each row
+    /// equals the schedule's declared per-chunk delay. Per-replica
+    /// breakdowns live in `staleness_by_replica` — replicas realize
+    /// different delays under elastic kill/join and DP skew.
     pub staleness_histogram: Vec<(usize, Vec<u64>)>,
+    /// Per-replica realized staleness rows `(replica, chunk, counts)`
+    /// (engine runs; the simulator replicates its model histogram per
+    /// replica). `staleness_histogram` is the per-chunk merge of these.
+    pub staleness_by_replica: Vec<(usize, usize, Vec<u64>)>,
+    /// Whether the run used bounded-skew asynchronous DP (`--dp-async`).
+    pub dp_async: bool,
+    /// The configured skew bound K (`--max-skew`; meaningful when
+    /// `dp_async` is set). Realized skew never exceeds it — see
+    /// `replica_counters[..].dp_max_skew`.
+    pub max_skew: u32,
+    /// Resolved kernel-thread budget per stage worker, indexed
+    /// `replica * P + worker` (engine runs only). Sums to `threads`
+    /// whenever `threads >= P * R`: the remainder of the division goes
+    /// to the first workers instead of being stranded.
+    pub worker_budgets: Vec<usize>,
+    /// Per-replica throughput and DP-skew counters (engine runs only).
+    pub replica_counters: Vec<ReplicaCounter>,
+}
+
+/// Per-replica throughput/skew summary (see
+/// [`RunResult::replica_counters`]). Under synchronous DP the skew
+/// fields are all zero; under `--dp-async` they pin the realized
+/// bounded-staleness behavior (`dp_max_skew <= K`, test-enforced).
+#[derive(Clone, Debug, Default, serde::Serialize)]
+pub struct ReplicaCounter {
+    /// Data-parallel replica id (0-based).
+    pub replica: usize,
+    /// Optimizer updates this replica completed.
+    pub updates: u64,
+    /// The replica's wall time: max over its stage workers of
+    /// busy + idle seconds.
+    pub wall_s: f64,
+    /// `updates / wall_s` — per-replica throughput, so a straggler
+    /// shows up directly instead of hiding in the group aggregate.
+    pub steps_per_sec: f64,
+    /// Realized DP-skew histogram: `hist[d]` counts folded peer
+    /// contributions that were exactly `d` optimizer steps stale.
+    pub dp_skew_hist: Vec<u64>,
+    /// Largest realized DP skew — never exceeds the configured K.
+    pub dp_max_skew: u32,
+    /// Reduces where the skew bound forced a blocking wait.
+    pub dp_stalls: u64,
 }
 
 /// Per-(replica, worker) span-derived timing summary (see

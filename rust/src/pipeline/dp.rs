@@ -19,11 +19,16 @@
 //! keeps the fold order independent of message arrival order, which a
 //! partial-sum tree would not.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::tensor::Tensor;
+
+/// Default per-peer reduce wait: long enough that only a genuinely
+/// wedged peer — never an injected straggler sleep — trips it.
+pub const DEFAULT_REDUCE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Average gradient sets in replica order: `out[i]` is the left fold
 /// `sets[0][i] + sets[1][i] + ...`, scaled by `1/R`. All sets must have
@@ -113,21 +118,38 @@ pub struct Reducer {
     pub id: usize,
     /// Group size R.
     pub replicas: usize,
+    /// Per-peer wait bound: a peer that neither sends nor hangs up
+    /// within this window surfaces as a loud error naming it, instead
+    /// of freezing the whole group silently.
+    timeout: Duration,
     up_tx: Option<Sender<Gathered>>,
+    /// Receivers from direct children, aligned with `child_ids`.
     child_rx: Vec<Receiver<Gathered>>,
+    /// Replica ids of the direct children (subtree roots) feeding
+    /// `child_rx`, used to name an unresponsive peer in errors.
+    child_ids: Vec<usize>,
     down_rx: Option<Receiver<Vec<Tensor>>>,
     down_tx: Vec<Sender<Vec<Tensor>>>,
 }
 
-/// Build the handles of one all-reduce group (index = replica id).
+/// Build the handles of one all-reduce group (index = replica id) with
+/// the default reduce timeout.
 pub fn group(replicas: usize) -> Vec<Reducer> {
+    group_with(replicas, DEFAULT_REDUCE_TIMEOUT)
+}
+
+/// Build the handles of one all-reduce group with an explicit per-peer
+/// reduce timeout (`TrainCfg::reduce_timeout`).
+pub fn group_with(replicas: usize, timeout: Duration) -> Vec<Reducer> {
     assert!(replicas >= 1, "dp::group needs at least one replica");
     let mut nodes: Vec<Reducer> = (0..replicas)
         .map(|id| Reducer {
             id,
             replicas,
+            timeout,
             up_tx: None,
             child_rx: Vec::new(),
+            child_ids: Vec::new(),
             down_rx: None,
             down_tx: Vec::new(),
         })
@@ -139,28 +161,51 @@ pub fn group(replicas: usize) -> Vec<Reducer> {
         nodes[child].up_tx = Some(utx);
         nodes[child].down_rx = Some(drx);
         nodes[parent].child_rx.push(urx);
+        nodes[parent].child_ids.push(child);
         nodes[parent].down_tx.push(dtx);
     }
     nodes
 }
 
 impl Reducer {
+    /// Wait on one peer channel with the configured bound, mapping both
+    /// failure modes to errors that name the peer: a hang-up (dropped
+    /// handle — the wind-down signal) and a timeout (a peer that is
+    /// alive but no longer making progress, which `recv()` used to wait
+    /// on forever).
+    fn recv_peer<T>(&self, rx: &Receiver<T>, peer: usize) -> Result<T> {
+        rx.recv_timeout(self.timeout).map_err(|e| match e {
+            RecvTimeoutError::Disconnected => {
+                anyhow!("dp: replica {peer} hung up during all-reduce")
+            }
+            RecvTimeoutError::Timeout => anyhow!(
+                "dp: replica {peer} unresponsive for {:.1}s during all-reduce \
+                 (reduce timeout; raise --reduce-timeout-ms if this was a \
+                 legitimate stall)",
+                self.timeout.as_secs_f64()
+            ),
+        })
+    }
+
     /// Contribute this replica's gradients and return the group average
     /// (fold in replica-id order, identical to [`average`]). `R = 1` is
-    /// a no-op passthrough. An `Err` means a peer replica hung up.
+    /// a no-op passthrough. An `Err` means a peer replica hung up or
+    /// stopped responding within the reduce timeout; the message names
+    /// the peer (for a child, the root of its unresponsive subtree).
     pub fn all_reduce(&self, grads: Vec<Tensor>) -> Result<Vec<Tensor>> {
         if self.replicas == 1 {
             return Ok(grads);
         }
-        let gone = || anyhow!("dp: replica peer hung up during all-reduce");
         let mut gathered: Gathered = vec![(self.id, grads)];
-        for rx in &self.child_rx {
-            gathered.extend(rx.recv().map_err(|_| gone())?);
+        for (rx, &peer) in self.child_rx.iter().zip(&self.child_ids) {
+            gathered.extend(self.recv_peer(rx, peer)?);
         }
         let avg = match &self.up_tx {
             Some(up) => {
-                up.send(gathered).map_err(|_| gone())?;
-                self.down_rx.as_ref().unwrap().recv().map_err(|_| gone())?
+                let parent = (self.id - 1) / 2;
+                up.send(gathered)
+                    .map_err(|_| anyhow!("dp: replica {parent} hung up during all-reduce"))?;
+                self.recv_peer(self.down_rx.as_ref().unwrap(), parent)?
             }
             None => {
                 gathered.sort_by_key(|(id, _)| *id);
@@ -169,8 +214,9 @@ impl Reducer {
                 average(&sets)?
             }
         };
-        for tx in &self.down_tx {
-            tx.send(avg.clone()).map_err(|_| gone())?;
+        for (tx, &peer) in self.down_tx.iter().zip(&self.child_ids) {
+            tx.send(avg.clone())
+                .map_err(|_| anyhow!("dp: replica {peer} hung up during all-reduce"))?;
         }
         Ok(avg)
     }
@@ -255,7 +301,29 @@ mod tests {
         let mut handles = group(2);
         let h1 = handles.pop().unwrap();
         drop(handles); // replica 0 (the root) is gone
-        assert!(h1.all_reduce(vec![t(&[1.0])]).is_err());
+        let err = h1.all_reduce(vec![t(&[1.0])]).unwrap_err().to_string();
+        assert!(err.contains("replica 0"), "{err}");
+    }
+
+    #[test]
+    fn unresponsive_peer_times_out_loudly_for_all_survivors() {
+        // Replica 2 holds its handle open but never contributes — the
+        // shape of a worker stalled mid-reduce. Every survivor must
+        // error out within the reduce timeout instead of hanging, and
+        // the replica waiting on it directly must name it.
+        let mut handles = group_with(3, Duration::from_millis(100));
+        let h2 = handles.pop().unwrap(); // kept alive, never reduces
+        let h1 = handles.pop().unwrap();
+        let h0 = handles.pop().unwrap();
+        let t0 = std::thread::spawn(move || h0.all_reduce(vec![t(&[1.0])]));
+        let t1 = std::thread::spawn(move || h1.all_reduce(vec![t(&[2.0])]));
+        let e0 = t0.join().unwrap().unwrap_err().to_string();
+        let e1 = t1.join().unwrap().unwrap_err().to_string();
+        drop(h2);
+        // root 0 waits on child 2 directly and must name it
+        assert!(e0.contains("replica 2"), "{e0}");
+        // replica 1 waits on its parent (root 0), which went down
+        assert!(e1.contains("replica 0"), "{e1}");
     }
 
     #[test]

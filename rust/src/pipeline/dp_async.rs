@@ -1,0 +1,456 @@
+//! Bounded-staleness asynchronous data-parallel gradient reduction
+//! (`--dp-async --max-skew K`).
+//!
+//! The synchronous reducer ([`super::dp`]) barriers every replica at
+//! every optimizer step: the group advances at the pace of its slowest
+//! member. This module replaces the barrier with a **bounded step
+//! skew**: each replica broadcasts its gradient tagged `(replica,
+//! step)` to every peer, folds whatever peer contributions have
+//! arrived, and blocks only when proceeding would put it more than `K`
+//! optimizer steps ahead of the slowest live peer. A straggler
+//! therefore delays its peers by at most the work of `K` steps instead
+//! of stalling the group at every reduce.
+//!
+//! Semantics the engine and the tests rely on:
+//!
+//! - **Fold determinism.** For its step `s`, a replica selects per
+//!   peer the newest contribution with step `≤ s` and folds the
+//!   selected sets in replica-id order through [`dp::average`] — the
+//!   same deterministic left fold as the synchronous path. *Which*
+//!   step gets selected depends on arrival timing when `K > 0` (that
+//!   is the staleness being modeled); the fold order never does.
+//! - **Skew bound.** The stall rule guarantees every selected
+//!   contribution satisfies `s - step ≤ K`: a replica only reaches
+//!   step `s` once every live peer has reached `s - K`, and boards
+//!   keep contributions contiguously from the last selection upward.
+//!   Realized per-peer skews are recorded in [`AsyncReducer::
+//!   skew_hist`] so the bound is test-pinnable.
+//! - **`K = 0` ≡ synchronous.** The stall rule degenerates to "wait
+//!   until every peer has reached my step", the selection to "my
+//!   step's contribution from every replica", and the fold to exactly
+//!   [`dp::average`] over the step-`s` gradients — bit-identical to
+//!   [`dp::Reducer::all_reduce`].
+//! - **Retirement.** A replica whose final contribution
+//!   (`step == final_step`) has been absorbed is *retired*: it is
+//!   excluded from the stall bound (it will never advance again) and
+//!   its closed channel is not an error. Its final-window
+//!   contributions still participate in the fold.
+//! - **Failures are loud.** A peer that hangs up before retiring
+//!   (crash, kill fault) or stays silent past the reduce timeout
+//!   surfaces as an `Err` naming the peer, exactly like the
+//!   synchronous reducer's wind-down signal.
+//!
+//! During the first `K` steps a slow starter may have contributed
+//! nothing yet; it is simply absent from the fold (the average runs
+//! over the replicas that have arrived), mirroring how the bound
+//! admits partial views within the skew window. With `K = 0` this
+//! never happens.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::dp;
+use crate::tensor::Tensor;
+
+/// One stale-tolerant gradient message: the sending replica, the
+/// optimizer step it was computed at (1-based within the run; offset
+/// by the segment's `start_update` under checkpointing), and the
+/// gradient set itself.
+struct Contribution {
+    from: usize,
+    step: u64,
+    grads: Vec<Tensor>,
+}
+
+/// One replica's handle into a bounded-skew all-to-all reduce group.
+/// Unlike the synchronous tree, every participant folds locally (the
+/// selection is per-replica state), so the topology is a full mesh of
+/// mpsc channels: R·(R-1) senders overall, one receiver per replica.
+pub struct AsyncReducer {
+    /// Replica id of this handle (0-based).
+    pub id: usize,
+    /// Group size R.
+    pub replicas: usize,
+    /// Skew bound K in optimizer steps.
+    pub max_skew: u32,
+    /// Step counter value before the group's first reduce (0 for a
+    /// fresh run, `start_update` for a resumed segment).
+    first_step: u64,
+    /// Last step of the run/segment; a peer observed at this step is
+    /// retired from the stall bound.
+    final_step: u64,
+    timeout: Duration,
+    /// Senders to every peer, indexed by replica id (`None` at own id).
+    txs: Vec<Option<Sender<Contribution>>>,
+    rx: Receiver<Contribution>,
+    /// Per-replica board: absorbed contributions by step, pruned below
+    /// the last selection so at most ~K+1 entries live per peer.
+    boards: Vec<BTreeMap<u64, Vec<Tensor>>>,
+    /// Highest absorbed step per replica (`first_step` = none yet).
+    high: Vec<u64>,
+    /// `skew_hist[d]` = folded contributions whose realized skew was
+    /// exactly `d` steps.
+    skew_hist: Vec<u64>,
+    max_seen: u32,
+    stalls: u64,
+}
+
+/// Build the handles of one bounded-skew reduce group (index = replica
+/// id). `first_step`/`final_step` bound the step tags the group will
+/// see: a fresh engine run passes `(0, steps)`, a resumed segment
+/// `(start_update, end_update)`.
+pub fn group(
+    replicas: usize,
+    max_skew: u32,
+    first_step: u64,
+    final_step: u64,
+    timeout: Duration,
+) -> Vec<AsyncReducer> {
+    assert!(replicas >= 1, "dp_async::group needs at least one replica");
+    assert!(final_step > first_step, "dp_async::group needs a non-empty step range");
+    let mut txs_all = Vec::with_capacity(replicas);
+    let mut rxs = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let (tx, rx) = channel::<Contribution>();
+        txs_all.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(id, rx)| AsyncReducer {
+            id,
+            replicas,
+            max_skew,
+            first_step,
+            final_step,
+            timeout,
+            txs: txs_all
+                .iter()
+                .enumerate()
+                .map(|(j, t)| if j == id { None } else { Some(t.clone()) })
+                .collect(),
+            rx,
+            boards: (0..replicas).map(|_| BTreeMap::new()).collect(),
+            high: vec![first_step; replicas],
+            skew_hist: Vec::new(),
+            max_seen: 0,
+            stalls: 0,
+        })
+        .collect()
+    // the original senders in `txs_all` drop here, so a receiver only
+    // disconnects once every *peer handle* is gone
+}
+
+impl AsyncReducer {
+    fn absorb(&mut self, c: Contribution) {
+        debug_assert!(c.from < self.replicas && c.from != self.id);
+        self.high[c.from] = self.high[c.from].max(c.step);
+        self.boards[c.from].insert(c.step, c.grads);
+    }
+
+    /// Drain every contribution already delivered, without blocking.
+    fn drain(&mut self) {
+        while let Ok(c) = self.rx.try_recv() {
+            self.absorb(c);
+        }
+    }
+
+    /// Slowest peer still expected to advance: `(id, high)` minimizing
+    /// high (ties to the smallest id), excluding retired peers. `None`
+    /// when every peer has retired.
+    fn slowest_active(&self) -> Option<(usize, u64)> {
+        let mut out: Option<(usize, u64)> = None;
+        for p in 0..self.replicas {
+            if p == self.id || self.high[p] >= self.final_step {
+                continue;
+            }
+            if out.map_or(true, |(_, h)| self.high[p] < h) {
+                out = Some((p, self.high[p]));
+            }
+        }
+        out
+    }
+
+    fn note_skew(&mut self, skew: u32) {
+        let d = skew as usize;
+        if self.skew_hist.len() <= d {
+            self.skew_hist.resize(d + 1, 0);
+        }
+        self.skew_hist[d] += 1;
+        self.max_seen = self.max_seen.max(skew);
+    }
+
+    /// Contribute this replica's step-`step` gradients and return the
+    /// bounded-stale group average. Blocks only while the skew bound
+    /// requires it. An `Err` means a live peer hung up or stayed
+    /// silent past the reduce timeout; the message names the peer.
+    pub fn all_reduce(&mut self, step: u64, grads: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        debug_assert!(step > self.first_step && step <= self.final_step);
+        if self.replicas == 1 {
+            self.note_skew(0);
+            return Ok(grads);
+        }
+        // Broadcast before anything else so peers stalled on *us* can
+        // make progress. A failed send to a retired peer is normal
+        // teardown; to a live peer it is a crash.
+        let mut failed = Vec::new();
+        for (peer, tx) in self.txs.iter().enumerate() {
+            if let Some(tx) = tx {
+                let c = Contribution { from: self.id, step, grads: grads.clone() };
+                if tx.send(c).is_err() {
+                    failed.push(peer);
+                }
+            }
+        }
+        self.high[self.id] = step;
+        self.boards[self.id].insert(step, grads);
+        self.drain();
+        for peer in failed {
+            if self.high[peer] < self.final_step {
+                return Err(anyhow!(
+                    "dp_async: replica {peer} hung up during all-reduce \
+                     (replica {} at step {step})",
+                    self.id
+                ));
+            }
+        }
+        // Skew bound: block until no live peer is more than K steps
+        // behind this step.
+        while let Some((slow, low)) = self.slowest_active() {
+            if step <= low + self.max_skew as u64 {
+                break;
+            }
+            self.stalls += 1;
+            match self.rx.recv_timeout(self.timeout) {
+                Ok(c) => self.absorb(c),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(anyhow!(
+                        "dp_async: replica {slow} unresponsive for {:.1}s at \
+                         step {low} while replica {} waits at step {step} \
+                         (skew bound {}; raise --reduce-timeout-ms if this \
+                         was a legitimate stall)",
+                        self.timeout.as_secs_f64(),
+                        self.id,
+                        self.max_skew
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!(
+                        "dp_async: replica {slow} hung up during all-reduce \
+                         (replica {} at step {step})",
+                        self.id
+                    ));
+                }
+            }
+        }
+        // Select per replica the newest contribution with step ≤ s;
+        // replicas with nothing in range yet (possible only inside the
+        // first K steps) are absent from the fold.
+        let chosen: Vec<Option<u64>> = (0..self.replicas)
+            .map(|r| self.boards[r].range(..=step).next_back().map(|(&s, _)| s))
+            .collect();
+        let mut sets: Vec<Vec<Tensor>> = Vec::with_capacity(self.replicas);
+        for r in 0..self.replicas {
+            if let Some(s) = chosen[r] {
+                self.note_skew((step - s) as u32);
+                sets.push(
+                    self.boards[r]
+                        .get(&s)
+                        .expect("selected step is on the board")
+                        .clone(),
+                );
+            }
+        }
+        // Prune below the selection; the selected entry stays so a
+        // stalled peer's newest view can be re-folded next step.
+        for r in 0..self.replicas {
+            if let Some(s) = chosen[r] {
+                self.boards[r] = self.boards[r].split_off(&s);
+            }
+        }
+        dp::average(&sets)
+    }
+
+    /// Realized per-contribution skew histogram (`hist[d]` = folded
+    /// contributions at exactly `d` steps of skew).
+    pub fn skew_hist(&self) -> &[u64] {
+        &self.skew_hist
+    }
+
+    /// Largest realized skew so far — never exceeds `max_skew`.
+    pub fn max_skew_seen(&self) -> u32 {
+        self.max_seen
+    }
+
+    /// Blocking waits the skew bound forced on this replica.
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn dp_async_skew0_equals_sync_average_for_many_r() {
+        // property-style: at K=0, every replica's fold at every step is
+        // bit-identical to dp::average over that step's gradient sets —
+        // the deterministic replica-order fold.
+        for r in [1usize, 2, 3, 5, 8] {
+            let steps = 4u64;
+            let per_step_sets: Vec<Vec<Vec<Tensor>>> = (1..=steps)
+                .map(|s| {
+                    (0..r)
+                        .map(|i| {
+                            vec![
+                                t(&[i as f32 + 0.5 * s as f32, -(i as f32)]),
+                                t(&[0.1 * i as f32, s as f32]),
+                            ]
+                        })
+                        .collect()
+                })
+                .collect();
+            let want: Vec<Vec<Tensor>> = per_step_sets
+                .iter()
+                .map(|sets| dp::average(sets).unwrap())
+                .collect();
+            let handles = group(r, 0, 0, steps, Duration::from_secs(10));
+            let mut threads = Vec::new();
+            for (i, mut h) in handles.into_iter().enumerate() {
+                let mine: Vec<Vec<Tensor>> =
+                    per_step_sets.iter().map(|sets| sets[i].clone()).collect();
+                threads.push(std::thread::spawn(move || {
+                    let mut out = Vec::new();
+                    for (s, g) in mine.into_iter().enumerate() {
+                        out.push(h.all_reduce(s as u64 + 1, g).unwrap());
+                    }
+                    assert_eq!(h.max_skew_seen(), 0);
+                    out
+                }));
+            }
+            for th in threads {
+                let got = th.join().unwrap();
+                for (gs, ws) in got.iter().zip(&want) {
+                    for (a, b) in gs.iter().zip(ws) {
+                        assert_eq!(a.data, b.data, "R={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_async_skew_stays_within_bound_under_straggler() {
+        let k = 2u32;
+        let steps = 8u64;
+        let handles = group(3, k, 0, steps, Duration::from_secs(10));
+        let mut threads = Vec::new();
+        for (i, mut h) in handles.into_iter().enumerate() {
+            threads.push(std::thread::spawn(move || {
+                for s in 1..=steps {
+                    if i == 2 {
+                        // replica 2 is the jittery straggler
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    h.all_reduce(s, vec![t(&[i as f32, s as f32])]).unwrap();
+                }
+                (h.max_skew_seen(), h.skew_hist().to_vec(), h.stalls())
+            }));
+        }
+        for th in threads {
+            let (max_seen, hist, _stalls) = th.join().unwrap();
+            assert!(max_seen <= k, "max skew {max_seen} exceeds bound {k}");
+            assert!(hist.len() <= k as usize + 1, "{hist:?}");
+            assert!(hist.iter().sum::<u64>() > 0);
+        }
+    }
+
+    #[test]
+    fn dp_async_retired_peer_is_not_an_error() {
+        // replica 1 finishes all its steps and drops its handle while
+        // replica 0 is still mid-run: the closed channel must read as
+        // retirement, not a crash.
+        let steps = 6u64;
+        let mut handles = group(2, 2, 0, steps, Duration::from_secs(10));
+        let mut h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+        let t1 = std::thread::spawn(move || {
+            for s in 1..=steps {
+                h1.all_reduce(s, vec![t(&[1.0, s as f32])]).unwrap();
+            }
+            // handle drops here — retired
+        });
+        let t0 = std::thread::spawn(move || {
+            for s in 1..=steps {
+                std::thread::sleep(Duration::from_millis(3));
+                h0.all_reduce(s, vec![t(&[0.0, s as f32])]).unwrap();
+            }
+            h0.max_skew_seen()
+        });
+        t1.join().unwrap();
+        let max_seen = t0.join().unwrap();
+        assert!(max_seen <= 2);
+    }
+
+    #[test]
+    fn dp_async_dead_peer_surfaces_as_error_naming_it() {
+        let mut handles = group(2, 0, 0, 4, Duration::from_secs(10));
+        let h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+        drop(h1); // replica 1 dies before contributing anything
+        let err = h0.all_reduce(1, vec![t(&[1.0])]).unwrap_err().to_string();
+        assert!(err.contains("replica 1"), "{err}");
+    }
+
+    #[test]
+    fn dp_async_silent_peer_times_out_loudly() {
+        // replica 1 holds its handle open but never reduces — the shape
+        // of a stalled worker. Replica 0 must error within the timeout
+        // naming replica 1 instead of blocking forever.
+        let mut handles = group(2, 0, 0, 4, Duration::from_millis(80));
+        let h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+        let th = std::thread::spawn(move || {
+            h0.all_reduce(1, vec![t(&[1.0])]).map(|_| ())
+        });
+        let err = th.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("replica 1"), "{err}");
+        assert!(err.contains("unresponsive"), "{err}");
+        drop(h1);
+    }
+
+    #[test]
+    fn dp_async_partial_fold_in_first_k_steps() {
+        // With K=1, replica 0 may fold its first step alone while
+        // replica 1 has not arrived: the average is over the replicas
+        // present. Sequenced deterministically via a side channel.
+        let (go_tx, go_rx) = channel::<()>();
+        let mut handles = group(2, 1, 0, 2, Duration::from_secs(10));
+        let mut h1 = handles.pop().unwrap();
+        let mut h0 = handles.pop().unwrap();
+        let t1 = std::thread::spawn(move || {
+            go_rx.recv().unwrap(); // wait until replica 0 folded step 1
+            for s in 1..=2u64 {
+                h1.all_reduce(s, vec![t(&[10.0])]).unwrap();
+            }
+        });
+        let out = h0.all_reduce(1, vec![t(&[2.0])]).unwrap();
+        // nothing from replica 1 yet: the fold is replica 0 alone
+        assert_eq!(out[0].data, vec![2.0]);
+        go_tx.send(()).unwrap();
+        let out2 = h0.all_reduce(2, vec![t(&[4.0])]).unwrap();
+        // step 2 stalls until replica 1 reaches step >= 1; its newest
+        // in-range contribution joins the fold
+        assert!(out2[0].data[0] > 2.0, "{:?}", out2[0].data);
+        drop(h0);
+        t1.join().unwrap();
+    }
+}

@@ -59,7 +59,11 @@
 //! Data parallelism (`cfg.replicas = R`): R full pipelines on disjoint
 //! shards; the copies of each *part* share a channel all-reduce group
 //! ([`super::dp`]) averaging gradients right before every optimizer
-//! step. AMDP's two copies of part s join the same group (fold order:
+//! step. With `--dp-async` the group is the bounded-skew mesh
+//! ([`super::dp_async`]) instead: replicas fold whatever peer gradients
+//! arrived within `--max-skew` optimizer steps and block only at the
+//! bound, so a straggler no longer stalls the group at every reduce;
+//! `--max-skew 0` reduces bit-exactly to the synchronous tree. AMDP's two copies of part s join the same group (fold order:
 //! down before up within each replica — the simulator's draw order),
 //! which doubles as the cross-copy synchronization of the
 //! bidirectional schedule.
@@ -78,7 +82,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::dp;
+use super::{dp, dp_async};
 use super::schedule::{self, Action, ChunkSpec, Schedule};
 use crate::config::{Method, ScheduleKind, StashMode, TrainCfg};
 use crate::data::{replica_stream, BatchIter, Corpus, TRAIN_STREAM};
@@ -131,6 +135,14 @@ pub struct ChunkReport {
     /// in drain order — the step-granularity series behind the
     /// `--metrics` JSONL staleness columns.
     pub delay_samples: Vec<(u64, u32)>,
+    /// Realized DP-skew histogram from the chunk's reduce handle
+    /// (`hist[d]` = folded peer contributions exactly `d` optimizer
+    /// steps stale); empty under synchronous DP.
+    pub dp_skew_hist: Vec<u64>,
+    /// Largest realized DP skew — never exceeds `--max-skew`.
+    pub dp_max_skew: u32,
+    /// Blocking waits the skew bound forced on this chunk's reduces.
+    pub dp_stalls: u64,
 }
 
 /// One worker thread's report: per-chunk counters + wall-clock split.
@@ -150,15 +162,24 @@ pub struct WorkerReport {
 }
 
 /// Drained weights and per-part optimizer states exported at the end
-/// of a completed engine segment (replica 0's copies; all replicas are
-/// in parameter lockstep under synchronous DP, so one copy suffices).
+/// of a completed engine segment. Under synchronous DP all replicas
+/// are in parameter lockstep, so replica 0's copy (`params`/`opts`)
+/// suffices. Under `--dp-async` at `max_skew > 0` the replicas drain
+/// with divergent weights (each folded different stale peer views);
+/// `replica_states` then carries every replica's copy so a resumed
+/// segment restores the in-flight skew state drain-consistently.
 pub struct EngineCheckpoint {
     /// Global optimizer updates completed when the export was taken.
     pub step: u64,
-    /// Full-manifest-order parameters, merged from the per-part chunks.
+    /// Full-manifest-order parameters, merged from the per-part chunks
+    /// (replica 0's copy — the canonical state).
     pub params: Vec<Tensor>,
-    /// One optimizer state per model part.
+    /// One optimizer state per model part (replica 0's copy).
     pub opts: Vec<OptState>,
+    /// Per-replica `(replica, params, per-part opts)` under async-DP
+    /// skew; empty when the replicas are in lockstep (sync DP,
+    /// `max_skew = 0`, or a roster change collapsed the skew state).
+    pub replica_states: Vec<(usize, Vec<Tensor>, Vec<OptState>)>,
 }
 
 /// One segment of a checkpointed/elastic engine run, driven by
@@ -182,6 +203,78 @@ pub struct SegmentOpts {
     pub delays: Vec<(usize, usize, u64, u64)>,
 }
 
+/// A chunk's all-reduce handle: the synchronous tree barrier or the
+/// bounded-skew asynchronous mesh (`--dp-async`).
+enum DpReduce {
+    Sync(dp::Reducer),
+    Async(dp_async::AsyncReducer),
+}
+
+impl DpReduce {
+    /// Reduce this chunk's step-`step` gradients. The synchronous path
+    /// ignores the step tag (it is in step lockstep by construction);
+    /// the asynchronous path folds the peer contributions within the
+    /// skew bound of `step`.
+    fn all_reduce(&mut self, step: u64, grads: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        match self {
+            DpReduce::Sync(r) => r.all_reduce(grads),
+            DpReduce::Async(r) => r.all_reduce(step, grads),
+        }
+    }
+
+    fn skew_hist(&self) -> Vec<u64> {
+        match self {
+            DpReduce::Sync(_) => Vec::new(),
+            DpReduce::Async(r) => r.skew_hist().to_vec(),
+        }
+    }
+
+    fn max_skew_seen(&self) -> u32 {
+        match self {
+            DpReduce::Sync(_) => 0,
+            DpReduce::Async(r) => r.max_skew_seen(),
+        }
+    }
+
+    fn stalls(&self) -> u64 {
+        match self {
+            DpReduce::Sync(_) => 0,
+            DpReduce::Async(r) => r.stalls(),
+        }
+    }
+}
+
+/// Split the kernel thread budget across the P·R stage workers:
+/// everyone gets `total / workers`, the first `total % workers` get
+/// one extra, and nobody drops below 1 — so leftover cores are no
+/// longer stranded by floor division (6 threads at P=4 is
+/// `[2, 2, 1, 1]`, not `[1, 1, 1, 1]`). Results stay bit-identical at
+/// any budget; only wall-clock changes.
+pub fn split_thread_budget(total: usize, workers: usize) -> Vec<usize> {
+    let base = total / workers;
+    let extra = total % workers;
+    (0..workers)
+        .map(|i| (base + usize::from(i < extra)).max(1))
+        .collect()
+}
+
+/// Rebuild a metrics [`Hist`](crate::metrics::Hist) from raw bucket
+/// counts. Exact for staleness data: the observed values are the
+/// bucket indices themselves, so mean/mode/max all round-trip.
+fn hist_of_counts(counts: &[u64]) -> crate::metrics::Hist {
+    crate::metrics::Hist {
+        counts: counts.to_vec(),
+        overflow: 0,
+        n: counts.iter().sum(),
+        sum: counts
+            .iter()
+            .enumerate()
+            .map(|(d, &c)| d as f64 * c as f64)
+            .sum(),
+        max: counts.iter().rposition(|&c| c > 0).unwrap_or(0) as f64,
+    }
+}
+
 /// Everything one chunk owns: restricted runtime, parameters, real
 /// optimizer, stash, gradient accumulator, data feed, all-reduce
 /// handle and instrumentation counters.
@@ -195,7 +288,7 @@ struct ChunkState {
     blocks: Vec<usize>,
     params: Vec<Tensor>,
     opt: Box<dyn Optimizer>,
-    dp: dp::Reducer,
+    dp: DpReduce,
     cfg: TrainCfg,
     /// Deterministic per-chunk batch feed; advanced to each global
     /// microbatch id (skipping the other stream's draws under AMDP).
@@ -523,7 +616,7 @@ impl ChunkState {
             }
         }
         let t_red = Instant::now();
-        let reduced = self.dp.all_reduce(grads);
+        let reduced = self.dp.all_reduce(self.updates + 1, grads);
         let idle = t_red.elapsed().as_secs_f64();
         rec.push(
             SpanKind::Reduce,
@@ -594,6 +687,9 @@ impl ChunkState {
             is_head,
             delay_hist: self.delay_hist.clone(),
             delay_samples: self.delay_samples.clone(),
+            dp_skew_hist: self.dp.skew_hist(),
+            dp_max_skew: self.dp.max_skew_seen(),
+            dp_stalls: self.dp.stalls(),
         }
     }
 }
@@ -878,9 +974,11 @@ impl Worker {
             return Ok(false);
         }
         let c = &self.chunks[li];
-        // Replicas stay in parameter lockstep (all-reduced gradients),
-        // so one validation pass — replica 0's stream-0 pipeline —
-        // covers all R.
+        // Replicas stay in parameter lockstep under synchronous DP
+        // (identical all-reduced gradients), so one validation pass —
+        // replica 0's stream-0 pipeline — covers all R. Under async DP
+        // at K > 0 replicas drift within the skew bound; replica 0's
+        // curve stands in for the group (documented approximation).
         if c.spec.stream == 0
             && c.spec.seq == 0
             && self.replica == 0
@@ -1047,6 +1145,13 @@ pub fn train_engine_segment(
              --stages or another --schedule)"
         );
     }
+    if cfg.dp_async && cfg.schedule == ScheduleKind::Amdp {
+        bail!(
+            "--dp-async does not support --schedule amdp: its two weight \
+             copies per part share one reduce group, which has no per-replica \
+             step-skew semantics; use a linear --schedule"
+        );
+    }
     if n_parts > man0.cfg.n_blocks {
         bail!(
             "--schedule {} needs {n_parts} model chunks but the model has \
@@ -1120,6 +1225,18 @@ pub fn train_engine_segment(
                 ck.opts.len()
             );
         }
+        for (rep, ps, os) in &ck.replica_states {
+            if ps.len() != init.len() || os.len() != n_parts {
+                bail!(
+                    "seed checkpoint replica {rep} state holds {} params / {} \
+                     optimizer states; the model has {} params and {n_parts} \
+                     parts",
+                    ps.len(),
+                    os.len(),
+                    init.len()
+                );
+            }
+        }
     }
 
     // one all-reduce group per part over R × copies handles; copies
@@ -1132,10 +1249,21 @@ pub fn train_engine_segment(
     for v in copies_of_part.iter_mut() {
         v.sort_by_key(|id| specs_by_id[id].stream);
     }
-    let mut dp_handles: Vec<Vec<Option<dp::Reducer>>> = copies_of_part
+    let mut dp_handles: Vec<Vec<Option<DpReduce>>> = copies_of_part
         .iter()
         .map(|v| {
-            dp::group(r_count * v.len()).into_iter().map(Some).collect()
+            let n = r_count * v.len();
+            if cfg.dp_async {
+                dp_async::group(n, cfg.max_skew, start_u, end_u, cfg.reduce_timeout())
+                    .into_iter()
+                    .map(|h| Some(DpReduce::Async(h)))
+                    .collect()
+            } else {
+                dp::group_with(n, cfg.reduce_timeout())
+                    .into_iter()
+                    .map(|h| Some(DpReduce::Sync(h)))
+                    .collect()
+            }
         })
         .collect();
 
@@ -1146,9 +1274,11 @@ pub fn train_engine_segment(
     // Divide the kernel thread budget across the P x R stage workers so
     // stage workers x kernel threads never oversubscribes the host; each
     // worker installs its share as a thread-local budget (runtime::pool)
-    // before touching any kernel. Results are bit-identical regardless.
+    // before touching any kernel. The remainder goes to the first
+    // `total % (P*R)` workers instead of being stranded. Results are
+    // bit-identical regardless.
     let total_threads = crate::runtime::pool::ThreadCfg::new(cfg.threads).resolve();
-    let worker_budget = (total_threads / (p * r_count)).max(1);
+    let worker_budgets = split_thread_budget(total_threads, p * r_count);
     let mut handles = Vec::new();
     for rep in 0..r_count {
         let mut txs: Vec<Sender<Msg>> = Vec::new();
@@ -1167,12 +1297,28 @@ pub fn train_engine_segment(
                 let keep = part0.params_of_stage(spec.part);
                 // Seeded segments start from the checkpoint weights and
                 // optimizer state; a fresh run from the seeded init.
-                let init_c: Vec<Tensor> = match seed {
-                    Some(ck) => keep.iter().map(|&i| ck.params[i].clone()).collect(),
-                    None => keep.iter().map(|&i| init[i].clone()).collect(),
+                // Under async DP at K > 0 a checkpoint carries each
+                // replica's divergent copy — seed from it when present.
+                // Everything else (fresh run, sync checkpoint, roster
+                // change that collapsed the skew state) seeds from the
+                // canonical replica-0 state.
+                let rep_state = seed.and_then(|ck| {
+                    ck.replica_states.iter().find(|(r, _, _)| *r == rep)
+                });
+                let init_c: Vec<Tensor> = match (rep_state, seed) {
+                    (Some((_, ps, _)), _) => {
+                        keep.iter().map(|&i| ps[i].clone()).collect()
+                    }
+                    (None, Some(ck)) => {
+                        keep.iter().map(|&i| ck.params[i].clone()).collect()
+                    }
+                    (None, None) => keep.iter().map(|&i| init[i].clone()).collect(),
                 };
-                let opt_state: Option<OptState> =
-                    seed.map(|ck| ck.opts[spec.part].clone());
+                let opt_state: Option<OptState> = match (rep_state, seed) {
+                    (Some((_, _, os)), _) => Some(os[spec.part].clone()),
+                    (None, Some(ck)) => Some(ck.opts[spec.part].clone()),
+                    (None, None) => None,
+                };
                 let copy_idx = copies_of_part[spec.part]
                     .iter()
                     .position(|&id| id == spec.id)
@@ -1251,7 +1397,12 @@ pub fn train_engine_segment(
                 .filter(|d| d.0 == rep && d.1 == w)
                 .map(|d| (d.2, d.3))
                 .collect();
-            let export = seg.export_state && rep == 0;
+            // Sync DP: replica 0's drained copy represents the group.
+            // Async DP at K > 0: every replica exports its own copy so
+            // resume can restore the in-flight skew state.
+            let export = seg.export_state
+                && (rep == 0 || (cfg.dp_async && cfg.max_skew > 0 && r_count > 1));
+            let worker_budget = worker_budgets[rep * p + w];
             handles.push((
                 rep,
                 w,
@@ -1353,24 +1504,32 @@ pub fn train_engine_segment(
     let mut result = RunResult::new(&cfg.method.name(), p);
     result.replicas = r_count;
     result.threads = total_threads;
+    result.dp_async = cfg.dp_async;
+    result.max_skew = cfg.max_skew;
     result.param_count = man0.total_params();
     result.schedule = cfg.schedule.name();
     let mut total_compute = 0.0;
     let mut total_idle = 0.0;
     let mut rep_records: Vec<Vec<(u64, f32)>> = vec![Vec::new(); r_count];
     let mut delay_rows: Vec<(usize, u64, u32)> = Vec::new();
-    let mut chunk_exports: Vec<ChunkExport> = Vec::new();
-    let mut stale_hist_rows: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut chunk_exports: Vec<(usize, ChunkExport)> = Vec::new();
+    let mut stale_rep_rows: Vec<(usize, usize, Vec<u64>)> = Vec::new();
     let mut stale_samples: Vec<(u64, u32)> = Vec::new();
     let mut queue_all: Vec<(u64, u32)> = Vec::new();
+    let mut rep_updates: Vec<u64> = vec![0; r_count];
+    let mut rep_wall: Vec<f64> = vec![0.0; r_count];
+    let mut rep_skew_hist: Vec<Vec<u64>> = vec![Vec::new(); r_count];
+    let mut rep_skew_max: Vec<u32> = vec![0; r_count];
+    let mut rep_stalls: Vec<u64> = vec![0; r_count];
     let mut run_trace = trace::Trace::default();
     for (rep, w, h) in handles {
         let (wr, ex) = h
             .join()
             .map_err(|_| anyhow!("replica {rep} worker {w} panicked"))??;
-        chunk_exports.extend(ex);
+        chunk_exports.extend(ex.into_iter().map(|e| (rep, e)));
         total_compute += wr.compute_s;
         total_idle += wr.idle_s;
+        rep_wall[rep] = rep_wall[rep].max(wr.compute_s + wr.idle_s);
         let mut busy_s = 0.0;
         let mut widle_s = 0.0;
         for s in &wr.spans {
@@ -1407,9 +1566,18 @@ pub fn train_engine_segment(
             }
             if rep == 0 {
                 delay_rows.push((cr.chunk, cr.realized_mbs, cr.realized_max_delay));
-                stale_hist_rows.push((cr.chunk, cr.delay_hist.clone()));
                 stale_samples.extend(cr.delay_samples.iter().copied());
             }
+            stale_rep_rows.push((rep, cr.chunk, cr.delay_hist.clone()));
+            rep_updates[rep] = rep_updates[rep].max(cr.updates);
+            if rep_skew_hist[rep].len() < cr.dp_skew_hist.len() {
+                rep_skew_hist[rep].resize(cr.dp_skew_hist.len(), 0);
+            }
+            for (d, &c) in cr.dp_skew_hist.iter().enumerate() {
+                rep_skew_hist[rep][d] += c;
+            }
+            rep_skew_max[rep] = rep_skew_max[rep].max(cr.dp_max_skew);
+            rep_stalls[rep] += cr.dp_stalls;
         }
         run_trace.push_thread(rep as u64, w as u64, format!("r{rep}/w{w}"), wr.spans);
     }
@@ -1417,8 +1585,33 @@ pub fn train_engine_segment(
     result.stage_spans.sort_by_key(|s| (s.replica, s.worker));
     delay_rows.sort_by_key(|&(c, _, _)| c);
     result.realized_delays = delay_rows;
-    stale_hist_rows.sort_by_key(|&(c, _)| c);
-    result.staleness_histogram = stale_hist_rows;
+    stale_rep_rows.sort_by_key(|r| (r.0, r.1));
+    // Merged per-chunk view over all replicas (Hist::merge), so the
+    // steady-state mode stays pinned to the declared schedule delay
+    // while per-replica drift (elastic faults, DP skew) stays visible
+    // in the by-replica rows.
+    let mut merged: std::collections::BTreeMap<usize, crate::metrics::Hist> =
+        std::collections::BTreeMap::new();
+    for (_, chunk, counts) in &stale_rep_rows {
+        merged.entry(*chunk).or_default().merge(&hist_of_counts(counts));
+    }
+    result.staleness_histogram =
+        merged.into_iter().map(|(c, h)| (c, h.counts)).collect();
+    result.staleness_by_replica = stale_rep_rows;
+    result.worker_budgets = worker_budgets;
+    for rep in 0..r_count {
+        let wall = rep_wall[rep];
+        let updates = rep_updates[rep];
+        result.replica_counters.push(crate::metrics::ReplicaCounter {
+            replica: rep,
+            updates,
+            wall_s: wall,
+            steps_per_sec: if wall > 0.0 { updates as f64 / wall } else { 0.0 },
+            dp_skew_hist: std::mem::take(&mut rep_skew_hist[rep]),
+            dp_max_skew: rep_skew_max[rep],
+            dp_stalls: rep_stalls[rep],
+        });
+    }
 
     // Per-step losses: group each replica's head-chunk records by
     // optimizer step (mb / mpu), keep complete groups only (early
@@ -1491,6 +1684,26 @@ pub fn train_engine_segment(
         for &(_, d) in &stale_samples {
             reg.observe("staleness", d as f64);
         }
+        if cfg.dp_async {
+            // DP component of the staleness: realized gradient skew of
+            // every folded peer contribution, over all replicas.
+            for rc in &result.replica_counters {
+                for (d, &c) in rc.dp_skew_hist.iter().enumerate() {
+                    for _ in 0..c {
+                        reg.observe("staleness_dp", d as f64);
+                    }
+                }
+            }
+            reg.gauge(
+                "dp_max_skew",
+                result
+                    .replica_counters
+                    .iter()
+                    .map(|rc| rc.dp_max_skew)
+                    .max()
+                    .unwrap_or(0) as f64,
+            );
+        }
         for sp in &result.stage_spans {
             let tot = sp.busy_s + sp.idle_s;
             if tot > 0.0 {
@@ -1523,27 +1736,54 @@ pub fn train_engine_segment(
         reg.write_jsonl(path)?;
     }
 
-    // Assemble the segment export: replica 0's chunks cover every part
+    // Assemble the segment export: a replica's chunks cover every part
     // exactly once (AMDP, the only multi-copy schedule, was rejected
-    // above), so the merged params are the full drained model.
+    // above), so the merged params are the full drained model. Replica
+    // 0 is the canonical copy; under async DP at K > 0 every replica
+    // exported, and the per-replica copies ride along so a resumed
+    // segment restores the in-flight skew state.
     let completed = result.losses.len() as u64 == n_updates && !result.diverged;
     let export = if seg.export_state && completed {
-        let mut opts_by_part: Vec<Option<OptState>> =
-            (0..n_parts).map(|_| None).collect();
-        let mut parts: Vec<(Vec<usize>, Vec<Tensor>)> = Vec::new();
-        for (part, params, ost) in chunk_exports {
-            parts.push((part0.params_of_stage(part), params));
-            opts_by_part[part] = Some(ost);
+        let assemble =
+            |exports: Vec<ChunkExport>| -> Result<(Vec<Tensor>, Vec<OptState>)> {
+                let mut opts_by_part: Vec<Option<OptState>> =
+                    (0..n_parts).map(|_| None).collect();
+                let mut parts: Vec<(Vec<usize>, Vec<Tensor>)> = Vec::new();
+                for (part, params, ost) in exports {
+                    parts.push((part0.params_of_stage(part), params));
+                    opts_by_part[part] = Some(ost);
+                }
+                let params = dp::merge_restricted(init.len(), &parts)?;
+                let opts = opts_by_part
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        o.ok_or_else(|| {
+                            anyhow!("no optimizer state exported for part {i}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((params, opts))
+            };
+        let mut by_rep: std::collections::BTreeMap<usize, Vec<ChunkExport>> =
+            std::collections::BTreeMap::new();
+        for (rep, e) in chunk_exports {
+            by_rep.entry(rep).or_default().push(e);
         }
-        let params = dp::merge_restricted(init.len(), &parts)?;
-        let opts = opts_by_part
-            .into_iter()
-            .enumerate()
-            .map(|(i, o)| {
-                o.ok_or_else(|| anyhow!("no optimizer state exported for part {i}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Some(EngineCheckpoint { step: end_u, params, opts })
+        let (params, opts) = assemble(
+            by_rep
+                .remove(&0)
+                .ok_or_else(|| anyhow!("replica 0 exported no chunk state"))?,
+        )?;
+        let mut replica_states = Vec::new();
+        if !by_rep.is_empty() {
+            replica_states.push((0, params.clone(), opts.clone()));
+            for (rep, exports) in by_rep {
+                let (p_r, o_r) = assemble(exports)?;
+                replica_states.push((rep, p_r, o_r));
+            }
+        }
+        Some(EngineCheckpoint { step: end_u, params, opts, replica_states })
     } else {
         None
     };
@@ -1637,6 +1877,34 @@ mod tests {
             .to_string();
         assert!(err.contains("even"), "{err}");
         assert!(err.contains("--schedule"), "{err}");
+    }
+
+    #[test]
+    fn worker_budget_split_strands_no_cores() {
+        // the old floor division gave [1, 1, 1, 1] for 6 threads at
+        // P=4, leaving 2 cores idle
+        assert_eq!(split_thread_budget(6, 4), vec![2, 2, 1, 1]);
+        assert_eq!(split_thread_budget(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(split_thread_budget(7, 3), vec![3, 2, 2]);
+        // oversubscribed hosts keep the floor of 1 per worker
+        assert_eq!(split_thread_budget(3, 8), vec![1; 8]);
+        // nothing stranded whenever total >= workers
+        assert_eq!(split_thread_budget(6, 4).iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn engine_rejects_dp_async_amdp() {
+        let cfg = TrainCfg {
+            schedule: ScheduleKind::Amdp,
+            dp_async: true,
+            stages: 2,
+            steps: 4,
+            ..Default::default()
+        };
+        let err = train_engine(PathBuf::from("artifacts/micro"), &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--dp-async"), "{err}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!   engine).
 
 pub mod dp;
+pub mod dp_async;
 pub mod engine;
 pub mod schedule;
 
@@ -193,11 +194,18 @@ pub fn train_sim_observed(
         .max(1);
     // The staleness model follows the schedule's declared delay
     // profile, not the hard-coded 1F1B P-1-k (identical for 1f1b).
+    // Under bounded-skew async DP (`--dp-async --max-skew K`) the DP
+    // component composes additively with the PP delay: a replica may
+    // fold peer gradients up to K optimizer steps old, so every
+    // parameter's modeled delay grows by K and the stash rings serve
+    // views that much older. K=0 leaves the profile untouched, which is
+    // what makes the skew-0 path bit-exact with synchronous DP.
+    let dp_skew = if cfg.dp_async { cfg.max_skew } else { 0 };
     let part = {
         let mut part = StagePartition::new(man, cfg.stages);
         let prof = sched.delay_profile(cfg.stages);
         for (d, &s) in part.delay_of.iter_mut().zip(&part.stage_of) {
-            *d = prof[s];
+            *d = prof[s] + dp_skew;
         }
         part
     };
@@ -224,6 +232,8 @@ pub fn train_sim_observed(
     let mut result = RunResult::new(&cfg.method.name(), cfg.stages);
     result.replicas = replicas;
     result.threads = threads;
+    result.dp_async = cfg.dp_async;
+    result.max_skew = cfg.max_skew;
     result.param_count = man.total_params();
     let mut rep_dispatches = vec![0u64; replicas];
 
@@ -262,6 +272,15 @@ pub fn train_sim_observed(
                 "checkpoint replicas mismatch: saved {}, run wants {replicas} \
                  (the simulator is not elastic; use the engine driver)",
                 st.replicas
+            );
+        }
+        if st.dp_mode != cfg.dp_mode() {
+            bail!(
+                "checkpoint DP mode mismatch: snapshot was taken under {}, \
+                 this run uses {} (the skew bound changes the delay model; \
+                 resume with the original --dp-async/--max-skew flags)",
+                st.dp_mode.as_deref().unwrap_or("sync"),
+                cfg.dp_mode().as_deref().unwrap_or("sync")
             );
         }
         if st.params.len() != params.len() {
@@ -467,6 +486,8 @@ pub fn train_sim_observed(
                 losses: result.losses.clone(),
                 val_losses: result.val_losses.clone(),
                 dispatches: rep_dispatches.clone(),
+                dp_mode: cfg.dp_mode(),
+                dp_replica_states: None,
             };
             let dir = cfg.checkpoint_dir.clone().unwrap_or_else(|| "checkpoints".into());
             let path = crate::checkpoint::step_path(std::path::Path::new(&dir), t);
@@ -513,13 +534,24 @@ pub fn train_sim_observed(
             std::collections::BTreeMap::new();
         for &(c, _mb, d) in &stats.delays {
             let row = hist.entry(c).or_default();
-            let d = d as usize;
+            // The DP-skew component composes additively with the PP
+            // delay — the sim genuinely served views that much older.
+            let d = d as usize + dp_skew as usize;
             if row.len() <= d {
                 row.resize(d + 1, 0);
             }
             row[d] += 1;
         }
-        result.staleness_histogram = hist.into_iter().collect();
+        let rows: Vec<(usize, Vec<u64>)> = hist.into_iter().collect();
+        // Replicas realize identical modeled delays in the sim; the
+        // by-replica rows replicate the model so consumers see one
+        // uniform shape across sim and engine results.
+        result.staleness_by_replica = (0..replicas)
+            .flat_map(|r| {
+                rows.iter().map(move |(c, counts)| (r, *c, counts.clone()))
+            })
+            .collect();
+        result.staleness_histogram = rows;
         // Virtual-clock span timeline (model trace): same Chrome span
         // format as the engine's wall-clock trace, 1 ms per unit slot.
         if let Some(path) = &cfg.trace {

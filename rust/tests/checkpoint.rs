@@ -296,6 +296,79 @@ fn checkpoint_engine_clean_departure_and_join_resize_roster() {
 }
 
 #[test]
+fn checkpoint_engine_dp_async_kill_reshards_and_resumes() {
+    // Kill-during-async-reduce: under --dp-async --max-skew 1 the
+    // replicas drain checkpoints with divergent weights, so snapshots
+    // carry per-replica skew state. Worker 0 of replica 1 dies after
+    // update 4 (mid-segment, mid-reduce from replica 0's perspective:
+    // its mesh peer hangs up); the driver must collapse the skew state
+    // onto the replica-0 copy, re-shard and complete.
+    let dir = tdir("eng_async_kill");
+    let cfg = TrainCfg {
+        method: Method::PipeDream,
+        stages: 2,
+        replicas: 2,
+        steps: 8,
+        lr: 5e-3,
+        seed: 77,
+        log_every: 0,
+        checkpoint_every: 3,
+        checkpoint_dir: Some(dir_string(&dir)),
+        dp_async: true,
+        max_skew: 1,
+        ..Default::default()
+    };
+    let plan = FaultPlan {
+        kills: vec![ReplicaKill { at_update: 4, replica: 1, worker: 0 }],
+        ..Default::default()
+    };
+    let res = checkpoint::run_engine_elastic(&artifacts("micro"), &cfg, &plan).unwrap();
+    assert_eq!(res.losses.len(), 8, "the run must complete all 8 updates");
+    assert!(!res.diverged);
+    assert!(res.final_loss().is_finite());
+    assert_eq!(res.replicas, 1, "the dead replica must leave the roster");
+
+    // The pre-kill snapshot (step 3, R=2) records the DP mode and both
+    // replicas' in-flight skew state...
+    let snap3 = checkpoint::load(&checkpoint::step_path(&dir, 3)).unwrap();
+    assert_eq!(snap3.replicas, 2);
+    assert_eq!(snap3.dp_mode.as_deref(), Some("async:1"));
+    let states = snap3.dp_replica_states.as_ref().expect("skew state saved");
+    let mut ids: Vec<usize> = states.iter().map(|s| s.replica).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1]);
+    // ...and the post-kill snapshot (step 6, R=1) has collapsed it.
+    let snap6 = checkpoint::load(&checkpoint::step_path(&dir, 6)).unwrap();
+    assert_eq!(snap6.replicas, 1);
+    assert!(snap6.dp_replica_states.is_none(), "roster change collapses skew state");
+
+    // Resume from the R=2 snapshot with its in-flight skew state and no
+    // fault plan: both replicas restart from their own drained copies
+    // and the run completes at full roster.
+    let mut res_cfg = cfg.clone();
+    res_cfg.checkpoint_dir = None;
+    res_cfg.checkpoint_every = 0;
+    res_cfg.resume = Some(dir_string(&checkpoint::step_path(&dir, 3)));
+    let resumed =
+        checkpoint::run_engine_elastic(&artifacts("micro"), &res_cfg, &FaultPlan::default())
+            .unwrap();
+    assert_eq!(resumed.losses.len(), 8);
+    assert!(resumed.final_loss().is_finite());
+    assert_eq!(resumed.replicas, 2);
+
+    // Resuming under a different DP mode is config drift, loudly.
+    let mut bad = cfg.clone();
+    bad.dp_async = false;
+    bad.max_skew = 0;
+    bad.resume = Some(dir_string(&checkpoint::step_path(&dir, 3)));
+    let err = checkpoint::run_engine_elastic(&artifacts("micro"), &bad, &FaultPlan::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("DP mode"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn checkpoint_engine_delay_injection_does_not_change_losses() {
     // The schedules are deterministic in message order, not arrival
     // time: a worker sleeping mid-run is a pure timing perturbation and

@@ -1,0 +1,192 @@
+//! Bounded-skew asynchronous DP conformance (acceptance gates of the
+//! async-DP PR):
+//!
+//! * `--dp-async --max-skew 0` is **bit-exact** with the synchronous
+//!   all-reduce path for every optimizer method at P = 4 × R = 2 — the
+//!   async mesh at skew 0 stalls until every peer's step-t gradient has
+//!   arrived and folds them in the same replica-id order, so the two
+//!   code paths must produce identical float trajectories.
+//! * Under an injected straggler the realized per-replica skew never
+//!   exceeds the configured bound K (pinned via the engine's
+//!   per-replica skew histograms), and — because the delay is
+//!   timing-only — the losses still match the undelayed run bit-for-bit.
+//!
+//! All tests are prefixed `dp_async_` so the CI fast-path job
+//! (`cargo test --release -q dp_async_`) picks them up together with
+//! the reducer unit tests in `pipeline/dp_async.rs`.
+
+use std::path::PathBuf;
+
+use abrot::checkpoint::{self, FaultPlan, WorkerDelay};
+use abrot::config::{Method, TrainCfg};
+use abrot::pipeline::engine::train_engine;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn all_methods() -> Vec<Method> {
+    vec![
+        Method::PipeDream,
+        Method::PipeDreamLr,
+        Method::Nesterov,
+        Method::DelayComp { lambda: 0.1 },
+        Method::br_default(),
+        Method::Soap { freq: 10 },
+        Method::Muon,
+        Method::Scion,
+    ]
+}
+
+fn base_cfg(method: Method) -> TrainCfg {
+    TrainCfg {
+        method,
+        stages: 4,
+        replicas: 2,
+        steps: 6,
+        lr: 5e-3,
+        grad_clip: 1e9,
+        seed: 2026,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn dp_async_skew0_bit_exact_with_sync_all_methods_p4_r2() {
+    for method in all_methods() {
+        let name = method.name();
+        let sync_cfg = base_cfg(method);
+        let mut async_cfg = sync_cfg.clone();
+        async_cfg.dp_async = true;
+        async_cfg.max_skew = 0;
+
+        let sync = train_engine(root().join("pico4"), &sync_cfg)
+            .unwrap_or_else(|e| panic!("{name} sync: {e}"));
+        let asyn = train_engine(root().join("pico4"), &async_cfg)
+            .unwrap_or_else(|e| panic!("{name} async: {e}"));
+
+        assert!(!sync.diverged && !asyn.diverged, "{name}");
+        assert_eq!(
+            sync.losses, asyn.losses,
+            "{name}: skew-0 async DP must be bit-exact with sync DP"
+        );
+        assert_eq!(
+            sync.val_losses, asyn.val_losses,
+            "{name}: eval trajectories must match too"
+        );
+        assert!(asyn.dp_async && asyn.max_skew == 0, "{name}: result stamping");
+        assert!(!sync.dp_async, "{name}: sync run must not be stamped async");
+        // At skew 0 every fold uses only step-fresh peers.
+        for c in &asyn.replica_counters {
+            assert_eq!(c.dp_max_skew, 0, "{name} replica {}", c.replica);
+            assert!(
+                c.dp_skew_hist.iter().skip(1).all(|&n| n == 0),
+                "{name} replica {}: non-zero skew observed at K=0: {:?}",
+                c.replica,
+                c.dp_skew_hist
+            );
+        }
+    }
+}
+
+#[test]
+fn dp_async_straggler_skew_bounded_and_losses_unchanged() {
+    // One replica gets repeated injected sleeps; the other keeps
+    // stepping ahead but must stall at the bound. The realized skew is
+    // read back from the per-replica counters; the delay is pure
+    // timing so the loss trajectory is unchanged vs the undelayed run.
+    let k = 2u32;
+    let mut cfg = base_cfg(Method::PipeDream);
+    cfg.stages = 2;
+    cfg.steps = 8;
+    cfg.dp_async = true;
+    cfg.max_skew = k;
+
+    let baseline =
+        checkpoint::run_engine_elastic(&root().join("micro"), &cfg, &FaultPlan::default())
+            .unwrap();
+
+    let plan = FaultPlan {
+        delays: vec![
+            WorkerDelay { at_update: 2, replica: 1, worker: 0, millis: 30 },
+            WorkerDelay { at_update: 5, replica: 1, worker: 1, millis: 30 },
+        ],
+        ..Default::default()
+    };
+    let delayed =
+        checkpoint::run_engine_elastic(&root().join("micro"), &cfg, &plan).unwrap();
+
+    assert_eq!(
+        baseline.losses, delayed.losses,
+        "stragglers are timing-only; the fold selection is step-tagged"
+    );
+    assert_eq!(delayed.replica_counters.len(), 2);
+    for c in &delayed.replica_counters {
+        assert!(
+            c.dp_max_skew <= k,
+            "replica {}: realized skew {} exceeds the bound {k}",
+            c.replica,
+            c.dp_max_skew
+        );
+        assert!(
+            c.dp_skew_hist.len() <= k as usize + 1,
+            "replica {}: skew histogram has a bucket past the bound: {:?}",
+            c.replica,
+            c.dp_skew_hist
+        );
+        assert!(c.updates > 0 && c.wall_s >= 0.0, "replica {}", c.replica);
+    }
+}
+
+#[test]
+fn dp_async_per_replica_staleness_rows_cover_roster() {
+    // The per-replica PP-staleness histograms (the fix for the old
+    // replica-0-only sampling) carry one row set per replica; the
+    // merged `staleness_histogram` stays the conformance view.
+    let mut cfg = base_cfg(Method::PipeDream);
+    cfg.dp_async = true;
+    cfg.max_skew = 1;
+    let res = train_engine(root().join("pico4"), &cfg).unwrap();
+
+    let reps: std::collections::BTreeSet<usize> =
+        res.staleness_by_replica.iter().map(|(r, _, _)| *r).collect();
+    assert_eq!(reps, [0usize, 1].into_iter().collect(), "both replicas sampled");
+    let chunks: std::collections::BTreeSet<usize> =
+        res.staleness_by_replica.iter().map(|(_, c, _)| *c).collect();
+    let merged: std::collections::BTreeSet<usize> =
+        res.staleness_histogram.iter().map(|(c, _)| *c).collect();
+    assert_eq!(chunks, merged, "merged view covers the same chunks");
+    // Merged counts are the per-replica sums.
+    for (chunk, counts) in &res.staleness_histogram {
+        let mut sum = vec![0u64; counts.len()];
+        for (_, c, row) in res.staleness_by_replica.iter().filter(|(_, c, _)| c == chunk)
+        {
+            assert!(c == chunk);
+            for (i, n) in row.iter().enumerate() {
+                if i < sum.len() {
+                    sum[i] += n;
+                } else {
+                    assert_eq!(*n, 0, "chunk {chunk}: replica row wider than merged");
+                }
+            }
+        }
+        assert_eq!(&sum, counts, "chunk {chunk}: merged = sum of replica rows");
+    }
+}
+
+#[test]
+fn dp_async_worker_budgets_cover_all_workers() {
+    // The remainder-aware thread split (fix for the floor-division
+    // budget bug) is recorded in the result: one budget per P × R
+    // worker, none of them zero, and the extras go to the lowest
+    // indices.
+    let mut cfg = base_cfg(Method::PipeDream);
+    cfg.threads = 6; // 6 threads over 8 workers: floor would give 0
+    cfg.dp_async = true;
+    let res = train_engine(root().join("pico4"), &cfg).unwrap();
+    assert_eq!(res.worker_budgets.len(), 4 * 2);
+    assert!(res.worker_budgets.iter().all(|&b| b >= 1), "{:?}", res.worker_budgets);
+    for w in res.worker_budgets.windows(2) {
+        assert!(w[0] >= w[1], "extras must go to the lowest indices: {:?}", res.worker_budgets);
+    }
+}

@@ -151,9 +151,25 @@ fn check_engine_observability(kind: ScheduleKind, tag: &str) {
     }
 
     // ---- staleness histogram: steady-state mode == declared delay --
+    // `staleness_histogram` is the per-chunk merge (Hist::merge) of the
+    // per-replica rows; at R=1 it must equal replica 0's rows exactly.
     let sched = schedule::build(kind);
     let specs = sched.chunks(P);
     assert_eq!(res.staleness_histogram.len(), specs.len());
+    assert_eq!(
+        res.staleness_by_replica.len(),
+        specs.len(),
+        "one staleness row per (replica, chunk)"
+    );
+    for (rep, chunk, counts) in &res.staleness_by_replica {
+        assert_eq!(*rep, 0, "R=1 run sampled a phantom replica");
+        let (_, merged) = res
+            .staleness_histogram
+            .iter()
+            .find(|(c, _)| c == chunk)
+            .unwrap_or_else(|| panic!("chunk {chunk} missing from merged view"));
+        assert_eq!(counts, merged, "R=1: merged view == replica-0 rows");
+    }
     for (chunk, hist) in &res.staleness_histogram {
         let spec = specs.iter().find(|s| s.id == *chunk).unwrap();
         assert!(hist.iter().sum::<u64>() > 0, "chunk {chunk} histogram is empty");
@@ -268,6 +284,7 @@ fn trace_bench_baselines_validate_and_self_compare() {
     for name in [
         "BENCH_engine.json",
         "BENCH_kernels.json",
+        "BENCH_dp_async.json",
         "BENCH_engine_pr8_baseline.json",
         "BENCH_kernels_pr8_baseline.json",
     ] {
@@ -326,4 +343,33 @@ fn trace_bench_trajectory_records_pooled_kernel_speedup() {
     // the faster current rows are improvements, never regressions.
     let cmp = bench::compare_snapshots(&eng_old, &eng_new, 1.5);
     assert!(cmp.regressions().is_empty());
+}
+
+/// The async-DP acceptance row: with alternating stragglers on both
+/// replicas, the recorded `--dp-async --max-skew 2` run must beat the
+/// synchronous all-reduce run (which serializes every injected sleep),
+/// while the no-straggler rows stay within noise of each other.
+#[test]
+fn trace_bench_dp_async_straggler_beats_sync() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benchmarks/BENCH_dp_async.json");
+    let snap = bench::load_snapshot(&path).unwrap();
+    let median = |row: &str| -> f64 {
+        snap.results
+            .iter()
+            .find(|r| r.name == row)
+            .unwrap_or_else(|| panic!("missing bench row {row}"))
+            .median_us
+    };
+    let sync_s = median("engine dp sync P=4 R=2 straggler");
+    let async_s = median("engine dp async K=2 P=4 R=2 straggler");
+    assert!(
+        async_s < sync_s,
+        "async DP must beat sync DP under a straggler: {async_s} vs {sync_s}"
+    );
+    // Without stragglers the two modes do the same work; the async row
+    // must not record a large regression (2x guard, generous to noise).
+    let sync_c = median("engine dp sync P=4 R=2");
+    let async_c = median("engine dp async K=2 P=4 R=2");
+    assert!(async_c < 2.0 * sync_c, "clean async row regressed: {async_c} vs {sync_c}");
 }
